@@ -1,0 +1,44 @@
+//! Scalability sweep (paper Fig 12): per-epoch sim time of NeutronTP vs
+//! the data-parallel baseline as the simulated cluster grows 2 -> 16.
+//!
+//! ```bash
+//! cargo run --release --example scalability -- [profile]
+//! ```
+
+use neutron_tp::config::{RunConfig, System};
+use neutron_tp::graph::datasets::{profile, Dataset};
+use neutron_tp::parallel::{self, Ctx};
+use neutron_tp::runtime::{ArtifactStore, ExecutorPool};
+
+fn main() -> anyhow::Result<()> {
+    let prof = std::env::args().nth(1).unwrap_or_else(|| "tiny".to_string());
+    let store = ArtifactStore::load("artifacts")?;
+    let p = profile(&prof).ok_or_else(|| anyhow::anyhow!("unknown profile {prof}"))?;
+    let data = Dataset::generate(p, 42);
+
+    println!("profile {prof}: |V|={} |E|={}", p.v, p.e);
+    println!("{:<10} {:>8} {:>14} {:>14}", "workers", "", "NeutronTP(s)", "DP-full(s)");
+    for workers in [2usize, 4, 8, 16] {
+        let mut row = format!("{workers:<10} {:>8}", "");
+        for sys in [System::NeutronTp, System::DpFull] {
+            let cfg = RunConfig {
+                system: sys,
+                profile: prof.clone(),
+                workers,
+                epochs: 2,
+                ..Default::default()
+            };
+            cfg.validate()?;
+            let pool = ExecutorPool::new(&store, 0)?;
+            let ctx = Ctx { cfg: &cfg, data: &data, store: &store, pool: &pool };
+            match parallel::run(&ctx) {
+                // second epoch: executor caches warm
+                Ok(r) => row.push_str(&format!(" {:>14.4}", r[1].sim_epoch_secs)),
+                Err(e) if e.to_string().contains("OOM") => row.push_str(&format!(" {:>14}", "OOM")),
+                Err(e) => return Err(e),
+            }
+        }
+        println!("{row}");
+    }
+    Ok(())
+}

@@ -1,0 +1,297 @@
+"""AOT pipeline: lower every L2 piece to HLO **text** + a manifest.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (what the published ``xla`` 0.1.6 crate links) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/gen_hlo.py.
+
+The artifact *plan* is derived from the dataset profiles below, which are
+mirrored exactly by ``rust/src/graph/datasets.rs`` — the two sides share the
+shape-bucket contract documented in DESIGN.md §Artifact shape strategy:
+
+  * aggregation operates on dim tiles of T = 32;
+  * chunk row counts C are ``V / nc`` for nc in {1, 4, 16, 64} (min 512);
+  * per-chunk edge capacities come in three power-of-two buckets around the
+    expected chunk degree; the Rust side accumulates multi-pass when a
+    power-law chunk overflows the largest bucket (aggregation is linear in
+    edges, so splitting the edge list is exact);
+  * NN-phase row batches B are ``V / N`` for worker counts N in
+    {1, 2, 4, 8, 16};
+  * class/output dims are padded with ``pad_dim`` (multiple of 32, and of
+    128 once >= 128) so the fused dense kernel tiles cleanly.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--filter rdt] [--list]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+DIM_TILE = 32
+ROW_BLOCK = 256
+CHUNK_COUNTS = (1, 4, 16, 64)
+WORKER_COUNTS = (1, 2, 4, 8, 16)
+MIN_CHUNK_ROWS = 512
+
+# ---------------------------------------------------------------------------
+# Dataset profiles — MIRRORED by rust/src/graph/datasets.rs. Scaled-down
+# stand-ins for the paper's graphs (DESIGN.md §3): |V|, |E| shrunk to laptop
+# scale, feature/hidden/label dims and train fractions preserved.
+# ---------------------------------------------------------------------------
+PROFILES = {
+    # name: (V, E, feat_dim, num_classes, hidden, hetero, gat_too)
+    "tiny": dict(v=1024, e=8192, d=64, k=8, h=32, hetero=False, gat=True),
+    "rdt": dict(v=8192, e=409600, d=602, k=41, h=256, hetero=False, gat=True),
+    "opt": dict(v=16384, e=327680, d=100, k=47, h=64, hetero=False, gat=True),
+    "opr": dict(v=65536, e=1310720, d=128, k=172, h=128, hetero=False, gat=True),
+    "fs": dict(v=65536, e=2621440, d=256, k=64, h=128, hetero=False, gat=True),
+    "mag": dict(v=16384, e=163840, d=128, k=349, h=64, hetero=True, gat=False),
+    "lsc": dict(v=65536, e=1310720, d=768, k=153, h=256, hetero=True, gat=False),
+    "e2e": dict(v=131072, e=2621440, d=256, k=16, h=128, hetero=False, gat=False),
+}
+
+# Fig 14 feature-dimension sweep (paper: 128..1024 on two datasets).
+FIG14_DIMS = (128, 256, 512, 1024)
+FIG14_PROFILES = ("rdt", "opt")
+
+LP_PAIR_BUCKETS = (1024, 4096)
+
+
+def pad_dim(k: int) -> int:
+    """Pad an output/class dim so the dense kernel tiles: multiple of 32,
+    and a multiple of 128 once >= 128."""
+    if k <= 128:
+        return -(-k // 32) * 32
+    return -(-k // 128) * 128
+
+
+def ceil_pow2(x: int) -> int:
+    p = 1
+    while p < x:
+        p *= 2
+    return p
+
+
+MAX_CHUNK_ROWS = 65536
+# Cap on one artifact call's edge capacity; the Rust side accumulates
+# multi-pass when a chunk holds more edges (exact: aggregation is linear).
+MAX_EDGE_BUCKET = 1 << 21
+
+
+def chunk_rows(v: int):
+    out = []
+    for nc in CHUNK_COUNTS:
+        c = v // nc
+        if MIN_CHUNK_ROWS <= c <= MAX_CHUNK_ROWS and c % ROW_BLOCK == 0:
+            out.append(c)
+    return sorted(set(out))
+
+
+def edge_buckets(e_total: int, v: int, c: int):
+    avg = max(1, (e_total * c) // v)
+    cap = min(MAX_EDGE_BUCKET, ceil_pow2(e_total))
+    raw = {ceil_pow2(avg), ceil_pow2(avg * 4), ceil_pow2(avg * 16)}
+    return sorted({min(cap, max(4096, b)) for b in raw})
+
+
+def batch_buckets(v: int):
+    return sorted({max(128, v // n) for n in WORKER_COUNTS})
+
+
+# ---------------------------------------------------------------------------
+# Artifact spec
+# ---------------------------------------------------------------------------
+
+class Spec:
+    def __init__(self, name, kind, fn, inputs, meta=None):
+        self.name = name          # unique artifact id (also file stem)
+        self.kind = kind          # dense_relu_fwd | agg_pallas | ...
+        self.fn = fn              # python callable to lower
+        self.inputs = inputs      # list[(argname, shape tuple, dtype str)]
+        self.meta = meta or {}
+
+    def shape_structs(self):
+        dt = {"f32": F32, "i32": I32}
+        return [jax.ShapeDtypeStruct(s, dt[d]) for (_, s, d) in self.inputs]
+
+
+def _tuple_fn(fn):
+    def wrapped(*args):
+        out = fn(*args)
+        return out if isinstance(out, tuple) else (out,)
+    return wrapped
+
+
+def build_plan(profile_filter=None):
+    """Build the artifact spec list.
+
+    ``profile_filter`` selects which dataset profiles contribute shapes;
+    artifact names are shape-keyed so profiles sharing a bucket dedupe.
+    """
+    specs = {}
+
+    def add(spec):
+        specs.setdefault(spec.name, spec)
+
+    def add_dense(b, d, h, relu):
+        tag = "relu" if relu else "linear"
+        fwd = model.dense_relu_fwd if relu else model.dense_linear_fwd
+        bwd = model.dense_relu_bwd if relu else model.dense_linear_bwd
+        add(Spec(
+            f"dense_{tag}_fwd__b{b}_d{d}_h{h}", f"dense_{tag}_fwd", fwd,
+            [("x", (b, d), "f32"), ("w", (d, h), "f32"), ("b", (h,), "f32")],
+            meta=dict(b=b, d=d, h=h)))
+        add(Spec(
+            f"dense_{tag}_bwd__b{b}_d{d}_h{h}", f"dense_{tag}_bwd", bwd,
+            [("g", (b, h), "f32"), ("x", (b, d), "f32"),
+             ("w", (d, h), "f32"), ("pre", (b, h), "f32")],
+            meta=dict(b=b, d=d, h=h)))
+
+    def add_agg(c, e, s):
+        ins = [("row_ptr", (c + 1,), "i32"), ("edge_dst", (e,), "i32"),
+               ("col_idx", (e,), "i32"), ("edge_w", (e,), "f32"),
+               ("x", (s, DIM_TILE), "f32")]
+        add(Spec(f"agg_pallas__c{c}_e{e}_s{s}", "agg_pallas",
+                 model.agg_pallas, ins, meta=dict(c=c, e=e, s=s)))
+        add(Spec(f"agg_scatter__c{c}_e{e}_s{s}", "agg_scatter",
+                 model.agg_scatter_sized(c), ins, meta=dict(c=c, e=e, s=s)))
+
+    def add_edge_softmax(c, e, s):
+        add(Spec(
+            f"edge_softmax__c{c}_e{e}_s{s}", "edge_softmax",
+            model.edge_softmax_sized(c),
+            [("col_idx", (e,), "i32"), ("edge_dst", (e,), "i32"),
+             ("valid", (e,), "f32"), ("s_src", (s,), "f32"),
+             ("s_dst", (c,), "f32")],
+            meta=dict(c=c, e=e, s=s)))
+
+    for pname, p in PROFILES.items():
+        if profile_filter and pname not in profile_filter:
+            continue
+        v, e, d, h = p["v"], p["e"], p["d"], p["h"]
+        kp = pad_dim(p["k"])
+        dims_in = [d]
+        if pname in FIG14_PROFILES:
+            dims_in = sorted(set(dims_in) | set(FIG14_DIMS))
+        for b in batch_buckets(v):
+            for din in dims_in:
+                add_dense(b, din, h, relu=True)      # layer 0
+            add_dense(b, h, h, relu=True)            # deep layers (fig 13)
+            add_dense(b, h, kp, relu=False)          # head
+            add(Spec(f"softmax_xent__b{b}_k{kp}", "softmax_xent",
+                     model.softmax_xent,
+                     [("logits", (b, kp), "f32"), ("labels", (b,), "i32"),
+                      ("smask", (b,), "f32"), ("cmask", (kp,), "f32")],
+                     meta=dict(b=b, k=kp)))
+            if p["gat"]:
+                add(Spec(f"attn_scores__b{b}_h{kp}", "attn_scores",
+                         model.attn_scores,
+                         [("h", (b, kp), "f32"), ("a1", (kp,), "f32"),
+                          ("a2", (kp,), "f32")],
+                         meta=dict(b=b, h=kp)))
+            for pb in LP_PAIR_BUCKETS:
+                add(Spec(f"lp_loss__b{b}_h{kp}_p{pb}", "lp_loss",
+                         model.lp_loss,
+                         [("h", (b, kp), "f32"), ("src", (pb,), "i32"),
+                          ("dst", (pb,), "i32"), ("neg", (pb,), "i32"),
+                          ("mask", (pb,), "f32")],
+                         meta=dict(b=b, h=kp, p=pb)))
+        for c in chunk_rows(v):
+            for eb in edge_buckets(e, v, c):
+                add_agg(c, eb, v)
+                if p["gat"]:
+                    add_edge_softmax(c, eb, v)
+    return list(specs.values())
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(fn, arg_structs) -> str:
+    # keep_unused: artifacts share calling conventions (e.g. both agg
+    # lowerings take row_ptr AND edge_dst); XLA must not prune parameters
+    # or the Rust caller's buffer count would mismatch.
+    lowered = jax.jit(fn, keep_unused=True).lower(*arg_structs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def emit(specs, out_dir: str, force: bool = False):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"dim_tile": DIM_TILE, "row_block": ROW_BLOCK,
+                "artifacts": []}
+    t0 = time.time()
+    n_new = 0
+    for i, spec in enumerate(specs):
+        path = os.path.join(out_dir, spec.name + ".hlo.txt")
+        # Content key: lowering is deterministic given the spec + jax
+        # version, so skip existing files unless --force.
+        if force or not os.path.exists(path):
+            text = to_hlo_text(_tuple_fn(spec.fn), spec.shape_structs())
+            with open(path, "w") as f:
+                f.write(text)
+            n_new += 1
+        entry = {
+            "name": spec.name,
+            "kind": spec.kind,
+            "file": spec.name + ".hlo.txt",
+            "inputs": [{"name": n, "shape": list(s), "dtype": d}
+                       for (n, s, d) in spec.inputs],
+            "meta": spec.meta,
+        }
+        manifest["artifacts"].append(entry)
+        if (i + 1) % 50 == 0:
+            print(f"  [{i + 1}/{len(specs)}] {time.time() - t0:.1f}s",
+                  file=sys.stderr)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    # TSV mirror for the Rust loader (the offline build has no JSON crate):
+    #   name \t kind \t file \t input1:dtype:d1xd2 ; input2:...
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        f.write(f"#dim_tile={DIM_TILE}\n#row_block={ROW_BLOCK}\n")
+        for a in manifest["artifacts"]:
+            ins = ";".join(
+                f"{i['name']}:{i['dtype']}:{'x'.join(map(str, i['shape']))}"
+                for i in a["inputs"])
+            f.write(f"{a['name']}\t{a['kind']}\t{a['file']}\t{ins}\n")
+    print(f"emitted {n_new} new / {len(specs)} total artifacts "
+          f"in {time.time() - t0:.1f}s -> {out_dir}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--filter", nargs="*", default=None,
+                    help="only emit artifacts needed by these profiles")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    specs = build_plan(args.filter)
+    if args.list:
+        for s in specs:
+            print(s.name)
+        print(f"{len(specs)} artifacts")
+        return
+    emit(specs, args.out_dir, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""L1 Pallas kernels for the NeutronTP reproduction.
+
+``spmm``  — weighted CSR aggregation (the paper's hot-spot)
+``mlp``   — fused dense + bias + ReLU tiles (the decoupled NN phase)
+``ref``   — pure-jnp oracles every kernel is tested against
+"""
+
+from . import mlp, ref, spmm  # noqa: F401

@@ -1,0 +1,85 @@
+"""L1 Pallas kernel: fused dense + bias + (optional) ReLU tile kernel.
+
+The decoupled NN phase is plain dense layers.  On TPU this is the MXU-bound
+piece: tile (B x D) @ (D x H) into (bm x bn) output tiles with the full-K
+contraction per tile (K = D fits VMEM for every profile we ship: the largest
+is D=1024 -> a 128x1024 f32 x-tile is 512 KiB).
+
+Like the SpMM kernel this must lower with ``interpret=True`` for the CPU
+PJRT plugin; the BlockSpec structure is what carries over to real hardware.
+Validated against ``ref.dense_relu_ref`` / ``ref.dense_linear_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 128  # output-tile rows (MXU-friendly multiple of 8/128)
+DEFAULT_BN = 128  # output-tile cols
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, relu: bool):
+    x = x_ref[...]          # (bm, K)
+    w = w_ref[...]          # (K, bn)
+    b = b_ref[...]          # (bn,)
+    z = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    o_ref[...] = jnp.maximum(z, 0.0) if relu else z
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "bm", "bn"))
+def dense_pallas(x, w, b, *, relu: bool, bm: int = DEFAULT_BM,
+                 bn: int = DEFAULT_BN):
+    """Fused ``relu?(x @ w + b)`` with a (rows, cols) output-tile grid.
+
+    x f32[B, D], w f32[D, H], b f32[H] -> f32[B, H]; B % bm == 0,
+    H % bn == 0 (the Rust side pads to the shape buckets).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (k, k2)
+    bm = min(bm, m)
+    bn = min(bn, n)
+    if m % bm or n % bn:
+        raise ValueError(f"shape ({m},{n}) not tileable by ({bm},{bn})")
+    grid = (m // bm, n // bn)
+    kernel = functools.partial(_dense_kernel, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+
+
+def mxu_utilization_estimate(m: int, k: int, n: int, bm: int = DEFAULT_BM,
+                             bn: int = DEFAULT_BN) -> dict:
+    """Roofline model for the dense tile on a TPU-class MXU (bf16 128x128).
+
+    Returns the arithmetic intensity and the fraction of MXU issue slots the
+    tiling can keep busy, assuming the x/w tiles stream from HBM once per
+    grid step.  Recorded in EXPERIMENTS.md §Perf.
+    """
+    flops = 2.0 * m * k * n
+    # bytes moved: each x tile read n/bn times, each w tile read m/bm times
+    bytes_moved = (m * k * 4) * (n / bn) + (k * n * 4) * (m / bm) + m * n * 4
+    intensity = flops / bytes_moved
+    # MXU does 128x128x128 MACs/step; utilization limited by tile edges
+    eff_m = bm / (128 * max(1, -(-bm // 128)))
+    eff_n = bn / (128 * max(1, -(-bn // 128)))
+    eff_k = min(k, 128) / 128 if k < 128 else 1.0
+    return {
+        "flops": flops,
+        "bytes": bytes_moved,
+        "arith_intensity": intensity,
+        "mxu_tile_efficiency": eff_m * eff_n * eff_k,
+    }

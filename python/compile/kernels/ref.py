@@ -1,0 +1,142 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+Every kernel in this package must agree with the corresponding function in
+this module to float32 tolerance; ``python/tests`` enforces this with both
+fixed cases and hypothesis sweeps. These references are also reused by the
+L2 model tests as the "coupled" ground truth.
+
+Conventions shared with the Rust side (see DESIGN.md §Artifact shape
+strategy):
+  * chunk CSR: ``row_ptr[C+1]``, ``col_idx[E]``, ``edge_w[E]`` with padded
+    edges carrying ``edge_w == 0`` and a valid (in-range) ``col_idx``;
+    padded rows have ``row_ptr[i] == row_ptr[i+1]``.
+  * ``edge_dst[E]`` is the CSR expansion (dst row id per edge); padded edges
+    may point at any valid row because their weight is zero.
+  * all float tensors are float32, all index tensors are int32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "csr_spmm_ref",
+    "edge_spmm_ref",
+    "dense_relu_ref",
+    "dense_linear_ref",
+    "dense_bwd_ref",
+    "edge_softmax_ref",
+    "softmax_xent_ref",
+    "lp_loss_ref",
+    "leaky_relu",
+]
+
+
+def leaky_relu(x: jnp.ndarray, slope: float = 0.2) -> jnp.ndarray:
+    return jnp.where(x >= 0, x, slope * x)
+
+
+def csr_spmm_ref(row_ptr, col_idx, edge_w, x):
+    """Weighted CSR aggregation: ``y[i, :] = sum_e w[e] * x[col[e], :]``.
+
+    Implemented edge-wise via a scatter-add so it is shape-static (the CSR
+    ``row_ptr`` is only used to derive the per-edge dst ids, in numpy at
+    trace time — tests only).  Inside jit use ``edge_spmm_ref`` with an
+    explicit ``edge_dst``.
+    """
+    import numpy as np
+
+    rp = np.asarray(row_ptr)
+    num_rows = rp.shape[0] - 1
+    edge_dst = np.repeat(np.arange(num_rows, dtype=np.int32), np.diff(rp))
+    # Pad to E (padded edges have weight zero so dst 0 is harmless).
+    e = col_idx.shape[0]
+    if edge_dst.shape[0] < e:
+        edge_dst = np.concatenate(
+            [edge_dst, np.zeros(e - edge_dst.shape[0], dtype=np.int32)]
+        )
+    return edge_spmm_ref(jnp.asarray(edge_dst), col_idx, edge_w, x, num_rows)
+
+
+def edge_spmm_ref(edge_dst, col_idx, edge_w, x, num_rows: int):
+    """Scatter-add formulation of the weighted aggregation."""
+    contrib = edge_w[:, None] * x[col_idx]
+    out = jnp.zeros((num_rows, x.shape[1]), dtype=x.dtype)
+    return out.at[edge_dst].add(contrib)
+
+
+def dense_relu_ref(x, w, b):
+    """relu(x @ w + b); returns (activation, pre_activation)."""
+    z = x @ w + b
+    return jnp.maximum(z, 0.0), z
+
+
+def dense_linear_ref(x, w, b):
+    z = x @ w + b
+    return z, z
+
+
+def dense_bwd_ref(grad_out, x, w, pre_act, relu: bool):
+    """Backward of dense(+ReLU). Returns (grad_x, grad_w, grad_b)."""
+    g = grad_out * (pre_act > 0).astype(grad_out.dtype) if relu else grad_out
+    return g @ w.T, x.T @ g, jnp.sum(g, axis=0)
+
+
+def edge_softmax_ref(col_idx, edge_dst, valid, s_src, s_dst, num_rows: int,
+                     slope: float = 0.2):
+    """GAT edge attention with per-dst-row softmax.
+
+    ``e_uv = leaky_relu(s_src[u] + s_dst[v])``; softmax over the in-edges of
+    each dst row ``v``; invalid (padded) edges contribute nothing and get
+    alpha == 0.
+    """
+    e = leaky_relu(s_src[col_idx] + s_dst[edge_dst], slope)
+    neg = jnp.full_like(e, -1e30)
+    e_masked = jnp.where(valid > 0, e, neg)
+    row_max = jax.ops.segment_max(e_masked, edge_dst, num_segments=num_rows)
+    row_max = jnp.where(row_max > -1e29, row_max, 0.0)
+    ex = jnp.exp(e_masked - row_max[edge_dst]) * (valid > 0)
+    denom = jax.ops.segment_sum(ex, edge_dst, num_segments=num_rows)
+    return ex / (denom[edge_dst] + 1e-16)
+
+
+def softmax_xent_ref(logits, labels, sample_mask, class_mask):
+    """Masked softmax cross-entropy.
+
+    ``class_mask`` is additive (0 for valid classes, -1e30 for padded ones),
+    ``sample_mask`` is multiplicative (1 for rows that participate).
+    Returns (mean_loss, grad_logits, correct_count).
+    """
+    z = logits + class_mask[None, :]
+    zmax = jnp.max(z, axis=1, keepdims=True)
+    lse = zmax[:, 0] + jnp.log(jnp.sum(jnp.exp(z - zmax), axis=1))
+    picked = jnp.take_along_axis(z, labels[:, None].astype(jnp.int32), axis=1)[:, 0]
+    per_row = (lse - picked) * sample_mask
+    n = jnp.maximum(jnp.sum(sample_mask), 1.0)
+    loss = jnp.sum(per_row) / n
+    probs = jnp.exp(z - zmax) / jnp.sum(jnp.exp(z - zmax), axis=1, keepdims=True)
+    onehot = jax.nn.one_hot(labels, logits.shape[1], dtype=logits.dtype)
+    grad = (probs - onehot) * sample_mask[:, None] / n
+    pred = jnp.argmax(z, axis=1)
+    correct = jnp.sum((pred == labels) * (sample_mask > 0))
+    return loss, grad, correct.astype(jnp.float32)
+
+
+def lp_loss_ref(h, src, dst, neg, pair_mask):
+    """Link-prediction loss with one negative per positive pair.
+
+    score(u, v) = sigmoid(h_u . h_v); loss = BCE(pos, 1) + BCE(neg, 0).
+    Returns (mean_loss, grad_h).
+    """
+
+    def loss_fn(hh):
+        pos = jnp.sum(hh[src] * hh[dst], axis=1)
+        ngt = jnp.sum(hh[src] * hh[neg], axis=1)
+        lp = jax.nn.softplus(-pos)  # -log sigmoid(pos)
+        ln = jax.nn.softplus(ngt)   # -log (1 - sigmoid(neg))
+        n = jnp.maximum(jnp.sum(pair_mask), 1.0)
+        return jnp.sum((lp + ln) * pair_mask) / n
+
+    loss, grad = jax.value_and_grad(loss_fn)(h)
+    return loss, grad

@@ -1,0 +1,123 @@
+"""L1 Pallas kernel: weighted CSR SpMM — the GNN aggregation hot-spot.
+
+The paper's compute hot-spot is full-neighbour aggregation over a chunk:
+``y[i, :] = sum_{e in row i} w[e] * x[col[e], :]`` where ``x`` holds the
+dim-slice of the source-vertex embeddings resident on this worker and the
+chunk CSR streams in.
+
+Hardware adaptation (DESIGN.md §7): the paper implements this with CUDA
+warp-per-row gather on T4s.  On TPU the same insight — keep the dim-slice
+resident, stream the structure — becomes a Pallas grid over (dst-row blocks)
+with the full dim-tile of ``x`` as the resident VMEM operand and the CSR
+arrays streamed per block.  Aggregation has no MXU work; it is HBM-bandwidth
+bound, so the BlockSpec is chosen so every source row is touched once per
+dim tile.
+
+The kernel MUST run with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls.  Under ``interpret=True`` the kernel lowers to
+plain HLO (while-loops + dynamic-slices), which is exactly what we AOT into
+``artifacts/*.hlo.txt`` for the Rust runtime.
+
+Two lowerings of the same contract are exported; both are validated against
+``ref.csr_spmm_ref``:
+  * ``csr_spmm_pallas``  — the Pallas kernel (paper-faithful structure).
+  * ``edge_spmm_scatter`` — an XLA scatter-add lowering (fast on CPU); the
+    Rust runtime selects between them via ``AggImpl`` in the config.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref as _ref
+
+# Default dst-rows processed per grid step.  256 rows x 32-dim f32
+# accumulator = 32 KiB VMEM — small against the ~16 MiB budget; the resident
+# x tile dominates (S x T x 4 bytes).  See EXPERIMENTS.md §Perf for the
+# block-shape iteration log.
+DEFAULT_ROW_BLOCK = 256
+
+
+def _spmm_kernel(rp_ref, ci_ref, w_ref, x_ref, o_ref, *, row_block: int,
+                 tile: int):
+    """One grid step: aggregate ``row_block`` dst rows.
+
+    rp_ref : int32[C + 1]   full row-pointer array (prefetched)
+    ci_ref : int32[E]       column (src row) index per edge
+    w_ref  : f32[E]         edge weight (0 for padded edges)
+    x_ref  : f32[S, T]      resident source dim-tile
+    o_ref  : f32[row_block, T] output block for this grid step
+    """
+    pid = pl.program_id(0)
+    base = pid * row_block
+
+    def row_body(r, _):
+        start = pl.load(rp_ref, (pl.dslice(base + r, 1),))[0]
+        end = pl.load(rp_ref, (pl.dslice(base + r + 1, 1),))[0]
+
+        def edge_body(e, acc):
+            c = pl.load(ci_ref, (pl.dslice(e, 1),))[0]
+            wv = pl.load(w_ref, (pl.dslice(e, 1),))[0]
+            xrow = pl.load(x_ref, (pl.dslice(c, 1), slice(None)))
+            return acc + wv * xrow[0]
+
+        acc = jax.lax.fori_loop(
+            start, end, edge_body, jnp.zeros((tile,), jnp.float32)
+        )
+        pl.store(o_ref, (pl.dslice(r, 1), slice(None)), acc[None, :])
+        return 0
+
+    jax.lax.fori_loop(0, row_block, row_body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("num_rows", "row_block"))
+def csr_spmm_pallas(row_ptr, col_idx, edge_w, x, *, num_rows: int,
+                    row_block: int = DEFAULT_ROW_BLOCK):
+    """Weighted CSR aggregation via the Pallas kernel (interpret mode).
+
+    Shapes: row_ptr int32[num_rows+1], col_idx int32[E], edge_w f32[E],
+    x f32[S, T] -> f32[num_rows, T].  num_rows must be a multiple of
+    row_block (the Rust side pads chunks to bucket sizes that are).
+    """
+    if num_rows % row_block != 0:
+        raise ValueError(f"num_rows={num_rows} not a multiple of {row_block}")
+    s, t = x.shape
+    e = col_idx.shape[0]
+    grid = (num_rows // row_block,)
+    kernel = functools.partial(_spmm_kernel, row_block=row_block, tile=t)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((num_rows + 1,), lambda i: (0,)),
+            pl.BlockSpec((e,), lambda i: (0,)),
+            pl.BlockSpec((e,), lambda i: (0,)),
+            pl.BlockSpec((s, t), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((row_block, t), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_rows, t), jnp.float32),
+        interpret=True,
+    )(row_ptr, col_idx, edge_w, x)
+
+
+@functools.partial(jax.jit, static_argnames=("num_rows",))
+def edge_spmm_scatter(edge_dst, col_idx, edge_w, x, *, num_rows: int):
+    """Scatter-add lowering of the same contract (XLA-native)."""
+    return _ref.edge_spmm_ref(edge_dst, col_idx, edge_w, x, num_rows)
+
+
+def vmem_footprint_bytes(num_rows: int, s: int, t: int, e: int,
+                         row_block: int = DEFAULT_ROW_BLOCK) -> dict:
+    """Static VMEM model for the kernel — used by DESIGN.md §7 estimates."""
+    return {
+        "x_tile": s * t * 4,
+        "row_ptr": (num_rows + 1) * 4,
+        "col_idx": e * 4,
+        "edge_w": e * 4,
+        "out_block": row_block * t * 4,
+        "total": s * t * 4 + (num_rows + 1) * 4 + e * 8 + row_block * t * 4,
+    }

@@ -1,0 +1,180 @@
+"""L2: the paper's decoupled GNN compute pieces, written in JAX.
+
+NeutronTP's decoupled tensor parallelism (paper §4.1) splits an epoch into
+phases that the Rust coordinator (L3) orchestrates:
+
+  1. NN phase (vertex-sliced): L rounds of dense layers on each worker's
+     local vertex rows — ``dense_fwd`` chained by the coordinator.
+  2. (GAT only) edge-attention precompute: ``attn_scores`` on complete local
+     rows, then per-chunk ``edge_softmax``.
+  3. split collective, then L rounds of chunked full-graph aggregation on
+     dim slices — ``agg_pallas`` / ``agg_scatter`` per chunk.
+  4. gather collective, downstream task: ``softmax_xent`` or ``lp_loss``.
+  5. backward: the reverse chain; aggregation backward reuses the same agg
+     piece on the transposed chunk CSR, NN backward is ``dense_bwd``.
+
+Each function here is a *piece*, AOT-lowered by ``aot.py`` into one HLO-text
+artifact per shape bucket.  The coordination between pieces — collectives,
+chunk scheduling, pipelining, parameter updates — lives entirely in Rust.
+Nothing in this module runs at serving/training time.
+
+``decoupled_gcn_reference`` is a monolithic jnp implementation of the whole
+decoupled forward/backward used by tests to prove the pieces compose to the
+right gradients, and by Fig-16-style accuracy tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import mlp as _mlp
+from .kernels import ref as _ref
+from .kernels import spmm as _spmm
+
+LEAKY_SLOPE = 0.2
+
+
+# --------------------------------------------------------------------------
+# Forward pieces
+# --------------------------------------------------------------------------
+
+def dense_relu_fwd(x, w, b):
+    """NN-phase layer: returns (activation, pre_activation).
+
+    Perf note (EXPERIMENTS.md §Perf L2-1): the artifact lowers the plain
+    XLA dot — under ``interpret=True`` the Pallas grid serializes into an
+    HLO while-loop that the CPU backend cannot parallelize, and an early
+    version also computed the matmul twice (Pallas + jnp for the
+    pre-activation).  The Pallas tile kernel (`kernels/mlp.py`) remains the
+    TPU-facing structure, validated in tests and benched separately.
+    """
+    pre = x @ w + b
+    return jnp.maximum(pre, 0.0), pre
+
+
+def dense_linear_fwd(x, w, b):
+    z = x @ w + b
+    return z, z
+
+
+def agg_pallas(row_ptr, edge_dst, col_idx, edge_w, x):
+    """Chunk aggregation via the Pallas CSR kernel.
+
+    ``edge_dst`` is accepted (and ignored) so both agg lowerings share one
+    calling convention on the Rust side.
+    """
+    del edge_dst
+    num_rows = row_ptr.shape[0] - 1
+    return _spmm.csr_spmm_pallas(row_ptr, col_idx, edge_w, x,
+                                 num_rows=num_rows)
+
+
+def agg_scatter(row_ptr, edge_dst, col_idx, edge_w, x):
+    """Chunk aggregation via XLA scatter-add (same contract)."""
+    del row_ptr
+    # num_rows is static: encoded in the row_ptr shape at lowering time.
+    raise RuntimeError("use agg_scatter_sized at lowering time")
+
+
+def agg_scatter_sized(num_rows: int):
+    def fn(row_ptr, edge_dst, col_idx, edge_w, x):
+        del row_ptr
+        return _ref.edge_spmm_ref(edge_dst, col_idx, edge_w, x, num_rows)
+    return fn
+
+
+def attn_scores(h, a1, a2):
+    """GAT precompute: per-vertex attention halves s1 = h@a1, s2 = h@a2."""
+    return h @ a1, h @ a2
+
+
+def edge_softmax_sized(num_rows: int):
+    def fn(col_idx, edge_dst, valid, s_src, s_dst):
+        return _ref.edge_softmax_ref(col_idx, edge_dst, valid, s_src, s_dst,
+                                     num_rows, LEAKY_SLOPE)
+    return fn
+
+
+def softmax_xent(logits, labels, sample_mask, class_mask):
+    return _ref.softmax_xent_ref(logits, labels, sample_mask, class_mask)
+
+
+def lp_loss(h, src, dst, neg, pair_mask):
+    return _ref.lp_loss_ref(h, src, dst, neg, pair_mask)
+
+
+# --------------------------------------------------------------------------
+# Backward pieces
+# --------------------------------------------------------------------------
+
+def dense_relu_bwd(grad_out, x, w, pre_act):
+    return _ref.dense_bwd_ref(grad_out, x, w, pre_act, relu=True)
+
+
+def dense_linear_bwd(grad_out, x, w, pre_act):
+    return _ref.dense_bwd_ref(grad_out, x, w, pre_act, relu=False)
+
+
+# --------------------------------------------------------------------------
+# Monolithic references (tests + accuracy experiments)
+# --------------------------------------------------------------------------
+
+def mlp_chain(params, x):
+    """L dense layers: relu on all but the last (linear head)."""
+    h = x
+    pres = []
+    for i, (w, b) in enumerate(params):
+        last = i == len(params) - 1
+        z = h @ w + b
+        pres.append((h, z))
+        h = z if last else jnp.maximum(z, 0.0)
+    return h, pres
+
+
+def decoupled_gcn_reference(params, x, edge_dst, col_idx, edge_w, num_rows,
+                            agg_rounds, labels, sample_mask, class_mask):
+    """Full decoupled-GCN forward + loss as one jnp function.
+
+    This is the semantic the distributed system must match bit-for-bit
+    (up to fp reassociation): MLP chain -> ``agg_rounds`` of normalized
+    aggregation -> softmax CE on the train mask.
+    """
+    h, _ = mlp_chain(params, x)
+    for _ in range(agg_rounds):
+        h = _ref.edge_spmm_ref(edge_dst, col_idx, edge_w, h, num_rows)
+    loss, _, correct = _ref.softmax_xent_ref(h, labels, sample_mask,
+                                             class_mask)
+    return loss, correct
+
+
+def decoupled_gcn_loss_for_grad(params, x, edge_dst, col_idx, edge_w,
+                                num_rows, agg_rounds, labels, sample_mask,
+                                class_mask):
+    h, _ = mlp_chain(params, x)
+    for _ in range(agg_rounds):
+        h = _ref.edge_spmm_ref(edge_dst, col_idx, edge_w, h, num_rows)
+    z = h + class_mask[None, :]
+    zmax = jnp.max(z, axis=1, keepdims=True)
+    lse = zmax[:, 0] + jnp.log(jnp.sum(jnp.exp(z - zmax), axis=1))
+    picked = jnp.take_along_axis(z, labels[:, None].astype(jnp.int32),
+                                 axis=1)[:, 0]
+    n = jnp.maximum(jnp.sum(sample_mask), 1.0)
+    return jnp.sum((lse - picked) * sample_mask) / n
+
+
+def coupled_gcn_reference(params, x, edge_dst, col_idx, edge_w, num_rows,
+                          labels, sample_mask, class_mask):
+    """Classic (coupled) GCN: aggregate-then-update per layer.
+
+    Used by the Fig-16 accuracy comparison (decoupled vs coupled) to show
+    comparable final accuracy with slightly slower early convergence.
+    """
+    h = x
+    for i, (w, b) in enumerate(params):
+        a = _ref.edge_spmm_ref(edge_dst, col_idx, edge_w, h, num_rows)
+        z = a @ w + b
+        h = z if i == len(params) - 1 else jnp.maximum(z, 0.0)
+    loss, _, correct = _ref.softmax_xent_ref(h, labels, sample_mask,
+                                             class_mask)
+    return loss, correct

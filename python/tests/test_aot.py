@@ -1,0 +1,96 @@
+"""AOT plan + emitter sanity: the shape contract Rust depends on."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+class TestPadDim:
+    @pytest.mark.parametrize("k,want", [
+        (1, 32), (8, 32), (32, 32), (41, 64), (47, 64), (64, 64),
+        (128, 128), (129, 256), (153, 256), (172, 256), (349, 384),
+    ])
+    def test_values(self, k, want):
+        assert aot.pad_dim(k) == want
+
+    def test_monotone_and_idempotent(self):
+        prev = 0
+        for k in range(1, 600):
+            p = aot.pad_dim(k)
+            assert p >= k and p >= prev
+            assert aot.pad_dim(p) == p
+            prev = p
+
+
+class TestPlan:
+    def test_names_unique(self):
+        specs = aot.build_plan()
+        names = [s.name for s in specs]
+        assert len(names) == len(set(names))
+
+    def test_buckets_are_contract_compliant(self):
+        for s in aot.build_plan():
+            if s.kind.startswith("agg"):
+                c, e, sv = s.meta["c"], s.meta["e"], s.meta["s"]
+                assert c % aot.ROW_BLOCK == 0
+                assert e & (e - 1) == 0, "edge buckets are powers of two"
+                assert e <= aot.MAX_EDGE_BUCKET
+                # input spec matches meta
+                shapes = {n: tuple(sh) for (n, sh, _) in s.inputs}
+                assert shapes["row_ptr"] == (c + 1,)
+                assert shapes["x"] == (sv, aot.DIM_TILE)
+
+    def test_every_profile_has_dense_and_agg(self):
+        for pname in aot.PROFILES:
+            specs = aot.build_plan([pname])
+            kinds = {s.kind for s in specs}
+            assert "dense_relu_fwd" in kinds
+            assert "dense_relu_bwd" in kinds
+            assert "agg_pallas" in kinds and "agg_scatter" in kinds
+            assert "softmax_xent" in kinds
+
+    def test_profile_filter_shrinks_plan(self):
+        assert len(aot.build_plan(["tiny"])) < len(aot.build_plan())
+
+    def test_gat_profiles_get_attention_artifacts(self):
+        kinds = {s.kind for s in aot.build_plan(["rdt"])}
+        assert "edge_softmax" in kinds and "attn_scores" in kinds
+        kinds_h = {s.kind for s in aot.build_plan(["mag"])}
+        assert "edge_softmax" not in kinds_h  # hetero profile uses R-GCN
+
+
+class TestEmit(object):
+    def test_emit_roundtrip(self, tmp_path):
+        specs = [s for s in aot.build_plan(["tiny"])
+                 if s.kind in ("dense_relu_fwd", "agg_scatter",
+                               "softmax_xent")][:4]
+        aot.emit(specs, str(tmp_path))
+        man = json.loads((tmp_path / "manifest.json").read_text())
+        assert man["dim_tile"] == 32
+        assert len(man["artifacts"]) == len(specs)
+        for a in man["artifacts"]:
+            text = (tmp_path / a["file"]).read_text()
+            assert "ENTRY" in text and "HloModule" in text
+            # tuple return convention for the rust loader
+            assert "ROOT" in text
+
+    def test_emit_is_incremental(self, tmp_path, capsys):
+        specs = [s for s in aot.build_plan(["tiny"])
+                 if s.kind == "softmax_xent"][:1]
+        aot.emit(specs, str(tmp_path))
+        first = capsys.readouterr().out
+        assert "emitted 1 new" in first
+        aot.emit(specs, str(tmp_path))
+        second = capsys.readouterr().out
+        assert "emitted 0 new" in second
+
+    def test_pallas_artifact_lowers(self, tmp_path):
+        specs = [s for s in aot.build_plan(["tiny"])
+                 if s.kind == "agg_pallas"][:1]
+        aot.emit(specs, str(tmp_path))
+        text = (tmp_path / specs[0].name).with_suffix(".txt")
+        text = (tmp_path / (specs[0].name + ".hlo.txt")).read_text()
+        assert "while" in text.lower(), "pallas CSR loop lowers to HLO while"

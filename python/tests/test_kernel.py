@@ -1,0 +1,163 @@
+"""L1 correctness: Pallas CSR SpMM vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the aggregation hot-spot — every
+other layer of the stack assumes this contract holds, including the Rust
+runtime which executes the AOT-lowered form of exactly this kernel.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, spmm
+
+
+def make_csr(rng, c, s, e_cap, max_deg, pad_rows=0):
+    """Random padded chunk CSR per the shared convention."""
+    deg = rng.integers(0, max_deg + 1, c)
+    if pad_rows:
+        deg[-pad_rows:] = 0
+    # trim to capacity
+    while deg.sum() > e_cap:
+        deg[np.argmax(deg)] -= 1
+    nnz = int(deg.sum())
+    rp = np.zeros(c + 1, np.int32)
+    rp[1:] = np.cumsum(deg)
+    ci = np.zeros(e_cap, np.int32)
+    ci[:nnz] = rng.integers(0, s, nnz)
+    w = np.zeros(e_cap, np.float32)
+    w[:nnz] = rng.normal(size=nnz).astype(np.float32)
+    edge_dst = np.zeros(e_cap, np.int32)
+    edge_dst[:nnz] = np.repeat(np.arange(c, dtype=np.int32), deg)
+    return rp, ci, w, edge_dst, nnz
+
+
+class TestCsrSpmmPallas:
+    def test_matches_ref_basic(self):
+        rng = np.random.default_rng(1)
+        c, s, e, t = 512, 300, 4096, 32
+        rp, ci, w, _, _ = make_csr(rng, c, s, e, 12, pad_rows=17)
+        x = rng.normal(size=(s, t)).astype(np.float32)
+        got = spmm.csr_spmm_pallas(jnp.array(rp), jnp.array(ci),
+                                   jnp.array(w), jnp.array(x), num_rows=c)
+        want = ref.csr_spmm_ref(rp, jnp.array(ci), jnp.array(w),
+                                jnp.array(x))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_empty_graph_is_zero(self):
+        c, s, e, t = 256, 64, 4096, 32
+        rp = np.zeros(c + 1, np.int32)
+        ci = np.zeros(e, np.int32)
+        w = np.zeros(e, np.float32)
+        x = np.ones((s, t), np.float32)
+        got = spmm.csr_spmm_pallas(jnp.array(rp), jnp.array(ci),
+                                   jnp.array(w), jnp.array(x), num_rows=c)
+        assert float(jnp.abs(got).max()) == 0.0
+
+    def test_self_loop_identity(self):
+        """A = I with unit weights reproduces x (rows 0..c of x)."""
+        rng = np.random.default_rng(2)
+        c, s, t = 256, 256, 32
+        rp = np.arange(c + 1, dtype=np.int32)
+        ci = np.arange(c, dtype=np.int32)
+        w = np.ones(c, np.float32)
+        x = rng.normal(size=(s, t)).astype(np.float32)
+        got = spmm.csr_spmm_pallas(jnp.array(rp), jnp.array(ci),
+                                   jnp.array(w), jnp.array(x), num_rows=c)
+        np.testing.assert_allclose(got, x[:c], rtol=1e-6)
+
+    def test_padded_edges_do_not_contribute(self):
+        """Zero-weight padding edges pointing anywhere change nothing."""
+        rng = np.random.default_rng(3)
+        c, s, e, t = 256, 128, 2048, 32
+        rp, ci, w, _, nnz = make_csr(rng, c, s, e, 6)
+        x = rng.normal(size=(s, t)).astype(np.float32)
+        base = spmm.csr_spmm_pallas(jnp.array(rp), jnp.array(ci),
+                                    jnp.array(w), jnp.array(x), num_rows=c)
+        ci2 = ci.copy()
+        ci2[nnz:] = rng.integers(0, s, e - nnz)  # garbage cols, w == 0
+        got = spmm.csr_spmm_pallas(jnp.array(rp), jnp.array(ci2),
+                                   jnp.array(w), jnp.array(x), num_rows=c)
+        np.testing.assert_allclose(got, base, rtol=1e-6)
+
+    def test_multipass_edge_split_is_exact(self):
+        """Splitting a chunk's edge list across two calls and summing the
+        outputs equals one call — the Rust overflow path relies on this."""
+        rng = np.random.default_rng(4)
+        c, s, e, t = 256, 200, 4096, 32
+        rp, ci, w, _, nnz = make_csr(rng, c, s, e, 14)
+        x = rng.normal(size=(s, t)).astype(np.float32)
+        full = spmm.csr_spmm_pallas(jnp.array(rp), jnp.array(ci),
+                                    jnp.array(w), jnp.array(x), num_rows=c)
+        # split each row's edges at the midpoint into two CSR passes
+        deg = np.diff(rp)
+        half = deg // 2
+        rp1 = np.zeros(c + 1, np.int32)
+        rp1[1:] = np.cumsum(half)
+        rp2 = np.zeros(c + 1, np.int32)
+        rp2[1:] = np.cumsum(deg - half)
+        ci1 = np.zeros(e, np.int32); w1 = np.zeros(e, np.float32)
+        ci2 = np.zeros(e, np.int32); w2 = np.zeros(e, np.float32)
+        for r in range(c):
+            a, b = rp[r], rp[r] + half[r]
+            cdone = rp1[r + 1] - rp1[r]
+            ci1[rp1[r]:rp1[r] + cdone] = ci[a:b]
+            w1[rp1[r]:rp1[r] + cdone] = w[a:b]
+            a2, b2 = rp[r] + half[r], rp[r + 1]
+            cdone2 = rp2[r + 1] - rp2[r]
+            ci2[rp2[r]:rp2[r] + cdone2] = ci[a2:b2]
+            w2[rp2[r]:rp2[r] + cdone2] = w[a2:b2]
+        p1 = spmm.csr_spmm_pallas(jnp.array(rp1), jnp.array(ci1),
+                                  jnp.array(w1), jnp.array(x), num_rows=c)
+        p2 = spmm.csr_spmm_pallas(jnp.array(rp2), jnp.array(ci2),
+                                  jnp.array(w2), jnp.array(x), num_rows=c)
+        np.testing.assert_allclose(p1 + p2, full, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        c=st.sampled_from([256, 512, 1024]),
+        s=st.integers(16, 600),
+        max_deg=st.integers(0, 16),
+        tile=st.sampled_from([32]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_matches_ref(self, c, s, max_deg, tile, seed):
+        rng = np.random.default_rng(seed)
+        e = max(4096, c * max(1, max_deg))
+        rp, ci, w, _, _ = make_csr(rng, c, s, e, max_deg,
+                                   pad_rows=rng.integers(0, c // 4))
+        x = rng.normal(size=(s, tile)).astype(np.float32)
+        got = spmm.csr_spmm_pallas(jnp.array(rp), jnp.array(ci),
+                                   jnp.array(w), jnp.array(x), num_rows=c)
+        want = ref.csr_spmm_ref(rp, jnp.array(ci), jnp.array(w),
+                                jnp.array(x))
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+class TestScatterLowering:
+    """The XLA scatter-add lowering obeys the same contract."""
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        c=st.sampled_from([256, 512]),
+        s=st.integers(8, 400),
+        max_deg=st.integers(0, 12),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_scatter_matches_pallas(self, c, s, max_deg, seed):
+        rng = np.random.default_rng(seed)
+        e = max(2048, c * max(1, max_deg))
+        rp, ci, w, edge_dst, _ = make_csr(rng, c, s, e, max_deg)
+        x = rng.normal(size=(s, 32)).astype(np.float32)
+        a = spmm.csr_spmm_pallas(jnp.array(rp), jnp.array(ci),
+                                 jnp.array(w), jnp.array(x), num_rows=c)
+        b = spmm.edge_spmm_scatter(jnp.array(edge_dst), jnp.array(ci),
+                                   jnp.array(w), jnp.array(x), num_rows=c)
+        np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+
+def test_vmem_footprint_model():
+    fp = spmm.vmem_footprint_bytes(num_rows=4096, s=4096, t=32, e=65536)
+    assert fp["x_tile"] == 4096 * 32 * 4
+    assert fp["total"] < 16 * 2**20, "must fit a TPU VMEM budget"

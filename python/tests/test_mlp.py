@@ -1,0 +1,73 @@
+"""L1 correctness: fused dense tile kernel vs oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mlp, ref
+
+
+def rand(rng, *shape):
+    return rng.normal(size=shape).astype(np.float32)
+
+
+class TestDensePallas:
+    @pytest.mark.parametrize("relu", [True, False])
+    def test_matches_ref(self, relu):
+        rng = np.random.default_rng(0)
+        x, w, b = rand(rng, 256, 96), rand(rng, 96, 128), rand(rng, 128)
+        got = mlp.dense_pallas(jnp.array(x), jnp.array(w), jnp.array(b),
+                               relu=relu)
+        fn = ref.dense_relu_ref if relu else ref.dense_linear_ref
+        want, _ = fn(jnp.array(x), jnp.array(w), jnp.array(b))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_small_output_dim(self):
+        """H < 128 (e.g. 41-class heads) uses a single column tile."""
+        rng = np.random.default_rng(1)
+        x, w, b = rand(rng, 128, 602), rand(rng, 602, 41), rand(rng, 41)
+        got = mlp.dense_pallas(jnp.array(x), jnp.array(w), jnp.array(b),
+                               relu=False)
+        want = x @ w + b
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+    def test_relu_clamps(self):
+        x = -np.ones((128, 8), np.float32)
+        w = np.eye(8, dtype=np.float32)
+        b = np.zeros(8, np.float32)
+        got = mlp.dense_pallas(jnp.array(x), jnp.array(w), jnp.array(b),
+                               relu=True)
+        assert float(jnp.abs(got).max()) == 0.0
+
+    def test_untileable_raises(self):
+        x = np.zeros((100, 8), np.float32)  # 100 % min(128,100) != 0... ok
+        w = np.zeros((8, 200), np.float32)  # 200 % 128 != 0
+        b = np.zeros(200, np.float32)
+        with pytest.raises(ValueError):
+            mlp.dense_pallas(jnp.array(x), jnp.array(w), jnp.array(b),
+                             relu=False, bm=128, bn=128)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        m=st.sampled_from([128, 256, 512]),
+        k=st.integers(1, 300),
+        n=st.sampled_from([32, 41, 64, 128, 256]),
+        relu=st.booleans(),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_matches_ref(self, m, k, n, relu, seed):
+        rng = np.random.default_rng(seed)
+        x, w, b = rand(rng, m, k), rand(rng, k, n), rand(rng, n)
+        got = mlp.dense_pallas(jnp.array(x), jnp.array(w), jnp.array(b),
+                               relu=relu)
+        z = x @ w + b
+        want = np.maximum(z, 0) if relu else z
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_mxu_estimate_sane():
+    est = mlp.mxu_utilization_estimate(4096, 602, 256)
+    assert est["flops"] == 2.0 * 4096 * 602 * 256
+    assert 0 < est["mxu_tile_efficiency"] <= 1.0
+    assert est["arith_intensity"] > 1.0

@@ -1,0 +1,47 @@
+//! Micro-bench: graph substrate (generation, transpose, chunk planning,
+//! partitioners) — the per-epoch L3 setup costs.
+
+use std::time::Instant;
+
+use neutron_tp::graph::chunk::ChunkPlan;
+use neutron_tp::graph::{generate, partition};
+
+fn bench(name: &str, iters: usize, mut f: impl FnMut()) {
+    for _ in 0..2 {
+        f();
+    }
+    let mut samples: Vec<f64> = (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    samples.sort_by(f64::total_cmp);
+    println!(
+        "{name:<48} median {:>10.3} ms ({iters} iters)",
+        samples[samples.len() / 2] * 1e3
+    );
+}
+
+fn main() {
+    println!("# graph substrate microbench");
+    for (v, e) in [(8192usize, 409_600usize), (65536, 1_310_720)] {
+        bench(&format!("rmat generate        v={v} e={e}"), 5, || {
+            let _ = generate::rmat(v, e, generate::RMAT_SKEWED, 7);
+        });
+        let g = generate::rmat(v, e, generate::RMAT_SKEWED, 7).gcn_normalized();
+        bench(&format!("csr transpose        v={v} e={e}"), 5, || {
+            let _ = g.transpose();
+        });
+        bench(&format!("chunk plan (4 chunks) v={v} e={e}"), 5, || {
+            let _ = ChunkPlan::build(&g, v / 4, v / 4, 1 << 20);
+        });
+        bench(&format!("chunk partition      v={v}"), 10, || {
+            let _ = partition::chunk_partition(v, 16);
+        });
+        bench(&format!("greedy min-cut       v={v} e={e}"), 3, || {
+            let _ = partition::greedy_min_cut(&g, 16);
+        });
+    }
+}

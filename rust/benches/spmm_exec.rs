@@ -1,0 +1,89 @@
+//! Device-path bench: measured artifact execution times for the two
+//! aggregation lowerings (XLA scatter vs Pallas CSR) and the fused dense
+//! kernel, through the full Rust runtime (executor pool, padding, crop).
+//! These are the numbers the event sim schedules (DESIGN.md §4) and the
+//! §Perf baseline for L1/L3 optimization.
+
+use std::time::Instant;
+
+use neutron_tp::graph::chunk::ChunkPlan;
+use neutron_tp::graph::generate;
+use neutron_tp::model::params::DenseLayer;
+use neutron_tp::runtime::ops::Ops;
+use neutron_tp::runtime::{ArtifactStore, ExecutorPool};
+use neutron_tp::tensor::Matrix;
+use neutron_tp::util::Rng;
+
+fn median(mut v: Vec<f64>) -> f64 {
+    v.sort_by(f64::total_cmp);
+    v[v.len() / 2]
+}
+
+fn main() -> anyhow::Result<()> {
+    let store = ArtifactStore::load("artifacts")?;
+    let pool = ExecutorPool::new(&store, 1)?; // single thread: stable medians
+    println!("# artifact execution bench (measured device seconds)");
+
+    let mut rng = Rng::seed_from_u64(3);
+    for (v, e) in [(1024usize, 8192usize), (8192, 409_600)] {
+        let g = generate::rmat(v, e, generate::RMAT_SKEWED, 5).gcn_normalized();
+        let plan = ChunkPlan::build(&g, v, v, 1 << 20.min(e.next_power_of_two().trailing_zeros() as usize));
+        let x = Matrix::from_fn(v, 32, |_, _| rng.gen_f32_range(-1.0, 1.0));
+        for pallas in [false, true] {
+            let ops = Ops::new(&store, &pool, pallas);
+            let art = match ops.agg_artifact(plan.c_bucket, plan.e_bucket, v) {
+                Ok(a) => a.name.clone(),
+                Err(e) => {
+                    println!("agg v={v}: {e}");
+                    continue;
+                }
+            };
+            let art = store.get(&art).unwrap();
+            // warmup (compile)
+            let pass = &plan.chunks[0].passes[0];
+            let _ = ops.agg_pass(art, pass, plan.chunks[0].num_rows(), &x)?;
+            let samples: Vec<f64> = (0..10)
+                .map(|_| ops.agg_pass(art, pass, plan.chunks[0].num_rows(), &x).map(|r| r.1))
+                .collect::<Result<_, _>>()?;
+            let med = median(samples);
+            let live = pass.live_edges as f64;
+            println!(
+                "agg[{}] v={v} e_bucket={} live={live}: {:.3} ms  ({:.1} Medges/s)",
+                if pallas { "pallas" } else { "scatter" },
+                plan.e_bucket,
+                med * 1e3,
+                live / med / 1e6
+            );
+        }
+    }
+
+    // dense path
+    let ops = Ops::new(&store, &pool, false);
+    for (b, d, h) in [(2048usize, 602usize, 256usize), (4096, 128, 128)] {
+        let layer = DenseLayer::glorot(d, h, &mut rng);
+        let x = Matrix::from_fn(b, d, |_, _| rng.gen_f32_range(-1.0, 1.0));
+        if ops.dense_fwd(&x, &layer.w, &layer.b, true).is_err() {
+            println!("dense b={b} d={d} h={h}: no artifact");
+            continue;
+        }
+        let mut wall = Vec::new();
+        let mut dev = Vec::new();
+        for _ in 0..10 {
+            let t0 = Instant::now();
+            let (_, _, s) = ops.dense_fwd(&x, &layer.w, &layer.b, true)?;
+            wall.push(t0.elapsed().as_secs_f64());
+            dev.push(s);
+        }
+        let flops = 2.0 * b as f64 * d as f64 * h as f64;
+        println!(
+            "dense_relu b={b} d={d} h={h}: device {:.3} ms, wall {:.3} ms ({:.1} GFLOP/s; \
+             L3 overhead {:.0}%)",
+            median(dev.clone()) * 1e3,
+            median(wall.clone()) * 1e3,
+            flops / median(dev.clone()) / 1e9,
+            (median(wall) / median(dev) - 1.0) * 100.0
+        );
+    }
+    println!("total artifact executions: {}", pool.executed());
+    Ok(())
+}

@@ -1,0 +1,7 @@
+//! Drivers that regenerate every table and figure of the paper's
+//! evaluation (DESIGN.md §6). Each driver prints the same rows/series the
+//! paper reports and returns them as CSV-ish text for `results/`.
+
+pub mod experiments;
+
+pub use experiments::run_experiment;

@@ -1,0 +1,8 @@
+//! Simulated multi-worker cluster (DESIGN.md §3/§4): real data movement on
+//! shared memory, timing from a discrete-event simulation fed by measured
+//! device durations and the network cost model.
+
+pub mod collectives;
+pub mod event;
+
+pub use event::{EventSim, StreamKind};

@@ -1,0 +1,293 @@
+//! Chunk-based logical partitioning (paper §4.2, Fig 9a).
+//!
+//! A *chunk* is a set of destination vertices with contiguous IDs together
+//! with **all** their in-edges, so full-neighbour aggregation of the chunk
+//! is independent given the (replicated) source embeddings. Chunking is
+//! logical: no physical storage moves; every worker derives the same plan
+//! locally and schedules chunks in the same order, which is what keeps
+//! tensor parallelism load-balanced without cross-chunk coordination.
+//!
+//! Each chunk is further lowered into one or more **aggregation passes**
+//! padded to the artifact shape buckets `(c_bucket rows, e_bucket edges)`.
+//! A pass may carry only part of a chunk's (or even a single hub row's)
+//! edges — aggregation is linear, so outputs of passes over disjoint edge
+//! subsets sum to the exact result (validated in the L1 tests and here).
+
+use std::ops::Range;
+use std::sync::Arc;
+
+use super::csr::Csr;
+
+/// One padded artifact call worth of aggregation work.
+#[derive(Clone, Debug)]
+pub struct AggPass {
+    /// local row_ptr, padded to `c_bucket + 1`
+    pub row_ptr: Arc<Vec<i32>>,
+    /// global src ids, padded to `e_bucket` (padding: col 0, weight 0)
+    pub col: Arc<Vec<i32>>,
+    /// local dst row per edge, padded to `e_bucket`
+    pub edge_dst: Arc<Vec<i32>>,
+    pub w: Arc<Vec<f32>>,
+    /// actual (unpadded) edge count in this pass
+    pub live_edges: usize,
+}
+
+impl AggPass {
+    pub fn new(
+        row_ptr: Vec<i32>,
+        col: Vec<i32>,
+        edge_dst: Vec<i32>,
+        w: Vec<f32>,
+        live_edges: usize,
+    ) -> Self {
+        // Arc'd so the per-call executor args are refcount bumps, not
+        // multi-MB copies (EXPERIMENTS.md §Perf L3-1)
+        AggPass {
+            row_ptr: Arc::new(row_ptr),
+            col: Arc::new(col),
+            edge_dst: Arc::new(edge_dst),
+            w: Arc::new(w),
+            live_edges,
+        }
+    }
+}
+
+/// A chunk: contiguous dst rows plus its lowered passes.
+#[derive(Clone, Debug)]
+pub struct Chunk {
+    pub rows: Range<usize>,
+    pub passes: Vec<AggPass>,
+    /// sorted unique global src ids referenced by this chunk — the basis
+    /// of the inter-chunk communication dedup (paper Fig 9d)
+    pub src_set: Vec<u32>,
+    pub live_edges: usize,
+}
+
+impl Chunk {
+    pub fn num_rows(&self) -> usize {
+        self.rows.len()
+    }
+}
+
+/// A full chunk schedule for one graph orientation.
+#[derive(Clone, Debug)]
+pub struct ChunkPlan {
+    pub chunks: Vec<Chunk>,
+    pub c_bucket: usize,
+    pub e_bucket: usize,
+    pub num_vertices: usize,
+}
+
+impl ChunkPlan {
+    /// Partition `g` into `ceil(n / rows_per_chunk)` chunks and lower each
+    /// into padded passes. `rows_per_chunk <= c_bucket` is required; the
+    /// last chunk may be short (its rows pad with empties).
+    pub fn build(g: &Csr, rows_per_chunk: usize, c_bucket: usize, e_bucket: usize) -> ChunkPlan {
+        assert!(rows_per_chunk > 0 && rows_per_chunk <= c_bucket);
+        let n = g.num_vertices();
+        let mut chunks = Vec::new();
+        let mut lo = 0;
+        while lo < n {
+            let hi = (lo + rows_per_chunk).min(n);
+            chunks.push(Self::lower_chunk(g, lo..hi, c_bucket, e_bucket));
+            lo = hi;
+        }
+        ChunkPlan { chunks, c_bucket, e_bucket, num_vertices: n }
+    }
+
+    fn lower_chunk(g: &Csr, rows: Range<usize>, c_bucket: usize, e_bucket: usize) -> Chunk {
+        let mut passes = Vec::new();
+        let mut src_set: Vec<u32> = Vec::new();
+        let mut live_total = 0usize;
+
+        // iterate rows, cutting a new pass whenever e_bucket fills; a row
+        // may straddle passes (exact: aggregation is linear in edges)
+        let mut cur = PassBuilder::new(rows.len(), c_bucket, e_bucket);
+        for (local, v) in rows.clone().enumerate() {
+            let (cols, ws) = g.in_edges(v);
+            live_total += cols.len();
+            src_set.extend_from_slice(cols);
+            let mut off = 0;
+            while off < cols.len() {
+                let space = e_bucket - cur.edges;
+                if space == 0 {
+                    passes.push(cur.finish());
+                    cur = PassBuilder::new(rows.len(), c_bucket, e_bucket);
+                    continue;
+                }
+                let take = space.min(cols.len() - off);
+                cur.push_row_edges(local, &cols[off..off + take], &ws[off..off + take]);
+                off += take;
+            }
+            cur.seal_row(local);
+        }
+        passes.push(cur.finish());
+        src_set.sort_unstable();
+        src_set.dedup();
+        Chunk { rows, passes, src_set, live_edges: live_total }
+    }
+
+    pub fn num_chunks(&self) -> usize {
+        self.chunks.len()
+    }
+
+    pub fn total_passes(&self) -> usize {
+        self.chunks.iter().map(|c| c.passes.len()).sum()
+    }
+
+    /// Peak per-pass device bytes for one dim tile (memory scheduler).
+    pub fn pass_device_bytes(&self, s_bucket: usize, tile: usize) -> usize {
+        // row_ptr + col + edge_dst (i32) + w (f32) + x + out
+        (self.c_bucket + 1) * 4
+            + self.e_bucket * 12
+            + s_bucket * tile * 4
+            + self.c_bucket * tile * 4
+    }
+}
+
+struct PassBuilder {
+    chunk_rows: usize,
+    c_bucket: usize,
+    e_bucket: usize,
+    row_ptr: Vec<i32>,
+    col: Vec<i32>,
+    edge_dst: Vec<i32>,
+    w: Vec<f32>,
+    edges: usize,
+    sealed_rows: usize,
+}
+
+impl PassBuilder {
+    fn new(chunk_rows: usize, c_bucket: usize, e_bucket: usize) -> Self {
+        Self {
+            chunk_rows,
+            c_bucket,
+            e_bucket,
+            row_ptr: vec![0i32],
+            col: Vec::new(),
+            edge_dst: Vec::new(),
+            w: Vec::new(),
+            edges: 0,
+            sealed_rows: 0,
+        }
+    }
+
+    fn push_row_edges(&mut self, local_row: usize, cols: &[u32], ws: &[f32]) {
+        // seal any skipped empty rows
+        while self.sealed_rows < local_row {
+            self.row_ptr.push(self.edges as i32);
+            self.sealed_rows += 1;
+        }
+        self.col.extend(cols.iter().map(|&c| c as i32));
+        self.edge_dst.extend(std::iter::repeat_n(local_row as i32, cols.len()));
+        self.w.extend_from_slice(ws);
+        self.edges += cols.len();
+    }
+
+    fn seal_row(&mut self, local_row: usize) {
+        while self.sealed_rows <= local_row {
+            self.row_ptr.push(self.edges as i32);
+            self.sealed_rows += 1;
+        }
+    }
+
+    fn finish(mut self) -> AggPass {
+        // seal remaining chunk rows, then pad row_ptr to c_bucket + 1
+        while self.sealed_rows < self.chunk_rows {
+            self.row_ptr.push(self.edges as i32);
+            self.sealed_rows += 1;
+        }
+        while self.row_ptr.len() < self.c_bucket + 1 {
+            self.row_ptr.push(self.edges as i32);
+        }
+        let live = self.edges;
+        self.col.resize(self.e_bucket, 0);
+        self.edge_dst.resize(self.e_bucket, 0);
+        self.w.resize(self.e_bucket, 0.0);
+        AggPass::new(self.row_ptr, self.col, self.edge_dst, self.w, live)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+    use crate::tensor::Matrix;
+
+    /// Host-side evaluation of a plan: must equal whole-graph spmm.
+    fn eval_plan(plan: &ChunkPlan, x: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(plan.num_vertices, x.cols());
+        for chunk in &plan.chunks {
+            for pass in &chunk.passes {
+                for e in 0..pass.live_edges {
+                    let dst = chunk.rows.start + pass.edge_dst[e] as usize;
+                    let src = pass.col[e] as usize;
+                    let wv = pass.w[e];
+                    let orow = out.row_mut(dst);
+                    for (o, &xi) in orow.iter_mut().zip(x.row(src)) {
+                        *o += wv * xi;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn plan_covers_all_edges() {
+        let g = generate::rmat(512, 4096, generate::RMAT_SKEWED, 3).gcn_normalized();
+        let plan = ChunkPlan::build(&g, 128, 256, 1024);
+        let total: usize = plan.chunks.iter().map(|c| c.live_edges).sum();
+        assert_eq!(total, g.num_edges());
+        assert_eq!(plan.num_chunks(), 4);
+    }
+
+    #[test]
+    fn chunked_equals_whole_graph_spmm() {
+        let g = generate::rmat(512, 8192, generate::RMAT_SKEWED, 5).gcn_normalized();
+        let x = Matrix::from_fn(512, 8, |r, c| ((r * 7 + c) % 13) as f32 * 0.1);
+        let want = g.spmm_ref(&x);
+        for (rows_per, cbkt, ebkt) in [(128, 128, 512), (128, 256, 4096), (512, 512, 1024)] {
+            let plan = ChunkPlan::build(&g, rows_per, cbkt, ebkt);
+            let got = eval_plan(&plan, &x);
+            assert!(
+                got.max_abs_diff(&want) < 1e-4,
+                "mismatch at rows_per={rows_per} e_bucket={ebkt}"
+            );
+        }
+    }
+
+    #[test]
+    fn overflow_chunks_multi_pass() {
+        // hub row with 600 in-edges, e_bucket 256 -> needs >= 3 passes
+        let edges: Vec<(u32, u32)> = (0..600).map(|i| (i % 128, 0)).collect();
+        let g = Csr::from_edges(128, &edges);
+        let plan = ChunkPlan::build(&g, 128, 256, 256);
+        assert!(plan.chunks[0].passes.len() >= 3);
+        let x = Matrix::from_fn(128, 4, |r, _| r as f32);
+        assert!(eval_plan(&plan, &x).max_abs_diff(&g.spmm_ref(&x)) < 1e-3);
+    }
+
+    #[test]
+    fn row_ptr_padding_is_flat() {
+        let g = generate::uniform(100, 300, 1);
+        let plan = ChunkPlan::build(&g, 100, 256, 512);
+        let pass = &plan.chunks[0].passes[0];
+        assert_eq!(pass.row_ptr.len(), 257);
+        let last = *pass.row_ptr.last().unwrap();
+        assert_eq!(last as usize, pass.live_edges);
+        // padded rows are empty
+        for i in 101..=256 {
+            assert_eq!(pass.row_ptr[i], last);
+        }
+    }
+
+    #[test]
+    fn src_set_sorted_unique() {
+        let g = generate::rmat(256, 2048, generate::RMAT_SKEWED, 9);
+        let plan = ChunkPlan::build(&g, 64, 256, 4096);
+        for c in &plan.chunks {
+            assert!(c.src_set.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+}

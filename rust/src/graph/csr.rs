@@ -1,0 +1,265 @@
+//! Compressed sparse row graph, grouped by **destination** vertex (each
+//! row holds the in-edges of one dst) — the orientation full-neighbour
+//! aggregation consumes. The transpose (grouped by src) drives the
+//! backward pass, exploiting the associativity argument of paper §4.2.1.
+
+use crate::tensor::Matrix;
+
+/// Directed graph in CSR-by-destination form with per-edge f32 weights.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    /// number of vertices (rows == possible dsts == possible srcs)
+    n: usize,
+    /// `row_ptr[v]..row_ptr[v+1]` indexes the in-edges of dst `v`
+    row_ptr: Vec<u32>,
+    /// source vertex per edge
+    col: Vec<u32>,
+    /// edge weight (e.g. GCN symmetric normalization)
+    w: Vec<f32>,
+}
+
+impl Csr {
+    pub fn new(n: usize, row_ptr: Vec<u32>, col: Vec<u32>, w: Vec<f32>) -> Self {
+        assert_eq!(row_ptr.len(), n + 1);
+        assert_eq!(col.len(), w.len());
+        assert_eq!(*row_ptr.last().unwrap() as usize, col.len());
+        debug_assert!(col.iter().all(|&c| (c as usize) < n));
+        Self { n, row_ptr, col, w }
+    }
+
+    /// Build from an unsorted edge list `(src, dst)`; weights default 1.
+    pub fn from_edges(n: usize, edges: &[(u32, u32)]) -> Self {
+        let mut deg = vec![0u32; n];
+        for &(_, d) in edges {
+            deg[d as usize] += 1;
+        }
+        let mut row_ptr = vec![0u32; n + 1];
+        for v in 0..n {
+            row_ptr[v + 1] = row_ptr[v] + deg[v];
+        }
+        let mut cursor = row_ptr[..n].to_vec();
+        let mut col = vec![0u32; edges.len()];
+        for &(s, d) in edges {
+            let p = &mut cursor[d as usize];
+            col[*p as usize] = s;
+            *p += 1;
+        }
+        let w = vec![1.0; edges.len()];
+        Self { n, row_ptr, col, w }
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.n
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.col.len()
+    }
+
+    pub fn row_ptr(&self) -> &[u32] {
+        &self.row_ptr
+    }
+
+    pub fn col(&self) -> &[u32] {
+        &self.col
+    }
+
+    pub fn weights(&self) -> &[f32] {
+        &self.w
+    }
+
+    pub fn weights_mut(&mut self) -> &mut [f32] {
+        &mut self.w
+    }
+
+    pub fn in_deg(&self, v: usize) -> usize {
+        (self.row_ptr[v + 1] - self.row_ptr[v]) as usize
+    }
+
+    pub fn in_edges(&self, v: usize) -> (&[u32], &[f32]) {
+        let r = self.row_ptr[v] as usize..self.row_ptr[v + 1] as usize;
+        (&self.col[r.clone()], &self.w[r])
+    }
+
+    pub fn out_degrees(&self) -> Vec<u32> {
+        let mut deg = vec![0u32; self.n];
+        for &c in &self.col {
+            deg[c as usize] += 1;
+        }
+        deg
+    }
+
+    /// Add a self loop to every vertex (GCN's `A + I`). Idempotent if the
+    /// caller ensures no existing self loops.
+    pub fn with_self_loops(&self) -> Csr {
+        let mut row_ptr = Vec::with_capacity(self.n + 1);
+        let mut col = Vec::with_capacity(self.col.len() + self.n);
+        let mut w = Vec::with_capacity(self.w.len() + self.n);
+        row_ptr.push(0u32);
+        for v in 0..self.n {
+            let (cs, ws) = self.in_edges(v);
+            col.extend_from_slice(cs);
+            w.extend_from_slice(ws);
+            col.push(v as u32);
+            w.push(1.0);
+            row_ptr.push(col.len() as u32);
+        }
+        Csr::new(self.n, row_ptr, col, w)
+    }
+
+    /// Replace weights with GCN symmetric normalization
+    /// `1 / sqrt(deg_in(dst) * deg_out(src))` computed on this graph.
+    pub fn gcn_normalized(&self) -> Csr {
+        let out_deg = self.out_degrees();
+        let mut g = self.clone();
+        for v in 0..self.n {
+            let din = self.in_deg(v).max(1) as f32;
+            let r = self.row_ptr[v] as usize..self.row_ptr[v + 1] as usize;
+            for e in r {
+                let dout = out_deg[self.col[e] as usize].max(1) as f32;
+                g.w[e] = 1.0 / (din * dout).sqrt();
+            }
+        }
+        g
+    }
+
+    /// Mean-aggregation weights `1 / deg_in(dst)` (GraphSAGE-mean style).
+    pub fn mean_normalized(&self) -> Csr {
+        let mut g = self.clone();
+        for v in 0..self.n {
+            let din = self.in_deg(v).max(1) as f32;
+            let r = self.row_ptr[v] as usize..self.row_ptr[v + 1] as usize;
+            for e in r {
+                g.w[e] = 1.0 / din;
+            }
+        }
+        g
+    }
+
+    /// Transpose: edges regrouped by src — backward-pass orientation.
+    /// `transpose().in_edges(u)` lists the *out*-neighbours of `u` with the
+    /// same weights, so aggregating gradients over it computes `A^T g`.
+    pub fn transpose(&self) -> Csr {
+        let out_deg = self.out_degrees();
+        let mut row_ptr = vec![0u32; self.n + 1];
+        for v in 0..self.n {
+            row_ptr[v + 1] = row_ptr[v] + out_deg[v];
+        }
+        let mut cursor = row_ptr[..self.n].to_vec();
+        let mut col = vec![0u32; self.col.len()];
+        let mut w = vec![0.0f32; self.w.len()];
+        for v in 0..self.n {
+            let r = self.row_ptr[v] as usize..self.row_ptr[v + 1] as usize;
+            for e in r {
+                let src = self.col[e] as usize;
+                let p = cursor[src] as usize;
+                col[p] = v as u32; // new col = old dst
+                w[p] = self.w[e];
+                cursor[src] += 1;
+            }
+        }
+        Csr::new(self.n, row_ptr, col, w)
+    }
+
+    /// Reference SpMM on the host: `y[v,:] = Σ_e w[e] * x[col[e],:]`.
+    /// Oracle for tests and the ground truth the artifact path must match.
+    pub fn spmm_ref(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.rows(), self.n);
+        let mut y = Matrix::zeros(self.n, x.cols());
+        for v in 0..self.n {
+            let (cs, ws) = self.in_edges(v);
+            let yr = y.row_mut(v);
+            for (&c, &wv) in cs.iter().zip(ws) {
+                for (o, &xi) in yr.iter_mut().zip(x.row(c as usize)) {
+                    *o += wv * xi;
+                }
+            }
+        }
+        y
+    }
+
+    /// Topology bytes (u32 row_ptr + u32 col + f32 w) — the memory the
+    /// paper's §3.2 argues is cheap to replicate.
+    pub fn topology_bytes(&self) -> usize {
+        (self.row_ptr.len() + self.col.len()) * 4 + self.w.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 0 -> 1 -> 2, 0 -> 2
+    fn tri() -> Csr {
+        Csr::from_edges(3, &[(0, 1), (1, 2), (0, 2)])
+    }
+
+    #[test]
+    fn from_edges_groups_by_dst() {
+        let g = tri();
+        assert_eq!(g.in_deg(0), 0);
+        assert_eq!(g.in_deg(1), 1);
+        assert_eq!(g.in_deg(2), 2);
+        let (cols, _) = g.in_edges(2);
+        let mut c = cols.to_vec();
+        c.sort_unstable();
+        assert_eq!(c, vec![0, 1]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let g = tri().gcn_normalized();
+        let tt = g.transpose().transpose();
+        assert_eq!(tt.row_ptr(), g.row_ptr());
+        // columns within a row may permute; compare as sorted pairs
+        for v in 0..3 {
+            let mut a: Vec<_> = {
+                let (c, w) = g.in_edges(v);
+                c.iter().zip(w).map(|(&c, &w)| (c, w.to_bits())).collect()
+            };
+            let mut b: Vec<_> = {
+                let (c, w) = tt.in_edges(v);
+                c.iter().zip(w).map(|(&c, &w)| (c, w.to_bits())).collect()
+            };
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn spmm_transpose_is_adjoint() {
+        // <A x, y> == <x, A^T y>
+        let g = Csr::from_edges(5, &[(0, 1), (1, 2), (3, 2), (4, 0), (2, 4), (1, 4)])
+            .gcn_normalized();
+        let x = Matrix::from_fn(5, 3, |r, c| (r + c) as f32 * 0.3);
+        let y = Matrix::from_fn(5, 3, |r, c| (2 * r + c) as f32 * 0.1);
+        let ax = g.spmm_ref(&x);
+        let aty = g.transpose().spmm_ref(&y);
+        let dot = |m: &Matrix, n: &Matrix| -> f32 {
+            m.data().iter().zip(n.data()).map(|(a, b)| a * b).sum()
+        };
+        let d1 = dot(&ax, &y);
+        let d2 = dot(&x, &aty);
+        assert!((d1 - d2).abs() < 1e-4, "{d1} vs {d2}");
+    }
+
+    #[test]
+    fn gcn_norm_weights() {
+        let g = tri().with_self_loops().gcn_normalized();
+        // dst 2 now has in-edges {0, 1, 2(self)}; din = 3
+        let (cols, ws) = g.in_edges(2);
+        let out_deg = g.out_degrees();
+        for (&c, &w) in cols.iter().zip(ws) {
+            let want = 1.0 / ((3.0 * out_deg[c as usize] as f32).sqrt());
+            assert!((w - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn self_loops_spmm_identity_component() {
+        let g = Csr::from_edges(4, &[]).with_self_loops();
+        let x = Matrix::from_fn(4, 2, |r, c| (r * 2 + c) as f32);
+        assert_eq!(g.spmm_ref(&x), x);
+    }
+}

@@ -1,0 +1,210 @@
+//! Dataset profiles — MIRRORS `python/compile/aot.py::PROFILES`.
+//!
+//! Each profile is a scaled-down synthetic stand-in for one of the paper's
+//! graphs (Table 1): |V|, |E| shrunk to laptop scale with the degree skew,
+//! feature/hidden/label dimensionality, heterogeneity and train-fraction
+//! preserved, because those are the statistics the paper's experiments
+//! actually exercise (DESIGN.md §3).
+
+use super::csr::Csr;
+use crate::util::Rng;
+use super::generate;
+use super::hetero::HeteroGraph;
+use crate::tensor::{pad_dim, Matrix};
+
+/// Static description of a dataset profile (the Python side re-declares
+/// the same numbers; `aot.py` derives the artifact plan from them).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Profile {
+    pub name: &'static str,
+    /// paper dataset this profile stands in for
+    pub stands_for: &'static str,
+    pub v: usize,
+    pub e: usize,
+    /// input feature dimension
+    pub d: usize,
+    /// number of label classes (unpadded)
+    pub k: usize,
+    /// hidden dimension
+    pub h: usize,
+    pub train_frac: f64,
+    pub hetero: bool,
+    /// edge types when hetero
+    pub num_rels: usize,
+    /// degree skew flavour
+    pub skew: Skew,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Skew {
+    /// power-law (R-MAT skewed): social graphs
+    Power,
+    /// mild skew
+    Mild,
+    /// community-structured SBM with label-correlated features
+    Community,
+}
+
+pub const PROFILES: &[Profile] = &[
+    Profile { name: "tiny", stands_for: "(tests)", v: 1024, e: 8192, d: 64, k: 8, h: 32, train_frac: 0.65, hetero: false, num_rels: 1, skew: Skew::Community },
+    Profile { name: "rdt", stands_for: "Reddit", v: 8192, e: 409_600, d: 602, k: 41, h: 256, train_frac: 0.65, hetero: false, num_rels: 1, skew: Skew::Power },
+    Profile { name: "opt", stands_for: "Ogbn-products", v: 16_384, e: 327_680, d: 100, k: 47, h: 64, train_frac: 0.65, hetero: false, num_rels: 1, skew: Skew::Mild },
+    Profile { name: "opr", stands_for: "Ogbn-paper", v: 65_536, e: 1_310_720, d: 128, k: 172, h: 128, train_frac: 0.011, hetero: false, num_rels: 1, skew: Skew::Mild },
+    Profile { name: "fs", stands_for: "Friendster", v: 65_536, e: 2_621_440, d: 256, k: 64, h: 128, train_frac: 0.65, hetero: false, num_rels: 1, skew: Skew::Power },
+    Profile { name: "mag", stands_for: "Ogbn-mag", v: 16_384, e: 163_840, d: 128, k: 349, h: 64, train_frac: 0.65, hetero: true, num_rels: 4, skew: Skew::Mild },
+    Profile { name: "lsc", stands_for: "Mag-lsc", v: 65_536, e: 1_310_720, d: 768, k: 153, h: 256, train_frac: 0.004, hetero: true, num_rels: 4, skew: Skew::Power },
+    Profile { name: "e2e", stands_for: "(end-to-end driver)", v: 131_072, e: 2_621_440, d: 256, k: 16, h: 128, train_frac: 0.65, hetero: false, num_rels: 1, skew: Skew::Community },
+];
+
+pub fn profile(name: &str) -> Option<Profile> {
+    PROFILES.iter().copied().find(|p| p.name == name)
+}
+
+/// A realized dataset: normalized graph + features + labels + split masks.
+pub struct Dataset {
+    pub profile: Profile,
+    /// GCN-normalized graph with self loops (forward orientation, by dst)
+    pub graph: Csr,
+    /// hetero view (when `profile.hetero`)
+    pub hetero: Option<HeteroGraph>,
+    pub features: Matrix,
+    pub labels: Vec<i32>,
+    /// 1.0 where the vertex is in the train split
+    pub train_mask: Vec<f32>,
+    pub val_mask: Vec<f32>,
+    pub test_mask: Vec<f32>,
+}
+
+impl Dataset {
+    /// Materialize a profile. Deterministic in `(profile, seed)`.
+    pub fn generate(p: Profile, seed: u64) -> Dataset {
+        Self::generate_with_dim(p, p.d, seed)
+    }
+
+    /// Same but overriding the feature dimension (Fig 14 sweep).
+    pub fn generate_with_dim(p: Profile, feat_dim: usize, seed: u64) -> Dataset {
+        let (raw, features, labels) = match p.skew {
+            Skew::Community => {
+                let s = generate::sbm(p.v, p.k, feat_dim, p.e / p.v, 0.8, seed);
+                (s.graph, s.features, s.labels)
+            }
+            Skew::Power => {
+                let g = generate::rmat(p.v, p.e, generate::RMAT_SKEWED, seed);
+                let (f, l) = generate::random_features(p.v, feat_dim, p.k, seed ^ 0x5eed);
+                (g, f, l)
+            }
+            Skew::Mild => {
+                let g = generate::rmat(p.v, p.e, generate::RMAT_MILD, seed);
+                let (f, l) = generate::random_features(p.v, feat_dim, p.k, seed ^ 0x5eed);
+                (g, f, l)
+            }
+        };
+        let hetero = p
+            .hetero
+            .then(|| HeteroGraph::from_csr(&raw, p.num_rels, seed ^ 0xbeef));
+        let graph = raw.with_self_loops().gcn_normalized();
+
+        // paper split: train / test / val = 65% / 10% / 25% (or the tiny
+        // train fractions of OPR/LSC)
+        let mut rng = Rng::seed_from_u64(seed ^ 0x517);
+        let mut train = vec![0f32; p.v];
+        let mut val = vec![0f32; p.v];
+        let mut test = vec![0f32; p.v];
+        let val_frac = if p.train_frac > 0.5 { 0.25 } else { 0.10 };
+        for v in 0..p.v {
+            let r: f64 = rng.gen_f64();
+            if r < p.train_frac {
+                train[v] = 1.0;
+            } else if r < p.train_frac + val_frac {
+                val[v] = 1.0;
+            } else {
+                test[v] = 1.0;
+            }
+        }
+        Dataset {
+            profile: p,
+            graph,
+            hetero,
+            features,
+            labels,
+            train_mask: train,
+            val_mask: val,
+            test_mask: test,
+        }
+    }
+
+    /// Padded class count used by all artifact heads.
+    pub fn padded_classes(&self) -> usize {
+        pad_dim(self.profile.k)
+    }
+
+    /// Additive class mask for the padded logits (0 valid, -1e30 padded).
+    pub fn class_mask(&self) -> Vec<f32> {
+        let kp = self.padded_classes();
+        (0..kp)
+            .map(|c| if c < self.profile.k { 0.0 } else { -1e30 })
+            .collect()
+    }
+
+    pub fn num_train(&self) -> usize {
+        self.train_mask.iter().filter(|&&m| m > 0.0).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_have_pow2_vertices() {
+        for p in PROFILES {
+            assert!(p.v.is_power_of_two(), "{} |V| must be a power of two", p.name);
+            assert!(p.e > p.v, "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn tiny_dataset_generates() {
+        let d = Dataset::generate(profile("tiny").unwrap(), 42);
+        assert_eq!(d.features.shape(), (1024, 64));
+        assert_eq!(d.labels.len(), 1024);
+        // self loops make every in-degree >= 1
+        assert!((0..1024).all(|v| d.graph.in_deg(v) >= 1));
+        // split fractions roughly honoured
+        let tf = d.num_train() as f64 / 1024.0;
+        assert!((tf - 0.65).abs() < 0.08, "train frac {tf}");
+    }
+
+    #[test]
+    fn opr_profile_has_tiny_train_fraction() {
+        let d = Dataset::generate(profile("opr").unwrap(), 1);
+        let tf = d.num_train() as f64 / d.profile.v as f64;
+        assert!(tf < 0.03, "ogbn-paper stand-in trains on ~1% of vertices");
+    }
+
+    #[test]
+    fn hetero_profiles_expose_relations() {
+        let d = Dataset::generate(profile("mag").unwrap(), 2);
+        let h = d.hetero.as_ref().unwrap();
+        assert_eq!(h.num_rels(), 4);
+        assert_eq!(h.total_edges(), d.profile.e);
+    }
+
+    #[test]
+    fn class_mask_pads_to_bucket() {
+        let d = Dataset::generate(profile("tiny").unwrap(), 3);
+        let m = d.class_mask();
+        assert_eq!(m.len(), 32);
+        assert_eq!(m[7], 0.0);
+        assert!(m[8] < -1e29);
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = Dataset::generate(profile("tiny").unwrap(), 11);
+        let b = Dataset::generate(profile("tiny").unwrap(), 11);
+        assert_eq!(a.features, b.features);
+        assert_eq!(a.graph.col(), b.graph.col());
+        assert_eq!(a.train_mask, b.train_mask);
+    }
+}

@@ -1,0 +1,212 @@
+//! Synthetic graph generators standing in for the paper's datasets
+//! (DESIGN.md §3): R-MAT for power-law web/social graphs (Reddit,
+//! Friendster, ogbn-*) and a stochastic block model whose features carry
+//! label signal, so accuracy experiments (Fig 16) are meaningful.
+
+use super::csr::Csr;
+use crate::util::Rng;
+use crate::tensor::Matrix;
+
+/// R-MAT recursive-quadrant edge generator. `(a, b, c, d)` are quadrant
+/// probabilities; the classic skewed setting `(0.57, 0.19, 0.19, 0.05)`
+/// yields the power-law degree distribution the paper's load-imbalance
+/// analysis (Fig 3) depends on.
+pub fn rmat(n: usize, num_edges: usize, probs: (f64, f64, f64, f64), seed: u64) -> Csr {
+    assert!(n.is_power_of_two(), "rmat needs a power-of-two vertex count");
+    let (a, b, c, _) = probs;
+    let scale = n.trailing_zeros();
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut edges = Vec::with_capacity(num_edges);
+    for _ in 0..num_edges {
+        let (mut x0, mut x1, mut y0, mut y1) = (0usize, n, 0usize, n);
+        for _ in 0..scale {
+            let r: f64 = rng.gen_f64();
+            let (mx, my) = ((x0 + x1) / 2, (y0 + y1) / 2);
+            if r < a {
+                x1 = mx;
+                y1 = my;
+            } else if r < a + b {
+                x0 = mx;
+                y1 = my;
+            } else if r < a + b + c {
+                x1 = mx;
+                y0 = my;
+            } else {
+                x0 = mx;
+                y0 = my;
+            }
+        }
+        edges.push((x0 as u32, y0 as u32));
+    }
+    Csr::from_edges(n, &edges)
+}
+
+/// Classic skewed R-MAT parameters.
+pub const RMAT_SKEWED: (f64, f64, f64, f64) = (0.57, 0.19, 0.19, 0.05);
+/// Flatter parameters (ogbn-products-like moderate skew).
+pub const RMAT_MILD: (f64, f64, f64, f64) = (0.45, 0.22, 0.22, 0.11);
+
+/// Erdős–Rényi-style uniform random graph (fixed edge count).
+pub fn uniform(n: usize, num_edges: usize, seed: u64) -> Csr {
+    let mut rng = Rng::seed_from_u64(seed);
+    let edges: Vec<(u32, u32)> = (0..num_edges)
+        .map(|_| (rng.gen_range(n) as u32, rng.gen_range(n) as u32))
+        .collect();
+    Csr::from_edges(n, &edges)
+}
+
+/// Stochastic block model with label-correlated features.
+pub struct Sbm {
+    pub graph: Csr,
+    pub features: Matrix,
+    pub labels: Vec<i32>,
+}
+
+/// `k` communities; each vertex draws `avg_deg` in-edges, `p_intra` of them
+/// from its own community. Features = community centroid + unit noise, so
+/// an MLP alone reaches decent accuracy and aggregation adds more — exactly
+/// Assumption 1 of the paper's convergence analysis (§4.1.3).
+pub fn sbm(n: usize, k: usize, feat_dim: usize, avg_deg: usize, p_intra: f64, seed: u64) -> Sbm {
+    let mut rng = Rng::seed_from_u64(seed);
+    let labels: Vec<i32> = (0..n).map(|_| rng.gen_range(k) as i32).collect();
+    // vertices grouped by community for fast intra sampling
+    let mut by_comm: Vec<Vec<u32>> = vec![Vec::new(); k];
+    for (v, &l) in labels.iter().enumerate() {
+        by_comm[l as usize].push(v as u32);
+    }
+    let mut edges = Vec::with_capacity(n * avg_deg);
+    for v in 0..n {
+        let comm = &by_comm[labels[v] as usize];
+        for _ in 0..avg_deg {
+            let src = if rng.gen_bool(p_intra) && !comm.is_empty() {
+                comm[rng.gen_range(comm.len())]
+            } else {
+                rng.gen_range(n) as u32
+            };
+            edges.push((src, v as u32));
+        }
+    }
+    let graph = Csr::from_edges(n, &edges);
+
+    // centroids: +-2 pattern per community over a random sign basis
+    let centroids = Matrix::from_fn(k, feat_dim, |r, c| {
+        let h = (r * 1_000_003 + c * 7919) % 7;
+        if h < 3 {
+            2.0
+        } else if h < 5 {
+            -2.0
+        } else {
+            0.0
+        }
+    });
+    let mut features = Matrix::zeros(n, feat_dim);
+    for v in 0..n {
+        let cent = centroids.row(labels[v] as usize);
+        let row = features.row_mut(v);
+        for (o, &c) in row.iter_mut().zip(cent) {
+            // Box-Muller-free noise: sum of uniforms ~ approx normal
+            let noise: f32 = (0..4).map(|_| rng.gen_f32_range(-0.5, 0.5)).sum();
+            *o = c + noise;
+        }
+    }
+    Sbm { graph, features, labels }
+}
+
+/// Random features/labels for graphs without ground truth (paper's
+/// Friendster treatment: "randomly generated features, labels").
+pub fn random_features(n: usize, dim: usize, k: usize, seed: u64) -> (Matrix, Vec<i32>) {
+    let mut rng = Rng::seed_from_u64(seed);
+    let features = Matrix::from_fn(n, dim, |_, _| rng.gen_f32_range(-1.0, 1.0));
+    let labels = (0..n).map(|_| rng.gen_range(k) as i32).collect();
+    (features, labels)
+}
+
+/// Degree-skew statistic used by tests and the Fig 3 analysis: ratio of the
+/// max in-degree over a contiguous-range partition's average.
+pub fn chunk_edge_imbalance(g: &Csr, parts: usize) -> f64 {
+    let n = g.num_vertices();
+    let loads: Vec<usize> = crate::tensor::row_slices(n, parts)
+        .into_iter()
+        .map(|r| r.map(|v| g.in_deg(v)).sum())
+        .collect();
+    let max = *loads.iter().max().unwrap() as f64;
+    let avg = loads.iter().sum::<usize>() as f64 / parts as f64;
+    if avg == 0.0 {
+        1.0
+    } else {
+        max / avg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmat_shape_and_determinism() {
+        let g1 = rmat(1024, 8192, RMAT_SKEWED, 7);
+        let g2 = rmat(1024, 8192, RMAT_SKEWED, 7);
+        assert_eq!(g1.num_edges(), 8192);
+        assert_eq!(g1.row_ptr(), g2.row_ptr());
+        assert_eq!(g1.col(), g2.col());
+    }
+
+    #[test]
+    fn rmat_is_more_skewed_than_uniform() {
+        let skew = chunk_edge_imbalance(&rmat(4096, 65536, RMAT_SKEWED, 1), 4);
+        let flat = chunk_edge_imbalance(&uniform(4096, 65536, 1), 4);
+        assert!(
+            skew > flat * 1.2,
+            "rmat skew {skew} should exceed uniform {flat}"
+        );
+    }
+
+    #[test]
+    fn sbm_edges_mostly_intra() {
+        let s = sbm(512, 4, 8, 8, 0.9, 3);
+        let mut intra = 0usize;
+        let mut total = 0usize;
+        for v in 0..512 {
+            let (cols, _) = s.graph.in_edges(v);
+            for &c in cols {
+                total += 1;
+                intra += usize::from(s.labels[c as usize] == s.labels[v]);
+            }
+        }
+        assert!(intra as f64 / total as f64 > 0.8);
+    }
+
+    #[test]
+    fn sbm_features_separate_communities() {
+        let s = sbm(256, 4, 16, 4, 0.8, 5);
+        // same-community feature distance < cross-community distance (avg)
+        let mut same = (0.0f64, 0usize);
+        let mut cross = (0.0f64, 0usize);
+        for a in 0..64 {
+            for b in (a + 1)..64 {
+                let d: f32 = s
+                    .features
+                    .row(a)
+                    .iter()
+                    .zip(s.features.row(b))
+                    .map(|(x, y)| (x - y) * (x - y))
+                    .sum();
+                if s.labels[a] == s.labels[b] {
+                    same = (same.0 + d as f64, same.1 + 1);
+                } else {
+                    cross = (cross.0 + d as f64, cross.1 + 1);
+                }
+            }
+        }
+        assert!(same.0 / same.1 as f64 * 1.5 < cross.0 / cross.1 as f64);
+    }
+
+    #[test]
+    fn random_features_deterministic() {
+        let (f1, l1) = random_features(64, 8, 5, 9);
+        let (f2, l2) = random_features(64, 8, 5, 9);
+        assert_eq!(f1, f2);
+        assert_eq!(l1, l2);
+        assert!(l1.iter().all(|&l| l < 5));
+    }
+}

@@ -1,0 +1,16 @@
+//! Graph substrate: CSR storage, synthetic generators standing in for the
+//! paper's datasets, partitioners (chunk + greedy min-cut METIS stand-in),
+//! chunking for the memory-efficient scheduler, and heterogeneous graphs
+//! for the R-GCN experiments.
+
+pub mod chunk;
+pub mod csr;
+pub mod datasets;
+pub mod generate;
+pub mod hetero;
+pub mod partition;
+
+pub use chunk::{Chunk, ChunkPlan};
+pub use csr::Csr;
+pub use datasets::{Dataset, Profile};
+pub use hetero::HeteroGraph;

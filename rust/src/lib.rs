@@ -1,0 +1,39 @@
+//! # neutron-tp — NeutronTP (PVLDB'24) reproduction
+//!
+//! Load-balanced distributed full-graph GNN training with **tensor
+//! parallelism**, rebuilt on a Rust + JAX + Pallas three-layer stack:
+//!
+//! * **L3 (this crate)** — the paper's system contribution: a simulated
+//!   multi-worker cluster, the tensor-parallel training engine with
+//!   generalized decoupled training (paper §4.1), memory-efficient chunk
+//!   scheduling + inter-chunk pipelining (paper §4.2), the gather/split
+//!   collectives, and the data-parallel / mini-batch / historical-embedding
+//!   baselines the paper evaluates against.
+//! * **L2 (python/compile/model.py)** — the GNN compute pieces in JAX,
+//!   AOT-lowered once to HLO text under `artifacts/`.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the aggregation
+//!   and dense hot-spots (interpret mode → plain HLO).
+//!
+//! At runtime the crate is self-contained: it loads `artifacts/*.hlo.txt`
+//! through the PJRT C API (`xla` crate) and never touches Python.
+//!
+//! See `DESIGN.md` for the experiment index and the substitutions made for
+//! the paper's 16-node GPU testbed.
+
+pub mod bench_harness;
+pub mod cluster;
+pub mod config;
+pub mod graph;
+pub mod metrics;
+pub mod model;
+pub mod parallel;
+pub mod runtime;
+pub mod sched;
+pub mod tensor;
+pub mod util;
+
+pub use config::{AggImpl, RunConfig, System};
+pub use metrics::EpochReport;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

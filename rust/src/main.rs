@@ -1,0 +1,233 @@
+//! neutron-tp CLI — the L3 leader entrypoint.
+//!
+//! ```text
+//! neutron-tp train  [--config run.toml] [--profile rdt] [--system tp] ...
+//! neutron-tp bench  <fig3|fig4|...|table4|all> [--out results/] [--fast]
+//! neutron-tp inspect [--artifacts artifacts/]
+//! ```
+//!
+//! (Hand-rolled arg parsing: the offline build has no clap.)
+
+use std::str::FromStr;
+
+use neutron_tp::bench_harness::experiments;
+use neutron_tp::config::RunConfig;
+use neutron_tp::graph::datasets::{self, Dataset};
+use neutron_tp::parallel::{self, Ctx};
+use neutron_tp::runtime::{ArtifactStore, ExecutorPool};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn artifacts_dir(flags: &Flags) -> String {
+    flags
+        .get("artifacts")
+        .cloned()
+        .unwrap_or_else(|| "artifacts".to_string())
+}
+
+fn run() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let flags = Flags::parse(&args[1..]);
+    match cmd.as_str() {
+        "train" => train(&flags),
+        "bench" => bench(&args[1..], &flags),
+        "inspect" => inspect(&flags),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command '{other}' (try: train, bench, inspect)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "neutron-tp — NeutronTP (PVLDB'24) reproduction\n\n\
+         USAGE:\n  neutron-tp train [--config F] [--profile P] [--system S] [--model M]\n\
+         \x20                  [--workers N] [--layers L] [--epochs E] [--lr X]\n\
+         \x20                  [--agg-impl scatter|pallas] [--no-pipeline] [--no-chunk-sched]\n\
+         \x20                  [--chunks C] [--device-mem-mb MB] [--feat-dim D] [--task nc|lp]\n\
+         \x20 neutron-tp bench <{}|all> [--out DIR] [--fast]\n\
+         \x20 neutron-tp inspect [--artifacts DIR]\n\n\
+         systems: neutron_tp naive_tp dp_full dp_cache minibatch historical",
+        experiments::ALL.join("|")
+    );
+}
+
+fn apply_flag_overrides(cfg: &mut RunConfig, flags: &Flags) -> anyhow::Result<()> {
+    if let Some(v) = flags.get("profile") {
+        cfg.profile = v.clone();
+    }
+    if let Some(v) = flags.get("system") {
+        cfg.system = neutron_tp::config::System::from_str(v)?;
+    }
+    if let Some(v) = flags.get("model") {
+        cfg.model = neutron_tp::config::ModelKind::from_str(v)?;
+    }
+    if let Some(v) = flags.get("task") {
+        cfg.task = neutron_tp::config::Task::from_str(v)?;
+    }
+    if let Some(v) = flags.get("agg-impl") {
+        cfg.agg_impl = neutron_tp::config::AggImpl::from_str(v)?;
+    }
+    if let Some(v) = flags.get("workers") {
+        cfg.workers = v.parse()?;
+    }
+    if let Some(v) = flags.get("layers") {
+        cfg.layers = v.parse()?;
+    }
+    if let Some(v) = flags.get("epochs") {
+        cfg.epochs = v.parse()?;
+    }
+    if let Some(v) = flags.get("chunks") {
+        cfg.chunks = v.parse()?;
+    }
+    if let Some(v) = flags.get("device-mem-mb") {
+        cfg.device_mem_mb = v.parse()?;
+    }
+    if let Some(v) = flags.get("batch-size") {
+        cfg.batch_size = v.parse()?;
+    }
+    if let Some(v) = flags.get("executor-threads") {
+        cfg.executor_threads = v.parse()?;
+    }
+    if let Some(v) = flags.get("lr") {
+        cfg.lr = v.parse()?;
+    }
+    if let Some(v) = flags.get("seed") {
+        cfg.seed = v.parse()?;
+    }
+    if let Some(v) = flags.get("feat-dim") {
+        cfg.feat_dim = Some(v.parse()?);
+    }
+    if let Some(v) = flags.get("gpu-speedup") {
+        cfg.net.gpu_speedup = v.parse()?;
+    }
+    if flags.has("no-pipeline") {
+        cfg.pipeline = false;
+    }
+    if flags.has("no-chunk-sched") {
+        cfg.chunk_sched = false;
+    }
+    Ok(())
+}
+
+fn train(flags: &Flags) -> anyhow::Result<()> {
+    let mut cfg = match flags.get("config") {
+        Some(path) => RunConfig::from_toml(&std::fs::read_to_string(path)?)?,
+        None => RunConfig::default(),
+    };
+    apply_flag_overrides(&mut cfg, flags)?;
+    cfg.validate()?;
+
+    let store = ArtifactStore::load(artifacts_dir(flags))?;
+    let p = datasets::profile(&cfg.profile).unwrap();
+    eprintln!(
+        "profile {} (stand-in for {}): |V|={} |E|={} d={} k={} h={}",
+        p.name, p.stands_for, p.v, p.e, p.d, p.k, p.h
+    );
+    let data = match cfg.feat_dim {
+        Some(d) => Dataset::generate_with_dim(p, d, cfg.seed),
+        None => Dataset::generate(p, cfg.seed),
+    };
+    let pool = ExecutorPool::new(&store, cfg.executor_threads)?;
+    let ctx = Ctx { cfg: &cfg, data: &data, store: &store, pool: &pool };
+    let reports = parallel::run(&ctx)?;
+    for (e, r) in reports.iter().enumerate() {
+        println!(
+            "epoch {e:>3}: {} | train_acc {:.3} test_acc {:.3} | wall {:.2}s",
+            r.table_row(),
+            r.train_acc,
+            r.test_acc,
+            r.wall_secs
+        );
+    }
+    Ok(())
+}
+
+fn bench(args: &[String], flags: &Flags) -> anyhow::Result<()> {
+    let Some(which) = args.iter().find(|a| !a.starts_with("--")) else {
+        anyhow::bail!("bench needs an experiment name or 'all'");
+    };
+    let store = ArtifactStore::load(artifacts_dir(flags))?;
+    let fast = flags.has("fast");
+    let names: Vec<&str> = if which == "all" {
+        experiments::ALL.to_vec()
+    } else {
+        vec![which.as_str()]
+    };
+    let out_dir = flags.get("out").cloned();
+    if let Some(d) = &out_dir {
+        std::fs::create_dir_all(d)?;
+    }
+    for name in names {
+        eprintln!("== running {name} ==");
+        let t0 = std::time::Instant::now();
+        let text = experiments::run_experiment(name, &store, fast)?;
+        println!("{text}");
+        eprintln!("== {name} done in {:.1}s ==", t0.elapsed().as_secs_f64());
+        if let Some(d) = &out_dir {
+            std::fs::write(format!("{d}/{name}.csv"), &text)?;
+        }
+    }
+    Ok(())
+}
+
+fn inspect(flags: &Flags) -> anyhow::Result<()> {
+    let store = ArtifactStore::load(artifacts_dir(flags))?;
+    println!(
+        "artifact store: {} artifacts (dim_tile={}, row_block={})",
+        store.len(),
+        store.dim_tile,
+        store.row_block
+    );
+    for p in datasets::PROFILES {
+        println!(
+            "profile {:>5} -> {:<22} |V|={:<7} |E|={:<9} d={:<4} k={:<3} h={}",
+            p.name, p.stands_for, p.v, p.e, p.d, p.k, p.h
+        );
+    }
+    Ok(())
+}
+
+/// `--key value` and `--switch` flags.
+struct Flags(std::collections::BTreeMap<String, String>);
+
+impl Flags {
+    fn parse(args: &[String]) -> Flags {
+        let mut map = std::collections::BTreeMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            if let Some(key) = args[i].strip_prefix("--") {
+                let next_is_val = args.get(i + 1).is_some_and(|a| !a.starts_with("--"));
+                if next_is_val {
+                    map.insert(key.to_string(), args[i + 1].clone());
+                    i += 2;
+                } else {
+                    map.insert(key.to_string(), String::new());
+                    i += 1;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        Flags(map)
+    }
+
+    fn get(&self, key: &str) -> Option<&String> {
+        self.0.get(key).filter(|v| !v.is_empty())
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.0.contains_key(key)
+    }
+}

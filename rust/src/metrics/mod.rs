@@ -1,0 +1,154 @@
+//! Per-epoch measurement: the quantities the paper's tables and figures
+//! report — per-worker computation/communication (sim) time, communicated
+//! bytes, computed edges, loss/accuracy, plus the wall-clock honesty row.
+
+use crate::cluster::EventSim;
+
+/// Load counters per worker (Fig 3 / Fig 10 bars).
+#[derive(Clone, Debug, Default)]
+pub struct WorkerLoad {
+    /// simulated device compute seconds
+    pub comp_secs: f64,
+    /// simulated NIC busy seconds
+    pub comm_secs: f64,
+    /// edges aggregated by this worker (scaled by dim fraction for TP,
+    /// per the paper's Fig 10 normalization)
+    pub comp_edges: f64,
+    /// bytes sent+received by this worker
+    pub comm_bytes: usize,
+}
+
+/// One epoch's full report.
+#[derive(Clone, Debug, Default)]
+pub struct EpochReport {
+    pub system: String,
+    pub loss: f32,
+    /// training accuracy (correct / train vertices), when evaluated
+    pub train_acc: f32,
+    pub test_acc: f32,
+    /// simulated per-epoch runtime (Table 2 "total")
+    pub sim_epoch_secs: f64,
+    /// real wall-clock of the whole epoch on this host
+    pub wall_secs: f64,
+    pub workers: Vec<WorkerLoad>,
+    /// collective rounds executed (Fig 8)
+    pub collective_rounds: usize,
+    /// vertex-dependency management share (Fig 4): communication +
+    /// redundant-computation sim time over total
+    pub vd_overhead_frac: f64,
+    /// number of cross-worker dependency edges handled (Fig 5)
+    pub vd_edges: usize,
+    /// named phase timings (Table 4 cost breakdown), sim seconds
+    pub phase_secs: Vec<(String, f64)>,
+}
+
+impl EpochReport {
+    pub fn comp_max(&self) -> f64 {
+        self.workers.iter().map(|w| w.comp_secs).fold(0.0, f64::max)
+    }
+
+    pub fn comp_min(&self) -> f64 {
+        self.workers.iter().map(|w| w.comp_secs).fold(f64::MAX, f64::min)
+    }
+
+    pub fn comm_max(&self) -> f64 {
+        self.workers.iter().map(|w| w.comm_secs).fold(0.0, f64::max)
+    }
+
+    pub fn comm_min(&self) -> f64 {
+        self.workers.iter().map(|w| w.comm_secs).fold(f64::MAX, f64::min)
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.workers.iter().map(|w| w.comm_bytes).sum()
+    }
+
+    pub fn total_edges(&self) -> f64 {
+        self.workers.iter().map(|w| w.comp_edges).sum()
+    }
+
+    /// Fill per-worker comp/comm seconds from a finished event sim.
+    pub fn absorb_sim(&mut self, sim: &EventSim) {
+        if self.workers.len() < sim.workers() {
+            self.workers.resize(sim.workers(), WorkerLoad::default());
+        }
+        for w in 0..sim.workers() {
+            self.workers[w].comp_secs = sim.comp_totals()[w];
+            self.workers[w].comm_secs = sim.comm_totals()[w];
+        }
+        self.sim_epoch_secs = sim.makespan();
+    }
+
+    /// Table-2-style one-liner.
+    pub fn table_row(&self) -> String {
+        format!(
+            "{:<22} comp[max {:>8.4} min {:>8.4}] comm[max {:>8.4} min {:>8.4}] total {:>8.4}s loss {:.4}",
+            self.system,
+            self.comp_max(),
+            self.comp_min(),
+            self.comm_max(),
+            self.comm_min(),
+            self.sim_epoch_secs,
+            self.loss
+        )
+    }
+}
+
+/// Fig-15-style utilization series: compute-busy fraction per time bucket.
+pub fn utilization_series(sim: &EventSim, buckets: usize) -> Vec<Vec<f64>> {
+    let end = sim.makespan().max(1e-9);
+    let dt = end / buckets as f64;
+    (0..sim.workers())
+        .map(|w| {
+            (0..buckets)
+                .map(|b| sim.compute_busy_fraction(w, b as f64 * dt, (b + 1) as f64 * dt))
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_min_aggregation() {
+        let r = EpochReport {
+            workers: vec![
+                WorkerLoad { comp_secs: 1.0, comm_secs: 0.5, comp_edges: 10.0, comm_bytes: 100 },
+                WorkerLoad { comp_secs: 2.0, comm_secs: 0.25, comp_edges: 30.0, comm_bytes: 300 },
+            ],
+            ..Default::default()
+        };
+        assert_eq!(r.comp_max(), 2.0);
+        assert_eq!(r.comp_min(), 1.0);
+        assert_eq!(r.comm_max(), 0.5);
+        assert_eq!(r.comm_min(), 0.25);
+        assert_eq!(r.total_bytes(), 400);
+        assert_eq!(r.total_edges(), 40.0);
+    }
+
+    #[test]
+    fn absorb_sim_copies_totals() {
+        let mut sim = EventSim::new(2);
+        sim.compute(0, 2.0, 0.0);
+        sim.comm(1, 1.0, 0.0);
+        let mut r = EpochReport::default();
+        r.absorb_sim(&sim);
+        assert_eq!(r.workers[0].comp_secs, 2.0);
+        assert_eq!(r.workers[1].comm_secs, 1.0);
+        assert_eq!(r.sim_epoch_secs, 2.0);
+    }
+
+    #[test]
+    fn utilization_series_shape() {
+        let mut sim = EventSim::new(2);
+        sim.compute(0, 1.0, 0.0);
+        sim.compute(1, 0.5, 0.0);
+        let u = utilization_series(&sim, 10);
+        assert_eq!(u.len(), 2);
+        assert_eq!(u[0].len(), 10);
+        assert!(u[0].iter().all(|&f| f > 0.99));
+        assert!(u[1][9] < 0.01);
+    }
+}

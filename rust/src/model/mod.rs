@@ -1,0 +1,58 @@
+//! GNN model state: parameter store, initialization, Adam optimizer and
+//! the per-model layer-dimension logic (GCN / GAT / R-GCN).
+
+pub mod params;
+
+pub use params::{Adam, DenseLayer, GnnParams};
+
+use crate::config::ModelKind;
+use crate::graph::Profile;
+use crate::tensor::pad_dim;
+
+/// Layer dimension chain for the decoupled NN phase: `d -> h -> ... -> kp`
+/// (`layers` transitions; the head is linear, the rest ReLU).
+pub fn layer_dims(p: &Profile, layers: usize, feat_dim: Option<usize>, task_lp: bool) -> Vec<usize> {
+    let d = feat_dim.unwrap_or(p.d);
+    // link prediction emits an embedding of the same padded width as the
+    // classifier head (matches the lp_loss artifacts aot.py emits)
+    let kp = pad_dim(p.k);
+    let _ = task_lp;
+    let mut dims = vec![d];
+    for _ in 0..layers.saturating_sub(1) {
+        dims.push(p.h);
+    }
+    dims.push(kp);
+    dims
+}
+
+/// Per-relation parameter count for R-GCN (each relation gets its own
+/// dense stack in our decoupled formulation).
+pub fn rgcn_relation_stacks(kind: ModelKind, num_rels: usize) -> usize {
+    match kind {
+        ModelKind::Rgcn => num_rels,
+        _ => 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets;
+
+    #[test]
+    fn dims_chain_shape() {
+        let p = datasets::profile("rdt").unwrap();
+        assert_eq!(layer_dims(&p, 2, None, false), vec![602, 256, 64]);
+        assert_eq!(layer_dims(&p, 4, None, false), vec![602, 256, 256, 256, 64]);
+        assert_eq!(layer_dims(&p, 2, Some(1024), false), vec![1024, 256, 64]);
+    }
+
+    #[test]
+    fn lp_head_matches_classifier_width() {
+        // LP embeds into the same padded width as the classifier head so
+        // the lp_loss artifacts (emitted per padded class count) apply
+        let p = datasets::profile("rdt").unwrap();
+        let dims = layer_dims(&p, 2, None, true);
+        assert_eq!(*dims.last().unwrap(), crate::tensor::pad_dim(p.k));
+    }
+}

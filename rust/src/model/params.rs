@@ -1,0 +1,206 @@
+//! Parameter store + Adam. Parameters are replicated on every worker (the
+//! paper notes model data is small relative to vertex data, §2.3); after
+//! each epoch the gradient allreduce keeps replicas identical, so we store
+//! one copy and account the allreduce in the event sim.
+
+use crate::tensor::Matrix;
+use crate::util::Rng;
+
+/// One dense layer's parameters.
+#[derive(Clone, Debug)]
+pub struct DenseLayer {
+    pub w: Matrix,
+    pub b: Vec<f32>,
+}
+
+impl DenseLayer {
+    /// Glorot-uniform init.
+    pub fn glorot(din: usize, dout: usize, rng: &mut Rng) -> Self {
+        let limit = (6.0 / (din + dout) as f64).sqrt() as f32;
+        let w = Matrix::from_fn(din, dout, |_, _| rng.gen_f32_range(-limit, limit));
+        DenseLayer { w, b: vec![0.0; dout] }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.w.rows() * self.w.cols() + self.b.len()
+    }
+}
+
+/// Full GNN parameter set.
+#[derive(Clone, Debug)]
+pub struct GnnParams {
+    /// dense stacks: 1 for GCN/GAT, `num_rels` for R-GCN
+    pub stacks: Vec<Vec<DenseLayer>>,
+    /// GAT attention vectors (a1, a2) over the final embedding width
+    pub attn: Option<(Vec<f32>, Vec<f32>)>,
+}
+
+impl GnnParams {
+    pub fn init(dims: &[usize], stacks: usize, attn: bool, seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        let make_stack = |rng: &mut Rng| {
+            dims.windows(2).map(|w| DenseLayer::glorot(w[0], w[1], rng)).collect::<Vec<_>>()
+        };
+        let stacks: Vec<Vec<DenseLayer>> = (0..stacks).map(|_| make_stack(&mut rng)).collect();
+        let attn = attn.then(|| {
+            let kp = *dims.last().unwrap();
+            let a1 = (0..kp).map(|_| rng.gen_f32_range(-0.1, 0.1)).collect();
+            let a2 = (0..kp).map(|_| rng.gen_f32_range(-0.1, 0.1)).collect();
+            (a1, a2)
+        });
+        GnnParams { stacks, attn }
+    }
+
+    pub fn layers(&self) -> &[DenseLayer] {
+        &self.stacks[0]
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.stacks.iter().flatten().map(DenseLayer::param_count).sum()
+    }
+
+    pub fn grad_bytes(&self) -> usize {
+        self.param_count() * 4
+    }
+}
+
+/// Adam over a flat list of (w, b) gradients matching `GnnParams.stacks`.
+pub struct Adam {
+    lr: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    t: i32,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl Adam {
+    pub fn new(params: &GnnParams, lr: f32) -> Self {
+        let sizes: Vec<usize> = params
+            .stacks
+            .iter()
+            .flatten()
+            .flat_map(|l| [l.w.rows() * l.w.cols(), l.b.len()])
+            .collect();
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            t: 0,
+            m: sizes.iter().map(|&s| vec![0.0; s]).collect(),
+            v: sizes.iter().map(|&s| vec![0.0; s]).collect(),
+        }
+    }
+
+    /// Apply one step. `grads` is flattened in stack-major order:
+    /// `[(gw, gb) for layer in stack for stack in stacks]`.
+    pub fn step(&mut self, params: &mut GnnParams, grads: &[(Matrix, Vec<f32>)]) {
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t);
+        let bc2 = 1.0 - self.beta2.powi(self.t);
+        let mut slot = 0;
+        let mut gi = 0;
+        for stack in &mut params.stacks {
+            for layer in stack.iter_mut() {
+                let (gw, gb) = &grads[gi];
+                gi += 1;
+                Self::update_buf(
+                    layer.w.data_mut(),
+                    gw.data(),
+                    &mut self.m[slot],
+                    &mut self.v[slot],
+                    self.lr,
+                    self.beta1,
+                    self.beta2,
+                    self.eps,
+                    bc1,
+                    bc2,
+                );
+                slot += 1;
+                Self::update_buf(
+                    &mut layer.b,
+                    gb,
+                    &mut self.m[slot],
+                    &mut self.v[slot],
+                    self.lr,
+                    self.beta1,
+                    self.beta2,
+                    self.eps,
+                    bc1,
+                    bc2,
+                );
+                slot += 1;
+            }
+        }
+        debug_assert_eq!(gi, grads.len());
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn update_buf(
+        p: &mut [f32],
+        g: &[f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        lr: f32,
+        b1: f32,
+        b2: f32,
+        eps: f32,
+        bc1: f32,
+        bc2: f32,
+    ) {
+        debug_assert_eq!(p.len(), g.len());
+        for i in 0..p.len() {
+            m[i] = b1 * m[i] + (1.0 - b1) * g[i];
+            v[i] = b2 * v[i] + (1.0 - b2) * g[i] * g[i];
+            let mhat = m[i] / bc1;
+            let vhat = v[i] / bc2;
+            p[i] -= lr * mhat / (vhat.sqrt() + eps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn glorot_bounds() {
+        let mut rng = Rng::seed_from_u64(1);
+        let l = DenseLayer::glorot(100, 50, &mut rng);
+        let limit = (6.0f64 / 150.0).sqrt() as f32;
+        assert!(l.w.data().iter().all(|&x| x.abs() <= limit));
+        assert!(l.b.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn init_deterministic() {
+        let a = GnnParams::init(&[8, 4, 2], 1, true, 9);
+        let b = GnnParams::init(&[8, 4, 2], 1, true, 9);
+        assert_eq!(a.stacks[0][0].w, b.stacks[0][0].w);
+        assert_eq!(a.attn, b.attn);
+        assert_eq!(a.param_count(), 8 * 4 + 4 + 4 * 2 + 2);
+    }
+
+    #[test]
+    fn adam_minimizes_quadratic() {
+        // single 1x1 "layer": minimize (w - 3)^2
+        let mut p = GnnParams::init(&[1, 1], 1, false, 2);
+        let mut adam = Adam::new(&p, 0.1);
+        for _ in 0..500 {
+            let w = p.stacks[0][0].w.get(0, 0);
+            let gw = Matrix::from_vec(1, 1, vec![2.0 * (w - 3.0)]);
+            adam.step(&mut p, &[(gw, vec![0.0])]);
+        }
+        let w = p.stacks[0][0].w.get(0, 0);
+        assert!((w - 3.0).abs() < 0.05, "w={w}");
+    }
+
+    #[test]
+    fn rgcn_stacks_independent() {
+        let p = GnnParams::init(&[4, 2], 3, false, 7);
+        assert_eq!(p.stacks.len(), 3);
+        assert_ne!(p.stacks[0][0].w, p.stacks[1][0].w);
+    }
+}

@@ -1,0 +1,48 @@
+//! Training engines: NeutronTP (decoupled tensor parallelism, the paper's
+//! contribution) and the baselines it is evaluated against.
+//!
+//! All engines share one contract: real numerics through the AOT artifacts
+//! and the collectives' data plane; timing through the event sim fed by
+//! measured device seconds (scaled by `net.gpu_speedup`) and the wire
+//! model. Every engine returns `EpochReport`s with the paper's metrics.
+
+pub mod common;
+pub mod dp_full;
+pub mod historical;
+pub mod minibatch;
+pub mod tp;
+
+use crate::config::{RunConfig, System};
+use crate::graph::Dataset;
+use crate::metrics::EpochReport;
+use crate::runtime::{ArtifactStore, ExecutorPool};
+
+/// Shared engine context (borrowed by all engines).
+pub struct Ctx<'a> {
+    pub cfg: &'a RunConfig,
+    pub data: &'a Dataset,
+    pub store: &'a ArtifactStore,
+    pub pool: &'a ExecutorPool,
+}
+
+impl<'a> Ctx<'a> {
+    pub fn ops(&self) -> crate::runtime::ops::Ops<'a> {
+        crate::runtime::ops::Ops::new(
+            self.store,
+            self.pool,
+            self.cfg.agg_impl == crate::config::AggImpl::Pallas,
+        )
+    }
+}
+
+/// Run `cfg.epochs` epochs of the configured system.
+pub fn run(ctx: &Ctx) -> crate::Result<Vec<EpochReport>> {
+    match ctx.cfg.system {
+        System::NeutronTp => tp::TpEngine::new(ctx, true)?.run(ctx),
+        System::NaiveTp => tp::TpEngine::new(ctx, false)?.run(ctx),
+        System::DpFull => dp_full::DpEngine::new(ctx, false)?.run(ctx),
+        System::DpCache => dp_full::DpEngine::new(ctx, true)?.run(ctx),
+        System::MiniBatch => minibatch::MiniBatchEngine::new(ctx)?.run(ctx),
+        System::Historical => historical::HistoricalEngine::new(ctx)?.run(ctx),
+    }
+}

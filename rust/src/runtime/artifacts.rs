@@ -1,0 +1,328 @@
+//! Artifact manifest: what `python/compile/aot.py` emitted, keyed by kind
+//! and shape bucket, plus the bucket-selection logic the coordinator uses
+//! to map logical shapes onto available artifacts.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+#[derive(Clone, Debug)]
+pub struct InputSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub kind: String,
+    pub file: String,
+    pub inputs: Vec<InputSpec>,
+}
+
+impl ArtifactInfo {
+    fn dim(&self, input: &str, axis: usize) -> usize {
+        self.inputs
+            .iter()
+            .find(|i| i.name == input)
+            .map(|i| i.shape[axis])
+            .unwrap_or(0)
+    }
+}
+
+/// The loaded manifest.
+pub struct ArtifactStore {
+    dir: PathBuf,
+    by_name: HashMap<String, ArtifactInfo>,
+    by_kind: HashMap<String, Vec<String>>,
+    pub dim_tile: usize,
+    pub row_block: usize,
+}
+
+impl ArtifactStore {
+    pub fn load(dir: impl AsRef<Path>) -> crate::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let tsv = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&tsv)
+            .with_context(|| format!("reading {} — run `make artifacts` first", tsv.display()))?;
+        let mut store = ArtifactStore {
+            dir,
+            by_name: HashMap::new(),
+            by_kind: HashMap::new(),
+            dim_tile: 32,
+            row_block: 256,
+        };
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix('#') {
+                if let Some((k, v)) = rest.split_once('=') {
+                    match k {
+                        "dim_tile" => store.dim_tile = v.parse()?,
+                        "row_block" => store.row_block = v.parse()?,
+                        _ => {}
+                    }
+                }
+                continue;
+            }
+            if line.trim().is_empty() {
+                continue;
+            }
+            let mut f = line.split('\t');
+            let (name, kind, file, ins) = match (f.next(), f.next(), f.next(), f.next()) {
+                (Some(a), Some(b), Some(c), Some(d)) => (a, b, c, d),
+                _ => bail!("malformed manifest line: {line}"),
+            };
+            let inputs = ins
+                .split(';')
+                .filter(|s| !s.is_empty())
+                .map(parse_input)
+                .collect::<crate::Result<Vec<_>>>()?;
+            let info = ArtifactInfo {
+                name: name.to_string(),
+                kind: kind.to_string(),
+                file: file.to_string(),
+                inputs,
+            };
+            store.by_kind.entry(kind.to_string()).or_default().push(name.to_string());
+            store.by_name.insert(name.to_string(), info);
+        }
+        for names in store.by_kind.values_mut() {
+            names.sort();
+        }
+        Ok(store)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.by_name.get(name)
+    }
+
+    pub fn hlo_path(&self, name: &str) -> crate::Result<PathBuf> {
+        let info = self
+            .by_name
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))?;
+        Ok(self.dir.join(&info.file))
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn names_of_kind(&self, kind: &str) -> Vec<String> {
+        self.by_kind.get(kind).cloned().unwrap_or_default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+
+    fn of_kind(&self, kind: &str) -> impl Iterator<Item = &ArtifactInfo> {
+        self.by_kind
+            .get(kind)
+            .into_iter()
+            .flatten()
+            .map(|n| &self.by_name[n])
+    }
+
+    // ---- bucket selection -------------------------------------------------
+
+    /// Dense artifact for exact `(d, h)` with the smallest batch bucket
+    /// >= `min_b`.
+    pub fn find_dense(
+        &self,
+        relu: bool,
+        fwd: bool,
+        min_b: usize,
+        d: usize,
+        h: usize,
+    ) -> crate::Result<&ArtifactInfo> {
+        let kind = format!(
+            "dense_{}_{}",
+            if relu { "relu" } else { "linear" },
+            if fwd { "fwd" } else { "bwd" }
+        );
+        self.of_kind(&kind)
+            .filter(|a| a.dim("w", 0) == d && a.dim("w", 1) == h && a.dim("x", 0) >= min_b)
+            .min_by_key(|a| a.dim("x", 0))
+            .with_context(|| format!("no {kind} artifact for b>={min_b} d={d} h={h}"))
+    }
+
+    /// Aggregation artifact: exact source bucket `s`, smallest row bucket
+    /// >= `min_c`, and the smallest edge bucket >= `min_e` — falling back
+    /// to the largest available (caller multi-passes).
+    pub fn find_agg(
+        &self,
+        pallas: bool,
+        min_c: usize,
+        min_e: usize,
+        s: usize,
+    ) -> crate::Result<&ArtifactInfo> {
+        let kind = if pallas { "agg_pallas" } else { "agg_scatter" };
+        let cands: Vec<&ArtifactInfo> = self
+            .of_kind(kind)
+            .filter(|a| a.dim("x", 0) == s && a.dim("row_ptr", 0) > min_c)
+            .collect();
+        if cands.is_empty() {
+            bail!("no {kind} artifact with s={s} c>={min_c}");
+        }
+        let best_c = cands.iter().map(|a| a.dim("row_ptr", 0) - 1).min().unwrap();
+        let at_c: Vec<&&ArtifactInfo> =
+            cands.iter().filter(|a| a.dim("row_ptr", 0) - 1 == best_c).collect();
+        Ok(at_c
+            .iter()
+            .filter(|a| a.dim("col_idx", 0) >= min_e)
+            .min_by_key(|a| a.dim("col_idx", 0))
+            .or_else(|| at_c.iter().max_by_key(|a| a.dim("col_idx", 0)))
+            .unwrap())
+    }
+
+    pub fn find_edge_softmax(&self, min_c: usize, min_e: usize, s: usize) -> crate::Result<&ArtifactInfo> {
+        let cands: Vec<&ArtifactInfo> = self
+            .of_kind("edge_softmax")
+            .filter(|a| a.dim("s_src", 0) == s && a.dim("s_dst", 0) >= min_c)
+            .collect();
+        if cands.is_empty() {
+            bail!("no edge_softmax artifact with s={s} c>={min_c}");
+        }
+        let best_c = cands.iter().map(|a| a.dim("s_dst", 0)).min().unwrap();
+        let at_c: Vec<&&ArtifactInfo> =
+            cands.iter().filter(|a| a.dim("s_dst", 0) == best_c).collect();
+        Ok(at_c
+            .iter()
+            .filter(|a| a.dim("col_idx", 0) >= min_e)
+            .min_by_key(|a| a.dim("col_idx", 0))
+            .or_else(|| at_c.iter().max_by_key(|a| a.dim("col_idx", 0)))
+            .unwrap())
+    }
+
+    pub fn find_xent(&self, min_b: usize, k: usize) -> crate::Result<&ArtifactInfo> {
+        self.of_kind("softmax_xent")
+            .filter(|a| a.dim("cmask", 0) == k && a.dim("logits", 0) >= min_b)
+            .min_by_key(|a| a.dim("logits", 0))
+            .with_context(|| format!("no softmax_xent artifact for b>={min_b} k={k}"))
+    }
+
+    pub fn find_attn(&self, min_b: usize, h: usize) -> crate::Result<&ArtifactInfo> {
+        self.of_kind("attn_scores")
+            .filter(|a| a.dim("a1", 0) == h && a.dim("h", 0) >= min_b)
+            .min_by_key(|a| a.dim("h", 0))
+            .with_context(|| format!("no attn_scores artifact for b>={min_b} h={h}"))
+    }
+
+    pub fn find_lp(&self, min_b: usize, h: usize, min_p: usize) -> crate::Result<&ArtifactInfo> {
+        self.of_kind("lp_loss")
+            .filter(|a| a.dim("h", 1) == h && a.dim("h", 0) >= min_b && a.dim("src", 0) >= min_p)
+            .min_by_key(|a| (a.dim("h", 0), a.dim("src", 0)))
+            .with_context(|| format!("no lp_loss artifact for b>={min_b} h={h} p>={min_p}"))
+    }
+
+    /// Row buckets available for aggregation with source bucket `s`.
+    pub fn agg_row_buckets(&self, s: usize) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .of_kind("agg_scatter")
+            .filter(|a| a.dim("x", 0) == s)
+            .map(|a| a.dim("row_ptr", 0) - 1)
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+}
+
+fn parse_input(s: &str) -> crate::Result<InputSpec> {
+    let mut parts = s.split(':');
+    let (name, dtype, shape) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(a), Some(b), Some(c)) => (a, b, c),
+        _ => bail!("malformed input spec: {s}"),
+    };
+    let dtype = match dtype {
+        "f32" => DType::F32,
+        "i32" => DType::I32,
+        _ => bail!("unknown dtype {dtype}"),
+    };
+    let shape = if shape.is_empty() {
+        vec![]
+    } else {
+        shape.split('x').map(|d| d.parse().map_err(Into::into)).collect::<crate::Result<_>>()?
+    };
+    Ok(InputSpec { name: name.to_string(), dtype, shape })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> ArtifactStore {
+        ArtifactStore::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+            .expect("run `make artifacts` before cargo test")
+    }
+
+    #[test]
+    fn manifest_loads() {
+        let s = store();
+        assert!(s.len() > 100, "expected hundreds of artifacts, got {}", s.len());
+        assert_eq!(s.dim_tile, 32);
+        assert_eq!(s.row_block, 256);
+    }
+
+    #[test]
+    fn dense_selection_smallest_bucket() {
+        let s = store();
+        // tiny profile: d=64 h=32, batches 128..1024
+        let a = s.find_dense(true, true, 100, 64, 32).unwrap();
+        assert_eq!(a.dim("x", 0), 128);
+        let b = s.find_dense(true, true, 129, 64, 32).unwrap();
+        assert_eq!(b.dim("x", 0), 256);
+        assert!(s.find_dense(true, true, 1 << 24, 64, 32).is_err());
+    }
+
+    #[test]
+    fn agg_selection_and_fallback() {
+        let s = store();
+        let buckets = s.agg_row_buckets(1024);
+        assert!(!buckets.is_empty());
+        // min_e beyond the largest bucket falls back to the largest
+        let a = s.find_agg(false, 512, usize::MAX, 1024).unwrap();
+        let largest = s
+            .find_agg(false, 512, 0, 1024)
+            .map(|x| x.dim("col_idx", 0))
+            .unwrap();
+        assert!(a.dim("col_idx", 0) >= largest);
+    }
+
+    #[test]
+    fn pallas_and_scatter_share_shapes() {
+        let s = store();
+        let a = s.find_agg(false, 512, 4096, 1024).unwrap();
+        let b = s.find_agg(true, 512, 4096, 1024).unwrap();
+        assert_eq!(a.dim("row_ptr", 0), b.dim("row_ptr", 0));
+        assert_eq!(a.dim("col_idx", 0), b.dim("col_idx", 0));
+    }
+
+    #[test]
+    fn xent_and_attn_lookup() {
+        let s = store();
+        assert!(s.find_xent(1024, 32).is_ok()); // tiny: kp=32
+        assert!(s.find_attn(1024, 32).is_ok());
+        assert!(s.find_xent(1024, 7).is_err()); // unpadded k never emitted
+    }
+
+    #[test]
+    fn hlo_files_exist() {
+        let s = store();
+        let a = s.find_dense(true, true, 1, 64, 32).unwrap().name.clone();
+        let p = s.hlo_path(&a).unwrap();
+        assert!(p.exists(), "{p:?}");
+    }
+}

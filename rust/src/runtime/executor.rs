@@ -1,0 +1,275 @@
+//! PJRT executor pool.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so each pool
+//! thread owns its *own* CPU client plus a lazily-populated executable
+//! cache (HLO text -> compiled executable). Simulated workers submit jobs
+//! over a shared queue and block on a per-job reply channel; each reply
+//! carries the measured device seconds, which feed the event simulation
+//! (DESIGN.md §4).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Context;
+
+/// One artifact input. Buffers are `Arc`'d: submitting a job is a
+/// refcount bump, not a copy (the PJRT literal creation copies once, on
+/// the executor thread).
+#[derive(Clone, Debug)]
+pub enum Arg {
+    F32(Arc<Vec<f32>>, Vec<i64>),
+    I32(Arc<Vec<i32>>, Vec<i64>),
+}
+
+impl Arg {
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Self {
+        Arg::F32(Arc::new(data), shape.iter().map(|&d| d as i64).collect())
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> Self {
+        Arg::I32(Arc::new(data), shape.iter().map(|&d| d as i64).collect())
+    }
+
+    pub fn f32_shared(data: Arc<Vec<f32>>, shape: &[usize]) -> Self {
+        Arg::F32(data, shape.iter().map(|&d| d as i64).collect())
+    }
+
+    pub fn i32_shared(data: Arc<Vec<i32>>, shape: &[usize]) -> Self {
+        Arg::I32(data, shape.iter().map(|&d| d as i64).collect())
+    }
+
+    pub fn matrix(m: &crate::tensor::Matrix) -> Self {
+        Arg::f32(m.data().to_vec(), &[m.rows(), m.cols()])
+    }
+
+    fn elements(&self) -> usize {
+        match self {
+            Arg::F32(d, _) => d.len(),
+            Arg::I32(d, _) => d.len(),
+        }
+    }
+}
+
+/// An artifact execution request.
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub artifact: String,
+    pub args: Vec<Arg>,
+}
+
+/// Execution result: flattened f32 outputs (all our artifacts return f32)
+/// plus the measured device time.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub outputs: Vec<Vec<f32>>,
+    pub device_secs: f64,
+}
+
+type Reply = crate::Result<JobResult>;
+
+struct Request {
+    job: Job,
+    hlo_path: std::path::PathBuf,
+    reply: mpsc::Sender<Reply>,
+}
+
+/// Thread pool; `run` is synchronous, `submit` + `Ticket::wait` overlap
+/// jobs across pool threads.
+pub struct ExecutorPool {
+    queue: mpsc::Sender<Request>,
+    store_dir: std::path::PathBuf,
+    name_to_file: Arc<HashMap<String, String>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    executed: Arc<AtomicUsize>,
+}
+
+pub struct Ticket(mpsc::Receiver<Reply>);
+
+impl Ticket {
+    pub fn wait(self) -> Reply {
+        self.0.recv().context("executor thread dropped reply")?
+    }
+}
+
+impl ExecutorPool {
+    /// `threads == 0` -> auto (half the cores, clamped to [1, 4] — each
+    /// PJRT CPU client multithreads internally already).
+    pub fn new(store: &super::ArtifactStore, threads: usize) -> crate::Result<Self> {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map(|c| c.get()).unwrap_or(2).div_ceil(2).min(4)
+        } else {
+            threads
+        };
+        let mut name_to_file = HashMap::new();
+        for name in store_names(store) {
+            name_to_file.insert(name.clone(), store.get(&name).unwrap().file.clone());
+        }
+        let name_to_file = Arc::new(name_to_file);
+        let (tx, rx) = mpsc::channel::<Request>();
+        let rx = Arc::new(Mutex::new(rx));
+        let executed = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let rx = Arc::clone(&rx);
+            let executed = Arc::clone(&executed);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("pjrt-exec-{t}"))
+                    .spawn(move || worker_loop(&rx, &executed))
+                    .context("spawning executor thread")?,
+            );
+        }
+        Ok(ExecutorPool {
+            queue: tx,
+            store_dir: store_dir(store),
+            name_to_file,
+            handles,
+            executed,
+        })
+    }
+
+    pub fn submit(&self, job: Job) -> crate::Result<Ticket> {
+        let file = self
+            .name_to_file
+            .get(&job.artifact)
+            .with_context(|| format!("unknown artifact '{}'", job.artifact))?;
+        let hlo_path = self.store_dir.join(file);
+        let (tx, rx) = mpsc::channel();
+        self.queue
+            .send(Request { job, hlo_path, reply: tx })
+            .map_err(|_| anyhow::anyhow!("executor pool shut down"))?;
+        Ok(Ticket(rx))
+    }
+
+    pub fn run(&self, job: Job) -> crate::Result<JobResult> {
+        self.submit(job)?.wait()
+    }
+
+    /// Total artifact executions so far (tests / perf counters).
+    pub fn executed(&self) -> usize {
+        self.executed.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for ExecutorPool {
+    fn drop(&mut self) {
+        // closing the channel ends the worker loops
+        let (tx, _) = mpsc::channel();
+        drop(std::mem::replace(&mut self.queue, tx));
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn store_names(store: &super::ArtifactStore) -> Vec<String> {
+    // small helper: ArtifactStore doesn't expose iteration directly
+    let mut names = Vec::new();
+    for kind in [
+        "dense_relu_fwd",
+        "dense_relu_bwd",
+        "dense_linear_fwd",
+        "dense_linear_bwd",
+        "agg_pallas",
+        "agg_scatter",
+        "edge_softmax",
+        "attn_scores",
+        "softmax_xent",
+        "lp_loss",
+    ] {
+        names.extend(store.names_of_kind(kind));
+    }
+    names
+}
+
+fn store_dir(store: &super::ArtifactStore) -> std::path::PathBuf {
+    store.dir().to_path_buf()
+}
+
+fn worker_loop(rx: &Mutex<mpsc::Receiver<Request>>, executed: &AtomicUsize) {
+    // Each thread: its own client + executable cache.
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("executor: PJRT CPU client failed: {e}");
+            return;
+        }
+    };
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+    loop {
+        let req = {
+            let guard = rx.lock().expect("queue lock");
+            match guard.recv() {
+                Ok(r) => r,
+                Err(_) => return, // pool dropped
+            }
+        };
+        let reply = execute(&client, &mut cache, &req);
+        executed.fetch_add(1, Ordering::Relaxed);
+        let _ = req.reply.send(reply);
+    }
+}
+
+fn execute(
+    client: &xla::PjRtClient,
+    cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    req: &Request,
+) -> Reply {
+    if !cache.contains_key(&req.job.artifact) {
+        let proto = xla::HloModuleProto::from_text_file(&req.hlo_path)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", req.hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e}", req.job.artifact))?;
+        cache.insert(req.job.artifact.clone(), exe);
+    }
+    let exe = &cache[&req.job.artifact];
+
+    // Device input buffers are created HERE (not via `execute`): the
+    // crate's `execute` C shim `release()`s every input buffer without
+    // freeing it — a per-call leak of the full input size. `execute_b`
+    // takes caller-owned buffers, which Rust drops (and frees) after the
+    // call. See EXPERIMENTS.md §Perf L3-3.
+    let mut literals = Vec::with_capacity(req.job.args.len());
+    let mut buffers = Vec::with_capacity(req.job.args.len());
+    for arg in &req.job.args {
+        let lit = match arg {
+            Arg::F32(data, shape) => xla::Literal::vec1(data.as_slice())
+                .reshape(shape)
+                .map_err(|e| anyhow::anyhow!("reshape f32 arg: {e}"))?,
+            Arg::I32(data, shape) => xla::Literal::vec1(data.as_slice())
+                .reshape(shape)
+                .map_err(|e| anyhow::anyhow!("reshape i32 arg: {e}"))?,
+        };
+        let buf = client
+            .buffer_from_host_literal(None, &lit)
+            .map_err(|e| anyhow::anyhow!("uploading arg: {e}"))?;
+        // the host->device transfer may still be reading the literal; keep
+        // it alive until the execution has produced its result
+        literals.push(lit);
+        buffers.push(buf);
+    }
+
+    let t0 = Instant::now();
+    let bufs = exe
+        .execute_b::<xla::PjRtBuffer>(&buffers)
+        .map_err(|e| anyhow::anyhow!("executing {}: {e}", req.job.artifact))?;
+    let result = bufs[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow::anyhow!("fetching result: {e}"))?;
+    let device_secs = t0.elapsed().as_secs_f64();
+    drop(buffers);
+    drop(literals);
+
+    // aot.py lowers with return_tuple=True: unpack the tuple
+    let parts = result.to_tuple().map_err(|e| anyhow::anyhow!("untuple: {e}"))?;
+    let mut outputs = Vec::with_capacity(parts.len());
+    for p in parts {
+        outputs.push(p.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e}"))?);
+    }
+    let _ = req.job.args.iter().map(Arg::elements).sum::<usize>();
+    Ok(JobResult { outputs, device_secs })
+}

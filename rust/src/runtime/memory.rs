@@ -1,0 +1,112 @@
+//! Simulated per-worker device memory (the paper's 16 GiB T4 budget).
+//!
+//! Systems without chunk scheduling must hold the whole graph + all layer
+//! embeddings + intermediates resident — on the large profiles that
+//! overflows and raises `DeviceOom`, reproducing the OOM rows of Table 2.
+//! The chunk scheduler instead sizes chunks so each pass fits.
+
+use anyhow::bail;
+
+/// Accounting for one worker's device.
+#[derive(Clone, Debug)]
+pub struct DeviceMemory {
+    budget: usize,
+    used: usize,
+    peak: usize,
+}
+
+impl DeviceMemory {
+    pub fn new(budget_bytes: usize) -> Self {
+        Self { budget: budget_bytes, used: 0, peak: 0 }
+    }
+
+    pub fn from_mb(mb: usize) -> Self {
+        Self::new(mb * (1 << 20))
+    }
+
+    pub fn alloc(&mut self, bytes: usize, what: &str) -> crate::Result<()> {
+        self.used += bytes;
+        self.peak = self.peak.max(self.used);
+        if self.used > self.budget {
+            bail!(
+                "device OOM allocating {what}: {} MiB used > {} MiB budget \
+                 (enable chunk_sched or add workers)",
+                self.used >> 20,
+                self.budget >> 20
+            );
+        }
+        Ok(())
+    }
+
+    pub fn free(&mut self, bytes: usize) {
+        self.used = self.used.saturating_sub(bytes);
+    }
+
+    pub fn used(&self) -> usize {
+        self.used
+    }
+
+    pub fn peak(&self) -> usize {
+        self.peak
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Would `bytes` more fit right now?
+    pub fn fits(&self, bytes: usize) -> bool {
+        self.used + bytes <= self.budget
+    }
+}
+
+/// Resident footprint (bytes) of full-graph *non-chunked* training on one
+/// worker: topology + feature/embedding/gradient panels for every layer.
+/// This is what NeutronStar/Sancus-like baselines must hold (paper §5.2
+/// OOM analysis).
+pub fn fullgraph_resident_bytes(
+    vertices: usize,
+    edges: usize,
+    feat_dim: usize,
+    hidden: usize,
+    layers: usize,
+    width_frac: f64,
+) -> usize {
+    let topo = edges * 12 + (vertices + 1) * 4;
+    // activations kept for backward: input + per-layer outputs, fwd & bwd
+    let panels = (feat_dim + hidden * (layers + 1)) as f64 * width_frac;
+    topo + (vertices as f64 * panels * 4.0 * 2.0) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_within_budget() {
+        let mut m = DeviceMemory::from_mb(1);
+        m.alloc(512 << 10, "x").unwrap();
+        assert!(m.fits(512 << 10));
+        assert!(!m.fits((512 << 10) + 1));
+        m.free(512 << 10);
+        assert_eq!(m.used(), 0);
+        assert_eq!(m.peak(), 512 << 10);
+    }
+
+    #[test]
+    fn alloc_over_budget_errors() {
+        let mut m = DeviceMemory::from_mb(1);
+        let e = m.alloc(2 << 20, "big tensor").unwrap_err();
+        assert!(e.to_string().contains("OOM"), "{e}");
+    }
+
+    #[test]
+    fn fullgraph_footprint_scales_with_layers() {
+        let f2 = fullgraph_resident_bytes(65_536, 2_621_440, 256, 128, 2, 1.0);
+        let f5 = fullgraph_resident_bytes(65_536, 2_621_440, 256, 128, 5, 1.0);
+        assert!(f5 > f2);
+        // TP slice (1/16 width) is much smaller
+        let tp = fullgraph_resident_bytes(65_536, 2_621_440, 256, 128, 2, 1.0 / 16.0);
+        assert!(tp < f2 / 4);
+    }
+}

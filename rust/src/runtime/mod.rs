@@ -1,0 +1,21 @@
+//! AOT runtime: load `artifacts/*.hlo.txt` through the PJRT C API and
+//! execute them from the training hot path. Python never runs here.
+//!
+//! * `artifacts` — manifest parsing + shape-bucket selection
+//! * `executor`  — pool of threads, each owning a `PjRtClient` (the crate's
+//!   client is `Rc`-based, so clients never cross threads) and a lazy
+//!   executable cache
+//! * `ops`       — typed wrappers (dense/agg/softmax/...) that pad inputs
+//!   to the bucket, run the artifact, crop outputs, and report measured
+//!   device seconds
+//! * `memory`    — simulated per-worker device memory accounting (the T4
+//!   budget that makes baselines OOM in Table 2)
+
+pub mod artifacts;
+pub mod executor;
+pub mod memory;
+pub mod ops;
+
+pub use artifacts::{ArtifactInfo, ArtifactStore};
+pub use executor::{Arg, ExecutorPool, Job, JobResult};
+pub use memory::DeviceMemory;

@@ -1,0 +1,252 @@
+//! Typed wrappers over the executor: pad logical tensors to the artifact's
+//! shape bucket, execute, crop back, and report measured device seconds.
+//! Zero padding is numerically transparent by construction (weights 0,
+//! masks 0, empty CSR rows) — validated in `python/tests` and re-checked
+//! by the integration tests here.
+
+use crate::graph::chunk::AggPass;
+use crate::tensor::Matrix;
+
+use super::artifacts::{ArtifactInfo, ArtifactStore};
+use super::executor::{Arg, ExecutorPool, Job};
+
+pub struct Ops<'a> {
+    pub store: &'a ArtifactStore,
+    pub pool: &'a ExecutorPool,
+    pub pallas: bool,
+}
+
+impl<'a> Ops<'a> {
+    pub fn new(store: &'a ArtifactStore, pool: &'a ExecutorPool, pallas: bool) -> Self {
+        Self { store, pool, pallas }
+    }
+
+    /// `relu?(x @ w + b)`; returns `(out, pre_activation, device_secs)`.
+    pub fn dense_fwd(
+        &self,
+        x: &Matrix,
+        w: &Matrix,
+        bias: &[f32],
+        relu: bool,
+    ) -> crate::Result<(Matrix, Matrix, f64)> {
+        let (b_logical, d) = x.shape();
+        let h = w.cols();
+        let art = self.store.find_dense(relu, true, b_logical, d, h)?;
+        let b_bucket = art.inputs[0].shape[0];
+        let xp = x.padded(b_bucket, d);
+        let job = Job {
+            artifact: art.name.clone(),
+            args: vec![
+                Arg::matrix(&xp),
+                Arg::matrix(w),
+                Arg::f32(bias.to_vec(), &[h]),
+            ],
+        };
+        let res = self.pool.run(job)?;
+        let (out, pre) = if relu {
+            (
+                Matrix::from_vec(b_bucket, h, res.outputs[0].clone()),
+                Matrix::from_vec(b_bucket, h, res.outputs[1].clone()),
+            )
+        } else {
+            let z = Matrix::from_vec(b_bucket, h, res.outputs[0].clone());
+            (z.clone(), z)
+        };
+        Ok((out.cropped(b_logical, h), pre.cropped(b_logical, h), res.device_secs))
+    }
+
+    /// Backward of dense(+ReLU): `(grad_x, grad_w, grad_b, device_secs)`.
+    pub fn dense_bwd(
+        &self,
+        grad_out: &Matrix,
+        x: &Matrix,
+        w: &Matrix,
+        pre: &Matrix,
+        relu: bool,
+    ) -> crate::Result<(Matrix, Matrix, Vec<f32>, f64)> {
+        let (b_logical, d) = x.shape();
+        let h = w.cols();
+        let art = self.store.find_dense(relu, false, b_logical, d, h)?;
+        let b_bucket = art.inputs[0].shape[0];
+        let job = Job {
+            artifact: art.name.clone(),
+            args: vec![
+                Arg::matrix(&grad_out.padded(b_bucket, h)),
+                Arg::matrix(&x.padded(b_bucket, d)),
+                Arg::matrix(w),
+                Arg::matrix(&pre.padded(b_bucket, h)),
+            ],
+        };
+        let res = self.pool.run(job)?;
+        let gx = Matrix::from_vec(b_bucket, d, res.outputs[0].clone()).cropped(b_logical, d);
+        let gw = Matrix::from_vec(d, h, res.outputs[1].clone());
+        let gb = res.outputs[2].clone();
+        Ok((gx, gw, gb, res.device_secs))
+    }
+
+    /// Pick the aggregation artifact for a chunk-plan geometry.
+    pub fn agg_artifact(
+        &self,
+        rows_per_chunk: usize,
+        max_pass_edges: usize,
+        s: usize,
+    ) -> crate::Result<&ArtifactInfo> {
+        self.store.find_agg(self.pallas, rows_per_chunk, max_pass_edges, s)
+    }
+
+    /// Run one aggregation pass: `x` is the resident `[s, tile]` source
+    /// slice; output is the `[chunk_rows, tile]` partial (already cropped).
+    pub fn agg_pass(
+        &self,
+        art: &ArtifactInfo,
+        pass: &AggPass,
+        chunk_rows: usize,
+        x: &Matrix,
+    ) -> crate::Result<(Matrix, f64)> {
+        let c_bucket = art.inputs[0].shape[0] - 1;
+        let e_bucket = art.inputs[1].shape[0];
+        debug_assert_eq!(pass.row_ptr.len(), c_bucket + 1, "plan/artifact mismatch");
+        debug_assert_eq!(pass.col.len(), e_bucket);
+        debug_assert_eq!(x.rows(), art.inputs[4].shape[0]);
+        debug_assert_eq!(x.cols(), self.store.dim_tile);
+        let job = Job {
+            artifact: art.name.clone(),
+            args: vec![
+                Arg::i32_shared(pass.row_ptr.clone(), &[c_bucket + 1]),
+                Arg::i32_shared(pass.edge_dst.clone(), &[e_bucket]),
+                Arg::i32_shared(pass.col.clone(), &[e_bucket]),
+                Arg::f32_shared(pass.w.clone(), &[e_bucket]),
+                Arg::matrix(x),
+            ],
+        };
+        let res = self.pool.run(job)?;
+        let out = Matrix::from_vec(c_bucket, self.store.dim_tile, res.outputs[0].clone());
+        Ok((out.cropped(chunk_rows, self.store.dim_tile), res.device_secs))
+    }
+
+    /// Masked softmax cross-entropy over padded classes:
+    /// `(loss, grad_logits, correct, device_secs)`.
+    pub fn softmax_xent(
+        &self,
+        logits: &Matrix,
+        labels: &[i32],
+        sample_mask: &[f32],
+        class_mask: &[f32],
+    ) -> crate::Result<(f32, Matrix, f32, f64)> {
+        let (b_logical, kp) = logits.shape();
+        debug_assert_eq!(class_mask.len(), kp);
+        let art = self.store.find_xent(b_logical, kp)?;
+        let b_bucket = art.inputs[0].shape[0];
+        let mut lab = labels.to_vec();
+        lab.resize(b_bucket, 0);
+        let mut sm = sample_mask.to_vec();
+        sm.resize(b_bucket, 0.0);
+        let job = Job {
+            artifact: art.name.clone(),
+            args: vec![
+                Arg::matrix(&logits.padded(b_bucket, kp)),
+                Arg::i32(lab, &[b_bucket]),
+                Arg::f32(sm, &[b_bucket]),
+                Arg::f32(class_mask.to_vec(), &[kp]),
+            ],
+        };
+        let res = self.pool.run(job)?;
+        let loss = res.outputs[0][0];
+        let grad = Matrix::from_vec(b_bucket, kp, res.outputs[1].clone()).cropped(b_logical, kp);
+        let correct = res.outputs[2][0];
+        Ok((loss, grad, correct, res.device_secs))
+    }
+
+    /// GAT attention halves: `(s1, s2, device_secs)`.
+    pub fn attn_scores(
+        &self,
+        h: &Matrix,
+        a1: &[f32],
+        a2: &[f32],
+    ) -> crate::Result<(Vec<f32>, Vec<f32>, f64)> {
+        let (b_logical, hd) = h.shape();
+        let art = self.store.find_attn(b_logical, hd)?;
+        let b_bucket = art.inputs[0].shape[0];
+        let job = Job {
+            artifact: art.name.clone(),
+            args: vec![
+                Arg::matrix(&h.padded(b_bucket, hd)),
+                Arg::f32(a1.to_vec(), &[hd]),
+                Arg::f32(a2.to_vec(), &[hd]),
+            ],
+        };
+        let res = self.pool.run(job)?;
+        let mut s1 = res.outputs[0].clone();
+        let mut s2 = res.outputs[1].clone();
+        s1.truncate(b_logical);
+        s2.truncate(b_logical);
+        Ok((s1, s2, res.device_secs))
+    }
+
+    /// Per-chunk segment softmax for GAT edge attention. The pass arrays
+    /// must come from the same chunk-plan geometry as the matching
+    /// `edge_softmax` artifact. Returns `(alpha[e_bucket], device_secs)`.
+    pub fn edge_softmax(
+        &self,
+        pass: &AggPass,
+        chunk_rows: usize,
+        s_src: &[f32],
+        s_dst_chunk: &[f32],
+    ) -> crate::Result<(Vec<f32>, f64)> {
+        let e_bucket = pass.col.len();
+        let art = self.store.find_edge_softmax(chunk_rows, e_bucket, s_src.len())?;
+        let c_bucket = art.inputs[4].shape[0];
+        let valid: Vec<f32> = (0..e_bucket)
+            .map(|e| if e < pass.live_edges { 1.0 } else { 0.0 })
+            .collect();
+        let mut sd = s_dst_chunk.to_vec();
+        sd.resize(c_bucket, 0.0);
+        let job = Job {
+            artifact: art.name.clone(),
+            args: vec![
+                Arg::i32_shared(pass.col.clone(), &[e_bucket]),
+                Arg::i32_shared(pass.edge_dst.clone(), &[e_bucket]),
+                Arg::f32(valid, &[e_bucket]),
+                Arg::f32(s_src.to_vec(), &[s_src.len()]),
+                Arg::f32(sd, &[c_bucket]),
+            ],
+        };
+        let res = self.pool.run(job)?;
+        Ok((res.outputs[0].clone(), res.device_secs))
+    }
+
+    /// Link-prediction loss: `(loss, grad_h, device_secs)`.
+    pub fn lp_loss(
+        &self,
+        h: &Matrix,
+        src: &[i32],
+        dst: &[i32],
+        neg: &[i32],
+    ) -> crate::Result<(f32, Matrix, f64)> {
+        let (b_logical, hd) = h.shape();
+        let art = self.store.find_lp(b_logical, hd, src.len())?;
+        let b_bucket = art.inputs[0].shape[0];
+        let p_bucket = art.inputs[1].shape[0];
+        let pad_idx = |v: &[i32]| {
+            let mut out = v.to_vec();
+            out.resize(p_bucket, 0);
+            out
+        };
+        let mut mask = vec![1.0f32; src.len()];
+        mask.resize(p_bucket, 0.0);
+        let job = Job {
+            artifact: art.name.clone(),
+            args: vec![
+                Arg::matrix(&h.padded(b_bucket, hd)),
+                Arg::i32(pad_idx(src), &[p_bucket]),
+                Arg::i32(pad_idx(dst), &[p_bucket]),
+                Arg::i32(pad_idx(neg), &[p_bucket]),
+                Arg::f32(mask, &[p_bucket]),
+            ],
+        };
+        let res = self.pool.run(job)?;
+        let loss = res.outputs[0][0];
+        let grad = Matrix::from_vec(b_bucket, hd, res.outputs[1].clone()).cropped(b_logical, hd);
+        Ok((loss, grad, res.device_secs))
+    }
+}

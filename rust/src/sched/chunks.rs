@@ -1,0 +1,145 @@
+//! Chunk geometry: how many rows per chunk, and which artifact shape
+//! bucket to run them under, subject to the simulated device budget.
+//!
+//! Paper §4.2: "to better utilize GPU resources and reduce scheduling
+//! overhead, we should aim to make each chunk as large as possible" — so we
+//! pick the *largest* available row bucket whose per-pass footprint (plus
+//! resident slices) fits the budget, unless the user pins `chunks`.
+
+use crate::graph::Csr;
+use crate::runtime::{ArtifactStore, DeviceMemory};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkGeometry {
+    pub rows_per_chunk: usize,
+    pub c_bucket: usize,
+    pub e_bucket: usize,
+    pub num_chunks: usize,
+}
+
+/// Pick geometry for graph `g` given the store's available buckets.
+///
+/// `resident_bytes` is what must stay on the device besides one pass's
+/// buffers (the dim-slice panel, parameters, current chunk outputs).
+/// Errors when even the smallest bucket cannot fit — the true OOM case.
+pub fn choose_geometry(
+    store: &ArtifactStore,
+    g: &Csr,
+    pallas: bool,
+    resident_bytes: usize,
+    mem: &DeviceMemory,
+    chunks_override: usize,
+    chunk_sched: bool,
+) -> crate::Result<ChunkGeometry> {
+    let v = g.num_vertices();
+    let buckets = store.agg_row_buckets(v);
+    anyhow::ensure!(!buckets.is_empty(), "no aggregation artifacts for |V|={v}");
+
+    let geometry_for = |rows_per_chunk: usize| -> crate::Result<ChunkGeometry> {
+        let c_bucket = *buckets
+            .iter()
+            .find(|&&c| c >= rows_per_chunk)
+            .ok_or_else(|| anyhow::anyhow!("no row bucket >= {rows_per_chunk} (|V|={v})"))?;
+        // expected edges per chunk guides the e bucket; overflow multi-passes
+        let avg_e = (g.num_edges() * rows_per_chunk).div_ceil(v.max(1));
+        let art = store.find_agg(pallas, rows_per_chunk.min(c_bucket), avg_e, v)?;
+        Ok(ChunkGeometry {
+            rows_per_chunk,
+            c_bucket: art.inputs[0].shape[0] - 1,
+            e_bucket: art.inputs[1].shape[0],
+            num_chunks: v.div_ceil(rows_per_chunk),
+        })
+    };
+
+    if !chunk_sched {
+        // whole graph as one chunk — must both have a bucket and fit
+        let geo = geometry_for(v)
+            .map_err(|e| anyhow::anyhow!("chunk scheduling disabled and {e}"))?;
+        let need = pass_bytes(&geo, v, store.dim_tile) + resident_bytes;
+        anyhow::ensure!(
+            mem.fits(need),
+            "device OOM: whole-graph pass needs {} MiB > {} MiB budget \
+             (chunk scheduling disabled)",
+            need >> 20,
+            mem.budget() >> 20
+        );
+        return Ok(geo);
+    }
+
+    if chunks_override > 0 {
+        return geometry_for(v.div_ceil(chunks_override));
+    }
+
+    // largest bucket that fits
+    for &c in buckets.iter().rev() {
+        let geo = geometry_for(c)?;
+        let need = pass_bytes(&geo, v, store.dim_tile) + resident_bytes;
+        if mem.fits(need) {
+            return Ok(geo);
+        }
+    }
+    anyhow::bail!(
+        "device OOM: even the smallest chunk bucket ({} rows) exceeds the \
+         {} MiB budget",
+        buckets[0],
+        mem.budget() >> 20
+    )
+}
+
+/// One pass's device bytes: CSR arrays + resident source tile + output.
+pub fn pass_bytes(geo: &ChunkGeometry, s: usize, tile: usize) -> usize {
+    (geo.c_bucket + 1) * 4 + geo.e_bucket * 12 + s * tile * 4 + geo.c_bucket * tile * 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+
+    fn store() -> ArtifactStore {
+        ArtifactStore::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")).unwrap()
+    }
+
+    #[test]
+    fn big_budget_prefers_biggest_chunk() {
+        let s = store();
+        let g = generate::uniform(1024, 8192, 1);
+        let mem = DeviceMemory::from_mb(16 * 1024);
+        let geo = choose_geometry(&s, &g, false, 0, &mem, 0, true).unwrap();
+        assert_eq!(geo.rows_per_chunk, 1024);
+        assert_eq!(geo.num_chunks, 1);
+    }
+
+    #[test]
+    fn tight_budget_shrinks_chunks() {
+        let s = store();
+        let g = generate::uniform(65536, 1_310_720, 1);
+        // budget that fits the small pass but not the big one
+        let small = choose_geometry(&s, &g, false, 0, &DeviceMemory::from_mb(16), 0, true);
+        let big = choose_geometry(&s, &g, false, 0, &DeviceMemory::from_mb(16 * 1024), 0, true)
+            .unwrap();
+        match small {
+            Ok(geo) => assert!(geo.rows_per_chunk < big.rows_per_chunk),
+            Err(e) => assert!(e.to_string().contains("OOM"), "{e}"),
+        }
+    }
+
+    #[test]
+    fn chunk_sched_off_errors_on_tight_budget() {
+        let s = store();
+        let g = generate::uniform(65536, 1_310_720, 1);
+        let err = choose_geometry(&s, &g, false, 100 << 20, &DeviceMemory::from_mb(32), 0, false)
+            .unwrap_err();
+        assert!(err.to_string().contains("OOM"), "{err}");
+    }
+
+    #[test]
+    fn override_pins_chunk_count() {
+        let s = store();
+        let g = generate::uniform(1024, 8192, 1);
+        let mem = DeviceMemory::from_mb(16 * 1024);
+        let geo = choose_geometry(&s, &g, false, 0, &mem, 4, true).unwrap();
+        assert_eq!(geo.num_chunks, 4);
+        assert_eq!(geo.rows_per_chunk, 256);
+    }
+}

@@ -1,0 +1,9 @@
+//! Memory-efficient task scheduling (paper §4.2): chunk geometry selection
+//! under the device memory budget, and the inter-chunk pipeline plan with
+//! per-vertex communication dedup (Fig 9d).
+
+pub mod chunks;
+pub mod pipeline;
+
+pub use chunks::ChunkGeometry;
+pub use pipeline::PipelinePlan;

@@ -1,0 +1,319 @@
+//! Row-major f32 matrix: the host-side container for features, embeddings,
+//! gradients and parameters. Heavy math happens inside the AOT artifacts;
+//! this type only provides the data-movement ops the coordinator needs
+//! (slicing, padding, scatter/gather of rows, small reference matmuls for
+//! tests and optimizer updates).
+
+use std::ops::Range;
+
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl std::fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Matrix({}x{})", self.rows, self.cols)
+    }
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Size in bytes (device-memory accounting).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    // ---- slicing / assembly (the collectives' data plane) ----
+
+    /// Copy of a contiguous column range — a *dimension slice*.
+    pub fn slice_cols(&self, range: Range<usize>) -> Matrix {
+        assert!(range.end <= self.cols);
+        let w = range.len();
+        let mut out = Matrix::zeros(self.rows, w);
+        for r in 0..self.rows {
+            out.data[r * w..(r + 1) * w]
+                .copy_from_slice(&self.data[r * self.cols + range.start..r * self.cols + range.end]);
+        }
+        out
+    }
+
+    /// Copy of a contiguous row range — a *vertex slice*.
+    pub fn slice_rows(&self, range: Range<usize>) -> Matrix {
+        assert!(range.end <= self.rows);
+        let h = range.len();
+        let mut out = Matrix::zeros(h, self.cols);
+        out.data
+            .copy_from_slice(&self.data[range.start * self.cols..range.end * self.cols]);
+        out
+    }
+
+    /// Write `src` into our columns starting at `col0`.
+    pub fn write_cols(&mut self, col0: usize, src: &Matrix) {
+        assert_eq!(src.rows, self.rows);
+        assert!(col0 + src.cols <= self.cols);
+        for r in 0..self.rows {
+            let dst = &mut self.data[r * self.cols + col0..r * self.cols + col0 + src.cols];
+            dst.copy_from_slice(src.row(r));
+        }
+    }
+
+    /// Write `src` into our rows starting at `row0`.
+    pub fn write_rows(&mut self, row0: usize, src: &Matrix) {
+        assert_eq!(src.cols, self.cols);
+        assert!(row0 + src.rows <= self.rows);
+        self.data[row0 * self.cols..(row0 + src.rows) * self.cols].copy_from_slice(&src.data);
+    }
+
+    /// Gather arbitrary rows (e.g. remote-neighbour fetch in the DP
+    /// baseline, train-vertex selection in the mini-batch baseline).
+    pub fn gather_rows(&self, idx: &[u32]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (i, &r) in idx.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(self.row(r as usize));
+        }
+        out
+    }
+
+    /// Scatter-add rows back (inverse of `gather_rows`; gradient return).
+    pub fn scatter_add_rows(&mut self, idx: &[u32], src: &Matrix) {
+        assert_eq!(idx.len(), src.rows);
+        assert_eq!(src.cols, self.cols);
+        for (i, &r) in idx.iter().enumerate() {
+            let dst = self.row_mut(r as usize);
+            for (d, s) in dst.iter_mut().zip(src.row(i)) {
+                *d += s;
+            }
+        }
+    }
+
+    /// Zero-pad (or truncate-check) to `rows x cols`; padding is zeros so
+    /// the artifact shape buckets are numerically transparent.
+    pub fn padded(&self, rows: usize, cols: usize) -> Matrix {
+        assert!(rows >= self.rows && cols >= self.cols, "padded() cannot shrink");
+        if rows == self.rows && cols == self.cols {
+            return self.clone();
+        }
+        let mut out = Matrix::zeros(rows, cols);
+        for r in 0..self.rows {
+            out.data[r * cols..r * cols + self.cols].copy_from_slice(self.row(r));
+        }
+        out
+    }
+
+    /// Drop padding: keep top-left `rows x cols`.
+    pub fn cropped(&self, rows: usize, cols: usize) -> Matrix {
+        assert!(rows <= self.rows && cols <= self.cols);
+        let mut out = Matrix::zeros(rows, cols);
+        for r in 0..rows {
+            out.row_mut(r)
+                .copy_from_slice(&self.data[r * self.cols..r * self.cols + cols]);
+        }
+        out
+    }
+
+    /// Horizontal concatenation of dimension slices (gather's data plane).
+    pub fn concat_cols(parts: &[Matrix]) -> Matrix {
+        assert!(!parts.is_empty());
+        let rows = parts[0].rows;
+        let total: usize = parts.iter().map(|p| p.cols).sum();
+        let mut out = Matrix::zeros(rows, total);
+        let mut c0 = 0;
+        for p in parts {
+            assert_eq!(p.rows, rows);
+            out.write_cols(c0, p);
+            c0 += p.cols;
+        }
+        out
+    }
+
+    /// Vertical concatenation of vertex slices.
+    pub fn concat_rows(parts: &[Matrix]) -> Matrix {
+        assert!(!parts.is_empty());
+        let cols = parts[0].cols;
+        let total: usize = parts.iter().map(|p| p.rows).sum();
+        let mut out = Matrix::zeros(total, cols);
+        let mut r0 = 0;
+        for p in parts {
+            assert_eq!(p.cols, cols);
+            out.write_rows(r0, p);
+            r0 += p.rows;
+        }
+        out
+    }
+
+    // ---- small math (tests, optimizer, reference paths) ----
+
+    pub fn add_assign(&mut self, other: &Matrix) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for a in &mut self.data {
+            *a *= s;
+        }
+    }
+
+    /// Reference matmul — test oracle only; hot-path matmuls run in the
+    /// AOT artifacts.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        for r in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.data[r * self.cols + k];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &other.data[k * other.cols..(k + 1) * other.cols];
+                let dst = &mut out.data[r * other.cols..(r + 1) * other.cols];
+                for (d, &o) in dst.iter_mut().zip(orow) {
+                    *d += a * o;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    pub fn frobenius(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(rows: usize, cols: usize) -> Matrix {
+        Matrix::from_fn(rows, cols, |r, c| (r * cols + c) as f32)
+    }
+
+    #[test]
+    fn slice_and_concat_cols_roundtrip() {
+        let m = seq(4, 10);
+        let parts: Vec<Matrix> = crate::tensor::dim_slices(10, 3)
+            .into_iter()
+            .map(|r| m.slice_cols(r))
+            .collect();
+        assert_eq!(Matrix::concat_cols(&parts), m);
+    }
+
+    #[test]
+    fn slice_and_concat_rows_roundtrip() {
+        let m = seq(9, 3);
+        let parts: Vec<Matrix> = crate::tensor::row_slices(9, 2)
+            .into_iter()
+            .map(|r| m.slice_rows(r))
+            .collect();
+        assert_eq!(Matrix::concat_rows(&parts), m);
+    }
+
+    #[test]
+    fn pad_then_crop_roundtrip() {
+        let m = seq(3, 5);
+        let p = m.padded(8, 8);
+        assert_eq!(p.get(2, 4), m.get(2, 4));
+        assert_eq!(p.get(7, 7), 0.0);
+        assert_eq!(p.cropped(3, 5), m);
+    }
+
+    #[test]
+    fn gather_scatter_rows() {
+        let m = seq(6, 4);
+        let idx = [5u32, 0, 3];
+        let g = m.gather_rows(&idx);
+        assert_eq!(g.row(0), m.row(5));
+        let mut acc = Matrix::zeros(6, 4);
+        acc.scatter_add_rows(&idx, &g);
+        assert_eq!(acc.row(3), m.row(3));
+        assert_eq!(acc.row(1), &[0.0; 4]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let m = seq(3, 3);
+        let eye = Matrix::from_fn(3, 3, |r, c| f32::from(u8::from(r == c)));
+        assert_eq!(m.matmul(&eye), m);
+    }
+
+    #[test]
+    fn write_cols_places_slice() {
+        let mut m = Matrix::zeros(2, 6);
+        let s = seq(2, 2);
+        m.write_cols(3, &s);
+        assert_eq!(m.get(1, 3), s.get(1, 0));
+        assert_eq!(m.get(0, 0), 0.0);
+    }
+}

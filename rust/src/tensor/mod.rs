@@ -1,0 +1,106 @@
+//! Dense row-major f32 matrices and the slicing ops tensor parallelism
+//! lives on: column (dimension) slicing for the split/gather collectives,
+//! row slicing for vertex batches, zero-padding to artifact shape buckets.
+
+mod matrix;
+
+pub use matrix::Matrix;
+
+/// Aggregation dimension tile shared with `python/compile/aot.py`.
+pub const DIM_TILE: usize = 32;
+
+/// Pallas SpMM row block (chunk row counts must be multiples of this).
+pub const ROW_BLOCK: usize = 256;
+
+/// Pad an output/class dimension the way `aot.pad_dim` does: to a multiple
+/// of 32, and to a multiple of 128 once >= 128.
+pub fn pad_dim(k: usize) -> usize {
+    if k <= 128 {
+        k.div_ceil(32) * 32
+    } else {
+        k.div_ceil(128) * 128
+    }
+}
+
+/// Round up to a multiple of `DIM_TILE`.
+pub fn pad_tile(d: usize) -> usize {
+    d.div_ceil(DIM_TILE) * DIM_TILE
+}
+
+/// Next power of two (>= 1).
+pub fn ceil_pow2(x: usize) -> usize {
+    x.max(1).next_power_of_two()
+}
+
+/// Split a width `d` into `n` contiguous dimension ranges, sizes as equal
+/// as possible (first `d % n` slices get one extra column). This is the
+/// canonical feature-dimension partition of GNN tensor parallelism.
+pub fn dim_slices(d: usize, n: usize) -> Vec<std::ops::Range<usize>> {
+    assert!(n > 0);
+    let base = d / n;
+    let extra = d % n;
+    let mut out = Vec::with_capacity(n);
+    let mut lo = 0;
+    for i in 0..n {
+        let w = base + usize::from(i < extra);
+        out.push(lo..lo + w);
+        lo += w;
+    }
+    debug_assert_eq!(lo, d);
+    out
+}
+
+/// Split `v` rows into `n` contiguous vertex ranges (NN-phase ownership).
+pub fn row_slices(v: usize, n: usize) -> Vec<std::ops::Range<usize>> {
+    dim_slices(v, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_dim_matches_python_contract() {
+        for (k, want) in [
+            (1, 32),
+            (8, 32),
+            (32, 32),
+            (41, 64),
+            (47, 64),
+            (64, 64),
+            (128, 128),
+            (129, 256),
+            (153, 256),
+            (172, 256),
+            (349, 384),
+        ] {
+            assert_eq!(pad_dim(k), want, "pad_dim({k})");
+        }
+    }
+
+    #[test]
+    fn dim_slices_cover_exactly() {
+        for d in [1usize, 7, 32, 100, 602, 1024] {
+            for n in [1usize, 2, 3, 4, 16] {
+                let s = dim_slices(d, n);
+                assert_eq!(s.len(), n);
+                assert_eq!(s[0].start, 0);
+                assert_eq!(s.last().unwrap().end, d);
+                for w in s.windows(2) {
+                    assert_eq!(w[0].end, w[1].start);
+                    // balanced to within one column
+                    assert!(w[0].len().abs_diff(w[1].len()) <= 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ceil_pow2_basic() {
+        assert_eq!(ceil_pow2(0), 1);
+        assert_eq!(ceil_pow2(1), 1);
+        assert_eq!(ceil_pow2(3), 4);
+        assert_eq!(ceil_pow2(4096), 4096);
+        assert_eq!(ceil_pow2(4097), 8192);
+    }
+}

@@ -1,0 +1,9 @@
+//! Small in-tree utilities standing in for crates unavailable in the
+//! offline build: a deterministic RNG, a TOML-subset parser, and a
+//! property-test driver.
+
+pub mod propcheck;
+pub mod rng;
+pub mod toml_lite;
+
+pub use rng::Rng;

@@ -1,0 +1,47 @@
+//! Tiny property-test driver (offline stand-in for `proptest`): run a
+//! property over N seeded random cases; on failure report the seed so the
+//! case can be replayed deterministically.
+
+use super::rng::Rng;
+
+/// Run `prop(rng)` for `cases` deterministic seeds derived from `base_seed`.
+/// Panics with the failing seed on the first falsified case.
+pub fn check(name: &str, base_seed: u64, cases: usize, mut prop: impl FnMut(&mut Rng)) {
+    for i in 0..cases {
+        let seed = base_seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::seed_from_u64(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' falsified at case {i} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_true_property() {
+        check("sum-commutes", 1, 50, |rng| {
+            let a = rng.gen_range(1000) as i64;
+            let b = rng.gen_range(1000) as i64;
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "falsified")]
+    fn fails_false_property() {
+        check("always-small", 2, 50, |rng| {
+            assert!(rng.gen_range(100) < 50);
+        });
+    }
+}

@@ -1,0 +1,174 @@
+//! Deterministic xoshiro256++ RNG (public-domain algorithm by Blackman &
+//! Vigna), seeded via SplitMix64. Replaces the `rand` crate in this
+//! offline build; determinism in `(seed)` is part of the dataset contract.
+
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = seed;
+        Rng { s: [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm)] }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let r = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+
+    /// Uniform in `[0, n)`; unbiased enough for simulation workloads
+    /// (128-bit multiply method).
+    #[inline]
+    pub fn gen_range(&mut self, n: usize) -> usize {
+        assert!(n > 0);
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn gen_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    #[inline]
+    pub fn gen_f32_range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.gen_f64() as f32
+    }
+
+    #[inline]
+    pub fn gen_bool(&mut self, p: f64) -> bool {
+        self.gen_f64() < p
+    }
+
+    /// Approximately standard-normal (sum of 4 uniforms, variance-corrected).
+    #[inline]
+    pub fn gen_normal(&mut self) -> f32 {
+        let s: f64 = (0..4).map(|_| self.gen_f64() - 0.5).sum();
+        (s * (12.0f64 / 4.0).sqrt()) as f32
+    }
+
+    /// Poisson via inversion (small lambda).
+    pub fn gen_poisson(&mut self, lambda: f64) -> usize {
+        let l = (-lambda).exp();
+        let mut k = 0usize;
+        let mut p = 1.0;
+        loop {
+            p *= self.gen_f64();
+            if p <= l || k > 10_000 {
+                return k;
+            }
+            k += 1;
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, v: &mut [T]) {
+        for i in (1..v.len()).rev() {
+            let j = self.gen_range(i + 1);
+            v.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `0..n` (k << n reservoir-free).
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<u32> {
+        assert!(k <= n);
+        if k * 3 > n {
+            let mut all: Vec<u32> = (0..n as u32).collect();
+            self.shuffle(&mut all);
+            all.truncate(k);
+            all.sort_unstable();
+            return all;
+        }
+        let mut set = std::collections::BTreeSet::new();
+        while set.len() < k {
+            set.insert(self.gen_range(n) as u32);
+        }
+        set.into_iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::seed_from_u64(7);
+        let mut b = Rng::seed_from_u64(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn range_bounds() {
+        let mut r = Rng::seed_from_u64(1);
+        for _ in 0..10_000 {
+            assert!(r.gen_range(7) < 7);
+            let f = r.gen_f64();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn uniformish() {
+        let mut r = Rng::seed_from_u64(3);
+        let mut counts = [0usize; 8];
+        for _ in 0..80_000 {
+            counts[r.gen_range(8)] += 1;
+        }
+        for c in counts {
+            assert!((8_000..12_000).contains(&c), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::seed_from_u64(5);
+        let xs: Vec<f32> = (0..50_000).map(|_| r.gen_normal()).collect();
+        let mean: f32 = xs.iter().sum::<f32>() / xs.len() as f32;
+        let var: f32 = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / xs.len() as f32;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn sample_distinct_is_distinct() {
+        let mut r = Rng::seed_from_u64(9);
+        let s = r.sample_distinct(100, 30);
+        assert_eq!(s.len(), 30);
+        assert!(s.windows(2).all(|w| w[0] < w[1]));
+        let s2 = r.sample_distinct(10, 9);
+        assert_eq!(s2.len(), 9);
+    }
+
+    #[test]
+    fn poisson_mean() {
+        let mut r = Rng::seed_from_u64(11);
+        let m: f64 =
+            (0..20_000).map(|_| r.gen_poisson(4.0) as f64).sum::<f64>() / 20_000.0;
+        assert!((m - 4.0).abs() < 0.1, "{m}");
+    }
+}

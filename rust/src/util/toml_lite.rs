@@ -1,0 +1,144 @@
+//! Minimal TOML-subset parser for `RunConfig` files (offline stand-in for
+//! the `toml` crate). Supports: comments, `key = value` with string / bool
+//! / integer / float / flat arrays, and `[section]` headers which prefix
+//! keys as `section.key`.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize_array(&self) -> Option<Vec<usize>> {
+        match self {
+            Value::Array(v) => v.iter().map(|x| x.as_int().map(|i| i as usize)).collect(),
+            _ => None,
+        }
+    }
+}
+
+pub fn parse(text: &str) -> anyhow::Result<BTreeMap<String, Value>> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+            section = name.trim().to_string();
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            anyhow::bail!("line {}: expected `key = value`: {raw}", lineno + 1);
+        };
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{section}.{}", k.trim())
+        };
+        out.insert(key, parse_value(v.trim(), lineno + 1)?);
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive but fine: '#' inside strings is not supported in this subset
+    match line.find('#') {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+fn parse_value(v: &str, lineno: usize) -> anyhow::Result<Value> {
+    if let Some(s) = v.strip_prefix('"').and_then(|x| x.strip_suffix('"')) {
+        return Ok(Value::Str(s.to_string()));
+    }
+    if v == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if v == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = v.strip_prefix('[').and_then(|x| x.strip_suffix(']')) {
+        let items: anyhow::Result<Vec<Value>> = inner
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(|s| parse_value(s, lineno))
+            .collect();
+        return Ok(Value::Array(items?));
+    }
+    if let Ok(i) = v.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = v.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    anyhow::bail!("line {lineno}: cannot parse value: {v}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_sections() {
+        let m = parse(
+            "profile = \"rdt\"\nworkers = 16 # comment\npipeline = true\nlr = 0.01\n[net]\nbandwidth_gbps = 15.0\n",
+        )
+        .unwrap();
+        assert_eq!(m["profile"].as_str(), Some("rdt"));
+        assert_eq!(m["workers"].as_int(), Some(16));
+        assert_eq!(m["pipeline"].as_bool(), Some(true));
+        assert!((m["lr"].as_float().unwrap() - 0.01).abs() < 1e-12);
+        assert!((m["net.bandwidth_gbps"].as_float().unwrap() - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let m = parse("fanouts = [25, 10]\n").unwrap();
+        assert_eq!(m["fanouts"].as_usize_array(), Some(vec![25, 10]));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("what even is this").is_err());
+        assert!(parse("x = @@@").is_err());
+    }
+}

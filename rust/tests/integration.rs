@@ -1,0 +1,281 @@
+//! Integration tests across the full stack: the distributed engines must
+//! match host-side references numerically, and coordinator invariants
+//! (chunk routing, collective state, scheduling) must hold under the
+//! in-tree property-test driver (`util::propcheck`, the offline stand-in
+//! for proptest).
+
+use neutron_tp::cluster::{collectives, EventSim};
+use neutron_tp::config::{NetModel, RunConfig, System};
+use neutron_tp::graph::chunk::ChunkPlan;
+use neutron_tp::graph::datasets::{profile, Dataset};
+use neutron_tp::graph::{generate, partition};
+use neutron_tp::model::params::GnnParams;
+use neutron_tp::model::layer_dims;
+use neutron_tp::parallel::{self, Ctx};
+use neutron_tp::runtime::{ArtifactStore, ExecutorPool};
+use neutron_tp::tensor::{dim_slices, row_slices, Matrix};
+use neutron_tp::util::{propcheck, Rng};
+
+fn store() -> ArtifactStore {
+    ArtifactStore::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .expect("run `make artifacts` first")
+}
+
+// ---------------------------------------------------------------------------
+// Full-system numeric parity: the distributed decoupled-TP epoch computes
+// exactly the host-side decoupled GCN forward (same params, same data).
+// ---------------------------------------------------------------------------
+
+fn host_decoupled_forward(data: &Dataset, params: &GnnParams, rounds: usize) -> (Matrix, f32) {
+    // MLP chain on the host
+    let mut h = data.features.clone();
+    let layers = params.layers();
+    for (i, l) in layers.iter().enumerate() {
+        let mut z = h.matmul(&l.w);
+        for r in 0..z.rows() {
+            for c in 0..z.cols() {
+                let v = z.get(r, c) + l.b[c];
+                z.set(r, c, if i + 1 != layers.len() { v.max(0.0) } else { v });
+            }
+        }
+        h = z;
+    }
+    for _ in 0..rounds {
+        h = data.graph.spmm_ref(&h);
+    }
+    // masked mean CE loss over train vertices (valid classes only)
+    let k = data.profile.k;
+    let n: f32 = data.train_mask.iter().sum();
+    let mut loss = 0.0f32;
+    for v in 0..data.profile.v {
+        if data.train_mask[v] == 0.0 {
+            continue;
+        }
+        let row = &h.row(v)[..k];
+        let mx = row.iter().copied().fold(f32::MIN, f32::max);
+        let lse = mx + row.iter().map(|x| (x - mx).exp()).sum::<f32>().ln();
+        loss += lse - row[data.labels[v] as usize];
+    }
+    (h, loss / n.max(1.0))
+}
+
+#[test]
+fn distributed_tp_matches_host_reference_loss() {
+    let store = store();
+    let cfg = RunConfig { profile: "tiny".into(), workers: 4, layers: 2, epochs: 1, ..Default::default() };
+    let data = Dataset::generate(profile("tiny").unwrap(), cfg.seed);
+    let pool = ExecutorPool::new(&store, 2).unwrap();
+    let ctx = Ctx { cfg: &cfg, data: &data, store: &store, pool: &pool };
+    let report = &parallel::run(&ctx).unwrap()[0];
+
+    let dims = layer_dims(&data.profile, cfg.layers, None, false);
+    let params = GnnParams::init(&dims, 1, false, cfg.seed);
+    let (_h, host_loss) = host_decoupled_forward(&data, &params, cfg.layers);
+    let diff = (report.loss - host_loss).abs();
+    assert!(
+        diff < 2e-3 * host_loss.abs().max(1.0),
+        "distributed loss {} vs host {} (diff {diff})",
+        report.loss,
+        host_loss
+    );
+}
+
+#[test]
+fn pallas_and_scatter_impls_agree_end_to_end() {
+    let store = store();
+    let mk = |impl_| RunConfig {
+        profile: "tiny".into(),
+        workers: 2,
+        epochs: 2,
+        agg_impl: impl_,
+        ..Default::default()
+    };
+    let data = Dataset::generate(profile("tiny").unwrap(), 42);
+    let run = |cfg: &RunConfig| {
+        let pool = ExecutorPool::new(&store, 2).unwrap();
+        let ctx = Ctx { cfg, data: &data, store: &store, pool: &pool };
+        parallel::run(&ctx).unwrap().last().unwrap().loss
+    };
+    let a = run(&mk(neutron_tp::config::AggImpl::Scatter));
+    let b = run(&mk(neutron_tp::config::AggImpl::Pallas));
+    assert!((a - b).abs() < 1e-3, "scatter {a} vs pallas {b}");
+}
+
+#[test]
+fn worker_count_does_not_change_numerics() {
+    // TP is a pure reparallelization: loss trajectories must be identical
+    // (up to fp noise) for any worker count
+    let store = store();
+    let data = Dataset::generate(profile("tiny").unwrap(), 42);
+    let run = |workers: usize| {
+        let cfg = RunConfig { profile: "tiny".into(), workers, epochs: 3, ..Default::default() };
+        let pool = ExecutorPool::new(&store, 2).unwrap();
+        let ctx = Ctx { cfg: &cfg, data: &data, store: &store, pool: &pool };
+        parallel::run(&ctx).unwrap().iter().map(|r| r.loss).collect::<Vec<f32>>()
+    };
+    let l1 = run(1);
+    let l4 = run(4);
+    for (a, b) in l1.iter().zip(&l4) {
+        assert!((a - b).abs() < 1e-3, "{l1:?} vs {l4:?}");
+    }
+}
+
+#[test]
+fn oom_reproduction_table2() {
+    // NeutronStar/Sancus-like engines OOM on a big profile with the T4
+    // budget while NeutronTP trains under the same budget (chunk sched)
+    let store = store();
+    let data = Dataset::generate(profile("fs").unwrap(), 1);
+    let mk = |sys| RunConfig {
+        system: sys,
+        profile: "fs".into(),
+        workers: 4,
+        epochs: 1,
+        device_mem_mb: 80, // scaled-down budget for scaled-down graphs
+        ..Default::default()
+    };
+    let run = |cfg: RunConfig| {
+        let pool = ExecutorPool::new(&store, 2).unwrap();
+        let ctx = Ctx { cfg: &cfg, data: &data, store: &store, pool: &pool };
+        parallel::run(&ctx).map(|_| ())
+    };
+    let dp = run(mk(System::DpFull));
+    assert!(dp.is_err() && dp.unwrap_err().to_string().contains("OOM"));
+    let hist = run(mk(System::Historical));
+    assert!(hist.is_err() && hist.unwrap_err().to_string().contains("OOM"));
+    run(mk(System::NeutronTp)).expect("NeutronTP chunks under the same budget");
+}
+
+// ---------------------------------------------------------------------------
+// Property tests (coordinator invariants)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_chunk_plan_covers_every_edge_exactly_once() {
+    propcheck::check("chunk-plan-edge-cover", 0xC0FFEE, 25, |rng| {
+        let v = 256 << rng.gen_range(3); // 256..2048
+        let e = v * (1 + rng.gen_range(8));
+        let g = generate::rmat(v, e, generate::RMAT_SKEWED, rng.next_u64()).gcn_normalized();
+        let rows = [v / 4, v / 2, v][rng.gen_range(3)];
+        let c_bucket = rows.max(256);
+        let e_bucket = 1 << (10 + rng.gen_range(4));
+        let plan = ChunkPlan::build(&g, rows, c_bucket, e_bucket);
+        let total: usize = plan.chunks.iter().map(|c| c.live_edges).sum();
+        assert_eq!(total, g.num_edges());
+        // every pass is within bucket capacity and rows are in range
+        for chunk in &plan.chunks {
+            for pass in &chunk.passes {
+                assert!(pass.live_edges <= e_bucket);
+                assert_eq!(pass.col.len(), e_bucket);
+                assert_eq!(pass.row_ptr.len(), c_bucket + 1);
+                assert!(pass.edge_dst[..pass.live_edges]
+                    .iter()
+                    .all(|&d| (d as usize) < chunk.num_rows()));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_split_gather_roundtrip_random_shapes() {
+    propcheck::check("split-gather-roundtrip", 0xBEEF, 30, |rng| {
+        let n = 1 << (1 + rng.gen_range(3)); // 2..8 workers
+        let v = n * (1 + rng.gen_range(64));
+        let d = n.max(1 + rng.gen_range(96));
+        let full = Matrix::from_fn(v, d, |r, c| ((r * 31 + c * 7) % 23) as f32 - 11.0);
+        let rp = row_slices(v, n);
+        let dp = dim_slices(d, n);
+        let rows: Vec<Matrix> = rp.iter().map(|r| full.slice_rows(r.clone())).collect();
+        let mut sim = EventSim::new(n);
+        let ready = vec![0.0; n];
+        let net = NetModel::default();
+        let (slices, t1) = collectives::split(&mut sim, &net, &rows, &rp, &dp, &ready);
+        let (back, _) = collectives::gather(&mut sim, &net, &slices, &rp, &dp, &t1);
+        for (i, b) in back.iter().enumerate() {
+            assert_eq!(*b, rows[i], "roundtrip failed at worker {i} (n={n} v={v} d={d})");
+        }
+    });
+}
+
+#[test]
+fn prop_partition_stats_conserve_edges() {
+    propcheck::check("partition-edge-conservation", 0x5EED, 20, |rng| {
+        let v = 256 + rng.gen_range(1024);
+        let e = v * (2 + rng.gen_range(6));
+        let g = generate::uniform(v, e, rng.next_u64());
+        let parts = 1 << (1 + rng.gen_range(3));
+        for p in [partition::chunk_partition(v, parts), partition::greedy_min_cut(&g, parts)] {
+            let st = p.stats(&g);
+            assert_eq!(st.iter().map(|s| s.edges).sum::<usize>(), e);
+            assert_eq!(st.iter().map(|s| s.vertices).sum::<usize>(), v);
+            assert_eq!(
+                st.iter().map(|s| s.local_in + s.remote_in).sum::<usize>(),
+                e
+            );
+            assert_eq!(p.edge_cut(&g), st.iter().map(|s| s.remote_in).sum::<usize>());
+        }
+    });
+}
+
+#[test]
+fn prop_event_sim_time_is_monotone_and_conserved() {
+    propcheck::check("event-sim-monotone", 0xAB, 40, |rng| {
+        let n = 1 + rng.gen_range(8);
+        let mut sim = EventSim::new(n);
+        let mut total_comp = vec![0.0f64; n];
+        let mut total_comm = vec![0.0f64; n];
+        let mut last_makespan = 0.0;
+        for _ in 0..rng.gen_range(50) + 5 {
+            let w = rng.gen_range(n);
+            let dur = rng.gen_f64() * 0.01;
+            if rng.gen_bool(0.5) {
+                sim.compute(w, dur, rng.gen_f64() * 0.001);
+                total_comp[w] += dur;
+            } else {
+                sim.comm(w, dur, rng.gen_f64() * 0.001);
+                total_comm[w] += dur;
+            }
+            let m = sim.makespan();
+            assert!(m >= last_makespan, "makespan regressed");
+            last_makespan = m;
+            if rng.gen_bool(0.1) {
+                sim.barrier();
+            }
+        }
+        for w in 0..n {
+            assert!((sim.comp_totals()[w] - total_comp[w]).abs() < 1e-9);
+            assert!((sim.comm_totals()[w] - total_comm[w]).abs() < 1e-9);
+            // busy time cannot exceed elapsed time per stream
+            assert!(sim.comp_totals()[w] <= sim.makespan() + 1e-9);
+        }
+    });
+}
+
+#[test]
+fn prop_csr_transpose_preserves_spmm_adjoint() {
+    propcheck::check("transpose-adjoint", 0x7A, 15, |rng| {
+        let v = 64 + rng.gen_range(256);
+        let e = v * (1 + rng.gen_range(5));
+        let g = generate::uniform(v, e, rng.next_u64()).gcn_normalized();
+        let x = Matrix::from_fn(v, 4, |r, c| ((r + 3 * c) % 7) as f32 * 0.3 - 0.9);
+        let y = Matrix::from_fn(v, 4, |r, c| ((2 * r + c) % 5) as f32 * 0.2 - 0.4);
+        let dot = |a: &Matrix, b: &Matrix| -> f64 {
+            a.data().iter().zip(b.data()).map(|(x, y)| (*x as f64) * (*y as f64)).sum()
+        };
+        let lhs = dot(&g.spmm_ref(&x), &y);
+        let rhs = dot(&x, &g.transpose().spmm_ref(&y));
+        assert!((lhs - rhs).abs() < 1e-3 * (1.0 + lhs.abs()), "{lhs} vs {rhs}");
+    });
+}
+
+#[test]
+fn prop_rng_sampling_bounds() {
+    propcheck::check("rng-bounds", 0x11, 50, |rng| {
+        let n = 1 + rng.gen_range(1000);
+        let k = rng.gen_range(n + 1);
+        let s = Rng::seed_from_u64(rng.next_u64()).sample_distinct(n, k);
+        assert_eq!(s.len(), k);
+        assert!(s.iter().all(|&x| (x as usize) < n));
+        assert!(s.windows(2).all(|w| w[0] < w[1]));
+    });
+}
