@@ -1,8 +1,12 @@
 //! Device-path bench: measured artifact execution times for the two
-//! aggregation lowerings (XLA scatter vs Pallas CSR) and the fused dense
-//! kernel, through the full Rust runtime (executor pool, padding, crop).
-//! These are the numbers the event sim schedules (DESIGN.md §4) and the
-//! §Perf baseline for L1/L3 optimization.
+//! aggregation lowerings (scatter vs Pallas-structured CSR) and the fused
+//! dense kernel, through the full Rust runtime (executor pool, padding,
+//! crop). These are the numbers the event sim schedules (DESIGN.md §4)
+//! and the §Perf baseline for L1/L3 optimization.
+//!
+//! The final section measures the batched asynchronous dispatch the
+//! engines use (submit all jobs, then wait) against the serial
+//! one-`run`-at-a-time loop it replaced.
 
 use std::time::Instant;
 
@@ -27,20 +31,23 @@ fn main() -> anyhow::Result<()> {
     let mut rng = Rng::seed_from_u64(3);
     for (v, e) in [(1024usize, 8192usize), (8192, 409_600)] {
         let g = generate::rmat(v, e, generate::RMAT_SKEWED, 5).gcn_normalized();
-        let plan = ChunkPlan::build(&g, v, v, 1 << 20.min(e.next_power_of_two().trailing_zeros() as usize));
         let x = Matrix::from_fn(v, 32, |_, _| rng.gen_f32_range(-1.0, 1.0));
         for pallas in [false, true] {
             let ops = Ops::new(&store, &pool, pallas);
-            let art = match ops.agg_artifact(plan.c_bucket, plan.e_bucket, v) {
+            // pick the artifact first so the plan uses its exact buckets
+            let art = match ops.agg_artifact(v, e.max(4096), v) {
                 Ok(a) => a.name.clone(),
-                Err(e) => {
-                    println!("agg v={v}: {e}");
+                Err(err) => {
+                    println!("agg v={v}: {err}");
                     continue;
                 }
             };
             let art = store.get(&art).unwrap();
-            // warmup (compile)
+            let c_bucket = art.inputs[0].shape[0] - 1;
+            let e_bucket = art.inputs[1].shape[0];
+            let plan = ChunkPlan::build(&g, c_bucket.min(v), c_bucket, e_bucket);
             let pass = &plan.chunks[0].passes[0];
+            // warmup
             let _ = ops.agg_pass(art, pass, plan.chunks[0].num_rows(), &x)?;
             let samples: Vec<f64> = (0..10)
                 .map(|_| ops.agg_pass(art, pass, plan.chunks[0].num_rows(), &x).map(|r| r.1))
@@ -50,7 +57,7 @@ fn main() -> anyhow::Result<()> {
             println!(
                 "agg[{}] v={v} e_bucket={} live={live}: {:.3} ms  ({:.1} Medges/s)",
                 if pallas { "pallas" } else { "scatter" },
-                plan.e_bucket,
+                e_bucket,
                 med * 1e3,
                 live / med / 1e6
             );
@@ -82,6 +89,54 @@ fn main() -> anyhow::Result<()> {
             median(wall.clone()) * 1e3,
             flops / median(dev.clone()) / 1e9,
             (median(wall) / median(dev) - 1.0) * 100.0
+        );
+    }
+
+    // batched asynchronous dispatch vs serial run-per-job (the engines'
+    // hot-path protocol): N independent dense jobs, wall-clock only
+    println!("\n# dispatch: serial run loop vs submit-all-then-wait");
+    for threads in [1usize, 2, 4] {
+        let apool = ExecutorPool::new(&store, threads)?;
+        let aops = Ops::new(&store, &apool, false);
+        let layer = DenseLayer::glorot(128, 128, &mut rng);
+        let xs: Vec<Matrix> = (0..8)
+            .map(|_| Matrix::from_fn(1024, 128, |_, _| rng.gen_f32_range(-1.0, 1.0)))
+            .collect();
+        // warmup
+        for x in &xs {
+            let _ = aops.dense_fwd(x, &layer.w, &layer.b, true)?;
+        }
+        let serial = median(
+            (0..5)
+                .map(|_| {
+                    let t0 = Instant::now();
+                    for x in &xs {
+                        let _ = aops.dense_fwd(x, &layer.w, &layer.b, true)?;
+                    }
+                    Ok(t0.elapsed().as_secs_f64())
+                })
+                .collect::<anyhow::Result<Vec<f64>>>()?,
+        );
+        let batched = median(
+            (0..5)
+                .map(|_| {
+                    let t0 = Instant::now();
+                    let pending: Vec<_> = xs
+                        .iter()
+                        .map(|x| aops.submit_dense_fwd(x, &layer.w, &layer.b, true))
+                        .collect::<anyhow::Result<_>>()?;
+                    for p in pending {
+                        let _ = p.wait()?;
+                    }
+                    Ok(t0.elapsed().as_secs_f64())
+                })
+                .collect::<anyhow::Result<Vec<f64>>>()?,
+        );
+        println!(
+            "threads={threads}: serial {:.3} ms, batched {:.3} ms ({:.2}x)",
+            serial * 1e3,
+            batched * 1e3,
+            serial / batched.max(1e-12)
         );
     }
     println!("total artifact executions: {}", pool.executed());

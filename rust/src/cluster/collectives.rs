@@ -138,7 +138,9 @@ pub fn allreduce_sum(
 }
 
 /// All-gather of per-worker row blocks into the full matrix everywhere
-/// (used for sharing precomputed attention scores, paper §4.1.1).
+/// (used for sharing precomputed attention scores, paper §4.1.1). Block
+/// `i` lands at the global rows `row_parts[i]` describes, so callers may
+/// pass any (disjoint, covering) row partition.
 pub fn allgather_rows(
     sim: &mut EventSim,
     net: &NetModel,
@@ -147,11 +149,20 @@ pub fn allgather_rows(
     ready: &[f64],
 ) -> (Matrix, DoneTimes) {
     let n = inputs.len();
-    let full = Matrix::concat_rows(inputs);
+    debug_assert_eq!(row_parts.len(), n);
+    let v: usize = row_parts.iter().map(Range::len).sum();
+    let d = inputs[0].cols();
+    let mut full = Matrix::zeros(v, d);
+    let mut total_bytes = 0usize;
+    for (i, rp) in row_parts.iter().enumerate() {
+        debug_assert_eq!(inputs[i].rows(), rp.len());
+        full.write_rows(rp.start, &inputs[i]);
+        total_bytes += inputs[i].bytes();
+    }
     let mut done = vec![0.0; n];
     for w in 0..n {
         let sent = inputs[w].bytes() * (n - 1);
-        let recvd = full.bytes() - inputs[w].bytes();
+        let recvd = total_bytes - inputs[w].bytes();
         let wire = net.wire_secs(sent.max(recvd))
             + net.latency_us * 1e-6 * (n.saturating_sub(1)) as f64;
         done[w] = sim.comm(w, wire, ready[w]);
@@ -162,6 +173,11 @@ pub fn allgather_rows(
 /// SANCUS-style *sequential* broadcast: worker after worker broadcasts its
 /// full local block to everyone, each waiting for the previous broadcast —
 /// the serialization the paper blames for Sancus's poor scaling (§5.2).
+///
+/// Sender/receiver costs are asymmetric: the sender's NIC transmits its
+/// block to all `n-1` peers, while each receiver only ingests one copy.
+/// The round still ends at the slowest participant (the sender), which is
+/// what serializes the cluster.
 pub fn sequential_broadcast(
     sim: &mut EventSim,
     net: &NetModel,
@@ -172,13 +188,14 @@ pub fn sequential_broadcast(
     let full = Matrix::concat_rows(inputs);
     let mut frontier = ready.iter().copied().fold(0.0, f64::max);
     for s in 0..n {
-        let bytes = inputs[s].bytes() * (n.saturating_sub(1));
-        let dur = net.wire_secs(bytes) + net.latency_us * 1e-6 * (n - 1) as f64;
-        // every worker participates (sender transmits, others receive and
-        // wait): model as a comm event at the current frontier on all
+        let peers = n.saturating_sub(1);
+        let send_dur =
+            net.wire_secs(inputs[s].bytes() * peers) + net.latency_us * 1e-6 * peers as f64;
+        let recv_dur = net.msg_secs(inputs[s].bytes());
         let mut next = frontier;
         for w in 0..n {
-            let d = sim.comm(w, if w == s { dur } else { dur }, frontier);
+            let dur = if w == s { send_dur } else { recv_dur };
+            let d = sim.comm(w, dur, frontier);
             next = next.max(d);
         }
         frontier = next;
@@ -235,6 +252,59 @@ mod tests {
         for (i, b) in back.iter().enumerate() {
             assert_eq!(*b, inputs[i]);
         }
+    }
+
+    /// Non-divisible shapes: V and D not multiples of N exercise the
+    /// `row_slices`/`dim_slices` remainder paths (first slices one wider).
+    #[test]
+    fn split_gather_roundtrip_non_divisible() {
+        for (v, d, n) in [(13usize, 10usize, 4usize), (7, 5, 3), (17, 9, 8), (5, 4, 5)] {
+            let full = Matrix::from_fn(v, d, |r, c| (r * 100 + c) as f32);
+            let rp = row_slices(v, n);
+            let dp = dim_slices(d, n);
+            assert_eq!(rp.iter().map(|r| r.len()).sum::<usize>(), v);
+            assert_eq!(dp.iter().map(|r| r.len()).sum::<usize>(), d);
+            let inputs: Vec<Matrix> = rp.iter().map(|r| full.slice_rows(r.clone())).collect();
+            let mut sim = EventSim::new(n);
+            let ready = vec![0.0; n];
+            let (sliced, t1) = split(&mut sim, &net(), &inputs, &rp, &dp, &ready);
+            for (j, s) in sliced.iter().enumerate() {
+                assert_eq!(*s, full.slice_cols(dp[j].clone()), "v={v} d={d} n={n} slice {j}");
+            }
+            let (back, _) = gather(&mut sim, &net(), &sliced, &rp, &dp, &t1);
+            for (i, b) in back.iter().enumerate() {
+                assert_eq!(*b, inputs[i], "v={v} d={d} n={n} worker {i}");
+            }
+        }
+    }
+
+    /// Remainder slices differ by at most one row/column, so the all-to-all
+    /// volume stays balanced to within one slice row.
+    #[test]
+    fn non_divisible_comm_nearly_balanced() {
+        let (v, d, n) = (1021usize, 61usize, 4usize); // both indivisible by 4
+        let full = Matrix::from_fn(v, d, |r, c| (r + c) as f32);
+        let rp = row_slices(v, n);
+        let dp = dim_slices(d, n);
+        let inputs: Vec<Matrix> = rp.iter().map(|r| full.slice_rows(r.clone())).collect();
+        let mut sim = EventSim::new(n);
+        let _ = split(&mut sim, &net(), &inputs, &rp, &dp, &vec![0.0; n]);
+        let comm = sim.comm_totals();
+        let max = comm.iter().copied().fold(0.0, f64::max);
+        let min = comm.iter().copied().fold(f64::MAX, f64::min);
+        assert!(max / min < 1.05, "remainder imbalance {max}/{min}");
+    }
+
+    #[test]
+    fn allgather_places_blocks_by_row_parts() {
+        let (v, d, n) = (11usize, 3usize, 3usize);
+        let full = Matrix::from_fn(v, d, |r, c| (10 * r + c) as f32);
+        let rp = row_slices(v, n);
+        let blocks: Vec<Matrix> = rp.iter().map(|r| full.slice_rows(r.clone())).collect();
+        let mut sim = EventSim::new(n);
+        let (got, done) = allgather_rows(&mut sim, &net(), &blocks, &rp, &vec![0.0; n]);
+        assert_eq!(got, full);
+        assert!(done.iter().all(|&t| t > 0.0));
     }
 
     #[test]

@@ -179,7 +179,7 @@ impl PassBuilder {
             self.sealed_rows += 1;
         }
         self.col.extend(cols.iter().map(|&c| c as i32));
-        self.edge_dst.extend(std::iter::repeat_n(local_row as i32, cols.len()));
+        self.edge_dst.extend(std::iter::repeat(local_row as i32).take(cols.len()));
         self.w.extend_from_slice(ws);
         self.edges += cols.len();
     }

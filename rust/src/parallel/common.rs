@@ -1,6 +1,13 @@
 //! Shared engine machinery: per-worker NN chains with sim attribution,
 //! full-width chunked aggregation with per-slice time attribution, loss
 //! evaluation over row partitions, and the gradient allreduce + Adam step.
+//!
+//! Every helper follows the executor's batched asynchronous protocol
+//! (`runtime::executor` design note): all independent jobs of a phase are
+//! submitted before any ticket is waited on, and tickets are drained in
+//! submission order so reductions stay deterministic.
+
+use std::sync::Arc;
 
 use crate::cluster::collectives;
 use crate::cluster::EventSim;
@@ -9,7 +16,7 @@ use crate::graph::chunk::ChunkPlan;
 use crate::graph::{Csr, Dataset};
 use crate::metrics::EpochReport;
 use crate::model::params::{DenseLayer, GnnParams};
-use crate::runtime::ops::Ops;
+use crate::runtime::ops::{Ops, Pending};
 use crate::tensor::{pad_tile, Matrix};
 
 /// Activations cached by one worker's forward NN chain.
@@ -24,46 +31,219 @@ pub fn modeled(cfg: &RunConfig, measured: f64) -> f64 {
     measured / cfg.net.gpu_speedup.max(1e-9)
 }
 
+/// Forward dense chains over every worker's rows at once: layer by layer,
+/// all workers' jobs are submitted before any is waited on. Returns the
+/// per-worker caches and device seconds.
+pub fn nn_chain_fwd_batch(
+    ops: &Ops,
+    layers: &[DenseLayer],
+    xs: &[Matrix],
+) -> crate::Result<(Vec<ChainCache>, Vec<f64>)> {
+    let n = xs.len();
+    let mut hs: Vec<Matrix> = xs.to_vec();
+    let mut acts: Vec<Vec<(Matrix, Matrix)>> = (0..n).map(|_| Vec::new()).collect();
+    let mut secs = vec![0.0f64; n];
+    for (i, l) in layers.iter().enumerate() {
+        let relu = i + 1 != layers.len();
+        let pending: Vec<Pending<(Matrix, Matrix)>> = hs
+            .iter()
+            .map(|h| ops.submit_dense_fwd(h, &l.w, &l.b, relu))
+            .collect::<crate::Result<_>>()?;
+        for (w, p) in pending.into_iter().enumerate() {
+            let ((out, pre), s) = p.wait()?;
+            let xin = std::mem::replace(&mut hs[w], out);
+            acts[w].push((xin, pre));
+            secs[w] += s;
+        }
+    }
+    let caches = acts
+        .into_iter()
+        .zip(hs)
+        .map(|(acts, out)| ChainCache { acts, out })
+        .collect();
+    Ok((caches, secs))
+}
+
 /// Forward dense chain over one worker's rows (ReLU except the head).
 pub fn nn_chain_fwd(
     ops: &Ops,
     layers: &[DenseLayer],
     x: &Matrix,
 ) -> crate::Result<(ChainCache, f64)> {
-    let mut h = x.clone();
-    let mut acts = Vec::with_capacity(layers.len());
-    let mut secs = 0.0;
-    for (i, l) in layers.iter().enumerate() {
+    let (mut caches, secs) = nn_chain_fwd_batch(ops, layers, std::slice::from_ref(x))?;
+    Ok((caches.remove(0), secs[0]))
+}
+
+/// Backward dense chains over every worker at once (same submit-all
+/// protocol as the forward). Returns per-worker `(grad_w, grad_b)` lists
+/// (layer order), the gradients w.r.t. each chain input, and device secs.
+#[allow(clippy::type_complexity)]
+pub fn nn_chain_bwd_batch(
+    ops: &Ops,
+    layers: &[DenseLayer],
+    caches: &[ChainCache],
+    grad_outs: &[Matrix],
+) -> crate::Result<(Vec<Vec<(Matrix, Vec<f32>)>>, Vec<Matrix>, Vec<f64>)> {
+    let n = grad_outs.len();
+    let mut gs: Vec<Matrix> = grad_outs.to_vec();
+    let mut grads_rev: Vec<Vec<(Matrix, Vec<f32>)>> = (0..n).map(|_| Vec::new()).collect();
+    let mut secs = vec![0.0f64; n];
+    for i in (0..layers.len()).rev() {
         let relu = i + 1 != layers.len();
-        let (out, pre, s) = ops.dense_fwd(&h, &l.w, &l.b, relu)?;
-        acts.push((h, pre));
-        h = out;
-        secs += s;
+        let pending: Vec<Pending<(Matrix, Matrix, Vec<f32>)>> = (0..n)
+            .map(|w| {
+                let (xin, pre) = &caches[w].acts[i];
+                ops.submit_dense_bwd(&gs[w], xin, &layers[i].w, pre, relu)
+            })
+            .collect::<crate::Result<_>>()?;
+        for (w, p) in pending.into_iter().enumerate() {
+            let ((gx, gw, gb), s) = p.wait()?;
+            grads_rev[w].push((gw, gb));
+            gs[w] = gx;
+            secs[w] += s;
+        }
     }
-    Ok((ChainCache { acts, out: h }, secs))
+    for g in &mut grads_rev {
+        g.reverse();
+    }
+    Ok((grads_rev, gs, secs))
 }
 
 /// Backward dense chain; returns per-layer `(grad_w, grad_b)` plus the
 /// gradient w.r.t. the chain input, and device seconds.
+#[allow(clippy::type_complexity)]
 pub fn nn_chain_bwd(
     ops: &Ops,
     layers: &[DenseLayer],
     cache: &ChainCache,
     grad_out: &Matrix,
 ) -> crate::Result<(Vec<(Matrix, Vec<f32>)>, Matrix, f64)> {
-    let mut g = grad_out.clone();
-    let mut grads_rev = Vec::with_capacity(layers.len());
-    let mut secs = 0.0;
-    for i in (0..layers.len()).rev() {
-        let relu = i + 1 != layers.len();
-        let (xin, pre) = &cache.acts[i];
-        let (gx, gw, gb, s) = ops.dense_bwd(&g, xin, &layers[i].w, pre, relu)?;
-        grads_rev.push((gw, gb));
-        g = gx;
-        secs += s;
+    let (mut grads, mut gxs, secs) = nn_chain_bwd_batch(
+        ops,
+        layers,
+        std::slice::from_ref(cache),
+        std::slice::from_ref(grad_out),
+    )?;
+    Ok((grads.remove(0), gxs.remove(0), secs[0]))
+}
+
+/// Every in-flight aggregation pass of a plan (or of a single chunk):
+/// submitted jobs plus where their partials land.
+#[derive(Default)]
+pub struct PlanAgg {
+    /// (output dst rows, tile column offset, pending partial)
+    jobs: Vec<(std::ops::Range<usize>, usize, Pending<Matrix>)>,
+}
+
+impl PlanAgg {
+    pub fn new() -> Self {
+        Self::default()
     }
-    grads_rev.reverse();
-    Ok((grads_rev, g, secs))
+
+    /// Record a submitted pass whose partial lands at `rows` x
+    /// `[t0, t0 + tile)` of the output.
+    pub fn push(&mut self, rows: std::ops::Range<usize>, t0: usize, pending: Pending<Matrix>) {
+        self.jobs.push((rows, t0, pending));
+    }
+
+    /// Wait on every pass in submission order, accumulating the partials
+    /// into `out` (padded width). Returns total device seconds.
+    pub fn wait_into(self, out: &mut Matrix) -> crate::Result<f64> {
+        let mut secs = 0.0;
+        for (rows, t0, p) in self.jobs {
+            let (part, s) = p.wait()?;
+            secs += s;
+            let tile = part.cols();
+            for (i, gv) in rows.enumerate() {
+                let dst = &mut out.row_mut(gv)[t0..t0 + tile];
+                for (d, v) in dst.iter_mut().zip(part.row(i)) {
+                    *d += v;
+                }
+            }
+        }
+        Ok(secs)
+    }
+}
+
+/// Slice `hp` (padded width) into per-tile `Arc` buffers shared by every
+/// pass job over that tile.
+pub fn tile_buffers(ops: &Ops, hp: &Matrix) -> Vec<Arc<Vec<f32>>> {
+    let tile = ops.store.dim_tile;
+    let wp = hp.cols();
+    debug_assert_eq!(wp % tile, 0);
+    (0..wp)
+        .step_by(tile)
+        .map(|t0| Arc::new(hp.slice_cols(t0..t0 + tile).into_vec()))
+        .collect()
+}
+
+/// Submit every pass of chunk `chunk_idx` over pre-sliced tile buffers.
+pub fn submit_chunk_agg_tiles(
+    ops: &Ops,
+    plan: &ChunkPlan,
+    chunk_idx: usize,
+    tiles: &[Arc<Vec<f32>>],
+) -> crate::Result<PlanAgg> {
+    let tile = ops.store.dim_tile;
+    let chunk = &plan.chunks[chunk_idx];
+    let art = ops.agg_artifact(
+        plan.c_bucket.min(chunk.num_rows().max(1)),
+        plan.e_bucket,
+        plan.num_vertices,
+    )?;
+    let mut jobs = Vec::with_capacity(tiles.len() * chunk.passes.len());
+    for (t, x_tile) in tiles.iter().enumerate() {
+        for pass in &chunk.passes {
+            let p = ops.submit_agg_pass_shared(
+                art,
+                pass,
+                chunk.num_rows(),
+                Arc::clone(x_tile),
+                plan.num_vertices,
+            )?;
+            jobs.push((chunk.rows.clone(), t * tile, p));
+        }
+    }
+    Ok(PlanAgg { jobs })
+}
+
+/// Submit every pass of every chunk of `plan` over pre-sliced tile
+/// buffers (callers aggregating several plans — or several workers —
+/// over the same panel share one tile set instead of re-copying it).
+pub fn submit_plan_agg_tiles(
+    ops: &Ops,
+    plan: &ChunkPlan,
+    tiles: &[Arc<Vec<f32>>],
+) -> crate::Result<PlanAgg> {
+    let tile = ops.store.dim_tile;
+    let art = ops.agg_artifact(
+        plan.c_bucket.min(plan.chunks.iter().map(|c| c.num_rows()).max().unwrap_or(1)),
+        plan.e_bucket,
+        plan.num_vertices,
+    )?;
+    let mut jobs = Vec::new();
+    for (t, x_tile) in tiles.iter().enumerate() {
+        for chunk in &plan.chunks {
+            for pass in &chunk.passes {
+                let p = ops.submit_agg_pass_shared(
+                    art,
+                    pass,
+                    chunk.num_rows(),
+                    Arc::clone(x_tile),
+                    plan.num_vertices,
+                )?;
+                jobs.push((chunk.rows.clone(), t * tile, p));
+            }
+        }
+    }
+    Ok(PlanAgg { jobs })
+}
+
+/// Submit every pass of every chunk of `plan` over `hp` (padded width)
+/// without waiting on any of them.
+pub fn submit_plan_agg(ops: &Ops, plan: &ChunkPlan, hp: &Matrix) -> crate::Result<PlanAgg> {
+    let tiles = tile_buffers(ops, hp);
+    submit_plan_agg_tiles(ops, plan, &tiles)
 }
 
 /// Full-width aggregation of `h` (all columns) over a chunk plan, looping
@@ -77,71 +257,11 @@ pub fn aggregate_full(
 ) -> crate::Result<(Matrix, f64)> {
     let (v, width) = h.shape();
     debug_assert_eq!(v, plan.num_vertices);
-    let tile = ops.store.dim_tile;
     let wp = pad_tile(width);
     let hp = h.padded(v, wp);
-    let art = ops.agg_artifact(
-        plan.c_bucket.min(plan.chunks.iter().map(|c| c.num_rows()).max().unwrap_or(1)),
-        plan.e_bucket,
-        v,
-    )?;
     let mut out = Matrix::zeros(v, wp);
-    let mut secs = 0.0;
-    for t0 in (0..wp).step_by(tile) {
-        let x_tile = hp.slice_cols(t0..t0 + tile);
-        for chunk in &plan.chunks {
-            let mut acc = Matrix::zeros(chunk.num_rows(), tile);
-            for pass in &chunk.passes {
-                let (part, s) = ops.agg_pass(art, pass, chunk.num_rows(), &x_tile)?;
-                acc.add_assign(&part);
-                secs += s;
-            }
-            // write rows into the output tile columns
-            for (i, gv) in chunk.rows.clone().enumerate() {
-                out.row_mut(gv)[t0..t0 + tile].copy_from_slice(acc.row(i));
-            }
-        }
-    }
+    let secs = submit_plan_agg(ops, plan, &hp)?.wait_into(&mut out)?;
     Ok((out.cropped(v, width), secs))
-}
-
-/// Aggregation seconds for one chunk only (pipelined scheduling needs the
-/// per-chunk granularity). Same contract as `aggregate_full` but for a
-/// single chunk index; **accumulates** into `out` (callers zero it per
-/// round; R-GCN sums several relation plans into the same output).
-pub fn aggregate_chunk(
-    ops: &Ops,
-    plan: &ChunkPlan,
-    chunk_idx: usize,
-    hp: &Matrix,
-    out: &mut Matrix,
-) -> crate::Result<f64> {
-    let tile = ops.store.dim_tile;
-    let wp = hp.cols();
-    debug_assert_eq!(wp % tile, 0);
-    let chunk = &plan.chunks[chunk_idx];
-    let art = ops.agg_artifact(
-        plan.c_bucket.min(chunk.num_rows().max(1)),
-        plan.e_bucket,
-        plan.num_vertices,
-    )?;
-    let mut secs = 0.0;
-    for t0 in (0..wp).step_by(tile) {
-        let x_tile = hp.slice_cols(t0..t0 + tile);
-        let mut acc = Matrix::zeros(chunk.num_rows(), tile);
-        for pass in &chunk.passes {
-            let (part, s) = ops.agg_pass(art, pass, chunk.num_rows(), &x_tile)?;
-            acc.add_assign(&part);
-            secs += s;
-        }
-        for (i, gv) in chunk.rows.clone().enumerate() {
-            let dst = &mut out.row_mut(gv)[t0..t0 + tile];
-            for (d, s) in dst.iter_mut().zip(acc.row(i)) {
-                *d += s;
-            }
-        }
-    }
-    Ok(secs)
 }
 
 /// Host-side reference aggregation (used where measured device time is
@@ -150,8 +270,10 @@ pub fn aggregate_host(g: &Csr, h: &Matrix) -> Matrix {
     g.spmm_ref(h)
 }
 
-/// Node-classification loss over per-worker row partitions. Returns
+/// Node-classification loss over per-worker row partitions — all
+/// partitions' jobs in flight before the first wait. Returns
 /// `(global_loss, grad_full[V, kp], train_correct, per_worker_secs)`.
+#[allow(clippy::type_complexity)]
 pub fn nc_loss(
     ops: &Ops,
     data: &Dataset,
@@ -161,16 +283,23 @@ pub fn nc_loss(
     let kp = logits.cols();
     let cmask = data.class_mask();
     let n_total: f32 = data.train_mask.iter().sum();
+    let pending: Vec<(std::ops::Range<usize>, f32, Pending<(f32, Matrix, f32)>)> = row_parts
+        .iter()
+        .map(|part| {
+            let lg = logits.slice_rows(part.clone());
+            let labels = &data.labels[part.clone()];
+            let smask = &data.train_mask[part.clone()];
+            let n_local: f32 = smask.iter().sum();
+            let p = ops.submit_softmax_xent(&lg, labels, smask, &cmask)?;
+            Ok((part.clone(), n_local, p))
+        })
+        .collect::<crate::Result<_>>()?;
     let mut grad = Matrix::zeros(logits.rows(), kp);
     let mut loss = 0.0f32;
     let mut correct = 0.0f32;
     let mut secs = Vec::with_capacity(row_parts.len());
-    for part in row_parts {
-        let lg = logits.slice_rows(part.clone());
-        let labels = &data.labels[part.clone()];
-        let smask = &data.train_mask[part.clone()];
-        let n_local: f32 = smask.iter().sum();
-        let (l, mut g, c, s) = ops.softmax_xent(&lg, labels, smask, &cmask)?;
+    for (part, n_local, p) in pending {
+        let ((l, mut g, c), s) = p.wait()?;
         // artifact normalizes by local count; rescale to the global mean
         if n_local > 0.0 && n_total > 0.0 {
             let scale = n_local / n_total;
@@ -323,6 +452,31 @@ mod tests {
         let want_gw = xt.matmul(&gout);
         assert!(grads[0].0.max_abs_diff(&want_gw) < 1e-2);
         assert_eq!(gx.shape(), (200, 32));
+    }
+
+    #[test]
+    fn batch_chain_matches_per_worker_chain() {
+        // submit-all-then-wait must be numerically identical to one-by-one
+        let (store, _) = setup();
+        let pool = ExecutorPool::new(&store, 2).unwrap();
+        let ops = Ops::new(&store, &pool, false);
+        let mut rng = crate::util::Rng::seed_from_u64(7);
+        let layers = vec![
+            DenseLayer::glorot(64, 32, &mut rng),
+            DenseLayer::glorot(32, 32, &mut rng),
+        ];
+        let xs: Vec<Matrix> = (0..4)
+            .map(|w| Matrix::from_fn(256, 64, |r, c| ((r * 3 + c + w) % 17) as f32 * 0.05))
+            .collect();
+        let (batch, _) = nn_chain_fwd_batch(&ops, &layers, &xs).unwrap();
+        for (w, x) in xs.iter().enumerate() {
+            let (single, _) = nn_chain_fwd(&ops, &layers, x).unwrap();
+            assert_eq!(
+                batch[w].out.max_abs_diff(&single.out),
+                0.0,
+                "worker {w} batch/serial divergence"
+            );
+        }
     }
 
     #[test]

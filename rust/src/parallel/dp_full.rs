@@ -14,7 +14,7 @@
 //! partition + all layer panels resident — on the big profiles that
 //! overflows the simulated T4 budget exactly like the OOM rows of Table 2.
 
-use crate::cluster::{collectives, EventSim};
+use crate::cluster::EventSim;
 use crate::graph::partition::{chunk_partition, Partition};
 use crate::metrics::EpochReport;
 use crate::model::layer_dims;
@@ -146,15 +146,17 @@ impl DpEngine {
                 report.collective_rounds += 1;
                 sim.barrier();
             }
-            // --- aggregation over each worker's dst rows ---
+            // --- aggregation over each worker's dst rows: every worker's
+            // passes submitted before any wait, sharing one tile set ---
+            let hp = h.padded(v, crate::tensor::pad_tile(h.cols()));
+            let tiles = common::tile_buffers(&ops, &hp);
+            let pending: Vec<common::PlanAgg> = (0..n)
+                .map(|w| common::submit_plan_agg_tiles(&ops, &self.plans[w], &tiles))
+                .collect::<crate::Result<_>>()?;
             let mut agg = Matrix::zeros(v, h.cols());
-            for w in 0..n {
-                let hp = h.padded(v, crate::tensor::pad_tile(h.cols()));
+            for (w, pend) in pending.into_iter().enumerate() {
                 let mut out = Matrix::zeros(v, hp.cols());
-                let mut secs = 0.0;
-                for ci in 0..self.plans[w].num_chunks() {
-                    secs += common::aggregate_chunk(&ops, &self.plans[w], ci, &hp, &mut out)?;
-                }
+                let secs = pend.wait_into(&mut out)?;
                 let m = common::modeled(cfg, secs);
                 let now = sim.now(w);
                 sim.compute(w, m, now);
@@ -176,12 +178,19 @@ impl DpEngine {
                     self.plans[w].chunks.iter().map(|c| c.live_edges).sum::<usize>() as f64;
             }
             sim.barrier();
-            // --- dense update on local rows ---
+            // --- dense update on local rows (submit-all, wait-in-order) ---
             let relu = li + 1 != self.params.layers().len();
+            let pending: Vec<(Matrix, _)> = row_parts
+                .iter()
+                .map(|part| {
+                    let xin = agg.slice_rows(part.clone());
+                    let p = ops.submit_dense_fwd(&xin, &layer.w, &layer.b, relu)?;
+                    Ok((xin, p))
+                })
+                .collect::<crate::Result<_>>()?;
             let mut rows_out = Vec::with_capacity(n);
-            for (w, part) in row_parts.iter().enumerate() {
-                let xin = agg.slice_rows(part.clone());
-                let (out, pre, secs) = ops.dense_fwd(&xin, &layer.w, &layer.b, relu)?;
+            for (w, (xin, p)) in pending.into_iter().enumerate() {
+                let ((out, pre), secs) = p.wait()?;
                 let now = sim.now(w);
                 sim.compute(w, common::modeled(cfg, secs), now);
                 caches[w].push((xin, pre));
@@ -204,11 +213,18 @@ impl DpEngine {
         for li in (0..self.params.layers().len()).rev() {
             let layer = &self.params.layers()[li];
             let relu = li + 1 != self.params.layers().len();
+            let pending: Vec<_> = row_parts
+                .iter()
+                .enumerate()
+                .map(|(w, part)| {
+                    let gl = g.slice_rows(part.clone());
+                    let (xin, pre) = &caches[w][li];
+                    ops.submit_dense_bwd(&gl, xin, &layer.w, pre, relu)
+                })
+                .collect::<crate::Result<_>>()?;
             let mut g_rows = Vec::with_capacity(n);
-            for (w, part) in row_parts.iter().enumerate() {
-                let gl = g.slice_rows(part.clone());
-                let (xin, pre) = &caches[w][li];
-                let (gx, gw, gb, secs) = ops.dense_bwd(&gl, xin, &layer.w, pre, relu)?;
+            for (w, p) in pending.into_iter().enumerate() {
+                let ((gx, gw, gb), secs) = p.wait()?;
                 let now = sim.now(w);
                 sim.compute(w, common::modeled(cfg, secs), now);
                 per_worker_grads[w].push((gw, gb));
@@ -229,14 +245,15 @@ impl DpEngine {
                 report.collective_rounds += 1;
                 sim.barrier();
             }
+            let gp = gfull.padded(v, crate::tensor::pad_tile(gfull.cols()));
+            let tiles = common::tile_buffers(&ops, &gp);
+            let pending: Vec<common::PlanAgg> = (0..n)
+                .map(|w| common::submit_plan_agg_tiles(&ops, &self.bwd_plans[w], &tiles))
+                .collect::<crate::Result<_>>()?;
             let mut gagg = Matrix::zeros(v, gfull.cols());
-            for w in 0..n {
-                let gp = gfull.padded(v, crate::tensor::pad_tile(gfull.cols()));
+            for (w, pend) in pending.into_iter().enumerate() {
                 let mut out = Matrix::zeros(v, gp.cols());
-                let mut secs = 0.0;
-                for ci in 0..self.bwd_plans[w].num_chunks() {
-                    secs += common::aggregate_chunk(&ops, &self.bwd_plans[w], ci, &gp, &mut out)?;
-                }
+                let secs = pend.wait_into(&mut out)?;
                 let now = sim.now(w);
                 sim.compute(w, common::modeled(cfg, secs), now);
                 let range = w * rows_per..(w + 1) * rows_per;

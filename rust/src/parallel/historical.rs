@@ -134,15 +134,17 @@ impl HistoricalEngine {
             };
             sim.barrier();
 
-            // --- aggregation over each worker's member rows ---
-            let mut agg = Matrix::zeros(v, input.cols());
+            // --- aggregation over each worker's member rows: every
+            // worker's passes submitted before any wait, one tile set ---
             let inp = input.padded(v, crate::tensor::pad_tile(input.cols()));
-            for w in 0..n {
+            let tiles = common::tile_buffers(&ops, &inp);
+            let pending: Vec<common::PlanAgg> = (0..n)
+                .map(|w| common::submit_plan_agg_tiles(&ops, &self.plans[w], &tiles))
+                .collect::<crate::Result<_>>()?;
+            let mut agg = Matrix::zeros(v, input.cols());
+            for (w, pend) in pending.into_iter().enumerate() {
                 let mut out = Matrix::zeros(v, inp.cols());
-                let mut secs = 0.0;
-                for ci in 0..self.plans[w].num_chunks() {
-                    secs += common::aggregate_chunk(&ops, &self.plans[w], ci, &inp, &mut out)?;
-                }
+                let secs = pend.wait_into(&mut out)?;
                 let now = sim.now(w);
                 sim.compute(w, common::modeled(cfg, secs), now);
                 for m in self.partition.members(w) {
@@ -154,12 +156,20 @@ impl HistoricalEngine {
             }
             sim.barrier();
 
-            // --- dense update on contiguous row shares (balanced) ---
+            // --- dense update on contiguous row shares (balanced,
+            // submit-all then wait-in-order) ---
             let relu = li + 1 != self.params.layers().len();
+            let pending: Vec<(Matrix, _)> = row_parts
+                .iter()
+                .map(|part| {
+                    let xin = agg.slice_rows(part.clone());
+                    let p = ops.submit_dense_fwd(&xin, &layer.w, &layer.b, relu)?;
+                    Ok((xin, p))
+                })
+                .collect::<crate::Result<_>>()?;
             let mut rows_out = Vec::with_capacity(n);
-            for (w, part) in row_parts.iter().enumerate() {
-                let xin = agg.slice_rows(part.clone());
-                let (out, pre, secs) = ops.dense_fwd(&xin, &layer.w, &layer.b, relu)?;
+            for (w, (xin, p)) in pending.into_iter().enumerate() {
+                let ((out, pre), secs) = p.wait()?;
                 let now = sim.now(w);
                 sim.compute(w, common::modeled(cfg, secs), now);
                 caches[w].push((xin, pre));
@@ -183,11 +193,18 @@ impl HistoricalEngine {
         for li in (0..self.params.layers().len()).rev() {
             let layer = &self.params.layers()[li];
             let relu = li + 1 != self.params.layers().len();
+            let pending: Vec<_> = row_parts
+                .iter()
+                .enumerate()
+                .map(|(w, part)| {
+                    let gl = g.slice_rows(part.clone());
+                    let (xin, pre) = &caches[w][li];
+                    ops.submit_dense_bwd(&gl, xin, &layer.w, pre, relu)
+                })
+                .collect::<crate::Result<_>>()?;
             let mut g_rows = Vec::with_capacity(n);
-            for (w, part) in row_parts.iter().enumerate() {
-                let gl = g.slice_rows(part.clone());
-                let (xin, pre) = &caches[w][li];
-                let (gx, gw, gb, secs) = ops.dense_bwd(&gl, xin, &layer.w, pre, relu)?;
+            for (w, p) in pending.into_iter().enumerate() {
+                let ((gx, gw, gb), secs) = p.wait()?;
                 let now = sim.now(w);
                 sim.compute(w, common::modeled(cfg, secs), now);
                 per_worker_grads[w].push((gw, gb));
@@ -207,13 +224,14 @@ impl HistoricalEngine {
                 report.collective_rounds += n;
             }
             let gp = gfull.padded(v, crate::tensor::pad_tile(gfull.cols()));
+            let tiles = common::tile_buffers(&ops, &gp);
+            let pending: Vec<common::PlanAgg> = (0..n)
+                .map(|w| common::submit_plan_agg_tiles(&ops, &self.bwd_plans[w], &tiles))
+                .collect::<crate::Result<_>>()?;
             let mut gagg = Matrix::zeros(v, gfull.cols());
-            for w in 0..n {
+            for (w, pend) in pending.into_iter().enumerate() {
                 let mut out = Matrix::zeros(v, gp.cols());
-                let mut secs = 0.0;
-                for ci in 0..self.bwd_plans[w].num_chunks() {
-                    secs += common::aggregate_chunk(&ops, &self.bwd_plans[w], ci, &gp, &mut out)?;
-                }
+                let secs = pend.wait_into(&mut out)?;
                 let now = sim.now(w);
                 sim.compute(w, common::modeled(cfg, secs), now);
                 for m in self.partition.members(w) {

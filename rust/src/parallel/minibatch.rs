@@ -7,12 +7,19 @@
 //! host, neighbour explosion with depth (Fig 13), the advantage on tiny
 //! train fractions (OPR/LSC, Table 2/3), and partition-induced comp/comm
 //! imbalance (Fig 10).
+//!
+//! Each training step is phase-aligned across workers so every artifact
+//! phase (block aggregation, dense update, loss, backward) submits all
+//! workers' jobs before waiting on any — the executor module's batched
+//! asynchronous protocol. Per-worker numerics are untouched: workers'
+//! batches are independent, and waits drain in worker order.
 
 use crate::cluster::EventSim;
 use crate::graph::partition::{greedy_min_cut, Partition};
 use crate::metrics::EpochReport;
 use crate::model::layer_dims;
 use crate::model::params::{Adam, GnnParams};
+use crate::runtime::ops::Pending;
 use crate::tensor::Matrix;
 use crate::util::Rng;
 
@@ -39,6 +46,37 @@ struct SampledBlock {
     num_dst: usize,
     /// global ids of the src frontier (dsts are a prefix: self loops)
     srcs: Vec<u32>,
+}
+
+/// One worker's in-flight batch state across the step's phases.
+struct WorkerBatch {
+    w: usize,
+    seeds: Vec<u32>,
+    blocks: Vec<SampledBlock>,
+    /// current activations (input frontier rows, then layer outputs)
+    h: Matrix,
+    /// per layer: (aggregated input, pre_activation)
+    caches: Vec<(Matrix, Matrix)>,
+    /// current backward gradient
+    g: Matrix,
+}
+
+/// All in-flight passes of one block aggregation (a `PlanAgg` whose
+/// output rows are the block's local dst indices).
+struct BlockAgg {
+    agg: common::PlanAgg,
+    num_dst: usize,
+    /// logical (uncropped-input) width
+    cols: usize,
+    wp: usize,
+}
+
+impl BlockAgg {
+    fn wait(self) -> crate::Result<(Matrix, f64)> {
+        let mut out = Matrix::zeros(self.num_dst, self.wp);
+        let secs = self.agg.wait_into(&mut out)?;
+        Ok((out.cropped(self.num_dst, self.cols), secs))
+    }
 }
 
 impl MiniBatchEngine {
@@ -124,13 +162,13 @@ impl MiniBatchEngine {
         (blocks, input_frontier)
     }
 
-    /// Run one block's aggregation through the agg artifact.
-    fn agg_block(
+    /// Submit every pass of one block's aggregation without waiting.
+    fn submit_block_agg(
         &self,
         ctx: &Ctx,
         block: &SampledBlock,
         x: &Matrix,
-    ) -> crate::Result<(Matrix, f64)> {
+    ) -> crate::Result<BlockAgg> {
         let ops = ctx.ops();
         let v = ctx.data.profile.v;
         // pad sampled subgraph into the smallest global-source artifact:
@@ -142,8 +180,7 @@ impl MiniBatchEngine {
         let art = ops.agg_artifact(min_c, block.col.len().max(1), v)?;
         let c_bucket = art.inputs[0].shape[0] - 1;
         let e_bucket = art.inputs[1].shape[0];
-        let mut out = Matrix::zeros(block.num_dst, wp);
-        let mut secs = 0.0;
+        let mut agg = common::PlanAgg::new();
         // scatter block srcs into a global panel per tile
         for t0 in (0..wp).step_by(tile) {
             let mut panel = Matrix::zeros(v, tile);
@@ -152,6 +189,7 @@ impl MiniBatchEngine {
                     .row_mut(gsrc as usize)
                     .copy_from_slice(&xp.row(i)[t0..t0 + tile]);
             }
+            let panel_data = std::sync::Arc::new(panel.into_vec());
             // edges in artifact form, sources as global ids
             for e0 in (0..block.col.len()).step_by(e_bucket) {
                 let e1 = (e0 + e_bucket).min(block.col.len());
@@ -173,14 +211,17 @@ impl MiniBatchEngine {
                     crate::graph::chunk::AggPass::new(row_ptr, col, edge_dst, w, live);
                 let (sorted_pass, order_ok) = ensure_sorted(pass);
                 debug_assert!(order_ok);
-                let (part, s) = ops.agg_pass(art, &sorted_pass, block.num_dst, &panel)?;
-                let mut acc = out.slice_cols(t0..t0 + tile);
-                acc.add_assign(&part);
-                out.write_cols(t0, &acc);
-                secs += s;
+                let p = ops.submit_agg_pass_shared(
+                    art,
+                    &sorted_pass,
+                    block.num_dst,
+                    std::sync::Arc::clone(&panel_data),
+                    v,
+                )?;
+                agg.push(0..block.num_dst, t0, p);
             }
         }
-        Ok((out.cropped(block.num_dst, x.cols()), secs))
+        Ok(BlockAgg { agg, num_dst: block.num_dst, cols: x.cols(), wp })
     }
 
     pub fn run_epoch(&mut self, ctx: &Ctx) -> crate::Result<EpochReport> {
@@ -189,6 +230,7 @@ impl MiniBatchEngine {
         let data = ctx.data;
         let ops = ctx.ops();
         let n = cfg.workers;
+        let nlayers = self.params.layers().len();
         let mut sim = EventSim::new(n);
         let mut report = EpochReport {
             workers: vec![Default::default(); n],
@@ -201,7 +243,6 @@ impl MiniBatchEngine {
         let mut loss_acc = 0.0f32;
         let mut correct_acc = 0.0f32;
         let mut seen = 0f32;
-        let mut per_worker_grads: Vec<Vec<(Matrix, Vec<f32>)>> = Vec::new();
 
         // one batch per worker per "step"; steps = ceil(max train / bs)
         let bs = cfg.batch_size.max(8);
@@ -214,6 +255,9 @@ impl MiniBatchEngine {
             .max(1);
 
         for step in 0..steps {
+            // --- phase A: sampling (host, the DistDGL bottleneck) and
+            // remote feature fetch, per worker in order ---
+            let mut batches: Vec<WorkerBatch> = Vec::with_capacity(n);
             for w in 0..n {
                 let train = &self.train_by_worker[w];
                 if train.is_empty() {
@@ -223,13 +267,11 @@ impl MiniBatchEngine {
                 let hi = (lo + bs).min(train.len());
                 let seeds = &train[lo..hi];
 
-                // --- sampling (host time, the DistDGL bottleneck) ---
                 let t0 = std::time::Instant::now();
                 let (blocks, input_frontier) = self.sample_blocks(ctx, seeds, &mut rng);
                 let sampling = t0.elapsed().as_secs_f64();
                 let now = sim.now(w);
                 sim.compute(w, sampling, now); // random access: CPU-bound
-                // --- remote feature fetch ---
                 let remote: usize = input_frontier
                     .iter()
                     .filter(|&&vtx| self.partition.assign[vtx as usize] as usize != w)
@@ -242,73 +284,127 @@ impl MiniBatchEngine {
                 report.workers[w].comm_bytes += bytes;
                 report.vd_edges += remote;
 
-                // --- forward through blocks ---
-                let mut h = data.features.gather_rows(&input_frontier);
-                let mut caches = Vec::new();
-                for (li, layer) in self.params.layers().iter().enumerate() {
-                    let block = &blocks[li];
-                    let (agg, s1) = self.agg_block(ctx, block, &h)?;
-                    let relu = li + 1 != self.params.layers().len();
-                    let (out, pre, s2) = ops.dense_fwd(&agg, &layer.w, &layer.b, relu)?;
-                    let now = sim.now(w);
-                    sim.compute(w, common::modeled(cfg, s1 + s2), now);
-                    report.workers[w].comp_edges += block.col.len() as f64;
-                    caches.push((agg, pre));
-                    h = out;
+                let h = data.features.gather_rows(&input_frontier);
+                batches.push(WorkerBatch {
+                    w,
+                    seeds: seeds.to_vec(),
+                    blocks,
+                    h,
+                    caches: Vec::new(),
+                    g: Matrix::zeros(0, 0),
+                });
+            }
+
+            // --- forward through blocks: per layer, submit every
+            // worker's aggregation, wait, then every worker's dense ---
+            for li in 0..nlayers {
+                let relu = li + 1 != nlayers;
+                let agg_pend: Vec<BlockAgg> = batches
+                    .iter()
+                    .map(|b| self.submit_block_agg(ctx, &b.blocks[li], &b.h))
+                    .collect::<crate::Result<_>>()?;
+                let mut agg_results = Vec::with_capacity(agg_pend.len());
+                for pend in agg_pend {
+                    agg_results.push(pend.wait()?);
                 }
+                let layer = &self.params.layers()[li];
+                let dense_pend: Vec<Pending<(Matrix, Matrix)>> = agg_results
+                    .iter()
+                    .map(|(agg, _)| ops.submit_dense_fwd(agg, &layer.w, &layer.b, relu))
+                    .collect::<crate::Result<_>>()?;
+                for ((b, (agg, s1)), p) in
+                    batches.iter_mut().zip(agg_results).zip(dense_pend)
+                {
+                    let ((out, pre), s2) = p.wait()?;
+                    let now = sim.now(b.w);
+                    sim.compute(b.w, common::modeled(cfg, s1 + s2), now);
+                    report.workers[b.w].comp_edges += b.blocks[li].col.len() as f64;
+                    b.caches.push((agg, pre));
+                    b.h = out;
+                }
+            }
 
-                // --- loss on the seeds ---
-                let labels: Vec<i32> =
-                    seeds.iter().map(|&s| data.labels[s as usize]).collect();
-                let smask = vec![1.0f32; seeds.len()];
-                let (l, grad, c, s) =
-                    ops.softmax_xent(&h.slice_rows(0..seeds.len()), &labels, &smask, &cmask)?;
-                let now = sim.now(w);
-                sim.compute(w, common::modeled(cfg, s), now);
-                loss_acc += l * seeds.len() as f32;
+            // --- loss on the seeds (submit-all, wait-in-order) ---
+            let loss_pend: Vec<Pending<(f32, Matrix, f32)>> = batches
+                .iter()
+                .map(|b| {
+                    let labels: Vec<i32> =
+                        b.seeds.iter().map(|&s| data.labels[s as usize]).collect();
+                    let smask = vec![1.0f32; b.seeds.len()];
+                    ops.submit_softmax_xent(
+                        &b.h.slice_rows(0..b.seeds.len()),
+                        &labels,
+                        &smask,
+                        &cmask,
+                    )
+                })
+                .collect::<crate::Result<_>>()?;
+            for (b, p) in batches.iter_mut().zip(loss_pend) {
+                let ((l, grad, c), s) = p.wait()?;
+                let now = sim.now(b.w);
+                sim.compute(b.w, common::modeled(cfg, s), now);
+                loss_acc += l * b.seeds.len() as f32;
                 correct_acc += c;
-                seen += seeds.len() as f32;
+                seen += b.seeds.len() as f32;
+                b.g = grad.padded(b.blocks.last().unwrap().num_dst, grad.cols());
+            }
 
-                // --- backward through blocks ---
-                let mut g = grad.padded(blocks.last().unwrap().num_dst, grad.cols());
-                let mut grads_rev = Vec::new();
-                for li in (0..self.params.layers().len()).rev() {
-                    let layer = &self.params.layers()[li];
-                    let relu = li + 1 != self.params.layers().len();
-                    let (agg_in, pre) = &caches[li];
-                    let (gx, gw, gb, s) = ops.dense_bwd(&g, agg_in, &layer.w, pre, relu)?;
-                    let now = sim.now(w);
-                    sim.compute(w, common::modeled(cfg, s), now);
-                    grads_rev.push((gw, gb));
-                    if li > 0 {
-                        // backprop through the block: transpose aggregation
-                        let block = &blocks[li];
-                        let t = transpose_block(block);
-                        let (gsrc, s) = self.agg_block(ctx, &t, &gx)?;
-                        let now = sim.now(w);
-                        sim.compute(w, common::modeled(cfg, s), now);
-                        g = gsrc;
+            // --- backward through blocks, phase-aligned like the forward ---
+            let mut grads_rev: Vec<Vec<(Matrix, Vec<f32>)>> =
+                (0..batches.len()).map(|_| Vec::new()).collect();
+            for li in (0..nlayers).rev() {
+                let relu = li + 1 != nlayers;
+                let layer = &self.params.layers()[li];
+                let bwd_pend: Vec<Pending<(Matrix, Matrix, Vec<f32>)>> = batches
+                    .iter()
+                    .map(|b| {
+                        let (agg_in, pre) = &b.caches[li];
+                        ops.submit_dense_bwd(&b.g, agg_in, &layer.w, pre, relu)
+                    })
+                    .collect::<crate::Result<_>>()?;
+                let mut gxs = Vec::with_capacity(batches.len());
+                for ((bi, b), p) in batches.iter().enumerate().zip(bwd_pend) {
+                    let ((gx, gw, gb), s) = p.wait()?;
+                    let now = sim.now(b.w);
+                    sim.compute(b.w, common::modeled(cfg, s), now);
+                    grads_rev[bi].push((gw, gb));
+                    gxs.push(gx);
+                }
+                if li > 0 {
+                    // backprop through the block: transpose aggregation
+                    let tblocks: Vec<SampledBlock> =
+                        batches.iter().map(|b| transpose_block(&b.blocks[li])).collect();
+                    let t_pend: Vec<BlockAgg> = tblocks
+                        .iter()
+                        .zip(&gxs)
+                        .map(|(t, gx)| self.submit_block_agg(ctx, t, gx))
+                        .collect::<crate::Result<_>>()?;
+                    for (b, pend) in batches.iter_mut().zip(t_pend) {
+                        let (gsrc, s) = pend.wait()?;
+                        let now = sim.now(b.w);
+                        sim.compute(b.w, common::modeled(cfg, s), now);
+                        b.g = gsrc;
                     }
                 }
-                grads_rev.reverse();
-                per_worker_grads.push(grads_rev);
             }
+            for g in &mut grads_rev {
+                g.reverse();
+            }
+
             sim.barrier();
             // gradient sync each step
-            if per_worker_grads.len() > 1 {
-                let grads = std::mem::take(&mut per_worker_grads);
+            if grads_rev.len() > 1 {
                 common::allreduce_and_step(
                     cfg,
                     &mut sim,
                     &mut self.params,
                     &mut self.adam,
-                    grads,
+                    grads_rev,
                     &mut report,
                 );
-            } else if let Some(g) = per_worker_grads.pop() {
+            } else if let Some(g) = grads_rev.pop() {
                 self.adam.step(&mut self.params, &g);
             }
-            per_worker_grads = Vec::new();
         }
 
         self.epoch_idx += 1;

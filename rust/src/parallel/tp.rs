@@ -13,13 +13,18 @@
 //! worker its slice share of the measured device time — numerically equal
 //! to per-slice execution (column separability, tested in
 //! `python/tests/test_model.py` and `parallel::common`).
+//!
+//! Every per-worker phase follows the batched asynchronous dispatch
+//! protocol (`runtime::executor` design note): all N workers' jobs are
+//! submitted before any ticket is waited on, and waits drain in worker
+//! order so the `EventSim` feed and every reduction stay deterministic.
 
 use crate::cluster::{collectives, EventSim};
 use crate::graph::chunk::ChunkPlan;
 use crate::graph::Csr;
 use crate::metrics::EpochReport;
-use crate::model::params::{Adam, GnnParams};
 use crate::model::layer_dims;
+use crate::model::params::{Adam, GnnParams};
 use crate::runtime::DeviceMemory;
 use crate::sched::{chunks as sched_chunks, PipelinePlan};
 use crate::tensor::{dim_slices, pad_tile, row_slices, Matrix};
@@ -55,7 +60,6 @@ impl TpEngine {
         );
         let lp = cfg.task == crate::config::Task::LinkPrediction;
         let dims = layer_dims(p, cfg.layers, cfg.feat_dim, lp);
-        let wf = *dims.last().unwrap();
 
         // device budget: resident panel = dim slice of the widest layer +
         // local rows of every activation
@@ -105,7 +109,6 @@ impl TpEngine {
             }
             g
         });
-        let _ = wf;
         Ok(TpEngine {
             decoupled,
             params,
@@ -160,16 +163,16 @@ impl TpEngine {
             Some(_) => unreachable!("dataset generated with feat override"),
         };
 
-        // ---- Phase 1: NN chain per worker (vertex-sliced) ----
-        let mut caches = Vec::with_capacity(n);
+        // ---- Phase 1: NN chain per worker (vertex-sliced, all workers'
+        // layer jobs in flight together) ----
+        let xs: Vec<Matrix> =
+            row_parts.iter().map(|part| features.slice_rows(part.clone())).collect();
+        let (caches, chain_secs) = common::nn_chain_fwd_batch(&ops, self.params.layers(), &xs)?;
         let mut nn_secs_total = 0.0;
-        for (w, part) in row_parts.iter().enumerate() {
-            let x = features.slice_rows(part.clone());
-            let (cache, secs) = common::nn_chain_fwd(&ops, self.params.layers(), &x)?;
-            let m = common::modeled(cfg, secs);
+        for (w, secs) in chain_secs.iter().enumerate() {
+            let m = common::modeled(cfg, *secs);
             sim.compute(w, m, 0.0);
             nn_secs_total += m;
-            caches.push(cache);
         }
 
         // assembled final embeddings [V, wf]
@@ -177,15 +180,23 @@ impl TpEngine {
         let mut h_full = Matrix::concat_rows(&h_rows);
 
         // ---- GAT: generalized decoupling — precompute edge attention ----
-        let (fwd_plans, bwd_plans): (Vec<ChunkPlan>, Vec<ChunkPlan>);
+        // (plans are borrowed, not cloned: the GAT path owns its freshly
+        // attention-weighted plans, the GCN/R-GCN path reuses the engine's)
+        let gat_plans: Option<(Vec<ChunkPlan>, Vec<ChunkPlan>)>;
         let mut attn_secs = 0.0;
         if let Some(ag) = &self.attn_graph {
             let (a1, a2) = self.params.attn.as_ref().unwrap();
             let mut s1 = vec![0.0f32; v];
             let mut s2 = vec![0.0f32; v];
-            for (w, part) in row_parts.iter().enumerate() {
-                let hr = h_full.slice_rows(part.clone());
-                let (p1, p2, secs) = ops.attn_scores(&hr, a1, a2)?;
+            let pending: Vec<_> = row_parts
+                .iter()
+                .map(|part| {
+                    let hr = h_full.slice_rows(part.clone());
+                    ops.submit_attn_scores(&hr, a1, a2)
+                })
+                .collect::<crate::Result<_>>()?;
+            for ((w, part), p) in row_parts.iter().enumerate().zip(pending) {
+                let ((p1, p2), secs) = p.wait()?;
                 s1[part.clone()].copy_from_slice(&p1);
                 s2[part.clone()].copy_from_slice(&p2);
                 let m = common::modeled(cfg, secs);
@@ -201,19 +212,30 @@ impl TpEngine {
             let _ = collectives::allgather_rows(&mut sim, &cfg.net, &blocks, &row_parts, &ready);
             report.collective_rounds += 1;
 
-            // per-chunk edge softmax -> alpha in global CSR edge order
+            // per-chunk edge softmax -> alpha in global CSR edge order:
+            // every chunk's passes submitted up front, waited in order
             let plain = ChunkPlan::build(
                 ag,
                 self.geometry.rows_per_chunk,
                 self.geometry.c_bucket,
                 self.geometry.e_bucket,
             );
-            let mut alpha = Vec::with_capacity(ag.num_edges());
-            for (ci, chunk) in plain.chunks.iter().enumerate() {
+            let mut chunk_pending = Vec::with_capacity(plain.num_chunks());
+            for chunk in &plain.chunks {
                 let sd = &s2[chunk.rows.clone()];
+                let passes: Vec<_> = chunk
+                    .passes
+                    .iter()
+                    .map(|pass| ops.submit_edge_softmax(pass, chunk.num_rows(), &s1, sd))
+                    .collect::<crate::Result<_>>()?;
+                chunk_pending.push(passes);
+            }
+            let mut alpha = Vec::with_capacity(ag.num_edges());
+            for (ci, passes) in chunk_pending.into_iter().enumerate() {
+                let chunk = &plain.chunks[ci];
                 let mut secs = 0.0;
-                for pass in &chunk.passes {
-                    let (a, s) = ops.edge_softmax(pass, chunk.num_rows(), &s1, sd)?;
+                for (pass, p) in chunk.passes.iter().zip(passes) {
+                    let (a, s) = p.wait()?;
                     alpha.extend_from_slice(&a[..pass.live_edges]);
                     secs += s;
                 }
@@ -224,18 +246,19 @@ impl TpEngine {
             }
             let mut weighted = ag.clone();
             weighted.weights_mut().copy_from_slice(&alpha);
-            fwd_plans = vec![ChunkPlan::build(
+            let fwd = vec![ChunkPlan::build(
                 &weighted,
                 self.geometry.rows_per_chunk,
                 self.geometry.c_bucket,
                 self.geometry.e_bucket,
             )];
-            bwd_plans = vec![ChunkPlan::build(
+            let bwd = vec![ChunkPlan::build(
                 &weighted.transpose(),
                 self.geometry.rows_per_chunk,
                 self.geometry.c_bucket,
                 self.geometry.e_bucket,
             )];
+            gat_plans = Some((fwd, bwd));
             // share alpha with all workers (bytes only; data already local)
             let bytes = alpha.len() * 4;
             for w in 0..n {
@@ -246,15 +269,18 @@ impl TpEngine {
             }
             report.collective_rounds += 1;
         } else {
-            fwd_plans = self.fwd_plans.clone();
-            bwd_plans = self.bwd_plans.clone();
+            gat_plans = None;
         }
+        let (fwd_plans, bwd_plans): (&[ChunkPlan], &[ChunkPlan]) = match &gat_plans {
+            Some((f, b)) => (f, b),
+            None => (&self.fwd_plans, &self.bwd_plans),
+        };
 
         sim.barrier();
 
         // ---- Phase 2..4: split -> L aggregation rounds -> gather ----
         self.agg_phase(
-            ctx, &mut sim, &mut report, &fwd_plans, &mut h_full, wf, l, &row_parts, &dim_parts,
+            ctx, &mut sim, &mut report, fwd_plans, &mut h_full, wf, l, &row_parts, &dim_parts,
         )?;
         let agg_fwd_done: Vec<f64> = (0..n).map(|w| sim.now(w)).collect();
         let gnn_fwd_secs: f64 = sim.comp_totals().iter().sum::<f64>() - nn_secs_total - attn_secs;
@@ -278,18 +304,17 @@ impl TpEngine {
 
         // ---- Backward: split -> L transposed agg rounds -> gather ----
         self.agg_phase(
-            ctx, &mut sim, &mut report, &bwd_plans, &mut grad_full, wf, l, &row_parts, &dim_parts,
+            ctx, &mut sim, &mut report, bwd_plans, &mut grad_full, wf, l, &row_parts, &dim_parts,
         )?;
 
-        // ---- NN backward per worker ----
-        let mut per_worker_grads = Vec::with_capacity(n);
-        for (w, part) in row_parts.iter().enumerate() {
-            let g = grad_full.slice_rows(part.clone());
-            let (grads, _gx, secs) =
-                common::nn_chain_bwd(&ops, self.params.layers(), &caches[w], &g)?;
+        // ---- NN backward per worker (submit-all, wait-in-order) ----
+        let grad_slices: Vec<Matrix> =
+            row_parts.iter().map(|part| grad_full.slice_rows(part.clone())).collect();
+        let (per_worker_grads, _gx, bwd_secs) =
+            common::nn_chain_bwd_batch(&ops, self.params.layers(), &caches, &grad_slices)?;
+        for (w, secs) in bwd_secs.iter().enumerate() {
             let now = sim.now(w);
-            sim.compute(w, common::modeled(cfg, secs), now);
-            per_worker_grads.push(grads);
+            sim.compute(w, common::modeled(cfg, *secs), now);
         }
         sim.barrier();
 
@@ -308,7 +333,7 @@ impl TpEngine {
         report.loss = loss;
         report.train_acc = if n_train > 0.0 { correct / n_train } else { 0.0 };
         report.test_acc = common::test_accuracy(data, &h_full);
-        for (w, part) in row_parts.iter().enumerate() {
+        for w in 0..n {
             let frac = dim_parts[w].len() as f64 / wf.max(1) as f64;
             report.workers[w].comp_edges += fwd_plans
                 .iter()
@@ -317,7 +342,6 @@ impl TpEngine {
                 .sum::<usize>() as f64
                 * (2 * l) as f64
                 * frac;
-            let _ = part;
         }
         report.vd_edges = 0; // TP has no cross-worker vertex dependencies
         report.vd_overhead_frac = 0.0;
@@ -331,7 +355,9 @@ impl TpEngine {
     }
 
     /// One split -> `rounds` aggregation rounds -> gather phase over `h`
-    /// (in place), with chunk pipelining when enabled.
+    /// (in place), with chunk pipelining when enabled. Aggregation rounds
+    /// double-buffer between two padded panels (no per-round clone) and
+    /// submit every chunk's passes before waiting on any.
     #[allow(clippy::too_many_arguments)]
     fn agg_phase(
         &self,
@@ -375,16 +401,30 @@ impl TpEngine {
                 }
             }
             report.collective_rounds += 1;
-            let mut out = h.padded(v, pad_tile(wf));
+            let mut src = h.padded(v, pad_tile(wf));
+            let mut out = Matrix::zeros(src.rows(), src.cols());
             for r in 0..rounds {
-                let src = out.clone();
-                out = Matrix::zeros(src.rows(), src.cols());
+                if r > 0 {
+                    std::mem::swap(&mut src, &mut out);
+                    out.fill(0.0);
+                }
+                let tiles = common::tile_buffers(&ops, &src);
+                let mut pending = Vec::with_capacity(num_chunks);
                 for ci in 0..num_chunks {
-                    let mut secs = 0.0;
+                    let mut per_plan = Vec::new();
                     for plan in plans {
                         if ci < plan.num_chunks() {
-                            secs += common::aggregate_chunk(&ops, plan, ci, &src, &mut out)?;
+                            per_plan.push(common::submit_chunk_agg_tiles(
+                                &ops, plan, ci, &tiles,
+                            )?);
                         }
+                    }
+                    pending.push(per_plan);
+                }
+                for (ci, per_plan) in pending.into_iter().enumerate() {
+                    let mut secs = 0.0;
+                    for agg in per_plan {
+                        secs += agg.wait_into(&mut out)?;
                     }
                     let total = common::modeled(cfg, secs);
                     for w in 0..n {
@@ -417,12 +457,18 @@ impl TpEngine {
             sim.barrier();
             let mut cur = h.clone();
             for _ in 0..rounds {
-                let mut next = Matrix::zeros(v, cur.cols());
+                // all plans' passes in flight before the first wait,
+                // sharing one tile set of the padded panel
+                let hp = cur.padded(v, pad_tile(cur.cols()));
+                let tiles = common::tile_buffers(&ops, &hp);
+                let pending: Vec<common::PlanAgg> = plans
+                    .iter()
+                    .map(|plan| common::submit_plan_agg_tiles(&ops, plan, &tiles))
+                    .collect::<crate::Result<_>>()?;
+                let mut acc = Matrix::zeros(v, hp.cols());
                 let mut secs = 0.0;
-                for plan in plans {
-                    let (part, s) = common::aggregate_full(&ops, plan, &cur)?;
-                    next.add_assign(&part);
-                    secs += s;
+                for agg in pending {
+                    secs += agg.wait_into(&mut acc)?;
                 }
                 let total = common::modeled(cfg, secs);
                 for w in 0..n {
@@ -430,7 +476,7 @@ impl TpEngine {
                     let now = sim.now(w);
                     sim.compute(w, total * frac, now);
                 }
-                cur = next;
+                cur = acc.cropped(v, cur.cols());
             }
             // gather back to vertex-sliced
             let slices: Vec<Matrix> =
@@ -449,7 +495,8 @@ impl TpEngine {
     }
 
     /// Link-prediction loss phase (paper §5.9): sample positive edges +
-    /// negatives, score with the lp artifact, return grad wrt embeddings.
+    /// negatives, score with the lp artifact (all workers' jobs in flight
+    /// together), return grad wrt embeddings.
     fn lp_loss(
         &self,
         ctx: &Ctx,
@@ -464,7 +511,11 @@ impl TpEngine {
         let v = data.profile.v;
         let pairs_per_worker = (cfg.batch_size / n).max(8);
 
-        // negative sampling (host; timed and reported as its own phase)
+        // negative sampling (host; timed and reported as its own phase).
+        // Rejection sampling of an edge endpoint is bounded: on a graph
+        // whose sampled region has no in-edges it would otherwise spin
+        // forever, so after enough misses we fall back to uniform source
+        // sampling (the pair is still a valid negative-vs-random contrast).
         let t0 = std::time::Instant::now();
         let mut rng = Rng::seed_from_u64(cfg.seed ^ (self.epoch_idx as u64) << 8);
         let g = &data.graph;
@@ -473,13 +524,20 @@ impl TpEngine {
             let mut src = Vec::new();
             let mut dst = Vec::new();
             let mut neg = Vec::new();
+            let mut misses = 0usize;
+            let miss_budget = 8 * pairs_per_worker + 64;
             while src.len() < pairs_per_worker {
                 let d = rng.gen_range(v);
                 let (cols, _) = g.in_edges(d);
-                if cols.is_empty() {
+                let s = if !cols.is_empty() {
+                    cols[rng.gen_range(cols.len())] as i32
+                } else if misses < miss_budget {
+                    misses += 1;
                     continue;
-                }
-                src.push(cols[rng.gen_range(cols.len())] as i32);
+                } else {
+                    rng.gen_range(v) as i32 // uniform source fallback
+                };
+                src.push(s);
                 dst.push(d as i32);
                 neg.push(rng.gen_range(v) as i32);
             }
@@ -487,22 +545,26 @@ impl TpEngine {
         }
         let sampling_secs = t0.elapsed().as_secs_f64();
 
-        let mut grad = Matrix::zeros(v, h.cols());
-        let mut loss = 0.0f32;
-        let mut task_secs = 0.0;
+        // submit every worker's lp job, then wait in worker order
+        let mut pending = Vec::with_capacity(n);
         for (w, (src, dst, neg)) in batches.iter().enumerate() {
             // fetching pair endpoints from remote owners
             let fetch_bytes = src.len() * h.cols() * 4 * 2;
             let now = sim.now(w);
             sim.comm(w, cfg.net.msg_secs(fetch_bytes), now);
             report.workers[w].comm_bytes += fetch_bytes;
-            let (l, gh, secs) = ops.lp_loss(h, src, dst, neg)?;
+            pending.push(ops.submit_lp_loss(h, src, dst, neg)?);
+        }
+        let mut grad = Matrix::zeros(v, h.cols());
+        let mut loss = 0.0f32;
+        let mut task_secs = 0.0;
+        for (w, p) in pending.into_iter().enumerate() {
+            let ((l, mut gh), secs) = p.wait()?;
             let m = common::modeled(cfg, secs);
             let now = sim.now(w);
             sim.compute(w, m, now);
             task_secs += m;
             loss += l / n as f32;
-            let mut gh = gh;
             gh.scale(1.0 / n as f32);
             grad.add_assign(&gh);
         }
@@ -526,21 +588,28 @@ impl TpEngine {
         };
 
         // forward: per layer: split -> aggregate (width D_l) -> gather ->
-        // dense on local rows
+        // dense on local rows (all workers' dense jobs in flight together)
         let mut h = data.features.clone();
         let mut caches: Vec<Vec<(Matrix, Matrix)>> = vec![Vec::new(); n];
         for (li, layer) in self.params.layers().iter().enumerate() {
             let wl = h.cols();
             let dim_parts = dim_slices(wl, n);
             self.agg_phase(
-                ctx, &mut sim, &mut report, &self.fwd_plans.clone(), &mut h, wl, 1, &row_parts,
+                ctx, &mut sim, &mut report, &self.fwd_plans, &mut h, wl, 1, &row_parts,
                 &dim_parts,
             )?;
             let relu = li + 1 != self.params.layers().len();
+            let pending: Vec<(Matrix, _)> = row_parts
+                .iter()
+                .map(|part| {
+                    let xin = h.slice_rows(part.clone());
+                    let p = ops.submit_dense_fwd(&xin, &layer.w, &layer.b, relu)?;
+                    Ok((xin, p))
+                })
+                .collect::<crate::Result<_>>()?;
             let mut rows_out = Vec::with_capacity(n);
-            for (w, part) in row_parts.iter().enumerate() {
-                let xin = h.slice_rows(part.clone());
-                let (out, pre, secs) = ops.dense_fwd(&xin, &layer.w, &layer.b, relu)?;
+            for (w, (xin, p)) in pending.into_iter().enumerate() {
+                let ((out, pre), secs) = p.wait()?;
                 let now = sim.now(w);
                 sim.compute(w, common::modeled(cfg, secs), now);
                 caches[w].push((xin, pre));
@@ -572,11 +641,18 @@ impl TpEngine {
         for li in (0..self.params.layers().len()).rev() {
             let layer = &self.params.layers()[li];
             let relu = li + 1 != self.params.layers().len();
+            let pending: Vec<_> = row_parts
+                .iter()
+                .enumerate()
+                .map(|(w, part)| {
+                    let gl = g.slice_rows(part.clone());
+                    let (xin, pre) = &caches[w][li];
+                    ops.submit_dense_bwd(&gl, xin, &layer.w, pre, relu)
+                })
+                .collect::<crate::Result<_>>()?;
             let mut g_rows = Vec::with_capacity(n);
-            for (w, part) in row_parts.iter().enumerate() {
-                let gl = g.slice_rows(part.clone());
-                let (xin, pre) = &caches[w][li];
-                let (gx, gw, gb, secs) = ops.dense_bwd(&gl, xin, &layer.w, pre, relu)?;
+            for (w, p) in pending.into_iter().enumerate() {
+                let ((gx, gw, gb), secs) = p.wait()?;
                 let now = sim.now(w);
                 sim.compute(w, common::modeled(cfg, secs), now);
                 per_worker_grads[w].push((gw, gb));
@@ -587,7 +663,7 @@ impl TpEngine {
             let wl = g.cols();
             let dim_parts = dim_slices(wl, n);
             self.agg_phase(
-                ctx, &mut sim, &mut report, &self.bwd_plans.clone(), &mut g, wl, 1, &row_parts,
+                ctx, &mut sim, &mut report, &self.bwd_plans, &mut g, wl, 1, &row_parts,
                 &dim_parts,
             )?;
         }
@@ -742,5 +818,26 @@ mod tests {
         let reports = run_one(&cfg);
         assert!(reports[2].loss < reports[0].loss * 1.2);
         assert!(reports[0].phase_secs.iter().any(|(n, _)| n == "negative_sampling"));
+    }
+
+    #[test]
+    fn lp_sampling_terminates_without_in_edges() {
+        // a graph whose sampled region has no in-edges must not hang the
+        // negative sampler (bounded retries + uniform source fallback)
+        let cfg = RunConfig {
+            task: crate::config::Task::LinkPrediction,
+            workers: 2,
+            epochs: 1,
+            batch_size: 64,
+            ..Default::default()
+        };
+        let (store, mut data) = setup(&cfg);
+        // strip every edge: v empty in-edge lists
+        let v = data.profile.v;
+        data.graph = crate::graph::Csr::new(v, vec![0u32; v + 1], Vec::new(), Vec::new());
+        let pool = ExecutorPool::new(&store, 2).unwrap();
+        let ctx = Ctx { cfg: &cfg, data: &data, store: &store, pool: &pool };
+        let reports = super::super::run(&ctx).unwrap();
+        assert!(reports[0].loss.is_finite());
     }
 }

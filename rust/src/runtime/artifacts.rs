@@ -1,6 +1,13 @@
-//! Artifact manifest: what `python/compile/aot.py` emitted, keyed by kind
-//! and shape bucket, plus the bucket-selection logic the coordinator uses
-//! to map logical shapes onto available artifacts.
+//! Artifact manifest: the shape-bucket plan `python/compile/aot.py`
+//! derives from the dataset profiles, keyed by kind and bucket, plus the
+//! bucket-selection logic the coordinator uses to map logical shapes onto
+//! available artifacts.
+//!
+//! Two sources, same contract:
+//! * `load(dir)` parses `dir/manifest.tsv` when `make artifacts` has run;
+//! * otherwise the store **synthesizes the builtin plan** — a Rust mirror
+//!   of `aot.py::build_plan` over `graph::datasets::PROFILES` — which the
+//!   reference backend executes without needing the HLO files at all.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -51,8 +58,19 @@ impl ArtifactStore {
     pub fn load(dir: impl AsRef<Path>) -> crate::Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let tsv = dir.join("manifest.tsv");
-        let text = std::fs::read_to_string(&tsv)
-            .with_context(|| format!("reading {} — run `make artifacts` first", tsv.display()))?;
+        let text = match std::fs::read_to_string(&tsv) {
+            Ok(text) => text,
+            // No AOT output present: synthesize the builtin plan (same
+            // shape buckets aot.py would emit for every profile). Other
+            // IO errors (permissions, truncation) must surface — the
+            // user asked for a real manifest.
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(Self::builtin_in(&dir));
+            }
+            Err(e) => {
+                return Err(anyhow::anyhow!("reading {}: {e}", tsv.display()));
+            }
+        };
         let mut store = ArtifactStore {
             dir,
             by_name: HashMap::new(),
@@ -99,6 +117,162 @@ impl ArtifactStore {
         Ok(store)
     }
 
+    /// The builtin plan: a Rust mirror of `aot.py::build_plan` over every
+    /// dataset profile. The two sides share the bucket derivation exactly
+    /// (`batch_buckets`, `chunk_rows`, `edge_buckets`, `pad_dim`), so
+    /// artifact names and input shapes match what the AOT pipeline emits.
+    pub fn builtin() -> Self {
+        Self::builtin_in(Path::new("artifacts"))
+    }
+
+    fn builtin_in(dir: &Path) -> Self {
+        let mut store = ArtifactStore {
+            dir: dir.to_path_buf(),
+            by_name: HashMap::new(),
+            by_kind: HashMap::new(),
+            dim_tile: crate::tensor::DIM_TILE,
+            row_block: crate::tensor::ROW_BLOCK,
+        };
+        for p in crate::graph::datasets::PROFILES {
+            // aot.py: GAT artifacts for every homogeneous profile but the
+            // e2e driver's.
+            let gat = !p.hetero && p.name != "e2e";
+            let kp = crate::tensor::pad_dim(p.k);
+            let mut dims_in = vec![p.d];
+            if matches!(p.name, "rdt" | "opt") {
+                dims_in.extend(FIG14_DIMS); // Fig 14 feature-dim sweep
+            }
+            dims_in.sort_unstable();
+            dims_in.dedup();
+            for b in batch_buckets(p.v) {
+                for &din in &dims_in {
+                    store.add_dense(b, din, p.h, true); // layer 0
+                }
+                store.add_dense(b, p.h, p.h, true); // deep layers (fig 13)
+                store.add_dense(b, p.h, kp, false); // head
+                store.add_builtin(
+                    format!("softmax_xent__b{b}_k{kp}"),
+                    "softmax_xent",
+                    vec![
+                        spec("logits", DType::F32, &[b, kp]),
+                        spec("labels", DType::I32, &[b]),
+                        spec("smask", DType::F32, &[b]),
+                        spec("cmask", DType::F32, &[kp]),
+                    ],
+                );
+                if gat {
+                    store.add_builtin(
+                        format!("attn_scores__b{b}_h{kp}"),
+                        "attn_scores",
+                        vec![
+                            spec("h", DType::F32, &[b, kp]),
+                            spec("a1", DType::F32, &[kp]),
+                            spec("a2", DType::F32, &[kp]),
+                        ],
+                    );
+                }
+                for pb in LP_PAIR_BUCKETS {
+                    store.add_builtin(
+                        format!("lp_loss__b{b}_h{kp}_p{pb}"),
+                        "lp_loss",
+                        vec![
+                            spec("h", DType::F32, &[b, kp]),
+                            spec("src", DType::I32, &[pb]),
+                            spec("dst", DType::I32, &[pb]),
+                            spec("neg", DType::I32, &[pb]),
+                            spec("mask", DType::F32, &[pb]),
+                        ],
+                    );
+                }
+            }
+            for c in chunk_rows(p.v) {
+                for e in edge_buckets(p.e, p.v, c) {
+                    let agg_inputs = || {
+                        vec![
+                            spec("row_ptr", DType::I32, &[c + 1]),
+                            spec("edge_dst", DType::I32, &[e]),
+                            spec("col_idx", DType::I32, &[e]),
+                            spec("edge_w", DType::F32, &[e]),
+                            spec("x", DType::F32, &[p.v, crate::tensor::DIM_TILE]),
+                        ]
+                    };
+                    let s = p.v;
+                    store.add_builtin(
+                        format!("agg_pallas__c{c}_e{e}_s{s}"),
+                        "agg_pallas",
+                        agg_inputs(),
+                    );
+                    store.add_builtin(
+                        format!("agg_scatter__c{c}_e{e}_s{s}"),
+                        "agg_scatter",
+                        agg_inputs(),
+                    );
+                    if gat {
+                        store.add_builtin(
+                            format!("edge_softmax__c{c}_e{e}_s{s}"),
+                            "edge_softmax",
+                            vec![
+                                spec("col_idx", DType::I32, &[e]),
+                                spec("edge_dst", DType::I32, &[e]),
+                                spec("valid", DType::F32, &[e]),
+                                spec("s_src", DType::F32, &[s]),
+                                spec("s_dst", DType::F32, &[c]),
+                            ],
+                        );
+                    }
+                }
+            }
+        }
+        for names in store.by_kind.values_mut() {
+            names.sort();
+        }
+        store
+    }
+
+    fn add_dense(&mut self, b: usize, d: usize, h: usize, relu: bool) {
+        let tag = if relu { "relu" } else { "linear" };
+        self.add_builtin(
+            format!("dense_{tag}_fwd__b{b}_d{d}_h{h}"),
+            &format!("dense_{tag}_fwd"),
+            vec![
+                spec("x", DType::F32, &[b, d]),
+                spec("w", DType::F32, &[d, h]),
+                spec("b", DType::F32, &[h]),
+            ],
+        );
+        self.add_builtin(
+            format!("dense_{tag}_bwd__b{b}_d{d}_h{h}"),
+            &format!("dense_{tag}_bwd"),
+            vec![
+                spec("g", DType::F32, &[b, h]),
+                spec("x", DType::F32, &[b, d]),
+                spec("w", DType::F32, &[d, h]),
+                spec("pre", DType::F32, &[b, h]),
+            ],
+        );
+    }
+
+    /// Insert if absent (profiles sharing a bucket dedupe by name, as in
+    /// aot.py's `specs.setdefault`).
+    fn add_builtin(&mut self, name: String, kind: &str, inputs: Vec<InputSpec>) {
+        if self.by_name.contains_key(&name) {
+            return;
+        }
+        let info = ArtifactInfo {
+            name: name.clone(),
+            kind: kind.to_string(),
+            file: format!("{name}.hlo.txt"),
+            inputs,
+        };
+        self.by_kind.entry(kind.to_string()).or_default().push(name.clone());
+        self.by_name.insert(name, info);
+    }
+
+    /// Iterate over every artifact in the store.
+    pub fn infos(&self) -> impl Iterator<Item = &ArtifactInfo> {
+        self.by_name.values()
+    }
+
     pub fn get(&self, name: &str) -> Option<&ArtifactInfo> {
         self.by_name.get(name)
     }
@@ -117,10 +291,6 @@ impl ArtifactStore {
 
     pub fn dir(&self) -> &Path {
         &self.dir
-    }
-
-    pub fn names_of_kind(&self, kind: &str) -> Vec<String> {
-        self.by_kind.get(kind).cloned().unwrap_or_default()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -240,6 +410,58 @@ impl ArtifactStore {
     }
 }
 
+// ---- builtin-plan bucket derivation (MIRRORS aot.py) ----------------------
+
+const CHUNK_COUNTS: [usize; 4] = [1, 4, 16, 64];
+const WORKER_COUNTS: [usize; 5] = [1, 2, 4, 8, 16];
+const MIN_CHUNK_ROWS: usize = 512;
+const MAX_CHUNK_ROWS: usize = 65536;
+/// Cap on one artifact call's edge capacity; the Rust side accumulates
+/// multi-pass when a chunk holds more edges (exact: aggregation is linear).
+const MAX_EDGE_BUCKET: usize = 1 << 21;
+const FIG14_DIMS: [usize; 4] = [128, 256, 512, 1024];
+const LP_PAIR_BUCKETS: [usize; 2] = [1024, 4096];
+
+fn spec(name: &str, dtype: DType, shape: &[usize]) -> InputSpec {
+    InputSpec { name: name.to_string(), dtype, shape: shape.to_vec() }
+}
+
+/// NN-phase row batches: `V / N` for the supported worker counts.
+fn batch_buckets(v: usize) -> Vec<usize> {
+    let mut out: Vec<usize> = WORKER_COUNTS.iter().map(|&n| (v / n).max(128)).collect();
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+/// Chunk row counts: `V / nc` clamped to `[512, 65536]`, multiple of the
+/// Pallas row block.
+fn chunk_rows(v: usize) -> Vec<usize> {
+    let mut out: Vec<usize> = CHUNK_COUNTS
+        .iter()
+        .map(|&nc| v / nc)
+        .filter(|&c| {
+            (MIN_CHUNK_ROWS..=MAX_CHUNK_ROWS).contains(&c) && c % crate::tensor::ROW_BLOCK == 0
+        })
+        .collect();
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+/// Three power-of-two edge capacities around the expected chunk degree.
+fn edge_buckets(e_total: usize, v: usize, c: usize) -> Vec<usize> {
+    let avg = ((e_total * c) / v.max(1)).max(1);
+    let cap = MAX_EDGE_BUCKET.min(crate::tensor::ceil_pow2(e_total));
+    let mut out: Vec<usize> = [avg, avg * 4, avg * 16]
+        .iter()
+        .map(|&b| cap.min(crate::tensor::ceil_pow2(b).max(4096)))
+        .collect();
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
 fn parse_input(s: &str) -> crate::Result<InputSpec> {
     let mut parts = s.split(':');
     let (name, dtype, shape) = match (parts.next(), parts.next(), parts.next()) {
@@ -319,10 +541,30 @@ mod tests {
     }
 
     #[test]
-    fn hlo_files_exist() {
+    fn hlo_paths_resolve_inside_store_dir() {
         let s = store();
         let a = s.find_dense(true, true, 1, 64, 32).unwrap().name.clone();
         let p = s.hlo_path(&a).unwrap();
-        assert!(p.exists(), "{p:?}");
+        assert!(p.starts_with(s.dir()), "{p:?}");
+        assert!(p.to_string_lossy().ends_with(".hlo.txt"));
+        assert!(s.hlo_path("not_an_artifact").is_err());
+    }
+
+    #[test]
+    fn builtin_plan_matches_python_contract_samples() {
+        // spot-check names aot.py derives for the tiny and rdt profiles
+        let s = ArtifactStore::builtin();
+        for name in [
+            "dense_relu_fwd__b256_d64_h32",  // tiny layer 0, 4 workers
+            "dense_linear_bwd__b1024_d32_h32", // tiny head backward
+            "softmax_xent__b512_k64",        // rdt head, 16 workers
+            "agg_scatter__c1024_e8192_s1024", // tiny single-chunk agg
+            "edge_softmax__c1024_e8192_s1024",
+            "lp_loss__b1024_h32_p4096",
+        ] {
+            assert!(s.get(name).is_some(), "builtin plan missing {name}");
+        }
+        // hetero profiles emit no GAT artifacts
+        assert!(s.get("attn_scores__b16384_h384").is_none());
     }
 }

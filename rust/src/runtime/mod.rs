@@ -1,13 +1,15 @@
-//! AOT runtime: load `artifacts/*.hlo.txt` through the PJRT C API and
-//! execute them from the training hot path. Python never runs here.
+//! Artifact runtime: execute the AOT shape-bucket plan from the training
+//! hot path. Python never runs here.
 //!
-//! * `artifacts` — manifest parsing + shape-bucket selection
-//! * `executor`  — pool of threads, each owning a `PjRtClient` (the crate's
-//!   client is `Rc`-based, so clients never cross threads) and a lazy
-//!   executable cache
+//! * `artifacts` — manifest parsing / builtin-plan synthesis + shape-bucket
+//!   selection
+//! * `executor`  — thread pool with ticket-based asynchronous dispatch
+//!   (see its module docs for the submit-all-then-wait design note)
+//! * `refexec`   — pure-Rust reference implementations of every artifact
+//!   kind (the offline stand-in for the PJRT/`xla` execution path)
 //! * `ops`       — typed wrappers (dense/agg/softmax/...) that pad inputs
 //!   to the bucket, run the artifact, crop outputs, and report measured
-//!   device seconds
+//!   device seconds; each has a ticket-returning `submit_*` variant
 //! * `memory`    — simulated per-worker device memory accounting (the T4
 //!   budget that makes baselines OOM in Table 2)
 
@@ -15,6 +17,7 @@ pub mod artifacts;
 pub mod executor;
 pub mod memory;
 pub mod ops;
+pub mod refexec;
 
 pub use artifacts::{ArtifactInfo, ArtifactStore};
 pub use executor::{Arg, ExecutorPool, Job, JobResult};

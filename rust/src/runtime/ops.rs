@@ -3,12 +3,50 @@
 //! Zero padding is numerically transparent by construction (weights 0,
 //! masks 0, empty CSR rows) — validated in `python/tests` and re-checked
 //! by the integration tests here.
+//!
+//! Every op comes in two flavours:
+//! * `submit_*` — enqueue the job and return a [`Pending`] handle; the
+//!   engines submit **all** of a phase's independent jobs first and wait
+//!   second, so pool threads overlap them (executor module design note);
+//! * the synchronous wrapper (`dense_fwd`, `agg_pass`, ...) — submit +
+//!   wait in one call, for tests and off-hot-path code.
+
+use std::sync::Arc;
 
 use crate::graph::chunk::AggPass;
 use crate::tensor::Matrix;
 
 use super::artifacts::{ArtifactInfo, ArtifactStore};
-use super::executor::{Arg, ExecutorPool, Job};
+use super::executor::{Arg, ExecutorPool, Job, JobResult, Ticket};
+
+/// An in-flight artifact call plus the post-processing (crop / unpack)
+/// that turns its raw outputs into the op's typed result.
+pub struct Pending<T> {
+    ticket: Ticket,
+    finish: Box<dyn FnOnce(JobResult) -> T>,
+}
+
+impl<T> Pending<T> {
+    fn new(
+        pool: &ExecutorPool,
+        job: Job,
+        finish: impl FnOnce(JobResult) -> T + 'static,
+    ) -> crate::Result<Self> {
+        Ok(Pending { ticket: pool.submit(job)?, finish: Box::new(finish) })
+    }
+
+    /// Block until the job finishes; returns the typed result and the
+    /// measured device seconds.
+    pub fn wait(self) -> crate::Result<(T, f64)> {
+        let res = self.ticket.wait()?;
+        let secs = res.device_secs;
+        Ok(((self.finish)(res), secs))
+    }
+}
+
+fn take(outputs: &mut Vec<Vec<f32>>, i: usize) -> Vec<f32> {
+    std::mem::take(&mut outputs[i])
+}
 
 pub struct Ops<'a> {
     pub store: &'a ArtifactStore,
@@ -21,6 +59,36 @@ impl<'a> Ops<'a> {
         Self { store, pool, pallas }
     }
 
+    /// Submit `relu?(x @ w + b)`; resolves to `(out, pre_activation)`.
+    pub fn submit_dense_fwd(
+        &self,
+        x: &Matrix,
+        w: &Matrix,
+        bias: &[f32],
+        relu: bool,
+    ) -> crate::Result<Pending<(Matrix, Matrix)>> {
+        let (b_logical, d) = x.shape();
+        let h = w.cols();
+        let art = self.store.find_dense(relu, true, b_logical, d, h)?;
+        let b_bucket = art.inputs[0].shape[0];
+        let xp = x.padded(b_bucket, d);
+        let job = Job {
+            artifact: art.name.clone(),
+            args: vec![Arg::matrix(&xp), Arg::matrix(w), Arg::f32(bias.to_vec(), &[h])],
+        };
+        Pending::new(self.pool, job, move |mut res| {
+            if relu {
+                let out = Matrix::from_vec(b_bucket, h, take(&mut res.outputs, 0));
+                let pre = Matrix::from_vec(b_bucket, h, take(&mut res.outputs, 1));
+                (out.cropped(b_logical, h), pre.cropped(b_logical, h))
+            } else {
+                let z = Matrix::from_vec(b_bucket, h, take(&mut res.outputs, 0))
+                    .cropped(b_logical, h);
+                (z.clone(), z)
+            }
+        })
+    }
+
     /// `relu?(x @ w + b)`; returns `(out, pre_activation, device_secs)`.
     pub fn dense_fwd(
         &self,
@@ -29,41 +97,20 @@ impl<'a> Ops<'a> {
         bias: &[f32],
         relu: bool,
     ) -> crate::Result<(Matrix, Matrix, f64)> {
-        let (b_logical, d) = x.shape();
-        let h = w.cols();
-        let art = self.store.find_dense(relu, true, b_logical, d, h)?;
-        let b_bucket = art.inputs[0].shape[0];
-        let xp = x.padded(b_bucket, d);
-        let job = Job {
-            artifact: art.name.clone(),
-            args: vec![
-                Arg::matrix(&xp),
-                Arg::matrix(w),
-                Arg::f32(bias.to_vec(), &[h]),
-            ],
-        };
-        let res = self.pool.run(job)?;
-        let (out, pre) = if relu {
-            (
-                Matrix::from_vec(b_bucket, h, res.outputs[0].clone()),
-                Matrix::from_vec(b_bucket, h, res.outputs[1].clone()),
-            )
-        } else {
-            let z = Matrix::from_vec(b_bucket, h, res.outputs[0].clone());
-            (z.clone(), z)
-        };
-        Ok((out.cropped(b_logical, h), pre.cropped(b_logical, h), res.device_secs))
+        let ((out, pre), secs) = self.submit_dense_fwd(x, w, bias, relu)?.wait()?;
+        Ok((out, pre, secs))
     }
 
-    /// Backward of dense(+ReLU): `(grad_x, grad_w, grad_b, device_secs)`.
-    pub fn dense_bwd(
+    /// Submit the backward of dense(+ReLU); resolves to
+    /// `(grad_x, grad_w, grad_b)`.
+    pub fn submit_dense_bwd(
         &self,
         grad_out: &Matrix,
         x: &Matrix,
         w: &Matrix,
         pre: &Matrix,
         relu: bool,
-    ) -> crate::Result<(Matrix, Matrix, Vec<f32>, f64)> {
+    ) -> crate::Result<Pending<(Matrix, Matrix, Vec<f32>)>> {
         let (b_logical, d) = x.shape();
         let h = w.cols();
         let art = self.store.find_dense(relu, false, b_logical, d, h)?;
@@ -77,11 +124,27 @@ impl<'a> Ops<'a> {
                 Arg::matrix(&pre.padded(b_bucket, h)),
             ],
         };
-        let res = self.pool.run(job)?;
-        let gx = Matrix::from_vec(b_bucket, d, res.outputs[0].clone()).cropped(b_logical, d);
-        let gw = Matrix::from_vec(d, h, res.outputs[1].clone());
-        let gb = res.outputs[2].clone();
-        Ok((gx, gw, gb, res.device_secs))
+        Pending::new(self.pool, job, move |mut res| {
+            let gx = Matrix::from_vec(b_bucket, d, take(&mut res.outputs, 0))
+                .cropped(b_logical, d);
+            let gw = Matrix::from_vec(d, h, take(&mut res.outputs, 1));
+            let gb = take(&mut res.outputs, 2);
+            (gx, gw, gb)
+        })
+    }
+
+    /// Backward of dense(+ReLU): `(grad_x, grad_w, grad_b, device_secs)`.
+    pub fn dense_bwd(
+        &self,
+        grad_out: &Matrix,
+        x: &Matrix,
+        w: &Matrix,
+        pre: &Matrix,
+        relu: bool,
+    ) -> crate::Result<(Matrix, Matrix, Vec<f32>, f64)> {
+        let ((gx, gw, gb), secs) =
+            self.submit_dense_bwd(grad_out, x, w, pre, relu)?.wait()?;
+        Ok((gx, gw, gb, secs))
     }
 
     /// Pick the aggregation artifact for a chunk-plan geometry.
@@ -94,21 +157,25 @@ impl<'a> Ops<'a> {
         self.store.find_agg(self.pallas, rows_per_chunk, max_pass_edges, s)
     }
 
-    /// Run one aggregation pass: `x` is the resident `[s, tile]` source
-    /// slice; output is the `[chunk_rows, tile]` partial (already cropped).
-    pub fn agg_pass(
+    /// Submit one aggregation pass with a pre-shared `[s * tile]` source
+    /// buffer (callers batching many passes over the same tile avoid
+    /// re-copying it per job). Resolves to the `[chunk_rows, tile]`
+    /// partial, already cropped.
+    pub fn submit_agg_pass_shared(
         &self,
         art: &ArtifactInfo,
         pass: &AggPass,
         chunk_rows: usize,
-        x: &Matrix,
-    ) -> crate::Result<(Matrix, f64)> {
+        x_data: Arc<Vec<f32>>,
+        x_rows: usize,
+    ) -> crate::Result<Pending<Matrix>> {
         let c_bucket = art.inputs[0].shape[0] - 1;
         let e_bucket = art.inputs[1].shape[0];
+        let tile = self.store.dim_tile;
         debug_assert_eq!(pass.row_ptr.len(), c_bucket + 1, "plan/artifact mismatch");
         debug_assert_eq!(pass.col.len(), e_bucket);
-        debug_assert_eq!(x.rows(), art.inputs[4].shape[0]);
-        debug_assert_eq!(x.cols(), self.store.dim_tile);
+        debug_assert_eq!(x_rows, art.inputs[4].shape[0]);
+        debug_assert_eq!(x_data.len(), x_rows * tile);
         let job = Job {
             artifact: art.name.clone(),
             args: vec![
@@ -116,23 +183,55 @@ impl<'a> Ops<'a> {
                 Arg::i32_shared(pass.edge_dst.clone(), &[e_bucket]),
                 Arg::i32_shared(pass.col.clone(), &[e_bucket]),
                 Arg::f32_shared(pass.w.clone(), &[e_bucket]),
-                Arg::matrix(x),
+                Arg::f32_shared(x_data, &[x_rows, tile]),
             ],
         };
-        let res = self.pool.run(job)?;
-        let out = Matrix::from_vec(c_bucket, self.store.dim_tile, res.outputs[0].clone());
-        Ok((out.cropped(chunk_rows, self.store.dim_tile), res.device_secs))
+        Pending::new(self.pool, job, move |mut res| {
+            Matrix::from_vec(c_bucket, tile, take(&mut res.outputs, 0))
+                .cropped(chunk_rows, tile)
+        })
     }
 
-    /// Masked softmax cross-entropy over padded classes:
-    /// `(loss, grad_logits, correct, device_secs)`.
-    pub fn softmax_xent(
+    /// Submit one aggregation pass: `x` is the resident `[s, tile]` source
+    /// slice.
+    pub fn submit_agg_pass(
+        &self,
+        art: &ArtifactInfo,
+        pass: &AggPass,
+        chunk_rows: usize,
+        x: &Matrix,
+    ) -> crate::Result<Pending<Matrix>> {
+        debug_assert_eq!(x.cols(), self.store.dim_tile);
+        self.submit_agg_pass_shared(
+            art,
+            pass,
+            chunk_rows,
+            Arc::new(x.data().to_vec()),
+            x.rows(),
+        )
+    }
+
+    /// Run one aggregation pass; output is the `[chunk_rows, tile]`
+    /// partial (already cropped).
+    pub fn agg_pass(
+        &self,
+        art: &ArtifactInfo,
+        pass: &AggPass,
+        chunk_rows: usize,
+        x: &Matrix,
+    ) -> crate::Result<(Matrix, f64)> {
+        self.submit_agg_pass(art, pass, chunk_rows, x)?.wait()
+    }
+
+    /// Submit masked softmax cross-entropy over padded classes; resolves
+    /// to `(loss, grad_logits, correct)`.
+    pub fn submit_softmax_xent(
         &self,
         logits: &Matrix,
         labels: &[i32],
         sample_mask: &[f32],
         class_mask: &[f32],
-    ) -> crate::Result<(f32, Matrix, f32, f64)> {
+    ) -> crate::Result<Pending<(f32, Matrix, f32)>> {
         let (b_logical, kp) = logits.shape();
         debug_assert_eq!(class_mask.len(), kp);
         let art = self.store.find_xent(b_logical, kp)?;
@@ -150,20 +249,36 @@ impl<'a> Ops<'a> {
                 Arg::f32(class_mask.to_vec(), &[kp]),
             ],
         };
-        let res = self.pool.run(job)?;
-        let loss = res.outputs[0][0];
-        let grad = Matrix::from_vec(b_bucket, kp, res.outputs[1].clone()).cropped(b_logical, kp);
-        let correct = res.outputs[2][0];
-        Ok((loss, grad, correct, res.device_secs))
+        Pending::new(self.pool, job, move |mut res| {
+            let loss = res.outputs[0][0];
+            let correct = res.outputs[2][0];
+            let grad = Matrix::from_vec(b_bucket, kp, take(&mut res.outputs, 1))
+                .cropped(b_logical, kp);
+            (loss, grad, correct)
+        })
     }
 
-    /// GAT attention halves: `(s1, s2, device_secs)`.
-    pub fn attn_scores(
+    /// Masked softmax cross-entropy over padded classes:
+    /// `(loss, grad_logits, correct, device_secs)`.
+    pub fn softmax_xent(
+        &self,
+        logits: &Matrix,
+        labels: &[i32],
+        sample_mask: &[f32],
+        class_mask: &[f32],
+    ) -> crate::Result<(f32, Matrix, f32, f64)> {
+        let ((loss, grad, correct), secs) =
+            self.submit_softmax_xent(logits, labels, sample_mask, class_mask)?.wait()?;
+        Ok((loss, grad, correct, secs))
+    }
+
+    /// Submit the GAT attention halves; resolves to `(s1, s2)`.
+    pub fn submit_attn_scores(
         &self,
         h: &Matrix,
         a1: &[f32],
         a2: &[f32],
-    ) -> crate::Result<(Vec<f32>, Vec<f32>, f64)> {
+    ) -> crate::Result<Pending<(Vec<f32>, Vec<f32>)>> {
         let (b_logical, hd) = h.shape();
         let art = self.store.find_attn(b_logical, hd)?;
         let b_bucket = art.inputs[0].shape[0];
@@ -175,24 +290,36 @@ impl<'a> Ops<'a> {
                 Arg::f32(a2.to_vec(), &[hd]),
             ],
         };
-        let res = self.pool.run(job)?;
-        let mut s1 = res.outputs[0].clone();
-        let mut s2 = res.outputs[1].clone();
-        s1.truncate(b_logical);
-        s2.truncate(b_logical);
-        Ok((s1, s2, res.device_secs))
+        Pending::new(self.pool, job, move |mut res| {
+            let mut s1 = take(&mut res.outputs, 0);
+            let mut s2 = take(&mut res.outputs, 1);
+            s1.truncate(b_logical);
+            s2.truncate(b_logical);
+            (s1, s2)
+        })
     }
 
-    /// Per-chunk segment softmax for GAT edge attention. The pass arrays
-    /// must come from the same chunk-plan geometry as the matching
-    /// `edge_softmax` artifact. Returns `(alpha[e_bucket], device_secs)`.
-    pub fn edge_softmax(
+    /// GAT attention halves: `(s1, s2, device_secs)`.
+    pub fn attn_scores(
+        &self,
+        h: &Matrix,
+        a1: &[f32],
+        a2: &[f32],
+    ) -> crate::Result<(Vec<f32>, Vec<f32>, f64)> {
+        let ((s1, s2), secs) = self.submit_attn_scores(h, a1, a2)?.wait()?;
+        Ok((s1, s2, secs))
+    }
+
+    /// Submit a per-chunk segment softmax for GAT edge attention; resolves
+    /// to `alpha[e_bucket]`. The pass arrays must come from the same
+    /// chunk-plan geometry as the matching `edge_softmax` artifact.
+    pub fn submit_edge_softmax(
         &self,
         pass: &AggPass,
         chunk_rows: usize,
         s_src: &[f32],
         s_dst_chunk: &[f32],
-    ) -> crate::Result<(Vec<f32>, f64)> {
+    ) -> crate::Result<Pending<Vec<f32>>> {
         let e_bucket = pass.col.len();
         let art = self.store.find_edge_softmax(chunk_rows, e_bucket, s_src.len())?;
         let c_bucket = art.inputs[4].shape[0];
@@ -211,18 +338,28 @@ impl<'a> Ops<'a> {
                 Arg::f32(sd, &[c_bucket]),
             ],
         };
-        let res = self.pool.run(job)?;
-        Ok((res.outputs[0].clone(), res.device_secs))
+        Pending::new(self.pool, job, move |mut res| take(&mut res.outputs, 0))
     }
 
-    /// Link-prediction loss: `(loss, grad_h, device_secs)`.
-    pub fn lp_loss(
+    /// Per-chunk segment softmax: `(alpha[e_bucket], device_secs)`.
+    pub fn edge_softmax(
+        &self,
+        pass: &AggPass,
+        chunk_rows: usize,
+        s_src: &[f32],
+        s_dst_chunk: &[f32],
+    ) -> crate::Result<(Vec<f32>, f64)> {
+        self.submit_edge_softmax(pass, chunk_rows, s_src, s_dst_chunk)?.wait()
+    }
+
+    /// Submit the link-prediction loss; resolves to `(loss, grad_h)`.
+    pub fn submit_lp_loss(
         &self,
         h: &Matrix,
         src: &[i32],
         dst: &[i32],
         neg: &[i32],
-    ) -> crate::Result<(f32, Matrix, f64)> {
+    ) -> crate::Result<Pending<(f32, Matrix)>> {
         let (b_logical, hd) = h.shape();
         let art = self.store.find_lp(b_logical, hd, src.len())?;
         let b_bucket = art.inputs[0].shape[0];
@@ -244,9 +381,23 @@ impl<'a> Ops<'a> {
                 Arg::f32(mask, &[p_bucket]),
             ],
         };
-        let res = self.pool.run(job)?;
-        let loss = res.outputs[0][0];
-        let grad = Matrix::from_vec(b_bucket, hd, res.outputs[1].clone()).cropped(b_logical, hd);
-        Ok((loss, grad, res.device_secs))
+        Pending::new(self.pool, job, move |mut res| {
+            let loss = res.outputs[0][0];
+            let grad = Matrix::from_vec(b_bucket, hd, take(&mut res.outputs, 1))
+                .cropped(b_logical, hd);
+            (loss, grad)
+        })
+    }
+
+    /// Link-prediction loss: `(loss, grad_h, device_secs)`.
+    pub fn lp_loss(
+        &self,
+        h: &Matrix,
+        src: &[i32],
+        dst: &[i32],
+        neg: &[i32],
+    ) -> crate::Result<(f32, Matrix, f64)> {
+        let ((loss, grad), secs) = self.submit_lp_loss(h, src, dst, neg)?.wait()?;
+        Ok((loss, grad, secs))
     }
 }

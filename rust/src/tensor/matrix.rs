@@ -204,6 +204,11 @@ impl Matrix {
 
     // ---- small math (tests, optimizer, reference paths) ----
 
+    /// Overwrite every element (double-buffer reuse without realloc).
+    pub fn fill(&mut self, v: f32) {
+        self.data.fill(v);
+    }
+
     pub fn add_assign(&mut self, other: &Matrix) {
         assert_eq!(self.shape(), other.shape());
         for (a, b) in self.data.iter_mut().zip(&other.data) {

@@ -1,0 +1,139 @@
+//! Offline stand-in for the `anyhow` crate: the subset of its API this
+//! workspace uses (`Error`, `Result`, `anyhow!`, `bail!`, `ensure!`, and
+//! the `Context` extension trait), with context frames flattened into a
+//! single `outer: inner` message string.
+//!
+//! Like the real crate, `Error` deliberately does **not** implement
+//! `std::error::Error`, which is what makes the blanket
+//! `From<E: std::error::Error>` conversion coherent.
+
+use std::fmt;
+
+/// Flattened error message with context frames joined by `": "`.
+pub struct Error(String);
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error(message.to_string())
+    }
+
+    /// Wrap with an outer context frame.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error(format!("{context}: {}", self.0))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error(e.to_string())
+    }
+}
+
+/// `.context(..)` / `.with_context(..)` on `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error(format!("{context}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error(f().to_string()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("device OOM: {} MiB", 42)
+    }
+
+    #[test]
+    fn message_and_context_chain() {
+        let e = fails().unwrap_err().context("loading store");
+        assert_eq!(e.to_string(), "loading store: device OOM: 42 MiB");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse() -> Result<usize> {
+            Ok("12x".parse::<usize>()?)
+        }
+        assert!(parse().is_err());
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        assert!(v.context("missing").is_err());
+        assert_eq!(Some(3u8).with_context(|| "missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn ensure_formats() {
+        fn check(x: usize) -> Result<()> {
+            ensure!(x > 2, "x too small: {x}");
+            Ok(())
+        }
+        assert!(check(3).is_ok());
+        assert_eq!(check(1).unwrap_err().to_string(), "x too small: 1");
+    }
+}
