@@ -71,6 +71,9 @@ FIG14_PROFILES = ("rdt", "opt")
 
 LP_PAIR_BUCKETS = (1024, 4096)
 
+# Deepest fused dense chain in the plan (== the Rust config's layer cap).
+NN_CHAIN_MAX_LAYERS = 8
+
 
 def pad_dim(k: int) -> int:
     """Pad an output/class dim so the dense kernel tiles: multiple of 32,
@@ -171,6 +174,24 @@ def build_plan(profile_filter=None):
         add(Spec(f"agg_scatter__c{c}_e{e}_s{s}", "agg_scatter",
                  model.agg_scatter_sized(c), ins, meta=dict(c=c, e=e, s=s)))
 
+    def add_nn_chain(b, l, d, h, kp):
+        # MIRRORED by rust ArtifactStore::add_nn_chain: the whole L-layer
+        # stack (d -> h^(L-1) -> kp) as one artifact per direction.
+        dims = [d] + [h] * (l - 1) + [kp]
+        fwd_inputs = [("x", (b, dims[0]), "f32")]
+        bwd_inputs = [("g", (b, dims[-1]), "f32"), ("x", (b, dims[0]), "f32")]
+        for i in range(l):
+            fwd_inputs += [(f"w{i}", (dims[i], dims[i + 1]), "f32"),
+                           (f"b{i}", (dims[i + 1],), "f32")]
+            bwd_inputs += [(f"w{i}", (dims[i], dims[i + 1]), "f32"),
+                           (f"pre{i}", (b, dims[i + 1]), "f32")]
+        add(Spec(f"nn_chain_fwd__b{b}_l{l}_d{d}_h{h}_o{kp}", "nn_chain_fwd",
+                 model.nn_chain_fwd_sized(l), fwd_inputs,
+                 meta=dict(b=b, l=l, d=d, h=h, o=kp)))
+        add(Spec(f"nn_chain_bwd__b{b}_l{l}_d{d}_h{h}_o{kp}", "nn_chain_bwd",
+                 model.nn_chain_bwd_sized(l), bwd_inputs,
+                 meta=dict(b=b, l=l, d=d, h=h, o=kp)))
+
     def add_edge_softmax(c, e, s):
         add(Spec(
             f"edge_softmax__c{c}_e{e}_s{s}", "edge_softmax",
@@ -193,6 +214,9 @@ def build_plan(profile_filter=None):
                 add_dense(b, din, h, relu=True)      # layer 0
             add_dense(b, h, h, relu=True)            # deep layers (fig 13)
             add_dense(b, h, kp, relu=False)          # head
+            for din in dims_in:                      # fused L-layer stacks
+                for l in range(1, NN_CHAIN_MAX_LAYERS + 1):
+                    add_nn_chain(b, l, din, h, kp)
             add(Spec(f"softmax_xent__b{b}_k{kp}", "softmax_xent",
                      model.softmax_xent,
                      [("logits", (b, kp), "f32"), ("labels", (b,), "i32"),

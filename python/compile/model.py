@@ -105,6 +105,47 @@ def lp_loss(h, src, dst, neg, pair_mask):
 
 
 # --------------------------------------------------------------------------
+# Fused NN chains (one artifact per L-layer stack)
+# --------------------------------------------------------------------------
+
+def nn_chain_fwd_sized(num_layers: int):
+    """Fused L-layer dense chain forward: ReLU on every layer but the
+    head, as ONE artifact call. Args ``(x, w0, b0, ..., w{L-1}, b{L-1})``;
+    returns ``(out, pre_0, ..., pre_{L-1})`` — the same cache the L
+    separate ``dense_*_fwd`` calls would produce, minus L-1 round-trips.
+    """
+    def fn(x, *wb):
+        assert len(wb) == 2 * num_layers
+        params = [(wb[2 * i], wb[2 * i + 1]) for i in range(num_layers)]
+        h, pres = mlp_chain(params, x)
+        return (h, *[pre for (_, pre) in pres])
+    return fn
+
+
+def nn_chain_bwd_sized(num_layers: int):
+    """Fused L-layer dense chain backward. Args ``(g, x, w0, pre0, ...,
+    w{L-1}, pre{L-1})``; layer inputs are reconstructed from the cached
+    pre-activations (``xin_0 = x``, ``xin_i = relu(pre_{i-1})``). Returns
+    ``(grad_x, gw_0, gb_0, ..., gw_{L-1}, gb_{L-1})``.
+    """
+    def fn(g, x, *wp):
+        assert len(wp) == 2 * num_layers
+        ws = [wp[2 * i] for i in range(num_layers)]
+        pres = [wp[2 * i + 1] for i in range(num_layers)]
+        xins = [x] + [jnp.maximum(p, 0.0) for p in pres[:-1]]
+        grads = [None] * num_layers
+        for i in range(num_layers - 1, -1, -1):
+            relu = i + 1 != num_layers
+            g, gw, gb = _ref.dense_bwd_ref(g, xins[i], ws[i], pres[i], relu)
+            grads[i] = (gw, gb)
+        out = [g]
+        for gw, gb in grads:
+            out.extend([gw, gb])
+        return tuple(out)
+    return fn
+
+
+# --------------------------------------------------------------------------
 # Backward pieces
 # --------------------------------------------------------------------------
 

@@ -1,0 +1,261 @@
+"""Golden-fixture export: small input/output tensors for every refexec
+kernel, computed by the jnp oracles in ``compile/kernels/ref.py`` (and the
+chain/attention builders in ``compile/model.py``), written as TSV fixtures
+that ``rust/tests/golden.rs`` replays against the Rust reference backend.
+
+Fixture format (one file per kernel case, ``rust/tests/fixtures/*.tsv``)::
+
+    # golden fixture: <case name>
+    kind\t<artifact kind>
+    tol\t<relative tolerance for the Rust comparison>
+    in\t<f32|i32>\t<d0xd1x...>\t<space-separated values>
+    ...
+    out\t<d0xd1x...>\t<values>
+    ...
+
+Values are printed with 9 significant digits, which round-trips float32
+exactly — "bit-close" on the Rust side means element-wise
+``|got - want| <= tol * max(1, |want|)``.
+
+Run ``NEUTRON_WRITE_FIXTURES=1 pytest tests/test_export_fixtures.py`` to
+(re)write the fixtures; the plain pytest run re-derives everything and
+asserts the committed files match character-for-character, so oracle
+drift is caught on the Python side instead of surfacing as a mysterious
+Rust CI failure.
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+FIXTURE_DIR = os.path.normpath(os.path.join(
+    os.path.dirname(__file__), "..", "..", "rust", "tests", "fixtures"))
+
+
+def _fmt(v) -> str:
+    return format(float(np.float32(v)), ".9g")
+
+
+def _render(name, kind, tol, ins, outs) -> str:
+    lines = [f"# golden fixture: {name}", f"kind\t{kind}", f"tol\t{tol:g}"]
+    for dtype, arr in ins:
+        arr = np.asarray(arr)
+        shape = "x".join(str(d) for d in arr.shape)
+        if dtype == "i32":
+            vals = " ".join(str(int(v)) for v in arr.reshape(-1))
+        else:
+            vals = " ".join(_fmt(v) for v in arr.astype(np.float32).reshape(-1))
+        lines.append(f"in\t{dtype}\t{shape}\t{vals}")
+    for arr in outs:
+        arr = np.atleast_1d(np.asarray(arr, dtype=np.float32))
+        shape = "x".join(str(d) for d in arr.shape)
+        vals = " ".join(_fmt(v) for v in arr.reshape(-1))
+        lines.append(f"out\t{shape}\t{vals}")
+    return "\n".join(lines) + "\n"
+
+
+def build_cases() -> dict:
+    """Every refexec kernel, smallest interesting shapes, fixed seed."""
+    rng = np.random.RandomState(20260731)
+
+    def f32(*shape):
+        return rng.standard_normal(shape).astype(np.float32)
+
+    cases = {}
+
+    # ---- dense fwd/bwd ----------------------------------------------------
+    x, w, b = f32(6, 5), f32(5, 4), f32(4)
+    g, pre = f32(6, 4), f32(6, 4)
+    cases["dense_relu_fwd"] = _render(
+        "dense_relu_fwd", "dense_relu_fwd", 2e-6,
+        [("f32", x), ("f32", w), ("f32", b)], model.dense_relu_fwd(x, w, b))
+    cases["dense_linear_fwd"] = _render(
+        "dense_linear_fwd", "dense_linear_fwd", 2e-6,
+        [("f32", x), ("f32", w), ("f32", b)], model.dense_linear_fwd(x, w, b))
+    cases["dense_relu_bwd"] = _render(
+        "dense_relu_bwd", "dense_relu_bwd", 2e-6,
+        [("f32", g), ("f32", x), ("f32", w), ("f32", pre)],
+        ref.dense_bwd_ref(g, x, w, pre, relu=True))
+    cases["dense_linear_bwd"] = _render(
+        "dense_linear_bwd", "dense_linear_bwd", 2e-6,
+        [("f32", g), ("f32", x), ("f32", w), ("f32", pre)],
+        ref.dense_bwd_ref(g, x, w, pre, relu=False))
+
+    # ---- aggregation (CSR-consistent, zero-degree rows, zero-weight and
+    # beyond-row_ptr padded edges) -----------------------------------------
+    c, s, t = 7, 9, 4
+    degrees = [3, 0, 2, 0, 5, 1, 0]
+    live = sum(degrees)
+    e_bucket = 16
+    col = rng.randint(0, s, size=live).astype(np.int32)
+    ew = rng.standard_normal(live).astype(np.float32)
+    ew[2] = 0.0  # a live edge with weight zero
+    edge_dst = np.repeat(np.arange(c, dtype=np.int32), degrees)
+    row_ptr = np.concatenate(
+        [[0], np.cumsum(degrees)]).astype(np.int32)
+    pad = e_bucket - live
+    col_p = np.concatenate([col, np.zeros(pad, np.int32)])
+    ew_p = np.concatenate([ew, np.zeros(pad, np.float32)])
+    dst_p = np.concatenate([edge_dst, np.zeros(pad, np.int32)])
+    xsrc = f32(s, t)
+    agg_out = ref.edge_spmm_ref(dst_p, col_p, ew_p, xsrc, num_rows=c)
+    agg_ins = [("i32", row_ptr), ("i32", dst_p), ("i32", col_p),
+               ("f32", ew_p), ("f32", xsrc)]
+    cases["agg_scatter"] = _render(
+        "agg_scatter", "agg_scatter", 2e-6, agg_ins, (agg_out,))
+    # same contract, CSR row-blocked lowering on the Rust side
+    cases["agg_pallas"] = _render(
+        "agg_pallas", "agg_pallas", 2e-6, agg_ins, (agg_out,))
+
+    # ---- edge softmax (one dst row with no valid edges) -------------------
+    c2, s2, e2 = 5, 6, 12
+    col2 = rng.randint(0, s2, size=e2).astype(np.int32)
+    dst2 = np.sort(rng.randint(0, c2, size=e2)).astype(np.int32)
+    valid = (rng.rand(e2) > 0.25).astype(np.float32)
+    valid[dst2 == 3] = 0.0  # row 3: only invalid edges
+    s_src, s_dst = f32(s2), f32(c2)
+    alpha = model.edge_softmax_sized(c2)(col2, dst2, valid, s_src, s_dst)
+    cases["edge_softmax"] = _render(
+        "edge_softmax", "edge_softmax", 5e-5,
+        [("i32", col2), ("i32", dst2), ("f32", valid),
+         ("f32", s_src), ("f32", s_dst)], (alpha,))
+
+    # ---- masked softmax cross-entropy -------------------------------------
+    bsz, kp, kvalid = 5, 8, 6
+    logits = f32(bsz, kp)
+    labels = rng.randint(0, kvalid, size=bsz).astype(np.int32)
+    smask = np.array([1, 1, 0, 1, 0], np.float32)
+    cmask = np.array([0.0] * kvalid + [-1e30] * (kp - kvalid), np.float32)
+    loss, grad, correct = ref.softmax_xent_ref(logits, labels, smask, cmask)
+    cases["softmax_xent"] = _render(
+        "softmax_xent", "softmax_xent", 5e-5,
+        [("f32", logits), ("i32", labels), ("f32", smask), ("f32", cmask)],
+        (loss, grad, correct))
+
+    # ---- attention scores --------------------------------------------------
+    h = f32(6, 4)
+    a1, a2 = f32(4), f32(4)
+    cases["attn_scores"] = _render(
+        "attn_scores", "attn_scores", 2e-6,
+        [("f32", h), ("f32", a1), ("f32", a2)], model.attn_scores(h, a1, a2))
+
+    # ---- link-prediction loss (jax autodiff vs Rust closed form) ----------
+    hlp = f32(7, 3)
+    src = np.array([0, 2, 4, 0], np.int32)
+    dst = np.array([1, 3, 5, 0], np.int32)
+    neg = np.array([6, 0, 2, 0], np.int32)
+    mask = np.array([1, 1, 1, 0], np.float32)
+    lloss, lgrad = ref.lp_loss_ref(hlp, src, dst, neg, mask)
+    cases["lp_loss"] = _render(
+        "lp_loss", "lp_loss", 5e-5,
+        [("f32", hlp), ("i32", src), ("i32", dst), ("i32", neg),
+         ("f32", mask)], (lloss, lgrad))
+
+    # ---- fused nn_chain (3 layers: relu, relu, linear head) ---------------
+    xc = f32(5, 4)
+    w0, b0 = f32(4, 3), f32(3)
+    w1, b1 = f32(3, 3), f32(3)
+    w2, b2 = f32(3, 2), f32(2)
+    fwd = model.nn_chain_fwd_sized(3)(xc, w0, b0, w1, b1, w2, b2)
+    cases["nn_chain_fwd"] = _render(
+        "nn_chain_fwd", "nn_chain_fwd", 2e-6,
+        [("f32", xc), ("f32", w0), ("f32", b0), ("f32", w1), ("f32", b1),
+         ("f32", w2), ("f32", b2)], fwd)
+    pres = fwd[1:]
+    gc = f32(5, 2)
+    bwd = model.nn_chain_bwd_sized(3)(
+        gc, xc, w0, pres[0], w1, pres[1], w2, pres[2])
+    cases["nn_chain_bwd"] = _render(
+        "nn_chain_bwd", "nn_chain_bwd", 2e-6,
+        [("f32", gc), ("f32", xc), ("f32", w0), ("f32", pres[0]),
+         ("f32", w1), ("f32", pres[1]), ("f32", w2), ("f32", pres[2])], bwd)
+
+    return cases
+
+
+def _parse_rows(text):
+    """(kind, tol, [(tag, dtype, shape, np.array)]) for drift comparison."""
+    kind, tol, rows = None, 1e-6, []
+    for line in text.splitlines():
+        if line.startswith("#") or not line.strip():
+            continue
+        fields = line.split("\t")
+        if fields[0] == "kind":
+            kind = fields[1]
+        elif fields[0] == "tol":
+            tol = float(fields[1])
+        elif fields[0] == "in":
+            dt = np.int32 if fields[1] == "i32" else np.float32
+            rows.append(("in", fields[1], fields[2],
+                         np.array(fields[3].split(" "), dtype=dt)))
+        elif fields[0] == "out":
+            rows.append(("out", "f32", fields[1],
+                         np.array(fields[2].split(" "), dtype=np.float32)))
+    return kind, tol, rows
+
+
+def _fixture_drifted(committed, fresh):
+    """True when the committed fixture meaningfully differs from a fresh
+    derivation. Exact text match passes fast; otherwise values may differ
+    by a few ulps across CPUs/XLA codegen, so compare numerically at a
+    quarter of the fixture's own tolerance."""
+    if committed == fresh:
+        return False
+    ck, ct, crows = _parse_rows(committed)
+    fk, ft, frows = _parse_rows(fresh)
+    if (ck, ct) != (fk, ft) or len(crows) != len(frows):
+        return True
+    for (tag_c, dt_c, sh_c, a), (tag_f, dt_f, sh_f, b) in zip(crows, frows):
+        if (tag_c, dt_c, sh_c) != (tag_f, dt_f, sh_f) or a.shape != b.shape:
+            return True
+        if dt_c == "i32":
+            if not np.array_equal(a, b):
+                return True
+        elif not np.allclose(a, b, rtol=ct / 4, atol=ct / 4):
+            return True
+    return False
+
+
+def test_fixtures_match_oracles():
+    """Committed fixtures must match a fresh oracle derivation (or be
+    (re)written when NEUTRON_WRITE_FIXTURES=1)."""
+    cases = build_cases()
+    write = os.environ.get("NEUTRON_WRITE_FIXTURES") == "1"
+    if write:
+        os.makedirs(FIXTURE_DIR, exist_ok=True)
+    missing = []
+    for name, text in sorted(cases.items()):
+        path = os.path.join(FIXTURE_DIR, name + ".tsv")
+        if write:
+            with open(path, "w") as fh:
+                fh.write(text)
+            continue
+        if not os.path.exists(path):
+            missing.append(name)
+            continue
+        with open(path) as fh:
+            committed = fh.read()
+        assert not _fixture_drifted(committed, text), (
+            f"fixture {name} drifted from the ref.py oracle — regenerate "
+            f"with NEUTRON_WRITE_FIXTURES=1 if the oracle change is "
+            f"intentional")
+    if missing:
+        pytest.fail(
+            f"missing fixtures {missing}; run with NEUTRON_WRITE_FIXTURES=1")
+
+
+def test_fixture_coverage_is_complete():
+    """Every refexec kernel kind is pinned by at least one fixture."""
+    kinds = {c.split("kind\t")[1].split("\n")[0] for c in build_cases().values()}
+    assert kinds >= {
+        "dense_relu_fwd", "dense_linear_fwd", "dense_relu_bwd",
+        "dense_linear_bwd", "agg_scatter", "agg_pallas", "edge_softmax",
+        "softmax_xent", "attn_scores", "lp_loss", "nn_chain_fwd",
+        "nn_chain_bwd",
+    }

@@ -4,9 +4,11 @@
 //! crop). These are the numbers the event sim schedules (DESIGN.md §4)
 //! and the §Perf baseline for L1/L3 optimization.
 //!
-//! The final section measures the batched asynchronous dispatch the
+//! The final sections measure the batched asynchronous dispatch the
 //! engines use (submit all jobs, then wait) against the serial
-//! one-`run`-at-a-time loop it replaced.
+//! one-`run`-at-a-time loop it replaced, and the CSR row-blocked
+//! aggregation kernel against the COO scatter baseline on the largest
+//! builtin bucket across intra-job thread teams.
 
 use std::time::Instant;
 
@@ -139,6 +141,51 @@ fn main() -> anyhow::Result<()> {
             serial / batched.max(1e-12)
         );
     }
+    // CSR row-blocked kernel vs the COO scatter baseline on the LARGEST
+    // builtin bucket (fs-scale: s=65536, c=65536, e=2^21), across
+    // intra-job thread teams. Acceptance: csr@intra=4 beats scatter.
+    println!("\n# aggregation: COO scatter vs CSR row-blocked (largest builtin bucket)");
+    {
+        let (v, e) = (65_536usize, 2_621_440usize);
+        let g = generate::rmat(v, e, generate::RMAT_SKEWED, 11).gcn_normalized();
+        let x = Matrix::from_fn(v, 32, |_, _| rng.gen_f32_range(-1.0, 1.0));
+        let mut scatter_ms = f64::NAN;
+        let mut csr4_ms = f64::NAN;
+        for (pallas, intra) in [(false, 1usize), (true, 1), (true, 2), (true, 4)] {
+            let pool = ExecutorPool::with_intra(&store, 1, intra)?;
+            let ops = Ops::new(&store, &pool, pallas);
+            let art = ops.agg_artifact(v - 1, e, v)?;
+            let c_bucket = art.inputs[0].shape[0] - 1;
+            let e_bucket = art.inputs[1].shape[0];
+            let plan = ChunkPlan::build(&g, c_bucket.min(v), c_bucket, e_bucket);
+            let pass = &plan.chunks[0].passes[0];
+            let rows = plan.chunks[0].num_rows();
+            let _ = ops.agg_pass(art, pass, rows, &x)?; // warmup + layout cache
+            let med = median(
+                (0..5)
+                    .map(|_| ops.agg_pass(art, pass, rows, &x).map(|r| r.1))
+                    .collect::<Result<Vec<f64>, _>>()?,
+            );
+            let name = if pallas { "csr_blocked" } else { "scatter" };
+            println!(
+                "agg[{name}] intra={intra} e_bucket={e_bucket} live={}: {:.3} ms ({:.1} Medges/s)",
+                pass.live_edges,
+                med * 1e3,
+                pass.live_edges as f64 / med / 1e6
+            );
+            if !pallas {
+                scatter_ms = med * 1e3;
+            } else if intra == 4 {
+                csr4_ms = med * 1e3;
+            }
+        }
+        println!(
+            "csr_blocked@4 vs scatter: {:.2}x {}",
+            scatter_ms / csr4_ms.max(1e-12),
+            if csr4_ms < scatter_ms { "(CSR wins)" } else { "(scatter wins?!)" }
+        );
+    }
+
     println!("total artifact executions: {}", pool.executed());
     Ok(())
 }

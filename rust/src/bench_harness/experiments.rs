@@ -29,8 +29,9 @@ pub fn run_experiment(name: &str, store: &ArtifactStore, fast: bool) -> crate::R
         "table3" => table3(store, fast)?,
         "table4" => table4(store)?,
         "exec_scale" => exec_scale(store, fast)?,
+        "kernel_scale" => kernel_scale(store, fast)?,
         _ => anyhow::bail!(
-            "unknown experiment '{name}' (try fig3/fig4/fig5/fig8/fig10..fig16/table2/table3/table4/exec_scale/all)"
+            "unknown experiment '{name}' (try fig3/fig4/fig5/fig8/fig10..fig16/table2/table3/table4/exec_scale/kernel_scale/all)"
         ),
     };
     Ok(out)
@@ -38,7 +39,7 @@ pub fn run_experiment(name: &str, store: &ArtifactStore, fast: bool) -> crate::R
 
 pub const ALL: &[&str] = &[
     "fig3", "fig4", "fig5", "fig8", "fig10", "fig11", "fig12", "fig13", "fig14", "fig15",
-    "fig16", "table2", "table3", "table4", "exec_scale",
+    "fig16", "table2", "table3", "table4", "exec_scale", "kernel_scale",
 ];
 
 fn run_cfg(store: &ArtifactStore, cfg: &RunConfig) -> crate::Result<Vec<EpochReport>> {
@@ -48,7 +49,7 @@ fn run_cfg(store: &ArtifactStore, cfg: &RunConfig) -> crate::Result<Vec<EpochRep
         Some(d) => Dataset::generate_with_dim(p, d, cfg.seed),
         None => Dataset::generate(p, cfg.seed),
     };
-    let pool = ExecutorPool::new(store, cfg.executor_threads)?;
+    let pool = ExecutorPool::with_intra(store, cfg.executor_threads, cfg.intra_threads)?;
     let ctx = Ctx { cfg, data: &data, store, pool: &pool };
     parallel::run(&ctx)
 }
@@ -375,7 +376,7 @@ pub fn run_cfg_with_sim(
     cfg.validate()?;
     let p = profile(&cfg.profile).unwrap();
     let data = Dataset::generate(p, cfg.seed);
-    let pool = ExecutorPool::new(store, cfg.executor_threads)?;
+    let pool = ExecutorPool::with_intra(store, cfg.executor_threads, cfg.intra_threads)?;
     let ctx = Ctx { cfg, data: &data, store, pool: &pool };
     // engines do not expose their sim; approximate the series from comp
     // fraction — we re-run through the TP engine when possible
@@ -600,6 +601,102 @@ fn exec_scale(store: &ArtifactStore, fast: bool) -> crate::Result<String> {
             first.0,
             last.0,
             first.1 / last.1.max(1e-12)
+        )
+        .unwrap();
+    }
+    Ok(s)
+}
+
+// ---------------------------------------------------------------------------
+// Kernel scaling: measured device time of the two aggregation lowerings
+// (COO scatter baseline vs CSR row-blocked) across intra-job thread teams
+// on the largest builtin bucket, plus fused nn_chain vs per-layer dense
+// dispatch. This is the measurement backing the graph-native kernel
+// refactor; `benches/spmm_exec.rs` has the matching micro-bench.
+// ---------------------------------------------------------------------------
+fn kernel_scale(store: &ArtifactStore, fast: bool) -> crate::Result<String> {
+    use crate::graph::chunk::ChunkPlan;
+    use crate::graph::generate;
+    use crate::model::params::DenseLayer;
+    use crate::parallel::common;
+    use crate::runtime::ops::Ops;
+    use crate::tensor::Matrix;
+    use crate::util::Rng;
+
+    fn median(mut v: Vec<f64>) -> f64 {
+        v.sort_by(f64::total_cmp);
+        v[v.len() / 2]
+    }
+
+    let (v, e, samples) =
+        if fast { (8192usize, 409_600usize, 3usize) } else { (65_536, 2_621_440, 5) };
+    let mut rng = Rng::seed_from_u64(17);
+    let g = generate::rmat(v, e, generate::RMAT_SKEWED, 7).gcn_normalized();
+    let x = Matrix::from_fn(v, crate::tensor::DIM_TILE, |_, _| rng.gen_f32_range(-1.0, 1.0));
+    let mut s = String::from(
+        "# kernel_scale — aggregation device ms (median) by lowering and\n\
+         # intra_threads on the largest builtin bucket, then fused nn_chain vs\n\
+         # per-layer dense chains (wall ms for a 4-worker 3-layer NN phase).\n\
+         section,impl,intra_threads,device_ms,medges_per_s\n",
+    );
+    for &intra in &[1usize, 2, 4] {
+        let pool = ExecutorPool::with_intra(store, 1, intra)?;
+        for pallas in [false, true] {
+            if !pallas && intra > 1 {
+                continue; // the scatter baseline is single-threaded by design
+            }
+            let ops = Ops::new(store, &pool, pallas);
+            let art = ops.agg_artifact(v - 1, e, v)?;
+            let c_bucket = art.inputs[0].shape[0] - 1;
+            let e_bucket = art.inputs[1].shape[0];
+            let plan = ChunkPlan::build(&g, c_bucket.min(v), c_bucket, e_bucket);
+            let pass = &plan.chunks[0].passes[0];
+            let rows = plan.chunks[0].num_rows();
+            let _ = ops.agg_pass(art, pass, rows, &x)?; // warmup (layout cache)
+            let med = median(
+                (0..samples)
+                    .map(|_| ops.agg_pass(art, pass, rows, &x).map(|r| r.1))
+                    .collect::<crate::Result<Vec<f64>>>()?,
+            );
+            writeln!(
+                s,
+                "agg,{},{intra},{:.3},{:.1}",
+                if pallas { "csr_blocked" } else { "scatter" },
+                med * 1e3,
+                pass.live_edges as f64 / med / 1e6
+            )
+            .unwrap();
+        }
+    }
+
+    writeln!(s, "section,mode,layers,wall_ms,-").unwrap();
+    let pool = ExecutorPool::with_intra(store, 2, 1)?;
+    let mut rng2 = Rng::seed_from_u64(23);
+    let layers = vec![
+        DenseLayer::glorot(602, 256, &mut rng2),
+        DenseLayer::glorot(256, 256, &mut rng2),
+        DenseLayer::glorot(256, 64, &mut rng2),
+    ];
+    let xs: Vec<Matrix> = (0..4)
+        .map(|_| Matrix::from_fn(1024, 602, |_, _| rng2.gen_f32_range(-1.0, 1.0)))
+        .collect();
+    for fused in [false, true] {
+        let ops = Ops::new(store, &pool, false).with_fused(fused);
+        let _ = common::nn_chain_fwd_batch(&ops, &layers, &xs)?; // warmup
+        let med = median(
+            (0..samples)
+                .map(|_| -> crate::Result<f64> {
+                    let t0 = std::time::Instant::now();
+                    let _ = common::nn_chain_fwd_batch(&ops, &layers, &xs)?;
+                    Ok(t0.elapsed().as_secs_f64())
+                })
+                .collect::<crate::Result<Vec<f64>>>()?,
+        );
+        writeln!(
+            s,
+            "nn_chain,{},3,{:.3},-",
+            if fused { "fused" } else { "per_layer" },
+            med * 1e3
         )
         .unwrap();
     }

@@ -65,10 +65,12 @@ impl FromStr for System {
 /// Which lowering of the aggregation artifact to execute.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum AggImpl {
-    /// XLA scatter-add lowering (fast on the CPU PJRT backend)
-    #[default]
+    /// single-threaded COO scatter-add lowering — retained as the
+    /// differential-testing baseline
     Scatter,
-    /// Pallas CSR kernel lowering (paper-faithful structure)
+    /// CSR row-blocked kernel (paper-faithful structure): disjoint
+    /// cache-sized row blocks, block-parallel under `intra_threads`
+    #[default]
     Pallas,
 }
 
@@ -179,6 +181,16 @@ pub struct RunConfig {
     pub net: NetModel,
     /// PJRT executor pool size; 0 = auto
     pub executor_threads: usize,
+    /// intra-job kernel team width for the CSR row-blocked aggregation
+    /// (scoped threads inside one artifact call); 0 = auto. Defaults to 1
+    /// (opt-in): stacking the team on top of `executor_threads` can
+    /// oversubscribe cores and add noise to measured `device_secs`.
+    /// Numerics are bit-identical for any value — blocks own their rows.
+    pub intra_threads: usize,
+    /// run NN phases through fused `nn_chain` artifacts (one ticket per
+    /// worker per phase) where the plan has a matching chain; `false`
+    /// forces per-layer dense dispatch (differential testing)
+    pub fused_nn: bool,
     /// override the profile's feature dimension (Fig 14 sweep)
     pub feat_dim: Option<usize>,
     /// mini-batch fan-outs, DistDGL style "(25,10)"
@@ -198,13 +210,15 @@ impl Default for RunConfig {
             epochs: 1,
             lr: 0.01,
             seed: 42,
-            agg_impl: AggImpl::Scatter,
+            agg_impl: AggImpl::default(), // CSR row-blocked kernel
             chunks: 0,
             chunk_sched: true,
             pipeline: true,
             device_mem_mb: 16 * 1024,
             net: NetModel::default(),
             executor_threads: 0,
+            intra_threads: 1,
+            fused_nn: true,
             feat_dim: None,
             fanouts: vec![25, 10],
             batch_size: 1024,
@@ -247,6 +261,7 @@ impl RunConfig {
             "chunks" => self.chunks = want_int()?,
             "device_mem_mb" => self.device_mem_mb = want_int()?,
             "executor_threads" => self.executor_threads = want_int()?,
+            "intra_threads" => self.intra_threads = want_int()?,
             "batch_size" => self.batch_size = want_int()?,
             "feat_dim" => self.feat_dim = Some(want_int()?),
             "seed" => self.seed = want_int()? as u64,
@@ -257,6 +272,10 @@ impl RunConfig {
             }
             "pipeline" => {
                 self.pipeline =
+                    v.as_bool().ok_or_else(|| anyhow::anyhow!("{key}: expected bool"))?;
+            }
+            "fused_nn" => {
+                self.fused_nn =
                     v.as_bool().ok_or_else(|| anyhow::anyhow!("{key}: expected bool"))?;
             }
             "fanouts" => {
@@ -317,6 +336,8 @@ mod tests {
             layers = 3
             lr = 0.05
             pipeline = false
+            fused_nn = false
+            intra_threads = 4
             fanouts = [25, 15, 10]
             [net]
             bandwidth_gbps = 10.0
@@ -327,6 +348,8 @@ mod tests {
         assert_eq!(c.workers, 8);
         assert_eq!(c.layers, 3);
         assert!(!c.pipeline);
+        assert!(!c.fused_nn);
+        assert_eq!(c.intra_threads, 4);
         assert_eq!(c.fanouts, vec![25, 15, 10]);
         assert!((c.net.bandwidth_gbps - 10.0).abs() < 1e-9);
         assert!((c.net.gpu_speedup - 20.0).abs() < 1e-9);

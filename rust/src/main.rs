@@ -55,6 +55,7 @@ fn print_usage() {
          USAGE:\n  neutron-tp train [--config F] [--profile P] [--system S] [--model M]\n\
          \x20                  [--workers N] [--layers L] [--epochs E] [--lr X]\n\
          \x20                  [--agg-impl scatter|pallas] [--no-pipeline] [--no-chunk-sched]\n\
+         \x20                  [--executor-threads N] [--intra-threads N] [--no-fused-nn]\n\
          \x20                  [--chunks C] [--device-mem-mb MB] [--feat-dim D] [--task nc|lp]\n\
          \x20 neutron-tp bench <{}|all> [--out DIR] [--fast]\n\
          \x20 neutron-tp inspect [--artifacts DIR]\n\n\
@@ -100,6 +101,9 @@ fn apply_flag_overrides(cfg: &mut RunConfig, flags: &Flags) -> anyhow::Result<()
     if let Some(v) = flags.get("executor-threads") {
         cfg.executor_threads = v.parse()?;
     }
+    if let Some(v) = flags.get("intra-threads") {
+        cfg.intra_threads = v.parse()?;
+    }
     if let Some(v) = flags.get("lr") {
         cfg.lr = v.parse()?;
     }
@@ -114,6 +118,9 @@ fn apply_flag_overrides(cfg: &mut RunConfig, flags: &Flags) -> anyhow::Result<()
     }
     if flags.has("no-pipeline") {
         cfg.pipeline = false;
+    }
+    if flags.has("no-fused-nn") {
+        cfg.fused_nn = false;
     }
     if flags.has("no-chunk-sched") {
         cfg.chunk_sched = false;
@@ -139,7 +146,7 @@ fn train(flags: &Flags) -> anyhow::Result<()> {
         Some(d) => Dataset::generate_with_dim(p, d, cfg.seed),
         None => Dataset::generate(p, cfg.seed),
     };
-    let pool = ExecutorPool::new(&store, cfg.executor_threads)?;
+    let pool = ExecutorPool::with_intra(&store, cfg.executor_threads, cfg.intra_threads)?;
     let ctx = Ctx { cfg: &cfg, data: &data, store: &store, pool: &pool };
     let reports = parallel::run(&ctx)?;
     for (e, r) in reports.iter().enumerate() {

@@ -6,6 +6,13 @@
 //! (`runtime::executor` design note): all independent jobs of a phase are
 //! submitted before any ticket is waited on, and tickets are drained in
 //! submission order so reductions stay deterministic.
+//!
+//! NN chains additionally route through the fused `nn_chain` artifacts
+//! when the plan has a matching chain (`ops.fused`, `config::fused_nn`):
+//! an L-layer phase is then ONE ticket per worker instead of L, removing
+//! L-1 queue round-trips from the hot path while producing bit-identical
+//! caches/gradients (the fused kernel chains the same dense cores, and
+//! zero-padded rows carry exactly-zero gradients through the chain).
 
 use std::sync::Arc;
 
@@ -31,15 +38,22 @@ pub fn modeled(cfg: &RunConfig, measured: f64) -> f64 {
     measured / cfg.net.gpu_speedup.max(1e-9)
 }
 
-/// Forward dense chains over every worker's rows at once: layer by layer,
-/// all workers' jobs are submitted before any is waited on. Returns the
-/// per-worker caches and device seconds.
+/// Forward dense chains over every worker's rows at once. When the plan
+/// has a matching fused `nn_chain_fwd` artifact (and `ops.fused` is on),
+/// the whole L-layer stack is ONE ticket per worker; otherwise it falls
+/// back to layer-by-layer dispatch. Either way all workers' jobs are
+/// submitted before any is waited on, and the resulting caches are
+/// bit-identical (the fused kernel chains the same dense cores). Returns
+/// the per-worker caches and device seconds.
 pub fn nn_chain_fwd_batch(
     ops: &Ops,
     layers: &[DenseLayer],
     xs: &[Matrix],
 ) -> crate::Result<(Vec<ChainCache>, Vec<f64>)> {
     let n = xs.len();
+    if let Some(out) = try_fused_fwd(ops, layers, xs)? {
+        return Ok(out);
+    }
     let mut hs: Vec<Matrix> = xs.to_vec();
     let mut acts: Vec<Vec<(Matrix, Matrix)>> = (0..n).map(|_| Vec::new()).collect();
     let mut secs = vec![0.0f64; n];
@@ -64,6 +78,42 @@ pub fn nn_chain_fwd_batch(
     Ok((caches, secs))
 }
 
+/// Fused forward: probe once (worker batches differ by at most one row,
+/// so availability is uniform), then submit every worker's single chain
+/// job before waiting. `Ok(None)` -> caller uses the per-layer path.
+#[allow(clippy::type_complexity)]
+fn try_fused_fwd(
+    ops: &Ops,
+    layers: &[DenseLayer],
+    xs: &[Matrix],
+) -> crate::Result<Option<(Vec<ChainCache>, Vec<f64>)>> {
+    if !ops.fused || layers.is_empty() || xs.is_empty() {
+        return Ok(None);
+    }
+    let dims = Ops::chain_dims(layers);
+    let max_b = xs.iter().map(Matrix::rows).max().unwrap_or(0);
+    if xs.iter().any(|x| x.cols() != dims[0])
+        || ops.store.find_nn_chain(true, max_b, &dims).is_none()
+    {
+        return Ok(None);
+    }
+    let mut pending = Vec::with_capacity(xs.len());
+    for x in xs {
+        match ops.submit_nn_chain_fwd(x, layers)? {
+            Some(p) => pending.push(p),
+            None => return Ok(None), // unreachable given the probe; play safe
+        }
+    }
+    let mut caches = Vec::with_capacity(xs.len());
+    let mut secs = Vec::with_capacity(xs.len());
+    for p in pending {
+        let ((out, acts), s) = p.wait()?;
+        caches.push(ChainCache { acts, out });
+        secs.push(s);
+    }
+    Ok(Some((caches, secs)))
+}
+
 /// Forward dense chain over one worker's rows (ReLU except the head).
 pub fn nn_chain_fwd(
     ops: &Ops,
@@ -75,8 +125,10 @@ pub fn nn_chain_fwd(
 }
 
 /// Backward dense chains over every worker at once (same submit-all
-/// protocol as the forward). Returns per-worker `(grad_w, grad_b)` lists
-/// (layer order), the gradients w.r.t. each chain input, and device secs.
+/// protocol as the forward; one fused `nn_chain_bwd` ticket per worker
+/// when the plan has the chain). Returns per-worker `(grad_w, grad_b)`
+/// lists (layer order), the gradients w.r.t. each chain input, and
+/// device secs.
 #[allow(clippy::type_complexity)]
 pub fn nn_chain_bwd_batch(
     ops: &Ops,
@@ -85,6 +137,9 @@ pub fn nn_chain_bwd_batch(
     grad_outs: &[Matrix],
 ) -> crate::Result<(Vec<Vec<(Matrix, Vec<f32>)>>, Vec<Matrix>, Vec<f64>)> {
     let n = grad_outs.len();
+    if let Some(out) = try_fused_bwd(ops, layers, caches, grad_outs)? {
+        return Ok(out);
+    }
     let mut gs: Vec<Matrix> = grad_outs.to_vec();
     let mut grads_rev: Vec<Vec<(Matrix, Vec<f32>)>> = (0..n).map(|_| Vec::new()).collect();
     let mut secs = vec![0.0f64; n];
@@ -107,6 +162,47 @@ pub fn nn_chain_bwd_batch(
         g.reverse();
     }
     Ok((grads_rev, gs, secs))
+}
+
+/// Fused backward: one `nn_chain_bwd` job per worker over the cached
+/// chain input + pre-activations. `Ok(None)` -> per-layer fallback.
+#[allow(clippy::type_complexity)]
+fn try_fused_bwd(
+    ops: &Ops,
+    layers: &[DenseLayer],
+    caches: &[ChainCache],
+    grad_outs: &[Matrix],
+) -> crate::Result<Option<(Vec<Vec<(Matrix, Vec<f32>)>>, Vec<Matrix>, Vec<f64>)>> {
+    if !ops.fused || layers.is_empty() || grad_outs.is_empty() {
+        return Ok(None);
+    }
+    let dims = Ops::chain_dims(layers);
+    let max_b = grad_outs.iter().map(Matrix::rows).max().unwrap_or(0);
+    if caches.len() != grad_outs.len()
+        || caches.iter().any(|c| c.acts.len() != layers.len())
+        || ops.store.find_nn_chain(false, max_b, &dims).is_none()
+    {
+        return Ok(None);
+    }
+    let mut pending = Vec::with_capacity(grad_outs.len());
+    for (cache, g) in caches.iter().zip(grad_outs) {
+        let x0 = &cache.acts[0].0;
+        let pres: Vec<&Matrix> = cache.acts.iter().map(|(_, pre)| pre).collect();
+        match ops.submit_nn_chain_bwd(g, layers, x0, &pres)? {
+            Some(p) => pending.push(p),
+            None => return Ok(None), // unreachable given the probe; play safe
+        }
+    }
+    let mut grads = Vec::with_capacity(grad_outs.len());
+    let mut gxs = Vec::with_capacity(grad_outs.len());
+    let mut secs = Vec::with_capacity(grad_outs.len());
+    for p in pending {
+        let ((gw, gx), s) = p.wait()?;
+        grads.push(gw);
+        gxs.push(gx);
+        secs.push(s);
+    }
+    Ok(Some((grads, gxs, secs)))
 }
 
 /// Backward dense chain; returns per-layer `(grad_w, grad_b)` plus the
@@ -476,6 +572,57 @@ mod tests {
                 0.0,
                 "worker {w} batch/serial divergence"
             );
+        }
+    }
+
+    #[test]
+    fn fused_chain_matches_per_layer_chain_bitwise() {
+        // the fused nn_chain path must be indistinguishable from the
+        // per-layer dense path: same caches, same gradients, bit-for-bit
+        let (store, _) = setup();
+        let pool = ExecutorPool::new(&store, 2).unwrap();
+        let fused = Ops::new(&store, &pool, false);
+        let unfused = Ops::new(&store, &pool, false).with_fused(false);
+        let mut rng = crate::util::Rng::seed_from_u64(11);
+        let mut layers = vec![
+            DenseLayer::glorot(64, 32, &mut rng),
+            DenseLayer::glorot(32, 32, &mut rng),
+        ];
+        // nonzero biases so padded-row transparency is actually exercised
+        for l in &mut layers {
+            for (i, b) in l.b.iter_mut().enumerate() {
+                *b = (i as f32 - 8.0) * 0.01;
+            }
+        }
+        let xs: Vec<Matrix> = (0..3)
+            .map(|w| {
+                Matrix::from_fn(300, 64, |r, c| ((r * 5 + c * 3 + w) % 13) as f32 * 0.1 - 0.6)
+            })
+            .collect();
+        let before = pool.executed();
+        let (cf, _) = nn_chain_fwd_batch(&fused, &layers, &xs).unwrap();
+        assert_eq!(pool.executed() - before, 3, "fused fwd = one ticket per worker");
+        let (cu, _) = nn_chain_fwd_batch(&unfused, &layers, &xs).unwrap();
+        for (a, b) in cf.iter().zip(&cu) {
+            assert_eq!(a.out.max_abs_diff(&b.out), 0.0);
+            for ((xa, pa), (xb, pb)) in a.acts.iter().zip(&b.acts) {
+                assert_eq!(xa.max_abs_diff(xb), 0.0);
+                assert_eq!(pa.max_abs_diff(pb), 0.0);
+            }
+        }
+        let gouts: Vec<Matrix> = (0..3)
+            .map(|w| Matrix::from_fn(300, 32, |r, c| ((r + c + w) % 7) as f32 * 0.05 - 0.1))
+            .collect();
+        let before = pool.executed();
+        let (gf, gxf, _) = nn_chain_bwd_batch(&fused, &layers, &cf, &gouts).unwrap();
+        assert_eq!(pool.executed() - before, 3, "fused bwd = one ticket per worker");
+        let (gu, gxu, _) = nn_chain_bwd_batch(&unfused, &layers, &cu, &gouts).unwrap();
+        for w in 0..3 {
+            assert_eq!(gxf[w].max_abs_diff(&gxu[w]), 0.0);
+            for (a, b) in gf[w].iter().zip(&gu[w]) {
+                assert_eq!(a.0.max_abs_diff(&b.0), 0.0);
+                assert_eq!(a.1, b.1);
+            }
         }
     }
 

@@ -32,6 +32,7 @@ impl<'a> Ctx<'a> {
             self.pool,
             self.cfg.agg_impl == crate::config::AggImpl::Pallas,
         )
+        .with_fused(self.cfg.fused_nn)
     }
 }
 

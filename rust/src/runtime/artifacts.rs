@@ -11,8 +11,11 @@
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{bail, Context};
+
+use super::refexec::CsrCache;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DType {
@@ -52,6 +55,11 @@ pub struct ArtifactStore {
     by_kind: HashMap<String, Vec<String>>,
     pub dim_tile: usize,
     pub row_block: usize,
+    /// Memoized CSR row-block layouts for the aggregation kernels, keyed
+    /// by edge-buffer identity — shared (`Arc`) with every executor pool
+    /// built on this store so a chunk's edge list is segmented once per
+    /// plan, not once per pass execution.
+    csr_cache: Arc<CsrCache>,
 }
 
 impl ArtifactStore {
@@ -77,6 +85,7 @@ impl ArtifactStore {
             by_kind: HashMap::new(),
             dim_tile: 32,
             row_block: 256,
+            csr_cache: Arc::new(CsrCache::new()),
         };
         for line in text.lines() {
             if let Some(rest) = line.strip_prefix('#') {
@@ -132,6 +141,7 @@ impl ArtifactStore {
             by_kind: HashMap::new(),
             dim_tile: crate::tensor::DIM_TILE,
             row_block: crate::tensor::ROW_BLOCK,
+            csr_cache: Arc::new(CsrCache::new()),
         };
         for p in crate::graph::datasets::PROFILES {
             // aot.py: GAT artifacts for every homogeneous profile but the
@@ -150,6 +160,14 @@ impl ArtifactStore {
                 }
                 store.add_dense(b, p.h, p.h, true); // deep layers (fig 13)
                 store.add_dense(b, p.h, kp, false); // head
+                // fused NN chains: the whole L-layer stack (d -> h^(L-1)
+                // -> kp) as ONE artifact per direction, so an NN phase is
+                // one ticket per worker instead of L
+                for &din in &dims_in {
+                    for l in 1..=NN_CHAIN_MAX_LAYERS {
+                        store.add_nn_chain(b, l, din, p.h, kp);
+                    }
+                }
                 store.add_builtin(
                     format!("softmax_xent__b{b}_k{kp}"),
                     "softmax_xent",
@@ -252,6 +270,28 @@ impl ArtifactStore {
         );
     }
 
+    /// Register the fused L-layer dense-chain pair (`nn_chain_fwd` /
+    /// `nn_chain_bwd`) for chain dims `d -> h^(l-1) -> o` at batch bucket
+    /// `b` — mirrors `aot.py::add_nn_chain`.
+    fn add_nn_chain(&mut self, b: usize, l: usize, d: usize, h: usize, o: usize) {
+        let mut dims = Vec::with_capacity(l + 1);
+        dims.push(d);
+        for _ in 0..l.saturating_sub(1) {
+            dims.push(h);
+        }
+        dims.push(o);
+        let mut fwd = vec![spec("x", DType::F32, &[b, dims[0]])];
+        let mut bwd = vec![spec("g", DType::F32, &[b, o]), spec("x", DType::F32, &[b, dims[0]])];
+        for i in 0..l {
+            fwd.push(spec(&format!("w{i}"), DType::F32, &[dims[i], dims[i + 1]]));
+            fwd.push(spec(&format!("b{i}"), DType::F32, &[dims[i + 1]]));
+            bwd.push(spec(&format!("w{i}"), DType::F32, &[dims[i], dims[i + 1]]));
+            bwd.push(spec(&format!("pre{i}"), DType::F32, &[b, dims[i + 1]]));
+        }
+        self.add_builtin(format!("nn_chain_fwd__b{b}_l{l}_d{d}_h{h}_o{o}"), "nn_chain_fwd", fwd);
+        self.add_builtin(format!("nn_chain_bwd__b{b}_l{l}_d{d}_h{h}_o{o}"), "nn_chain_bwd", bwd);
+    }
+
     /// Insert if absent (profiles sharing a bucket dedupe by name, as in
     /// aot.py's `specs.setdefault`).
     fn add_builtin(&mut self, name: String, kind: &str, inputs: Vec<InputSpec>) {
@@ -291,6 +331,12 @@ impl ArtifactStore {
 
     pub fn dir(&self) -> &Path {
         &self.dir
+    }
+
+    /// Shared handle to the CSR row-block layout cache (cloned into every
+    /// executor pool built on this store).
+    pub fn csr_cache(&self) -> Arc<CsrCache> {
+        Arc::clone(&self.csr_cache)
     }
 
     pub fn is_empty(&self) -> bool {
@@ -376,6 +422,31 @@ impl ArtifactStore {
             .unwrap())
     }
 
+    /// Fused dense-chain artifact whose per-layer weight shapes equal the
+    /// `dims` transition chain, with the smallest batch bucket >= `min_b`.
+    /// `None` (not an error) when the chain isn't in the plan — callers
+    /// fall back to per-layer dense dispatch. Weights sit at fixed input
+    /// positions (`x, w0, b0, ...` / `g, x, w0, pre0, ...`), so matching
+    /// is positional — no per-candidate name formatting.
+    pub fn find_nn_chain(&self, fwd: bool, min_b: usize, dims: &[usize]) -> Option<&ArtifactInfo> {
+        if dims.len() < 2 {
+            return None;
+        }
+        let l = dims.len() - 1;
+        let kind = if fwd { "nn_chain_fwd" } else { "nn_chain_bwd" };
+        let (fixed, w0) = if fwd { (1, 1) } else { (2, 2) };
+        self.of_kind(kind)
+            .filter(|a| {
+                a.inputs.len() == fixed + 2 * l
+                    && (0..l).all(|i| {
+                        let w = &a.inputs[w0 + 2 * i].shape;
+                        w.len() == 2 && w[0] == dims[i] && w[1] == dims[i + 1]
+                    })
+            })
+            .filter(|a| a.inputs[0].shape[0] >= min_b)
+            .min_by_key(|a| a.inputs[0].shape[0])
+    }
+
     pub fn find_xent(&self, min_b: usize, k: usize) -> crate::Result<&ArtifactInfo> {
         self.of_kind("softmax_xent")
             .filter(|a| a.dim("cmask", 0) == k && a.dim("logits", 0) >= min_b)
@@ -421,6 +492,8 @@ const MAX_CHUNK_ROWS: usize = 65536;
 const MAX_EDGE_BUCKET: usize = 1 << 21;
 const FIG14_DIMS: [usize; 4] = [128, 256, 512, 1024];
 const LP_PAIR_BUCKETS: [usize; 2] = [1024, 4096];
+/// Deepest fused dense chain in the plan (== the config's `layers` cap).
+const NN_CHAIN_MAX_LAYERS: usize = 8;
 
 fn spec(name: &str, dtype: DType, shape: &[usize]) -> InputSpec {
     InputSpec { name: name.to_string(), dtype, shape: shape.to_vec() }
@@ -551,6 +624,24 @@ mod tests {
     }
 
     #[test]
+    fn nn_chain_selection_matches_dims() {
+        let s = store();
+        // tiny: d=64, h=32, kp=32 -> 2-layer chain [64, 32, 32]
+        let a = s.find_nn_chain(true, 100, &[64, 32, 32]).expect("chain registered");
+        assert_eq!(a.kind, "nn_chain_fwd");
+        assert_eq!(a.dim("x", 0), 128);
+        assert_eq!(a.dim("w0", 0), 64);
+        assert_eq!(a.dim("w1", 1), 32);
+        let b = s.find_nn_chain(false, 600, &[64, 32, 32]).expect("bwd chain registered");
+        assert_eq!(b.kind, "nn_chain_bwd");
+        assert_eq!(b.dim("g", 0), 1024);
+        assert_eq!(b.dim("pre0", 0), 1024);
+        // unknown dims chain -> None (fallback contract, not an error)
+        assert!(s.find_nn_chain(true, 1, &[33, 32]).is_none());
+        assert!(s.find_nn_chain(true, 1 << 24, &[64, 32, 32]).is_none());
+    }
+
+    #[test]
     fn builtin_plan_matches_python_contract_samples() {
         // spot-check names aot.py derives for the tiny and rdt profiles
         let s = ArtifactStore::builtin();
@@ -561,6 +652,8 @@ mod tests {
             "agg_scatter__c1024_e8192_s1024", // tiny single-chunk agg
             "edge_softmax__c1024_e8192_s1024",
             "lp_loss__b1024_h32_p4096",
+            "nn_chain_fwd__b256_l2_d64_h32_o32", // tiny fused 2-layer stack
+            "nn_chain_bwd__b512_l3_d602_h256_o64", // rdt fused 3-layer stack
         ] {
             assert!(s.get(name).is_some(), "builtin plan missing {name}");
         }

@@ -37,6 +37,20 @@
 //! in-order consumer buffer in their channels (bounded in practice by how
 //! far uniform-bucket jobs can run ahead of the much-cheaper accumulate
 //! step).
+//!
+//! # Intra-job parallelism
+//!
+//! Orthogonally to the pool width, each job may fan out **inside** its
+//! executor thread: the CSR row-blocked aggregation kernel
+//! (`refexec::agg_csr`) runs its disjoint row blocks on a scoped thread
+//! team of `intra_threads` threads, joined before the job's timer stops.
+//! `executor_threads` therefore controls how many *jobs* overlap while
+//! `intra_threads` controls how wide one aggregation *kernel* runs; both
+//! are deterministic knobs — results are bit-identical for any setting of
+//! either (block ownership, not scheduling order, decides where every
+//! partial sum lands). The pool also carries the `ArtifactStore`'s shared
+//! [`refexec::CsrCache`] into every worker so row-block layouts are
+//! segmented once per edge buffer, not once per pass execution.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -107,6 +121,7 @@ pub struct ExecutorPool {
     name_to_kind: Arc<HashMap<String, String>>,
     handles: Vec<std::thread::JoinHandle<()>>,
     executed: Arc<AtomicUsize>,
+    intra_threads: usize,
 }
 
 pub struct Ticket(mpsc::Receiver<Reply>);
@@ -119,12 +134,26 @@ impl Ticket {
 
 impl ExecutorPool {
     /// `threads == 0` -> auto (half the cores, clamped to [1, 4]).
+    /// Intra-job parallelism defaults to 1 (serial kernels); use
+    /// [`ExecutorPool::with_intra`] to enable the block-parallel
+    /// aggregation team.
     pub fn new(store: &super::ArtifactStore, threads: usize) -> crate::Result<Self> {
-        let threads = if threads == 0 {
+        Self::with_intra(store, threads, 1)
+    }
+
+    /// Like [`ExecutorPool::new`] but with an explicit intra-job thread
+    /// team width for the CSR row-blocked aggregation kernel
+    /// (`intra_threads == 0` -> auto, same heuristic as the pool width).
+    pub fn with_intra(
+        store: &super::ArtifactStore,
+        threads: usize,
+        intra_threads: usize,
+    ) -> crate::Result<Self> {
+        let auto = || {
             std::thread::available_parallelism().map(|c| c.get()).unwrap_or(2).div_ceil(2).min(4)
-        } else {
-            threads
         };
+        let threads = if threads == 0 { auto() } else { threads };
+        let intra_threads = if intra_threads == 0 { auto() } else { intra_threads };
         let mut name_to_kind = HashMap::new();
         for info in store.infos() {
             name_to_kind.insert(info.name.clone(), info.kind.clone());
@@ -137,14 +166,20 @@ impl ExecutorPool {
         for t in 0..threads {
             let rx = Arc::clone(&rx);
             let executed = Arc::clone(&executed);
+            let cache = store.csr_cache();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("ref-exec-{t}"))
-                    .spawn(move || worker_loop(&rx, &executed))
+                    .spawn(move || worker_loop(&rx, &executed, intra_threads, &cache))
                     .context("spawning executor thread")?,
             );
         }
-        Ok(ExecutorPool { queue: tx, name_to_kind, handles, executed })
+        Ok(ExecutorPool { queue: tx, name_to_kind, handles, executed, intra_threads })
+    }
+
+    /// Effective intra-job thread team width.
+    pub fn intra_threads(&self) -> usize {
+        self.intra_threads
     }
 
     pub fn submit(&self, job: Job) -> crate::Result<Ticket> {
@@ -181,7 +216,12 @@ impl Drop for ExecutorPool {
     }
 }
 
-fn worker_loop(rx: &Mutex<mpsc::Receiver<Request>>, executed: &AtomicUsize) {
+fn worker_loop(
+    rx: &Mutex<mpsc::Receiver<Request>>,
+    executed: &AtomicUsize,
+    intra_threads: usize,
+    cache: &refexec::CsrCache,
+) {
     loop {
         let req = {
             let guard = rx.lock().expect("queue lock");
@@ -190,8 +230,9 @@ fn worker_loop(rx: &Mutex<mpsc::Receiver<Request>>, executed: &AtomicUsize) {
                 Err(_) => return, // pool dropped
             }
         };
+        let ctx = refexec::ExecCtx { artifact: &req.job.artifact, intra_threads, cache };
         let t0 = Instant::now();
-        let reply = refexec::execute(&req.kind, &req.job.args)
+        let reply = refexec::execute_with(&req.kind, &req.job.args, &ctx)
             .map(|outputs| JobResult { outputs, device_secs: t0.elapsed().as_secs_f64() });
         executed.fetch_add(1, Ordering::Relaxed);
         let _ = req.reply.send(reply);
@@ -234,6 +275,18 @@ mod tests {
         let store = ArtifactStore::builtin();
         let pool = ExecutorPool::new(&store, 1).unwrap();
         assert!(pool.submit(Job { artifact: "nope".into(), args: vec![] }).is_err());
+    }
+
+    /// The intra-job team width is plumbed through and the pool stays
+    /// functional with it enabled.
+    #[test]
+    fn with_intra_executes_jobs() {
+        let store = ArtifactStore::builtin();
+        let pool = ExecutorPool::with_intra(&store, 1, 3).unwrap();
+        assert_eq!(pool.intra_threads(), 3);
+        let (job, b, h) = dense_job(&store);
+        let res = pool.run(job).unwrap();
+        assert_eq!(res.outputs[0].len(), b * h);
     }
 
     /// Acceptance: the pool makes progress while >= 2 tickets are still

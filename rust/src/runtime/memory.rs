@@ -24,17 +24,22 @@ impl DeviceMemory {
         Self::new(mb * (1 << 20))
     }
 
+    /// Reserve `bytes`, or fail with `DeviceOom` — checking the budget
+    /// **before** mutating any state, so a caught OOM (the Table 2
+    /// reproduction path) leaves `used`/`peak` exactly as they were and
+    /// subsequent engines sharing the accounting see clean numbers.
     pub fn alloc(&mut self, bytes: usize, what: &str) -> crate::Result<()> {
-        self.used += bytes;
-        self.peak = self.peak.max(self.used);
-        if self.used > self.budget {
+        let would_use = self.used + bytes;
+        if would_use > self.budget {
             bail!(
                 "device OOM allocating {what}: {} MiB used > {} MiB budget \
                  (enable chunk_sched or add workers)",
-                self.used >> 20,
+                would_use >> 20,
                 self.budget >> 20
             );
         }
+        self.used = would_use;
+        self.peak = self.peak.max(self.used);
         Ok(())
     }
 
@@ -98,6 +103,20 @@ mod tests {
         let mut m = DeviceMemory::from_mb(1);
         let e = m.alloc(2 << 20, "big tensor").unwrap_err();
         assert!(e.to_string().contains("OOM"), "{e}");
+    }
+
+    #[test]
+    fn failed_alloc_leaves_accounting_untouched() {
+        // the Table 2 path catches OOMs and keeps going: a refused
+        // allocation must not corrupt used/peak for later engines
+        let mut m = DeviceMemory::from_mb(1);
+        m.alloc(256 << 10, "resident").unwrap();
+        assert!(m.alloc(1 << 20, "overflow").is_err());
+        assert_eq!(m.used(), 256 << 10);
+        assert_eq!(m.peak(), 256 << 10);
+        // the budget headroom is still usable afterwards
+        m.alloc(512 << 10, "retry smaller").unwrap();
+        assert_eq!(m.used(), (256 << 10) + (512 << 10));
     }
 
     #[test]

@@ -2,14 +2,18 @@
 //! hot path. Python never runs here.
 //!
 //! * `artifacts` — manifest parsing / builtin-plan synthesis + shape-bucket
-//!   selection
+//!   selection; owns the shared CSR row-block layout cache
 //! * `executor`  — thread pool with ticket-based asynchronous dispatch
-//!   (see its module docs for the submit-all-then-wait design note)
+//!   (see its module docs for the submit-all-then-wait design note and
+//!   the `intra_threads` intra-job team)
 //! * `refexec`   — pure-Rust reference implementations of every artifact
-//!   kind (the offline stand-in for the PJRT/`xla` execution path)
-//! * `ops`       — typed wrappers (dense/agg/softmax/...) that pad inputs
-//!   to the bucket, run the artifact, crop outputs, and report measured
-//!   device seconds; each has a ticket-returning `submit_*` variant
+//!   kind (the offline stand-in for the PJRT/`xla` execution path): CSR
+//!   row-blocked + COO scatter aggregation lowerings, fused `nn_chain`
+//!   dense stacks, losses, attention
+//! * `ops`       — typed wrappers (dense/agg/softmax/nn_chain/...) that
+//!   pad inputs to the bucket, run the artifact, crop outputs, and report
+//!   measured device seconds; each has a ticket-returning `submit_*`
+//!   variant
 //! * `memory`    — simulated per-worker device memory accounting (the T4
 //!   budget that makes baselines OOM in Table 2)
 

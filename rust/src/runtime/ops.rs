@@ -14,6 +14,7 @@
 use std::sync::Arc;
 
 use crate::graph::chunk::AggPass;
+use crate::model::params::DenseLayer;
 use crate::tensor::Matrix;
 
 use super::artifacts::{ArtifactInfo, ArtifactStore};
@@ -52,11 +53,20 @@ pub struct Ops<'a> {
     pub store: &'a ArtifactStore,
     pub pool: &'a ExecutorPool,
     pub pallas: bool,
+    /// Execute whole NN phases through fused `nn_chain` artifacts (one
+    /// ticket per worker) where the plan has a matching chain; `false`
+    /// forces per-layer dense dispatch (differential testing).
+    pub fused: bool,
 }
 
 impl<'a> Ops<'a> {
     pub fn new(store: &'a ArtifactStore, pool: &'a ExecutorPool, pallas: bool) -> Self {
-        Self { store, pool, pallas }
+        Self { store, pool, pallas, fused: true }
+    }
+
+    pub fn with_fused(mut self, fused: bool) -> Self {
+        self.fused = fused;
+        self
     }
 
     /// Submit `relu?(x @ w + b)`; resolves to `(out, pre_activation)`.
@@ -145,6 +155,130 @@ impl<'a> Ops<'a> {
         let ((gx, gw, gb), secs) =
             self.submit_dense_bwd(grad_out, x, w, pre, relu)?.wait()?;
         Ok((gx, gw, gb, secs))
+    }
+
+    /// The dimension-transition chain of a dense stack (`d0 -> .. -> dL`).
+    pub fn chain_dims(layers: &[DenseLayer]) -> Vec<usize> {
+        let mut dims = Vec::with_capacity(layers.len() + 1);
+        if let Some(first) = layers.first() {
+            dims.push(first.w.rows());
+        }
+        for l in layers {
+            dims.push(l.w.cols());
+        }
+        dims
+    }
+
+    /// Submit the whole L-layer dense chain as ONE fused `nn_chain_fwd`
+    /// job. Resolves to `(out, acts)` where `acts[i] = (layer input,
+    /// pre-activation)` — the same cache the per-layer path produces
+    /// (inputs past layer 0 are reconstructed host-side as
+    /// `relu(pre_{i-1})`, which is exactly what the artifact computed).
+    /// Returns `Ok(None)` when fusion is off or the plan has no matching
+    /// chain artifact; the caller falls back to per-layer dispatch.
+    #[allow(clippy::type_complexity)]
+    pub fn submit_nn_chain_fwd(
+        &self,
+        x: &Matrix,
+        layers: &[DenseLayer],
+    ) -> crate::Result<Option<Pending<(Matrix, Vec<(Matrix, Matrix)>)>>> {
+        if !self.fused || layers.is_empty() {
+            return Ok(None);
+        }
+        let dims = Self::chain_dims(layers);
+        let (b_logical, d0) = x.shape();
+        if d0 != dims[0] {
+            return Ok(None);
+        }
+        let Some(art) = self.store.find_nn_chain(true, b_logical, &dims) else {
+            return Ok(None);
+        };
+        let b_bucket = art.inputs[0].shape[0];
+        let mut args = Vec::with_capacity(1 + 2 * layers.len());
+        args.push(Arg::matrix(&x.padded(b_bucket, d0)));
+        for l in layers {
+            args.push(Arg::matrix(&l.w));
+            args.push(Arg::f32(l.b.clone(), &[l.b.len()]));
+        }
+        let job = Job { artifact: art.name.clone(), args };
+        let widths: Vec<usize> = dims[1..].to_vec();
+        let x0 = x.clone();
+        let pending = Pending::new(self.pool, job, move |mut res| {
+            let lcount = widths.len();
+            let wf = widths[lcount - 1];
+            let out = Matrix::from_vec(b_bucket, wf, take(&mut res.outputs, 0))
+                .cropped(b_logical, wf);
+            let mut acts = Vec::with_capacity(lcount);
+            let mut xin = Some(x0);
+            for (i, &h) in widths.iter().enumerate() {
+                let pre = Matrix::from_vec(b_bucket, h, take(&mut res.outputs, i + 1))
+                    .cropped(b_logical, h);
+                let this_in = xin.take().expect("chain input threaded through");
+                if i + 1 < lcount {
+                    xin = Some(Matrix::from_vec(
+                        b_logical,
+                        h,
+                        pre.data().iter().map(|&z| z.max(0.0)).collect(),
+                    ));
+                }
+                acts.push((this_in, pre));
+            }
+            (out, acts)
+        })?;
+        Ok(Some(pending))
+    }
+
+    /// Submit the whole L-layer dense chain backward as ONE fused
+    /// `nn_chain_bwd` job: resolves to `(per-layer (grad_w, grad_b),
+    /// grad_x)`. `x0` is the chain input, `pres[i]` the cached
+    /// pre-activations. Returns `Ok(None)` on no matching artifact
+    /// (caller falls back to per-layer dispatch).
+    #[allow(clippy::type_complexity)]
+    pub fn submit_nn_chain_bwd(
+        &self,
+        grad_out: &Matrix,
+        layers: &[DenseLayer],
+        x0: &Matrix,
+        pres: &[&Matrix],
+    ) -> crate::Result<Option<Pending<(Vec<(Matrix, Vec<f32>)>, Matrix)>>> {
+        if !self.fused || layers.is_empty() || pres.len() != layers.len() {
+            return Ok(None);
+        }
+        let dims = Self::chain_dims(layers);
+        let (b_logical, d0) = x0.shape();
+        if d0 != dims[0] || grad_out.shape() != (b_logical, dims[dims.len() - 1]) {
+            return Ok(None);
+        }
+        let Some(art) = self.store.find_nn_chain(false, b_logical, &dims) else {
+            return Ok(None);
+        };
+        let b_bucket = art.inputs[0].shape[0];
+        let mut args = Vec::with_capacity(2 + 2 * layers.len());
+        args.push(Arg::matrix(&grad_out.padded(b_bucket, dims[dims.len() - 1])));
+        args.push(Arg::matrix(&x0.padded(b_bucket, d0)));
+        for (l, pre) in layers.iter().zip(pres) {
+            args.push(Arg::matrix(&l.w));
+            args.push(Arg::matrix(&pre.padded(b_bucket, l.w.cols())));
+        }
+        let job = Job { artifact: art.name.clone(), args };
+        let dims_move = dims;
+        let pending = Pending::new(self.pool, job, move |mut res| {
+            let l = dims_move.len() - 1;
+            let gx = Matrix::from_vec(b_bucket, dims_move[0], take(&mut res.outputs, 0))
+                .cropped(b_logical, dims_move[0]);
+            let mut grads = Vec::with_capacity(l);
+            for i in 0..l {
+                let gw = Matrix::from_vec(
+                    dims_move[i],
+                    dims_move[i + 1],
+                    take(&mut res.outputs, 1 + 2 * i),
+                );
+                let gb = take(&mut res.outputs, 2 + 2 * i);
+                grads.push((gw, gb));
+            }
+            (grads, gx)
+        })?;
+        Ok(Some(pending))
     }
 
     /// Pick the aggregation artifact for a chunk-plan geometry.

@@ -10,25 +10,116 @@
 //! is identical, so the coordinator above is unchanged and the L2/L1
 //! parity tests keep their meaning.
 //!
+//! # Graph-native aggregation (CSR layout cache + row blocks)
+//!
+//! Aggregation comes in two lowerings sharing one calling convention:
+//!
+//! * `agg_scatter` — the original single-threaded weighted scatter-add
+//!   over the padded COO edge expansion (`edge_dst`/`col_idx`/`edge_w`).
+//!   Retained as the differential-testing baseline behind
+//!   `config::AggImpl::Scatter`.
+//! * `agg_pallas` — the CSR row-blocked kernel (the default): destination
+//!   rows are split into disjoint cache-sized [`RowBlock`]s (bounded by
+//!   [`BLOCK_ROWS`] rows / [`BLOCK_EDGES`] edges so one block's output
+//!   panel and edge slice stay cache-resident), and the blocks are
+//!   executed by a scoped thread team of `intra_threads` threads **inside
+//!   the job** (passes below [`PAR_MIN_EDGES`] run serial — spawn cost
+//!   would dominate). Each block owns its output rows exclusively, so there are
+//!   no atomics and no write contention; per-row accumulation order is
+//!   identical to the scatter path (the edge arrays are CSR-sorted), so
+//!   the two lowerings agree bit-for-bit and the result is independent of
+//!   `intra_threads`.
+//!
+//! Block boundaries depend only on the pass's `row_ptr` contents, so they
+//! are memoized in the [`CsrCache`] owned by the `ArtifactStore` and
+//! shared by every executor thread: keyed by *edge-buffer identity* (the
+//! owning artifact is implicit in the buffer), a chunk's edge list is
+//! segmented once per plan (in practice once per epoch's first pass)
+//! instead of on every execution of every dim-tile pass. Cache entries
+//! hold a clone of the keyed `Arc`, so a key's address can never be
+//! recycled by a different live buffer — pointer-identity lookups stay
+//! sound across engine rebuilds and allocation-free on the hot path.
+//!
+//! # Fused NN chains
+//!
+//! `nn_chain_fwd` / `nn_chain_bwd` execute an L-layer dense stack (ReLU on
+//! every layer but the head) as **one** artifact call, returning the final
+//! activation plus every pre-activation (forward) or `grad_x` plus every
+//! layer's `(grad_w, grad_b)` (backward). The per-layer math reuses the
+//! exact `dense_*` kernels below, so a fused chain is bit-identical to the
+//! L separate dense jobs it replaces — it just removes L-1 executor
+//! round-trips per worker per phase.
+//!
+//! # Measured `device_secs`
+//!
+//! A job's reported time is the wall time of its whole execution on the
+//! executor thread, *including* the scoped intra-job team (threads are
+//! joined before the timer stops). The number therefore keeps meaning
+//! "device seconds of this kernel at the configured parallelism" — the
+//! same quantity the event sim scheduled before, only smaller when
+//! `intra_threads > 1`, exactly like a faster device would report.
+//!
 //! Conventions (DESIGN.md §Artifact shape strategy):
 //! * padded edges carry `edge_w == 0` and valid indices, padded rows are
 //!   empty, padded classes get an additive `-1e30` mask;
 //! * all float tensors are f32, all index tensors i32;
 //! * every kind returns the tuple its aot.py lowering returned.
 
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
 use super::executor::Arg;
 
 const LEAKY_SLOPE: f32 = 0.2;
 
+/// Max destination rows per CSR block: 256 rows x 32-wide tile x 4 B =
+/// 32 KiB of output panel, comfortably L1/L2-resident.
+pub const BLOCK_ROWS: usize = 256;
+
+/// Max edges per CSR block (col + weight reads); bounds a hub-heavy
+/// block's working set and keeps blocks load-balanced on skewed graphs.
+/// Hard bound except for a single row that alone exceeds it (rows cannot
+/// be split across blocks — a block owns whole output rows).
+pub const BLOCK_EDGES: usize = 32 * 1024;
+
+/// Below this many live edges a pass runs on the serial branch even when
+/// `intra_threads > 1`: spawning a scoped team costs tens of microseconds,
+/// which would dominate (and inflate measured `device_secs` of) small
+/// buckets. Purely a scheduling choice — results are identical.
+pub const PAR_MIN_EDGES: usize = 2 * BLOCK_EDGES;
+
+/// Per-call execution context: the artifact identity plus the intra-job
+/// parallelism knobs the kind-level kernels need.
+pub struct ExecCtx<'a> {
+    /// artifact name (diagnostics; the cache keys on buffer identity)
+    pub artifact: &'a str,
+    /// scoped worker threads inside one aggregation job (>= 1)
+    pub intra_threads: usize,
+    /// memoized CSR row-block layouts, shared across executor threads
+    pub cache: &'a CsrCache,
+}
+
+/// Execute one artifact call with a throwaway context (unit tests, golden
+/// fixtures). The hot path goes through [`execute_with`] so the layout
+/// cache and `intra_threads` survive across calls.
+pub fn execute(kind: &str, args: &[Arg]) -> crate::Result<Vec<Vec<f32>>> {
+    let cache = CsrCache::new();
+    execute_with(kind, args, &ExecCtx { artifact: kind, intra_threads: 1, cache: &cache })
+}
+
 /// Execute one artifact call. `kind` selects the math; shapes come from
 /// the argument metadata (the executor validated arity against the store).
-pub fn execute(kind: &str, args: &[Arg]) -> crate::Result<Vec<Vec<f32>>> {
+pub fn execute_with(kind: &str, args: &[Arg], ctx: &ExecCtx) -> crate::Result<Vec<Vec<f32>>> {
     match kind {
         "dense_relu_fwd" => dense_fwd(args, true),
         "dense_linear_fwd" => dense_fwd(args, false),
         "dense_relu_bwd" => dense_bwd(args, true),
         "dense_linear_bwd" => dense_bwd(args, false),
-        "agg_pallas" | "agg_scatter" => agg(args),
+        "agg_pallas" => agg_csr(args, ctx),
+        "agg_scatter" => agg(args),
+        "nn_chain_fwd" => nn_chain_fwd(args),
+        "nn_chain_bwd" => nn_chain_bwd(args),
         "edge_softmax" => edge_softmax(args),
         "softmax_xent" => softmax_xent(args),
         "attn_scores" => attn_scores(args),
@@ -53,6 +144,125 @@ fn i32_arg<'a>(args: &'a [Arg], i: usize) -> crate::Result<(&'a [i32], &'a [i64]
     }
 }
 
+/// The shared `Arc` behind an i32 argument (identity key for the cache).
+fn i32_arc<'a>(args: &'a [Arg], i: usize) -> crate::Result<&'a Arc<Vec<i32>>> {
+    match args.get(i) {
+        Some(Arg::I32(d, _)) => Ok(d),
+        Some(Arg::F32(..)) => anyhow::bail!("arg {i}: expected i32, got f32"),
+        None => anyhow::bail!("arg {i}: missing"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CSR row-block layout cache
+// ---------------------------------------------------------------------------
+
+/// One cache-sized block of destination rows: rows `[row0, row1)` own the
+/// CSR edge range `[e0, e1)` exclusively.
+#[derive(Clone, Debug)]
+pub struct RowBlock {
+    pub row0: usize,
+    pub row1: usize,
+    pub e0: usize,
+    pub e1: usize,
+}
+
+/// Row-block segmentation of one pass's CSR `row_ptr`.
+#[derive(Debug)]
+pub struct CsrLayout {
+    pub blocks: Vec<RowBlock>,
+    /// total edges covered by the segments (== `row_ptr[last]`)
+    pub live_edges: usize,
+}
+
+struct CacheEntry {
+    /// Keeps the keyed buffer alive so its address can never be recycled
+    /// by a different live allocation while the entry exists — this is
+    /// what makes pointer-identity keys sound.
+    keeper: Arc<Vec<i32>>,
+    layout: Arc<CsrLayout>,
+}
+
+/// Memoized `row_ptr` -> row-block segmentations, keyed by edge-buffer
+/// address (segmentation depends only on the buffer contents, and the
+/// pinned `keeper` makes address identity sound, so lookups stay
+/// allocation-free on the hot path — the owning artifact is implicit in
+/// the buffer). Owned by the `ArtifactStore` and cloned (`Arc`) into
+/// every executor thread.
+#[derive(Default)]
+pub struct CsrCache {
+    map: Mutex<HashMap<usize, CacheEntry>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl CsrCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// The memoized layout for this `row_ptr` buffer, segmenting on a
+    /// miss.
+    pub fn layout(&self, row_ptr: &Arc<Vec<i32>>) -> Arc<CsrLayout> {
+        let key = Arc::as_ptr(row_ptr) as usize;
+        let mut map = self.map.lock().expect("csr cache lock");
+        if let Some(entry) = map.get(&key) {
+            if Arc::ptr_eq(&entry.keeper, row_ptr) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Arc::clone(&entry.layout);
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let layout = Arc::new(build_layout(row_ptr));
+        // miss path only (hits stay O(1)): evict entries whose keyed
+        // buffer is otherwise dead — the cache holds the only Arc, so the
+        // plan that owned it is gone — to avoid pinning stale edge
+        // buffers across multi-config runs while hot layouts survive
+        map.retain(|_, e| Arc::strong_count(&e.keeper) > 1);
+        if map.len() >= 4096 {
+            // backstop against pathological live-plan counts
+            map.clear();
+        }
+        map.insert(key, CacheEntry { keeper: Arc::clone(row_ptr), layout: Arc::clone(&layout) });
+        layout
+    }
+}
+
+/// Greedy segmentation: blocks tile `0..c` in order; a row is admitted
+/// only while the block stays within `BLOCK_ROWS` rows AND its edge range
+/// (through the row's END) stays within `BLOCK_EDGES` — so the edge bound
+/// is hard, except for a single row that alone exceeds it (every block
+/// has >= 1 row). The result depends only on `row_ptr`, never on thread
+/// counts — which is what keeps execution bit-deterministic under any
+/// `intra_threads`.
+fn build_layout(row_ptr: &[i32]) -> CsrLayout {
+    let c = row_ptr.len().saturating_sub(1);
+    let mut blocks = Vec::new();
+    let mut r0 = 0usize;
+    while r0 < c {
+        let e0 = row_ptr[r0] as usize;
+        let mut r1 = r0 + 1;
+        while r1 < c && r1 - r0 < BLOCK_ROWS && (row_ptr[r1 + 1] as usize) <= e0 + BLOCK_EDGES {
+            r1 += 1;
+        }
+        blocks.push(RowBlock { row0: r0, row1: r1, e0, e1: row_ptr[r1] as usize });
+        r0 = r1;
+    }
+    CsrLayout { blocks, live_edges: if c == 0 { 0 } else { row_ptr[c] as usize } }
+}
+
+// ---------------------------------------------------------------------------
+// Kernels
+// ---------------------------------------------------------------------------
+
 /// `out[m,n] = a[m,k] @ b[k,n]`, skipping zero `a` entries (zero-padded
 /// rows cost nothing, matching the padding-transparency contract).
 fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
@@ -73,33 +283,41 @@ fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     out
 }
 
-/// `(relu?(x @ w + b), pre_activation)` — mirrors `model.dense_*_fwd`.
-fn dense_fwd(args: &[Arg], relu: bool) -> crate::Result<Vec<Vec<f32>>> {
-    let (x, xs) = f32_arg(args, 0)?;
-    let (w, ws) = f32_arg(args, 1)?;
-    let (bias, _) = f32_arg(args, 2)?;
-    let (b, d, h) = (xs[0] as usize, xs[1] as usize, ws[1] as usize);
+/// One dense layer forward: `(relu?(x @ w + b), pre_activation)`. Shared
+/// by the standalone dense kinds and the fused chain so both accumulate
+/// identically.
+fn dense_fwd_core(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    b: usize,
+    d: usize,
+    h: usize,
+    relu: bool,
+) -> (Vec<f32>, Vec<f32>) {
     let mut pre = matmul(x, w, b, d, h);
     for row in pre.chunks_exact_mut(h) {
         for (z, &bb) in row.iter_mut().zip(bias) {
             *z += bb;
         }
     }
-    if relu {
-        let act: Vec<f32> = pre.iter().map(|&z| z.max(0.0)).collect();
-        Ok(vec![act, pre])
-    } else {
-        Ok(vec![pre.clone(), pre])
-    }
+    let act = if relu { pre.iter().map(|&z| z.max(0.0)).collect() } else { pre.clone() };
+    (act, pre)
 }
 
-/// `(grad_x, grad_w, grad_b)` — mirrors `ref.dense_bwd_ref`.
-fn dense_bwd(args: &[Arg], relu: bool) -> crate::Result<Vec<Vec<f32>>> {
-    let (g, gs) = f32_arg(args, 0)?;
-    let (x, xs) = f32_arg(args, 1)?;
-    let (w, _) = f32_arg(args, 2)?;
-    let (pre, _) = f32_arg(args, 3)?;
-    let (b, h, d) = (gs[0] as usize, gs[1] as usize, xs[1] as usize);
+/// One dense layer backward: `(grad_x, grad_w, grad_b)`. Shared by the
+/// standalone dense kinds and the fused chain.
+#[allow(clippy::too_many_arguments)]
+fn dense_bwd_core(
+    g: &[f32],
+    x: &[f32],
+    w: &[f32],
+    pre: &[f32],
+    b: usize,
+    d: usize,
+    h: usize,
+    relu: bool,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
     let gp: Vec<f32> = if relu {
         g.iter().zip(pre).map(|(&gv, &p)| if p > 0.0 { gv } else { 0.0 }).collect()
     } else {
@@ -133,12 +351,119 @@ fn dense_bwd(args: &[Arg], relu: bool) -> crate::Result<Vec<Vec<f32>>> {
             *o += gv;
         }
     }
+    (gx, gw, gb)
+}
+
+/// `(relu?(x @ w + b), pre_activation)` — mirrors `model.dense_*_fwd`.
+fn dense_fwd(args: &[Arg], relu: bool) -> crate::Result<Vec<Vec<f32>>> {
+    let (x, xs) = f32_arg(args, 0)?;
+    let (w, ws) = f32_arg(args, 1)?;
+    let (bias, _) = f32_arg(args, 2)?;
+    let (b, d, h) = (xs[0] as usize, xs[1] as usize, ws[1] as usize);
+    let (act, pre) = dense_fwd_core(x, w, bias, b, d, h, relu);
+    Ok(vec![act, pre])
+}
+
+/// `(grad_x, grad_w, grad_b)` — mirrors `ref.dense_bwd_ref`.
+fn dense_bwd(args: &[Arg], relu: bool) -> crate::Result<Vec<Vec<f32>>> {
+    let (g, gs) = f32_arg(args, 0)?;
+    let (x, xs) = f32_arg(args, 1)?;
+    let (w, _) = f32_arg(args, 2)?;
+    let (pre, _) = f32_arg(args, 3)?;
+    let (b, h, d) = (gs[0] as usize, gs[1] as usize, xs[1] as usize);
+    let (gx, gw, gb) = dense_bwd_core(g, x, w, pre, b, d, h, relu);
     Ok(vec![gx, gw, gb])
 }
 
-/// Weighted scatter-add aggregation `out[dst] += w * x[col]` — mirrors
-/// `ref.edge_spmm_ref`. Both lowerings (`agg_pallas` / `agg_scatter`)
-/// share this semantic; padded edges have weight zero.
+/// Fused L-layer dense chain forward — mirrors `model.nn_chain_fwd_sized`.
+/// Args: `x, w0, b0, ..., w{L-1}, b{L-1}`; ReLU on all layers but the
+/// last. Returns `(out, pre_0, ..., pre_{L-1})`.
+fn nn_chain_fwd(args: &[Arg]) -> crate::Result<Vec<Vec<f32>>> {
+    anyhow::ensure!(
+        args.len() >= 3 && args.len() % 2 == 1,
+        "nn_chain_fwd wants x + L*(w, b) args, got {}",
+        args.len()
+    );
+    let l = (args.len() - 1) / 2;
+    let (x, xs) = f32_arg(args, 0)?;
+    let b = xs[0] as usize;
+    let mut d = xs[1] as usize;
+    let mut cur = x.to_vec();
+    let mut pres: Vec<Vec<f32>> = Vec::with_capacity(l);
+    for i in 0..l {
+        let (w, ws) = f32_arg(args, 1 + 2 * i)?;
+        let (bias, _) = f32_arg(args, 2 + 2 * i)?;
+        anyhow::ensure!(ws[0] as usize == d, "nn_chain_fwd: layer {i} input dim mismatch");
+        let h = ws[1] as usize;
+        let relu = i + 1 != l;
+        let (act, pre) = dense_fwd_core(&cur, w, bias, b, d, h, relu);
+        cur = act;
+        pres.push(pre);
+        d = h;
+    }
+    let mut out = Vec::with_capacity(l + 1);
+    out.push(cur);
+    out.append(&mut pres);
+    Ok(out)
+}
+
+/// Fused L-layer dense chain backward — mirrors
+/// `model.nn_chain_bwd_sized`. Args: `g, x, w0, pre0, ..., w{L-1},
+/// pre{L-1}`. Layer inputs are reconstructed from the pre-activations
+/// (`xin_0 = x`, `xin_i = relu(pre_{i-1})`). Returns
+/// `(grad_x, gw_0, gb_0, ..., gw_{L-1}, gb_{L-1})`.
+fn nn_chain_bwd(args: &[Arg]) -> crate::Result<Vec<Vec<f32>>> {
+    anyhow::ensure!(
+        args.len() >= 4 && args.len() % 2 == 0,
+        "nn_chain_bwd wants g, x + L*(w, pre) args, got {}",
+        args.len()
+    );
+    let l = (args.len() - 2) / 2;
+    let (g0, gs) = f32_arg(args, 0)?;
+    let (x, xs) = f32_arg(args, 1)?;
+    let b = gs[0] as usize;
+    let mut ws: Vec<(&[f32], usize, usize)> = Vec::with_capacity(l);
+    let mut pres: Vec<&[f32]> = Vec::with_capacity(l);
+    let mut d = xs[1] as usize;
+    for i in 0..l {
+        let (w, wshape) = f32_arg(args, 2 + 2 * i)?;
+        let (pre, _) = f32_arg(args, 3 + 2 * i)?;
+        anyhow::ensure!(wshape[0] as usize == d, "nn_chain_bwd: layer {i} input dim mismatch");
+        let h = wshape[1] as usize;
+        ws.push((w, d, h));
+        pres.push(pre);
+        d = h;
+    }
+    // reconstruct layer inputs from the cached pre-activations
+    let mut xins: Vec<Vec<f32>> = Vec::with_capacity(l);
+    xins.push(x.to_vec());
+    for i in 1..l {
+        xins.push(pres[i - 1].iter().map(|&z| z.max(0.0)).collect());
+    }
+    let mut g = g0.to_vec();
+    let mut gws: Vec<Vec<f32>> = vec![Vec::new(); l];
+    let mut gbs: Vec<Vec<f32>> = vec![Vec::new(); l];
+    for i in (0..l).rev() {
+        let (w, di, hi) = ws[i];
+        let relu = i + 1 != l;
+        let (gx, gw, gb) = dense_bwd_core(&g, &xins[i], w, pres[i], b, di, hi, relu);
+        g = gx;
+        gws[i] = gw;
+        gbs[i] = gb;
+    }
+    let mut out = Vec::with_capacity(1 + 2 * l);
+    out.push(g);
+    for i in 0..l {
+        out.push(std::mem::take(&mut gws[i]));
+        out.push(std::mem::take(&mut gbs[i]));
+    }
+    Ok(out)
+}
+
+/// Weighted scatter-add aggregation `out[dst] += w * x[col]` over the COO
+/// edge expansion — mirrors `ref.edge_spmm_ref`. Kept single-threaded as
+/// the differential baseline (`AggImpl::Scatter`); padded edges have
+/// weight zero.
 fn agg(args: &[Arg]) -> crate::Result<Vec<Vec<f32>>> {
     let (row_ptr, rps) = i32_arg(args, 0)?;
     let (edge_dst, _) = i32_arg(args, 1)?;
@@ -147,7 +472,7 @@ fn agg(args: &[Arg]) -> crate::Result<Vec<Vec<f32>>> {
     let (x, xs) = f32_arg(args, 4)?;
     let c = rps[0] as usize - 1;
     let t = xs[1] as usize;
-    let _ = row_ptr; // CSR view used only by the pallas lowering
+    let _ = row_ptr; // CSR view used only by the row-blocked lowering
     let mut out = vec![0.0f32; c * t];
     for ((&d, &s), &wv) in edge_dst.iter().zip(col).zip(ew) {
         if wv == 0.0 {
@@ -158,6 +483,90 @@ fn agg(args: &[Arg]) -> crate::Result<Vec<Vec<f32>>> {
         for (o, &xv) in dst.iter_mut().zip(src) {
             *o += wv * xv;
         }
+    }
+    Ok(vec![out])
+}
+
+/// One row block of the CSR kernel: rows `[row0, row1)` accumulated into
+/// the block's exclusive output slice, in CSR edge order.
+fn agg_block(
+    blk: &RowBlock,
+    out: &mut [f32],
+    row_ptr: &[i32],
+    col: &[i32],
+    ew: &[f32],
+    x: &[f32],
+    t: usize,
+) {
+    let cap = col.len().min(ew.len());
+    for r in blk.row0..blk.row1 {
+        let orow = &mut out[(r - blk.row0) * t..(r - blk.row0 + 1) * t];
+        let e0 = (row_ptr[r] as usize).min(cap);
+        let e1 = (row_ptr[r + 1] as usize).min(cap);
+        for e in e0..e1 {
+            let wv = ew[e];
+            if wv == 0.0 {
+                continue;
+            }
+            let src = &x[col[e] as usize * t..(col[e] as usize + 1) * t];
+            for (o, &xv) in orow.iter_mut().zip(src) {
+                *o += wv * xv;
+            }
+        }
+    }
+}
+
+/// CSR row-blocked aggregation (the `agg_pallas` lowering): disjoint row
+/// blocks from the memoized layout, executed by a scoped thread team of
+/// `ctx.intra_threads`. Bit-identical to [`agg`] for CSR-consistent
+/// inputs and independent of the thread count (each block owns its rows).
+fn agg_csr(args: &[Arg], ctx: &ExecCtx) -> crate::Result<Vec<Vec<f32>>> {
+    let rp_arc = i32_arc(args, 0)?;
+    let (col, _) = i32_arg(args, 2)?;
+    let (ew, _) = f32_arg(args, 3)?;
+    let (x, xs) = f32_arg(args, 4)?;
+    let row_ptr: &[i32] = rp_arc.as_slice();
+    anyhow::ensure!(!row_ptr.is_empty(), "agg: empty row_ptr");
+    let c = row_ptr.len() - 1;
+    let t = xs[1] as usize;
+    let layout = ctx.cache.layout(rp_arc);
+    let mut out = vec![0.0f32; c * t];
+    // carve the output into per-block exclusive row slices
+    let mut parts: Vec<&mut [f32]> = Vec::with_capacity(layout.blocks.len());
+    let mut rest: &mut [f32] = &mut out;
+    for blk in &layout.blocks {
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut((blk.row1 - blk.row0) * t);
+        parts.push(head);
+        rest = tail;
+    }
+    // small passes run serial even with a team configured: spawn cost
+    // would dominate the accumulate work (and pollute device_secs)
+    let nt = if layout.live_edges < PAR_MIN_EDGES {
+        1
+    } else {
+        ctx.intra_threads.max(1).min(layout.blocks.len().max(1))
+    };
+    if nt <= 1 {
+        for (blk, part) in layout.blocks.iter().zip(parts) {
+            agg_block(blk, part, row_ptr, col, ew, x, t);
+        }
+    } else {
+        // round-robin block assignment: balanced even when early blocks
+        // are denser, and still fully deterministic (block outputs are
+        // position-owned, not order-dependent)
+        let mut groups: Vec<Vec<(&RowBlock, &mut [f32])>> = (0..nt).map(|_| Vec::new()).collect();
+        for (i, (blk, part)) in layout.blocks.iter().zip(parts).enumerate() {
+            groups[i % nt].push((blk, part));
+        }
+        std::thread::scope(|scope| {
+            for group in groups {
+                scope.spawn(move || {
+                    for (blk, part) in group {
+                        agg_block(blk, part, row_ptr, col, ew, x, t);
+                    }
+                });
+            }
+        });
     }
     Ok(vec![out])
 }
@@ -365,6 +774,190 @@ mod tests {
         )
         .unwrap();
         assert_eq!(out[0], vec![6.0, 60.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn agg_csr_matches_scatter_and_thread_counts() {
+        // 5 rows (row 2 empty), CSR-ordered edges + zero-weight pads
+        let row_ptr = vec![0i32, 2, 3, 3, 5, 6];
+        let col = vec![1i32, 0, 2, 1, 3, 0, 0, 0];
+        let edge_dst = vec![0i32, 0, 1, 3, 3, 4, 0, 0];
+        let ew = vec![1.0f32, 2.0, 0.5, 0.0, 1.5, 2.5, 0.0, 0.0];
+        let x: Vec<f32> = (0..4 * 3).map(|v| v as f32 * 0.25 - 0.5).collect();
+        let args = vec![
+            i(row_ptr, &[6]),
+            i(edge_dst, &[8]),
+            i(col, &[8]),
+            f(ew, &[8]),
+            f(x, &[4, 3]),
+        ];
+        let want = execute("agg_scatter", &args).unwrap();
+        let cache = CsrCache::new();
+        for intra in [1usize, 3] {
+            let ctx = ExecCtx { artifact: "t", intra_threads: intra, cache: &cache };
+            let got = execute_with("agg_pallas", &args, &ctx).unwrap();
+            assert_eq!(got[0], want[0], "intra={intra}");
+        }
+        // second run reused the memoized layout
+        assert_eq!(cache.misses(), 1);
+        assert!(cache.hits() >= 1);
+    }
+
+    #[test]
+    fn agg_csr_parallel_branch_matches_serial() {
+        // enough edges to cross PAR_MIN_EDGES so the scoped team really
+        // spawns; parity with the serial scatter baseline must be exact
+        let (c, s, t) = (600usize, 128usize, 4usize);
+        let deg = PAR_MIN_EDGES / c + 1;
+        let mut row_ptr = vec![0i32];
+        let mut col = Vec::new();
+        let mut edge_dst = Vec::new();
+        let mut ew = Vec::new();
+        for r in 0..c {
+            for j in 0..deg {
+                col.push(((r * 31 + j * 7) % s) as i32);
+                edge_dst.push(r as i32);
+                ew.push(((r + j) % 5) as f32 * 0.25 - 0.5);
+            }
+            row_ptr.push(col.len() as i32);
+        }
+        let e = col.len();
+        assert!(e >= PAR_MIN_EDGES, "test must exercise the threaded branch");
+        let x: Vec<f32> = (0..s * t).map(|v| (v % 13) as f32 * 0.1 - 0.6).collect();
+        let args = vec![
+            i(row_ptr, &[c + 1]),
+            i(edge_dst, &[e]),
+            i(col, &[e]),
+            f(ew, &[e]),
+            f(x, &[s, t]),
+        ];
+        let want = execute("agg_scatter", &args).unwrap();
+        let cache = CsrCache::new();
+        let ctx = ExecCtx { artifact: "par", intra_threads: 4, cache: &cache };
+        let got = execute_with("agg_pallas", &args, &ctx).unwrap();
+        assert_eq!(got[0], want[0]);
+    }
+
+    #[test]
+    fn csr_layout_blocks_tile_rows() {
+        // 700 rows (not a multiple of BLOCK_ROWS), one hub row
+        let mut row_ptr = vec![0i32];
+        let mut e = 0i32;
+        for r in 0..700 {
+            e += if r == 13 { BLOCK_EDGES as i32 + 7 } else { (r % 3) as i32 };
+            row_ptr.push(e);
+        }
+        let layout = build_layout(&row_ptr);
+        assert_eq!(layout.blocks[0].row0, 0);
+        assert_eq!(layout.blocks.last().unwrap().row1, 700);
+        for w in layout.blocks.windows(2) {
+            assert_eq!(w[0].row1, w[1].row0, "blocks must tile contiguously");
+            assert_eq!(w[0].e1, w[1].e0);
+        }
+        assert!(layout.blocks.iter().all(|b| b.row1 > b.row0));
+        assert!(layout.blocks.iter().all(|b| b.row1 - b.row0 <= BLOCK_ROWS));
+        // the edge bound is hard except for single oversized rows
+        assert!(layout
+            .blocks
+            .iter()
+            .all(|b| b.row1 - b.row0 == 1 || b.e1 - b.e0 <= BLOCK_EDGES));
+        assert!(layout.blocks.iter().any(|b| b.e1 - b.e0 > BLOCK_EDGES), "hub got its own block");
+        assert_eq!(layout.live_edges, e as usize);
+    }
+
+    #[test]
+    fn nn_chain_fwd_matches_layered_dense() {
+        // 2-layer chain vs two dense calls on the same data
+        let x = vec![0.5f32, -1.0, 2.0, 0.25, -0.75, 1.5];
+        let w0 = vec![0.1f32, -0.2, 0.3, 0.4, -0.5, 0.6];
+        let b0 = vec![0.05f32, -0.05];
+        let w1 = vec![1.0f32, 0.5, -0.25, 0.75];
+        let b1 = vec![0.0f32, 0.1];
+        let chain = execute(
+            "nn_chain_fwd",
+            &[
+                f(x.clone(), &[2, 3]),
+                f(w0.clone(), &[3, 2]),
+                f(b0.clone(), &[2]),
+                f(w1.clone(), &[2, 2]),
+                f(b1.clone(), &[2]),
+            ],
+        )
+        .unwrap();
+        let l0 = execute(
+            "dense_relu_fwd",
+            &[f(x, &[2, 3]), f(w0, &[3, 2]), f(b0, &[2])],
+        )
+        .unwrap();
+        let l1 = execute(
+            "dense_linear_fwd",
+            &[f(l0[0].clone(), &[2, 2]), f(w1, &[2, 2]), f(b1, &[2])],
+        )
+        .unwrap();
+        assert_eq!(chain[0], l1[0], "fused out == layered out");
+        assert_eq!(chain[1], l0[1], "pre_0");
+        assert_eq!(chain[2], l1[1], "pre_1");
+    }
+
+    #[test]
+    fn nn_chain_bwd_matches_layered_dense() {
+        let x = vec![0.5f32, -1.0, 2.0, 0.25, -0.75, 1.5];
+        let w0 = vec![0.1f32, -0.2, 0.3, 0.4, -0.5, 0.6];
+        let b0 = vec![0.05f32, -0.05];
+        let w1 = vec![1.0f32, 0.5, -0.25, 0.75];
+        let b1 = vec![0.0f32, 0.1];
+        let fwd = execute(
+            "nn_chain_fwd",
+            &[
+                f(x.clone(), &[2, 3]),
+                f(w0.clone(), &[3, 2]),
+                f(b0, &[2]),
+                f(w1.clone(), &[2, 2]),
+                f(b1, &[2]),
+            ],
+        )
+        .unwrap();
+        let (pre0, pre1) = (fwd[1].clone(), fwd[2].clone());
+        let act0: Vec<f32> = pre0.iter().map(|&z| z.max(0.0)).collect();
+        let g = vec![0.3f32, -0.6, 0.9, 0.2];
+        let chain = execute(
+            "nn_chain_bwd",
+            &[
+                f(g.clone(), &[2, 2]),
+                f(x.clone(), &[2, 3]),
+                f(w0.clone(), &[3, 2]),
+                f(pre0.clone(), &[2, 2]),
+                f(w1.clone(), &[2, 2]),
+                f(pre1.clone(), &[2, 2]),
+            ],
+        )
+        .unwrap();
+        // layered reference: head (linear) then layer 0 (relu)
+        let l1 = execute(
+            "dense_linear_bwd",
+            &[
+                f(g, &[2, 2]),
+                f(act0.clone(), &[2, 2]),
+                f(w1, &[2, 2]),
+                f(pre1, &[2, 2]),
+            ],
+        )
+        .unwrap();
+        let l0 = execute(
+            "dense_relu_bwd",
+            &[
+                f(l1[0].clone(), &[2, 2]),
+                f(x, &[2, 3]),
+                f(w0, &[3, 2]),
+                f(pre0, &[2, 2]),
+            ],
+        )
+        .unwrap();
+        assert_eq!(chain[0], l0[0], "grad_x");
+        assert_eq!(chain[1], l0[1], "gw_0");
+        assert_eq!(chain[2], l0[2], "gb_0");
+        assert_eq!(chain[3], l1[1], "gw_1");
+        assert_eq!(chain[4], l1[2], "gb_1");
     }
 
     #[test]

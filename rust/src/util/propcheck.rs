@@ -1,26 +1,60 @@
 //! Tiny property-test driver (offline stand-in for `proptest`): run a
 //! property over N seeded random cases; on failure report the seed so the
 //! case can be replayed deterministically.
+//!
+//! Two environment variables tune a run without recompiling:
+//! * `PROPCHECK_CASES=<n>` overrides every property's case count (e.g.
+//!   crank it up in CI's release job, or set 1 while bisecting);
+//! * `PROPCHECK_SEED=<seed>` (decimal or `0x`-hex, exactly as printed in
+//!   a failure message) replays ONLY that seed, for every property — the
+//!   deterministic repro loop the failure message points at.
 
 use super::rng::Rng;
 
 /// Run `prop(rng)` for `cases` deterministic seeds derived from `base_seed`.
 /// Panics with the failing seed on the first falsified case.
 pub fn check(name: &str, base_seed: u64, cases: usize, mut prop: impl FnMut(&mut Rng)) {
+    if let Some(seed) = std::env::var("PROPCHECK_SEED").ok().as_deref().and_then(parse_seed) {
+        let mut rng = Rng::seed_from_u64(seed);
+        run_case(name, usize::MAX, seed, &mut rng, &mut prop);
+        return;
+    }
+    let cases = std::env::var("PROPCHECK_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(cases);
     for i in 0..cases {
         let seed = base_seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15);
         let mut rng = Rng::seed_from_u64(seed);
-        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            prop(&mut rng);
-        }));
-        if let Err(e) = result {
-            let msg = e
-                .downcast_ref::<String>()
-                .cloned()
-                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
-                .unwrap_or_else(|| "<non-string panic>".into());
-            panic!("property '{name}' falsified at case {i} (seed {seed:#x}): {msg}");
+        run_case(name, i, seed, &mut rng, &mut prop);
+    }
+}
+
+/// Parse a replay seed: decimal or `0x`-prefixed hex (the failure
+/// message's format).
+fn parse_seed(v: &str) -> Option<u64> {
+    let v = v.trim();
+    if let Some(hex) = v.strip_prefix("0x").or_else(|| v.strip_prefix("0X")) {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        v.parse().ok()
+    }
+}
+
+fn run_case(name: &str, i: usize, seed: u64, rng: &mut Rng, prop: &mut impl FnMut(&mut Rng)) {
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        prop(rng);
+    }));
+    if let Err(e) = result {
+        let msg = e
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_else(|| "<non-string panic>".into());
+        if i == usize::MAX {
+            panic!("property '{name}' falsified on replayed seed {seed:#x}: {msg}");
         }
+        panic!("property '{name}' falsified at case {i} (seed {seed:#x}): {msg}");
     }
 }
 
@@ -43,5 +77,14 @@ mod tests {
         check("always-small", 2, 50, |rng| {
             assert!(rng.gen_range(100) < 50);
         });
+    }
+
+    #[test]
+    fn parse_seed_accepts_both_radixes() {
+        assert_eq!(parse_seed("0xC0FFEE"), Some(0xC0FFEE));
+        assert_eq!(parse_seed("0Xc0ffee"), Some(0xC0FFEE));
+        assert_eq!(parse_seed(" 42 "), Some(42));
+        assert_eq!(parse_seed("not-a-seed"), None);
+        assert_eq!(parse_seed("0xZZ"), None);
     }
 }

@@ -12,7 +12,8 @@ use neutron_tp::graph::{generate, partition};
 use neutron_tp::model::params::GnnParams;
 use neutron_tp::model::layer_dims;
 use neutron_tp::parallel::{self, Ctx};
-use neutron_tp::runtime::{ArtifactStore, ExecutorPool};
+use neutron_tp::runtime::refexec::{self, CsrCache, ExecCtx};
+use neutron_tp::runtime::{Arg, ArtifactStore, ExecutorPool};
 use neutron_tp::tensor::{dim_slices, row_slices, Matrix};
 use neutron_tp::util::{propcheck, Rng};
 
@@ -102,6 +103,38 @@ fn pallas_and_scatter_impls_agree_end_to_end() {
 }
 
 #[test]
+fn thread_counts_do_not_change_numerics() {
+    // executor_threads (job overlap) and intra_threads (in-kernel row
+    // blocks) are pure performance knobs: per-epoch losses must be
+    // BIT-identical across both, for every system. Extends
+    // `worker_count_does_not_change_numerics` to the threading axes.
+    let store = store();
+    let data = Dataset::generate(profile("tiny").unwrap(), 42);
+    for &sys in System::ALL {
+        let run = |et: usize, it: usize| -> Vec<u32> {
+            let cfg = RunConfig {
+                system: sys,
+                profile: "tiny".into(),
+                workers: 2,
+                epochs: 2,
+                ..Default::default()
+            };
+            let pool = ExecutorPool::with_intra(&store, et, it).unwrap();
+            let ctx = Ctx { cfg: &cfg, data: &data, store: &store, pool: &pool };
+            parallel::run(&ctx).unwrap().iter().map(|r| r.loss.to_bits()).collect()
+        };
+        let base = run(1, 1);
+        for (et, it) in [(4, 1), (1, 4), (4, 4)] {
+            assert_eq!(
+                base,
+                run(et, it),
+                "{sys:?}: losses changed with executor_threads={et} intra_threads={it}"
+            );
+        }
+    }
+}
+
+#[test]
 fn worker_count_does_not_change_numerics() {
     // TP is a pure reparallelization: loss trajectories must be identical
     // (up to fp noise) for any worker count
@@ -173,6 +206,78 @@ fn prop_chunk_plan_covers_every_edge_exactly_once() {
                     .all(|&d| (d as usize) < chunk.num_rows()));
             }
         }
+    });
+}
+
+#[test]
+fn prop_csr_block_agg_matches_coo_scatter() {
+    // The CSR row-blocked kernel must agree with the COO scatter baseline
+    // to 1e-5 on random graphs covering zero-degree rows, padded edges
+    // with edge_w == 0 (both beyond row_ptr and as live zero-weight
+    // edges), and row counts that don't divide the block size — and must
+    // be independent of intra_threads, reusing the memoized layout.
+    propcheck::check("csr-agg-matches-scatter", 0xA66, 40, |rng| {
+        let c = 1 + rng.gen_range(700); // non-divisible row blocks
+        let s = 1 + rng.gen_range(300);
+        let t = 1 + rng.gen_range(16);
+        let mut row_ptr = vec![0i32];
+        let mut col: Vec<i32> = Vec::new();
+        let mut edge_dst: Vec<i32> = Vec::new();
+        let mut ew: Vec<f32> = Vec::new();
+        for r in 0..c {
+            // mix zero-degree rows, light rows, and hub rows big enough
+            // that large cases cross PAR_MIN_EDGES (threaded branch) and
+            // single rows overflow BLOCK_EDGES-bounded blocks
+            let deg = if rng.gen_bool(0.3) {
+                0
+            } else if rng.gen_bool(0.05) {
+                4000 + rng.gen_range(4000)
+            } else {
+                rng.gen_range(6)
+            };
+            for _ in 0..deg {
+                col.push(rng.gen_range(s) as i32);
+                edge_dst.push(r as i32);
+                // some live edges carry weight zero (pad semantics)
+                ew.push(if rng.gen_bool(0.2) {
+                    0.0
+                } else {
+                    rng.gen_f32_range(-1.0, 1.0)
+                });
+            }
+            row_ptr.push(col.len() as i32);
+        }
+        // pad the edge arrays past the CSR-covered range
+        let e_bucket = (col.len() + 1 + rng.gen_range(64)).next_power_of_two();
+        while col.len() < e_bucket {
+            col.push(0);
+            edge_dst.push(0);
+            ew.push(0.0);
+        }
+        let x: Vec<f32> = (0..s * t).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+        let args = vec![
+            Arg::i32(row_ptr, &[c + 1]),
+            Arg::i32(edge_dst, &[e_bucket]),
+            Arg::i32(col, &[e_bucket]),
+            Arg::f32(ew, &[e_bucket]),
+            Arg::f32(x, &[s, t]),
+        ];
+        let want = refexec::execute("agg_scatter", &args).unwrap();
+        let cache = CsrCache::new();
+        for intra in [1usize, 4] {
+            let ctx = ExecCtx { artifact: "prop", intra_threads: intra, cache: &cache };
+            let got = refexec::execute_with("agg_pallas", &args, &ctx).unwrap();
+            assert_eq!(got[0].len(), want[0].len());
+            for (i, (a, b)) in got[0].iter().zip(&want[0]).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-5,
+                    "c={c} s={s} t={t} intra={intra} elem {i}: {a} vs {b}"
+                );
+            }
+        }
+        // second intra pass reused the memoized row-block layout
+        assert_eq!(cache.misses(), 1, "layout segmented more than once");
+        assert!(cache.hits() >= 1);
     });
 }
 
