@@ -5,7 +5,7 @@ The paper's compute hot-spot is full-neighbour aggregation over a chunk:
 dim-slice of the source-vertex embeddings resident on this worker and the
 chunk CSR streams in.
 
-Hardware adaptation (DESIGN.md §7): the paper implements this with CUDA
+Hardware adaptation (DESIGN.md §5): the paper implements this with CUDA
 warp-per-row gather on T4s.  On TPU the same insight — keep the dim-slice
 resident, stream the structure — becomes a Pallas grid over (dst-row blocks)
 with the full dim-tile of ``x`` as the resident VMEM operand and the CSR
@@ -112,7 +112,7 @@ def edge_spmm_scatter(edge_dst, col_idx, edge_w, x, *, num_rows: int):
 
 def vmem_footprint_bytes(num_rows: int, s: int, t: int, e: int,
                          row_block: int = DEFAULT_ROW_BLOCK) -> dict:
-    """Static VMEM model for the kernel — used by DESIGN.md §7 estimates."""
+    """Static VMEM model for the kernel — used by DESIGN.md §5 estimates."""
     return {
         "x_tile": s * t * 4,
         "row_ptr": (num_rows + 1) * 4,

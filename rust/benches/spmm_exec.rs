@@ -2,7 +2,7 @@
 //! aggregation lowerings (scatter vs Pallas-structured CSR) and the fused
 //! dense kernel, through the full Rust runtime (executor pool, padding,
 //! crop). These are the numbers the event sim schedules (DESIGN.md §4)
-//! and the §Perf baseline for L1/L3 optimization.
+//! and the perf baseline for L1/L3 optimization.
 //!
 //! The final sections measure the batched asynchronous dispatch the
 //! engines use (submit all jobs, then wait) against the serial

@@ -30,8 +30,9 @@ pub fn run_experiment(name: &str, store: &ArtifactStore, fast: bool) -> crate::R
         "table4" => table4(store)?,
         "exec_scale" => exec_scale(store, fast)?,
         "kernel_scale" => kernel_scale(store, fast)?,
+        "serve_scale" => serve_scale(store, fast)?,
         _ => anyhow::bail!(
-            "unknown experiment '{name}' (try fig3/fig4/fig5/fig8/fig10..fig16/table2/table3/table4/exec_scale/kernel_scale/all)"
+            "unknown experiment '{name}' (try fig3/fig4/fig5/fig8/fig10..fig16/table2/table3/table4/exec_scale/kernel_scale/serve_scale/all)"
         ),
     };
     Ok(out)
@@ -39,7 +40,7 @@ pub fn run_experiment(name: &str, store: &ArtifactStore, fast: bool) -> crate::R
 
 pub const ALL: &[&str] = &[
     "fig3", "fig4", "fig5", "fig8", "fig10", "fig11", "fig12", "fig13", "fig14", "fig15",
-    "fig16", "table2", "table3", "table4", "exec_scale", "kernel_scale",
+    "fig16", "table2", "table3", "table4", "exec_scale", "kernel_scale", "serve_scale",
 ];
 
 fn run_cfg(store: &ArtifactStore, cfg: &RunConfig) -> crate::Result<Vec<EpochReport>> {
@@ -699,6 +700,50 @@ fn kernel_scale(store: &ArtifactStore, fast: bool) -> crate::Result<String> {
             med * 1e3
         )
         .unwrap();
+    }
+    Ok(s)
+}
+
+// ---------------------------------------------------------------------------
+// Serving throughput: queries/sec and tail latency of the micro-batched
+// request loop vs batch size x executor pool width (DESIGN.md §7). The
+// startup forward is paid once per cell; the loop itself is pure
+// batch-sized aggregation jobs through the pool, so throughput should
+// grow with both knobs until the pool saturates.
+// ---------------------------------------------------------------------------
+fn serve_scale(store: &ArtifactStore, fast: bool) -> crate::Result<String> {
+    use crate::model::layer_dims;
+    use crate::model::params::GnnParams;
+    use crate::serve::{self, ServeOptions};
+
+    let batch_sizes: &[usize] = if fast { &[8, 32] } else { &[8, 32, 128] };
+    let threads: &[usize] = if fast { &[1, 2] } else { &[1, 2, 4] };
+    let requests = if fast { 192 } else { 768 };
+    let mut s = String::from(
+        "# serve_scale — serving throughput and tail latency vs micro-batch size\n\
+         # and executor pool width; tiny profile, forward-only decoupled TP\n\
+         # (startup = checkpointed forward, 2 embedding collectives).\n\
+         batch_size,executor_threads,qps,p50_ms,p95_ms,p99_ms,startup_s,max_logit_diff\n",
+    );
+    let cfg = RunConfig { workers: 4, epochs: 1, ..Default::default() };
+    cfg.validate()?;
+    let p = profile(&cfg.profile).unwrap();
+    let data = Dataset::generate(p, cfg.seed);
+    let dims = layer_dims(&p, cfg.layers, cfg.feat_dim, false);
+    let params = GnnParams::init(&dims, 1, false, cfg.seed);
+    for &t in threads {
+        for &b in batch_sizes {
+            let pool = ExecutorPool::with_intra(store, t, cfg.intra_threads)?;
+            let ctx = Ctx { cfg: &cfg, data: &data, store, pool: &pool };
+            let opts = ServeOptions { requests, batch_size: b, seed: 7 };
+            let (rep, _engine) = serve::serve(&ctx, &params, &opts)?;
+            writeln!(
+                s,
+                "{b},{t},{:.0},{:.3},{:.3},{:.3},{:.2},{:.2e}",
+                rep.qps, rep.p50_ms, rep.p95_ms, rep.p99_ms, rep.startup_secs, rep.max_logit_diff
+            )
+            .unwrap();
+        }
     }
     Ok(s)
 }

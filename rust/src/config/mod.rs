@@ -26,6 +26,19 @@ pub enum System {
 }
 
 impl System {
+    /// Canonical snake_case name — round-trips through `FromStr`
+    /// (checkpoint headers persist this).
+    pub fn name(self) -> &'static str {
+        match self {
+            System::NeutronTp => "neutron_tp",
+            System::NaiveTp => "naive_tp",
+            System::DpFull => "dp_full",
+            System::DpCache => "dp_cache",
+            System::MiniBatch => "mini_batch",
+            System::Historical => "historical",
+        }
+    }
+
     pub fn label(self) -> &'static str {
         match self {
             System::NeutronTp => "NeutronTP",
@@ -74,6 +87,16 @@ pub enum AggImpl {
     Pallas,
 }
 
+impl AggImpl {
+    /// Canonical name — round-trips through `FromStr`.
+    pub fn name(self) -> &'static str {
+        match self {
+            AggImpl::Scatter => "scatter",
+            AggImpl::Pallas => "pallas",
+        }
+    }
+}
+
 impl FromStr for AggImpl {
     type Err = anyhow::Error;
     fn from_str(s: &str) -> Result<Self, Self::Err> {
@@ -91,6 +114,16 @@ pub enum Task {
     #[default]
     NodeClassification,
     LinkPrediction,
+}
+
+impl Task {
+    /// Canonical name — round-trips through `FromStr`.
+    pub fn name(self) -> &'static str {
+        match self {
+            Task::NodeClassification => "node_classification",
+            Task::LinkPrediction => "link_prediction",
+        }
+    }
 }
 
 impl FromStr for Task {
@@ -111,6 +144,17 @@ pub enum ModelKind {
     Gcn,
     Gat,
     Rgcn,
+}
+
+impl ModelKind {
+    /// Canonical name — round-trips through `FromStr`.
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelKind::Gcn => "gcn",
+            ModelKind::Gat => "gat",
+            ModelKind::Rgcn => "rgcn",
+        }
+    }
 }
 
 impl FromStr for ModelKind {
@@ -196,6 +240,13 @@ pub struct RunConfig {
     /// mini-batch fan-outs, DistDGL style "(25,10)"
     pub fanouts: Vec<usize>,
     pub batch_size: usize,
+    /// directory checkpoints are written to after every epoch
+    /// (`neutron-tp train --checkpoint-dir D`); `None` disables
+    /// checkpointing. File layout in DESIGN.md §7.
+    pub checkpoint_dir: Option<String>,
+    /// resume from `checkpoint_dir`'s latest checkpoint instead of epoch 0
+    /// (`--resume`); the saved header must match this configuration
+    pub resume: bool,
 }
 
 impl Default for RunConfig {
@@ -222,6 +273,8 @@ impl Default for RunConfig {
             feat_dim: None,
             fanouts: vec![25, 10],
             batch_size: 1024,
+            checkpoint_dir: None,
+            resume: false,
         }
     }
 }
@@ -264,6 +317,11 @@ impl RunConfig {
             "intra_threads" => self.intra_threads = want_int()?,
             "batch_size" => self.batch_size = want_int()?,
             "feat_dim" => self.feat_dim = Some(want_int()?),
+            "checkpoint_dir" => self.checkpoint_dir = Some(want_str()?.to_string()),
+            "resume" => {
+                self.resume =
+                    v.as_bool().ok_or_else(|| anyhow::anyhow!("{key}: expected bool"))?;
+            }
             "seed" => self.seed = want_int()? as u64,
             "lr" => self.lr = want_float()? as f32,
             "chunk_sched" => {
@@ -380,6 +438,31 @@ mod tests {
         }
         assert_eq!("distdgl".parse::<System>().unwrap(), System::MiniBatch);
         assert!("whatever".parse::<System>().is_err());
+    }
+
+    #[test]
+    fn canonical_names_roundtrip() {
+        // checkpoint headers persist these names; they must re-parse
+        for s in System::ALL {
+            assert_eq!(s.name().parse::<System>().unwrap(), *s);
+        }
+        for m in [ModelKind::Gcn, ModelKind::Gat, ModelKind::Rgcn] {
+            assert_eq!(m.name().parse::<ModelKind>().unwrap(), m);
+        }
+        for t in [Task::NodeClassification, Task::LinkPrediction] {
+            assert_eq!(t.name().parse::<Task>().unwrap(), t);
+        }
+        for a in [AggImpl::Scatter, AggImpl::Pallas] {
+            assert_eq!(a.name().parse::<AggImpl>().unwrap(), a);
+        }
+    }
+
+    #[test]
+    fn checkpoint_keys_parse() {
+        let c = RunConfig::from_toml("checkpoint_dir = \"ckpts\"\nresume = true\n").unwrap();
+        assert_eq!(c.checkpoint_dir.as_deref(), Some("ckpts"));
+        assert!(c.resume);
+        assert_eq!(RunConfig::default().checkpoint_dir, None);
     }
 
     #[test]

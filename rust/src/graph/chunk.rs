@@ -127,6 +127,36 @@ impl ChunkPlan {
         Chunk { rows, passes, src_set, live_edges: live_total }
     }
 
+    /// Lower an arbitrary list of destination vertices — not necessarily
+    /// contiguous — into padded aggregation passes against `g`: local
+    /// output row `i` aggregates the in-edges of `rows[i]`. This is the
+    /// serving-path primitive: a micro-batch of vertex queries becomes
+    /// one (or, past `e_bucket`, several) artifact calls re-running only
+    /// the final aggregation round for the queried rows (DESIGN.md §7).
+    pub fn lower_rows(g: &Csr, rows: &[u32], c_bucket: usize, e_bucket: usize) -> Vec<AggPass> {
+        assert!(rows.len() <= c_bucket, "batch of {} rows exceeds c_bucket {c_bucket}", rows.len());
+        let mut passes = Vec::new();
+        let mut cur = PassBuilder::new(rows.len(), c_bucket, e_bucket);
+        for (local, &v) in rows.iter().enumerate() {
+            let (cols, ws) = g.in_edges(v as usize);
+            let mut off = 0;
+            while off < cols.len() {
+                let space = e_bucket - cur.edges;
+                if space == 0 {
+                    passes.push(cur.finish());
+                    cur = PassBuilder::new(rows.len(), c_bucket, e_bucket);
+                    continue;
+                }
+                let take = space.min(cols.len() - off);
+                cur.push_row_edges(local, &cols[off..off + take], &ws[off..off + take]);
+                off += take;
+            }
+            cur.seal_row(local);
+        }
+        passes.push(cur.finish());
+        passes
+    }
+
     pub fn num_chunks(&self) -> usize {
         self.chunks.len()
     }
@@ -279,6 +309,56 @@ mod tests {
         // padded rows are empty
         for i in 101..=256 {
             assert_eq!(pass.row_ptr[i], last);
+        }
+    }
+
+    /// Host-side evaluation of batch passes: row i of the result must be
+    /// row rows[i] of the whole-graph aggregation.
+    fn eval_passes(passes: &[AggPass], n_rows: usize, x: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(n_rows, x.cols());
+        for pass in passes {
+            for e in 0..pass.live_edges {
+                let dst = pass.edge_dst[e] as usize;
+                let src = pass.col[e] as usize;
+                let wv = pass.w[e];
+                let orow = out.row_mut(dst);
+                for (o, &xi) in orow.iter_mut().zip(x.row(src)) {
+                    *o += wv * xi;
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn lower_rows_matches_whole_graph_rows() {
+        let g = generate::rmat(512, 8192, generate::RMAT_SKEWED, 5).gcn_normalized();
+        let x = Matrix::from_fn(512, 8, |r, c| ((r * 7 + c) % 13) as f32 * 0.1);
+        let want = g.spmm_ref(&x);
+        // non-contiguous, unsorted, with a repeat
+        let ids: Vec<u32> = vec![17, 3, 509, 42, 42, 128, 0];
+        for e_bucket in [64usize, 4096] {
+            let passes = ChunkPlan::lower_rows(&g, &ids, 64, e_bucket);
+            let got = eval_passes(&passes, ids.len(), &x);
+            for (i, &id) in ids.iter().enumerate() {
+                for c in 0..8 {
+                    let diff = (got.get(i, c) - want.get(id as usize, c)).abs();
+                    assert!(diff < 1e-4, "row {id} col {c} diff {diff} (e_bucket {e_bucket})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lower_rows_pads_like_lower_chunk() {
+        let g = generate::uniform(100, 300, 1);
+        let ids: Vec<u32> = (0..50).collect();
+        let passes = ChunkPlan::lower_rows(&g, &ids, 256, 512);
+        for pass in &passes {
+            assert_eq!(pass.row_ptr.len(), 257);
+            assert_eq!(pass.col.len(), 512);
+            let last = *pass.row_ptr.last().unwrap();
+            assert_eq!(last as usize, pass.live_edges);
         }
     }
 

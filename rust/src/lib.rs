@@ -17,8 +17,15 @@
 //! At runtime the crate is self-contained: it loads `artifacts/*.hlo.txt`
 //! through the PJRT C API (`xla` crate) and never touches Python.
 //!
-//! See `DESIGN.md` for the experiment index and the substitutions made for
-//! the paper's 16-node GPU testbed.
+//! Beyond training, the crate checkpoints trained models and serves
+//! full-graph inference from them (`serve`): versioned binary
+//! checkpoints with deterministic resume, a forward-only decoupled-TP
+//! engine (2 embedding collectives regardless of depth), and a
+//! micro-batched request loop with tail-latency reporting.
+//!
+//! See `DESIGN.md` for the experiment index (§6), the substitutions made
+//! for the paper's 16-node GPU testbed (§4), and the checkpoint/serving
+//! path (§7).
 
 pub mod bench_harness;
 pub mod cluster;
@@ -29,11 +36,12 @@ pub mod model;
 pub mod parallel;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod tensor;
 pub mod util;
 
 pub use config::{AggImpl, RunConfig, System};
-pub use metrics::EpochReport;
+pub use metrics::{EpochReport, ServeReport};
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

@@ -1,8 +1,11 @@
 //! neutron-tp CLI — the L3 leader entrypoint.
 //!
 //! ```text
-//! neutron-tp train  [--config run.toml] [--profile rdt] [--system tp] ...
-//! neutron-tp bench  <fig3|fig4|...|table4|all> [--out results/] [--fast]
+//! neutron-tp train  [--config run.toml] [--profile rdt] [--system tp]
+//!                   [--checkpoint-dir D [--resume]] ...
+//! neutron-tp serve  [--checkpoint F | --profile P [--warm-epochs K]]
+//!                   [--requests N] [--batch-size B]
+//! neutron-tp bench  <fig3|fig4|...|serve_scale|all> [--out results/] [--fast]
 //! neutron-tp inspect [--artifacts artifacts/]
 //! ```
 //!
@@ -15,6 +18,7 @@ use neutron_tp::config::RunConfig;
 use neutron_tp::graph::datasets::{self, Dataset};
 use neutron_tp::parallel::{self, Ctx};
 use neutron_tp::runtime::{ArtifactStore, ExecutorPool};
+use neutron_tp::serve::{self, checkpoint};
 
 fn main() {
     if let Err(e) = run() {
@@ -39,13 +43,14 @@ fn run() -> anyhow::Result<()> {
     let flags = Flags::parse(&args[1..]);
     match cmd.as_str() {
         "train" => train(&flags),
+        "serve" => serve_cmd(&flags),
         "bench" => bench(&args[1..], &flags),
         "inspect" => inspect(&flags),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
         }
-        other => anyhow::bail!("unknown command '{other}' (try: train, bench, inspect)"),
+        other => anyhow::bail!("unknown command '{other}' (try: train, serve, bench, inspect)"),
     }
 }
 
@@ -57,10 +62,20 @@ fn print_usage() {
          \x20                  [--agg-impl scatter|pallas] [--no-pipeline] [--no-chunk-sched]\n\
          \x20                  [--executor-threads N] [--intra-threads N] [--no-fused-nn]\n\
          \x20                  [--chunks C] [--device-mem-mb MB] [--feat-dim D] [--task nc|lp]\n\
+         \x20                  [--checkpoint-dir D] [--resume]\n\
+         \x20 neutron-tp serve [--checkpoint F | --profile P [--warm-epochs K]]\n\
+         \x20                  [--requests N] [--batch-size B] [--executor-threads N]\n\
          \x20 neutron-tp bench <{}|all> [--out DIR] [--fast]\n\
          \x20 neutron-tp inspect [--artifacts DIR]\n\n\
-         systems: neutron_tp naive_tp dp_full dp_cache minibatch historical",
-        experiments::ALL.join("|")
+         systems: neutron_tp naive_tp dp_full dp_cache minibatch historical\n\n\
+         checkpoints: --checkpoint-dir saves <D>/{} (versioned binary:\n\
+         params + Adam moments + epoch counter; atomic rename) after every\n\
+         epoch; --resume continues from it bit-identically. `serve` loads a\n\
+         checkpoint, runs the forward-only decoupled pass (2 embedding\n\
+         collectives at any depth), then answers vertex queries in\n\
+         micro-batches and prints a ServeReport (p50/p95/p99 latency, qps).",
+        experiments::ALL.join("|"),
+        checkpoint::FILE_NAME
     );
 }
 
@@ -116,6 +131,12 @@ fn apply_flag_overrides(cfg: &mut RunConfig, flags: &Flags) -> anyhow::Result<()
     if let Some(v) = flags.get("gpu-speedup") {
         cfg.net.gpu_speedup = v.parse()?;
     }
+    if let Some(v) = flags.get("checkpoint-dir") {
+        cfg.checkpoint_dir = Some(v.clone());
+    }
+    if flags.has("resume") {
+        cfg.resume = true;
+    }
     if flags.has("no-pipeline") {
         cfg.pipeline = false;
     }
@@ -148,8 +169,29 @@ fn train(flags: &Flags) -> anyhow::Result<()> {
     };
     let pool = ExecutorPool::with_intra(&store, cfg.executor_threads, cfg.intra_threads)?;
     let ctx = Ctx { cfg: &cfg, data: &data, store: &store, pool: &pool };
-    let reports = parallel::run(&ctx)?;
-    for (e, r) in reports.iter().enumerate() {
+
+    let mut engine = parallel::Engine::new(&ctx)?;
+    let mut start_epoch = 0usize;
+    if cfg.resume {
+        let dir = cfg
+            .checkpoint_dir
+            .as_deref()
+            .ok_or_else(|| anyhow::anyhow!("--resume needs --checkpoint-dir"))?;
+        let path = checkpoint::latest_path(dir);
+        let ckpt = checkpoint::load(&path)?;
+        ckpt.meta.matches(&cfg)?;
+        start_epoch = ckpt.state.epochs_done;
+        engine.import_state(ckpt.state)?;
+        eprintln!("resumed from {} after {start_epoch} epoch(s)", path.display());
+        if start_epoch >= cfg.epochs {
+            eprintln!(
+                "checkpoint already has {start_epoch} epochs (>= --epochs {}); nothing to do",
+                cfg.epochs
+            );
+        }
+    }
+    for e in start_epoch..cfg.epochs {
+        let r = engine.run_epoch(&ctx)?;
         println!(
             "epoch {e:>3}: {} | train_acc {:.3} test_acc {:.3} | wall {:.2}s",
             r.table_row(),
@@ -157,6 +199,81 @@ fn train(flags: &Flags) -> anyhow::Result<()> {
             r.test_acc,
             r.wall_secs
         );
+        if let Some(dir) = &cfg.checkpoint_dir {
+            let path = checkpoint::latest_path(dir);
+            let ckpt = checkpoint::Checkpoint {
+                meta: checkpoint::CheckpointMeta::of(&cfg),
+                state: engine.export_state(),
+            };
+            checkpoint::save(&path, &ckpt)?;
+        }
+    }
+    Ok(())
+}
+
+fn serve_cmd(flags: &Flags) -> anyhow::Result<()> {
+    let mut cfg = match flags.get("config") {
+        Some(path) => RunConfig::from_toml(&std::fs::read_to_string(path)?)?,
+        None => RunConfig::default(),
+    };
+    apply_flag_overrides(&mut cfg, flags)?;
+
+    let store = ArtifactStore::load(artifacts_dir(flags))?;
+    let loaded = match flags.get("checkpoint") {
+        Some(f) => {
+            let ckpt = checkpoint::load(std::path::Path::new(f))?;
+            ckpt.meta.apply_to(&mut cfg);
+            eprintln!(
+                "checkpoint {}: {} on {} after {} epoch(s)",
+                f,
+                cfg.system.label(),
+                cfg.profile,
+                ckpt.state.epochs_done
+            );
+            Some(ckpt.state.params)
+        }
+        None => None,
+    };
+    cfg.validate()?;
+
+    let p = datasets::profile(&cfg.profile).unwrap();
+    let data = match cfg.feat_dim {
+        Some(d) => Dataset::generate_with_dim(p, d, cfg.seed),
+        None => Dataset::generate(p, cfg.seed),
+    };
+    let pool = ExecutorPool::with_intra(&store, cfg.executor_threads, cfg.intra_threads)?;
+    let ctx = Ctx { cfg: &cfg, data: &data, store: &store, pool: &pool };
+
+    let params = match loaded {
+        Some(params) => params,
+        None => {
+            // no checkpoint: warm the parameters in-process first
+            let warm: usize =
+                flags.get("warm-epochs").map(|v| v.parse()).transpose()?.unwrap_or(1);
+            eprintln!("no --checkpoint given: training {warm} warm epoch(s) on {}", cfg.profile);
+            let mut engine = parallel::Engine::new(&ctx)?;
+            for _ in 0..warm {
+                engine.run_epoch(&ctx)?;
+            }
+            engine.export_state().params
+        }
+    };
+
+    let opts = serve::ServeOptions {
+        requests: flags.get("requests").map(|v| v.parse()).transpose()?.unwrap_or(256),
+        batch_size: flags.get("batch-size").map(|v| v.parse()).transpose()?.unwrap_or(32),
+        seed: cfg.seed ^ 0x5e7e,
+    };
+    let (report, engine) = serve::serve(&ctx, &params, &opts)?;
+    println!("serve: {}", report.table_row());
+    println!(
+        "test accuracy from served logits: {:.3}",
+        engine.test_accuracy(&data)
+    );
+    let sample: Vec<u32> = (0..4.min(p.v as u32)).collect();
+    let classes = engine.predict(&sample);
+    for (id, cls) in sample.iter().zip(classes) {
+        println!("  vertex {id} -> class {cls}");
     }
     Ok(())
 }

@@ -94,6 +94,84 @@ impl EpochReport {
     }
 }
 
+/// One serving run's measurement (DESIGN.md §7): queries served, tail
+/// latency of the micro-batched request loop, and the parity health of
+/// the served logits against the precomputed full-graph forward.
+#[derive(Clone, Debug, Default)]
+pub struct ServeReport {
+    pub queries: usize,
+    pub batches: usize,
+    pub batch_size: usize,
+    /// checkpoint load + full-graph forward before the first request
+    pub startup_secs: f64,
+    /// wall time of the request loop only
+    pub wall_secs: f64,
+    pub qps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// max |served logit - precomputed full-graph logit| over all queries
+    /// (pass-boundary float reassociation only; ~0)
+    pub max_logit_diff: f32,
+    /// embedding collectives the startup forward cost (2 for decoupled TP)
+    pub collective_rounds: usize,
+}
+
+impl ServeReport {
+    /// Assemble from raw per-query latencies (seconds).
+    pub fn from_latencies(
+        mut lat_secs: Vec<f64>,
+        batches: usize,
+        batch_size: usize,
+        startup_secs: f64,
+        wall_secs: f64,
+    ) -> ServeReport {
+        let queries = lat_secs.len();
+        lat_secs.sort_by(f64::total_cmp);
+        let qps = if wall_secs > 0.0 { queries as f64 / wall_secs } else { 0.0 };
+        ServeReport {
+            queries,
+            batches,
+            batch_size,
+            startup_secs,
+            wall_secs,
+            qps,
+            p50_ms: percentile(&lat_secs, 0.50) * 1e3,
+            p95_ms: percentile(&lat_secs, 0.95) * 1e3,
+            p99_ms: percentile(&lat_secs, 0.99) * 1e3,
+            max_logit_diff: 0.0,
+            collective_rounds: 0,
+        }
+    }
+
+    /// One-line summary the CLI prints.
+    pub fn table_row(&self) -> String {
+        format!(
+            "{} queries in {} batches (B={}) | {:.0} qps | latency ms p50 {:.3} p95 {:.3} \
+             p99 {:.3} | startup {:.2}s ({} collectives) | max logit diff {:.2e}",
+            self.queries,
+            self.batches,
+            self.batch_size,
+            self.qps,
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+            self.startup_secs,
+            self.collective_rounds,
+            self.max_logit_diff
+        )
+    }
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice (`q` in `[0, 1]`).
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (q * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
 /// Fig-15-style utilization series: compute-busy fraction per time bucket.
 pub fn utilization_series(sim: &EventSim, buckets: usize) -> Vec<Vec<f64>> {
     let end = sim.makespan().max(1e-9);
@@ -138,6 +216,27 @@ mod tests {
         assert_eq!(r.workers[0].comp_secs, 2.0);
         assert_eq!(r.workers[1].comm_secs, 1.0);
         assert_eq!(r.sim_epoch_secs, 2.0);
+    }
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.50), 50.0);
+        assert_eq!(percentile(&v, 0.95), 95.0);
+        assert_eq!(percentile(&v, 0.99), 99.0);
+        assert_eq!(percentile(&v, 1.0), 100.0);
+        assert_eq!(percentile(&[7.0], 0.5), 7.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn serve_report_orders_percentiles() {
+        let lat: Vec<f64> = (0..64).map(|i| 0.001 + (i % 7) as f64 * 1e-4).collect();
+        let r = ServeReport::from_latencies(lat, 8, 8, 0.5, 0.064);
+        assert_eq!(r.queries, 64);
+        assert!(r.p50_ms <= r.p95_ms && r.p95_ms <= r.p99_ms);
+        assert!((r.qps - 1000.0).abs() < 1.0, "{}", r.qps);
+        assert!(!r.table_row().is_empty());
     }
 
     #[test]

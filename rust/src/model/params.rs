@@ -59,6 +59,24 @@ impl GnnParams {
         self.stacks.iter().flatten().map(DenseLayer::param_count).sum()
     }
 
+    /// True when `other` has exactly this parameter layout (stack count,
+    /// layer shapes, attention presence) — the precondition for swapping
+    /// one parameter set in for another (checkpoint restore).
+    pub fn same_shape(&self, other: &GnnParams) -> bool {
+        self.stacks.len() == other.stacks.len()
+            && self.stacks.iter().zip(&other.stacks).all(|(a, b)| {
+                a.len() == b.len()
+                    && a.iter().zip(b).all(|(la, lb)| {
+                        la.w.shape() == lb.w.shape() && la.b.len() == lb.b.len()
+                    })
+            })
+            && match (&self.attn, &other.attn) {
+                (None, None) => true,
+                (Some((a1, a2)), Some((b1, b2))) => a1.len() == b1.len() && a2.len() == b2.len(),
+                _ => false,
+            }
+    }
+
     pub fn grad_bytes(&self) -> usize {
         self.param_count() * 4
     }
@@ -73,6 +91,18 @@ pub struct Adam {
     t: i32,
     m: Vec<Vec<f32>>,
     v: Vec<Vec<f32>>,
+}
+
+/// Portable snapshot of the optimizer moments — everything Adam
+/// accumulates across steps. `lr`/`beta`/`eps` are *not* part of the
+/// state: they come from the run configuration, and a resumed run must
+/// present the same configuration anyway (checked at checkpoint load,
+/// see `serve::checkpoint`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdamState {
+    pub t: i32,
+    pub m: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
 }
 
 impl Adam {
@@ -92,6 +122,38 @@ impl Adam {
             m: sizes.iter().map(|&s| vec![0.0; s]).collect(),
             v: sizes.iter().map(|&s| vec![0.0; s]).collect(),
         }
+    }
+
+    /// Snapshot the accumulated moments (checkpointing).
+    pub fn export_state(&self) -> AdamState {
+        AdamState { t: self.t, m: self.m.clone(), v: self.v.clone() }
+    }
+
+    /// Restore previously exported moments. The slot layout must match
+    /// the parameter set this optimizer was built for.
+    pub fn import_state(&mut self, state: AdamState) -> crate::Result<()> {
+        anyhow::ensure!(
+            state.m.len() == self.m.len() && state.v.len() == self.v.len(),
+            "Adam state slot count mismatch: checkpoint has {}m/{}v, model needs {}m/{}v",
+            state.m.len(),
+            state.v.len(),
+            self.m.len(),
+            self.v.len()
+        );
+        for (slot, (have, want)) in
+            state.m.iter().zip(&self.m).chain(state.v.iter().zip(&self.v)).enumerate()
+        {
+            anyhow::ensure!(
+                have.len() == want.len(),
+                "Adam state slot {slot} length mismatch: {} vs {}",
+                have.len(),
+                want.len()
+            );
+        }
+        self.t = state.t;
+        self.m = state.m;
+        self.v = state.v;
+        Ok(())
     }
 
     /// Apply one step. `grads` is flattened in stack-major order:
@@ -195,6 +257,48 @@ mod tests {
         }
         let w = p.stacks[0][0].w.get(0, 0);
         assert!((w - 3.0).abs() < 0.05, "w={w}");
+    }
+
+    #[test]
+    fn adam_state_roundtrip_resumes_identically() {
+        // stepping (export -> fresh Adam -> import -> step) must be
+        // bit-identical to stepping the original optimizer
+        let mut p1 = GnnParams::init(&[4, 2], 1, false, 3);
+        let mut p2 = p1.clone();
+        let mut a1 = Adam::new(&p1, 0.05);
+        let grad = |p: &GnnParams| {
+            let gw = Matrix::from_fn(4, 2, |r, c| (r + c) as f32 * 0.1 + p.stacks[0][0].b[0]);
+            vec![(gw, vec![0.25; 2])]
+        };
+        for _ in 0..3 {
+            let g = grad(&p1);
+            a1.step(&mut p1, &g);
+        }
+        let state = a1.export_state();
+        let mut a2 = Adam::new(&p2, 0.05);
+        for _ in 0..3 {
+            let g = grad(&p2);
+            a2.step(&mut p2, &g);
+        }
+        a2.import_state(state).unwrap();
+        assert_eq!(a2.export_state(), a1.export_state());
+        let (ga, gb) = (grad(&p1), grad(&p2));
+        a1.step(&mut p1, &ga);
+        a2.step(&mut p2, &gb);
+        assert_eq!(p1.stacks[0][0].w, p2.stacks[0][0].w);
+        assert_eq!(p1.stacks[0][0].b, p2.stacks[0][0].b);
+    }
+
+    #[test]
+    fn adam_state_shape_mismatch_rejected() {
+        let p = GnnParams::init(&[4, 2], 1, false, 3);
+        let mut a = Adam::new(&p, 0.05);
+        let mut st = a.export_state();
+        st.m.pop();
+        assert!(a.import_state(st).is_err());
+        let mut st2 = a.export_state();
+        st2.v[0].push(0.0);
+        assert!(a.import_state(st2).is_err());
     }
 
     #[test]

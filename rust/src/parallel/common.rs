@@ -24,7 +24,67 @@ use crate::graph::{Csr, Dataset};
 use crate::metrics::EpochReport;
 use crate::model::params::{DenseLayer, GnnParams};
 use crate::runtime::ops::{Ops, Pending};
+use crate::runtime::DeviceMemory;
+use crate::sched::chunks as sched_chunks;
 use crate::tensor::{pad_tile, Matrix};
+
+use super::Ctx;
+
+/// Chunk geometry of the decoupled TP aggregation phase, derived from
+/// the device budget and the layer width chain. Shared by training
+/// (`tp::TpEngine`) and serving (`serve::InferenceEngine`): the serving
+/// bit-parity contract depends on both sides deriving *identical* plans,
+/// so this derivation must have exactly one home.
+pub fn decoupled_geometry(
+    ctx: &Ctx,
+    dims: &[usize],
+) -> crate::Result<sched_chunks::ChunkGeometry> {
+    let cfg = ctx.cfg;
+    let p = &ctx.data.profile;
+    // device budget: resident panel = dim slice of the widest layer +
+    // local rows of every activation
+    let mem = DeviceMemory::from_mb(cfg.device_mem_mb);
+    let widest = *dims.iter().max().unwrap();
+    let resident = (p.v / cfg.workers) * dims.iter().sum::<usize>() * 4
+        + p.v * pad_tile(widest.div_ceil(cfg.workers)) * 4;
+    sched_chunks::choose_geometry(
+        ctx.store,
+        &ctx.data.graph,
+        cfg.agg_impl == crate::config::AggImpl::Pallas,
+        resident,
+        &mem,
+        cfg.chunks,
+        cfg.chunk_sched,
+    )
+}
+
+/// Forward-orientation source graphs of the decoupled engines: the
+/// normalized graph for GCN/GAT, per-relation graphs plus the self-loop
+/// identity "relation" (the W0 path) for tied-weight R-GCN — in that
+/// order, which both the training plans and the serving batch passes
+/// rely on.
+pub fn decoupled_graphs(ctx: &Ctx) -> crate::Result<Vec<Csr>> {
+    if ctx.cfg.model == crate::config::ModelKind::Rgcn {
+        let h = ctx
+            .data
+            .hetero
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("rgcn needs a hetero profile"))?;
+        let mut gs: Vec<Csr> = h.rels().to_vec();
+        gs.push(identity_csr(ctx.data.profile.v));
+        Ok(gs)
+    } else {
+        Ok(vec![ctx.data.graph.clone()])
+    }
+}
+
+/// `n x n` identity graph (each vertex's only in-edge is itself, weight
+/// 1) — the R-GCN self-loop path.
+pub fn identity_csr(n: usize) -> Csr {
+    let row_ptr: Vec<u32> = (0..=n as u32).collect();
+    let col: Vec<u32> = (0..n as u32).collect();
+    Csr::new(n, row_ptr, col, vec![1.0; n])
+}
 
 /// Activations cached by one worker's forward NN chain.
 pub struct ChainCache {

@@ -38,6 +38,7 @@ pub struct DpEngine {
     dims: Vec<usize>,
     plans: Vec<crate::graph::chunk::ChunkPlan>,
     bwd_plans: Vec<crate::graph::chunk::ChunkPlan>,
+    epoch_idx: usize,
 }
 
 impl DpEngine {
@@ -92,11 +93,48 @@ impl DpEngine {
 
         let params = GnnParams::init(&dims, 1, false, cfg.seed);
         let adam = Adam::new(&params, cfg.lr);
-        Ok(DpEngine { cache, params, adam, partition, remote, halo_edges, dims, plans, bwd_plans })
+        Ok(DpEngine {
+            cache,
+            params,
+            adam,
+            partition,
+            remote,
+            halo_edges,
+            dims,
+            plans,
+            bwd_plans,
+            epoch_idx: 0,
+        })
     }
 
-    pub fn run(&mut self, ctx: &Ctx) -> crate::Result<Vec<EpochReport>> {
-        (0..ctx.cfg.epochs).map(|_| self.run_epoch(ctx)).collect()
+    pub fn epochs_done(&self) -> usize {
+        self.epoch_idx
+    }
+
+    pub fn params(&self) -> &GnnParams {
+        &self.params
+    }
+
+    /// Snapshot for checkpointing (see `parallel::TrainState`).
+    pub fn export_state(&self) -> super::TrainState {
+        super::TrainState {
+            epochs_done: self.epoch_idx,
+            params: self.params.clone(),
+            adam: self.adam.export_state(),
+            hist: Vec::new(),
+        }
+    }
+
+    /// Restore a snapshot taken under the same `(RunConfig, Dataset)`.
+    pub fn import_state(&mut self, st: super::TrainState) -> crate::Result<()> {
+        anyhow::ensure!(
+            self.params.same_shape(&st.params),
+            "checkpoint parameter shapes do not match this configuration"
+        );
+        self.params = st.params;
+        self.adam.import_state(st.adam)?;
+        self.epoch_idx = st.epochs_done;
+        Ok(())
     }
 
     pub fn run_epoch(&mut self, ctx: &Ctx) -> crate::Result<EpochReport> {
@@ -295,6 +333,7 @@ impl DpEngine {
             ((comm_sim_secs / ctx.cfg.workers as f64) + redundant_sim_secs / ctx.cfg.workers as f64)
                 / total;
         report.wall_secs = wall.elapsed().as_secs_f64();
+        self.epoch_idx += 1;
         Ok(report)
     }
 

@@ -79,8 +79,45 @@ impl HistoricalEngine {
         Ok(HistoricalEngine { params, adam, partition, hist, dims, plans, bwd_plans, epoch_idx: 0 })
     }
 
-    pub fn run(&mut self, ctx: &Ctx) -> crate::Result<Vec<EpochReport>> {
-        (0..ctx.cfg.epochs).map(|_| self.run_epoch(ctx)).collect()
+    pub fn epochs_done(&self) -> usize {
+        self.epoch_idx
+    }
+
+    pub fn params(&self) -> &GnnParams {
+        &self.params
+    }
+
+    /// Snapshot for checkpointing. Unlike the other engines, the
+    /// historical cache itself is part of the evolving state: on a
+    /// non-refresh epoch aggregation reads the *stale* panels, so a
+    /// resume that dropped them would silently refresh and diverge from
+    /// the uninterrupted run.
+    pub fn export_state(&self) -> super::TrainState {
+        super::TrainState {
+            epochs_done: self.epoch_idx,
+            params: self.params.clone(),
+            adam: self.adam.export_state(),
+            hist: self.hist.clone(),
+        }
+    }
+
+    /// Restore a snapshot taken under the same `(RunConfig, Dataset)`.
+    pub fn import_state(&mut self, st: super::TrainState) -> crate::Result<()> {
+        anyhow::ensure!(
+            self.params.same_shape(&st.params),
+            "checkpoint parameter shapes do not match this configuration"
+        );
+        anyhow::ensure!(
+            st.hist.len() == self.hist.len(),
+            "checkpoint historical cache has {} layer panels, this configuration needs {}",
+            st.hist.len(),
+            self.hist.len()
+        );
+        self.params = st.params;
+        self.adam.import_state(st.adam)?;
+        self.hist = st.hist;
+        self.epoch_idx = st.epochs_done;
+        Ok(())
     }
 
     pub fn run_epoch(&mut self, ctx: &Ctx) -> crate::Result<EpochReport> {

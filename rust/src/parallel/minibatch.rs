@@ -106,8 +106,36 @@ impl MiniBatchEngine {
         Ok(MiniBatchEngine { params, adam, partition, train_by_worker, dims, epoch_idx: 0 })
     }
 
-    pub fn run(&mut self, ctx: &Ctx) -> crate::Result<Vec<EpochReport>> {
-        (0..ctx.cfg.epochs).map(|_| self.run_epoch(ctx)).collect()
+    pub fn epochs_done(&self) -> usize {
+        self.epoch_idx
+    }
+
+    pub fn params(&self) -> &GnnParams {
+        &self.params
+    }
+
+    /// Snapshot for checkpointing (see `parallel::TrainState`). The
+    /// per-epoch sampling RNG is derived from `(seed, epoch_idx)`, so the
+    /// epoch counter carries it.
+    pub fn export_state(&self) -> super::TrainState {
+        super::TrainState {
+            epochs_done: self.epoch_idx,
+            params: self.params.clone(),
+            adam: self.adam.export_state(),
+            hist: Vec::new(),
+        }
+    }
+
+    /// Restore a snapshot taken under the same `(RunConfig, Dataset)`.
+    pub fn import_state(&mut self, st: super::TrainState) -> crate::Result<()> {
+        anyhow::ensure!(
+            self.params.same_shape(&st.params),
+            "checkpoint parameter shapes do not match this configuration"
+        );
+        self.params = st.params;
+        self.adam.import_state(st.adam)?;
+        self.epoch_idx = st.epochs_done;
+        Ok(())
     }
 
     /// Fan-out sampling from a seed set, deepest layer first.

@@ -5,6 +5,15 @@
 //! and the collectives' data plane; timing through the event sim fed by
 //! measured device seconds (scaled by `net.gpu_speedup`) and the wire
 //! model. Every engine returns `EpochReport`s with the paper's metrics.
+//!
+//! For checkpoint/resume every engine also exposes its *evolving* state —
+//! parameters, optimizer moments, completed-epoch count and (for the
+//! historical baseline) the staleness cache — as a [`TrainState`], and can
+//! be restored from one. Everything else an engine holds (chunk plans,
+//! partitions, geometry) is a pure function of `(RunConfig, Dataset)` and
+//! is rebuilt deterministically on construction, which is what makes a
+//! restored run bit-identical to an uninterrupted one (see
+//! `DESIGN.md §7`).
 
 pub mod common;
 pub mod dp_full;
@@ -15,7 +24,9 @@ pub mod tp;
 use crate::config::{RunConfig, System};
 use crate::graph::Dataset;
 use crate::metrics::EpochReport;
+use crate::model::params::{AdamState, GnnParams};
 use crate::runtime::{ArtifactStore, ExecutorPool};
+use crate::tensor::Matrix;
 
 /// Shared engine context (borrowed by all engines).
 pub struct Ctx<'a> {
@@ -36,14 +47,98 @@ impl<'a> Ctx<'a> {
     }
 }
 
+/// The state a training run accumulates across epochs — everything a
+/// checkpoint must carry for a resumed run to be bit-identical to an
+/// uninterrupted one. Per-epoch RNG streams are *derived* from
+/// `(cfg.seed, epochs_done)` by every engine, so the epoch counter stands
+/// in for them.
+#[derive(Clone, Debug)]
+pub struct TrainState {
+    /// epochs fully completed (the next epoch to run has this index)
+    pub epochs_done: usize,
+    pub params: GnnParams,
+    pub adam: AdamState,
+    /// historical engine's per-layer-boundary embedding cache
+    /// (`[layers + 1]` entries); empty for every other system
+    pub hist: Vec<Option<Matrix>>,
+}
+
+/// A constructed training engine for any of the six systems, with the
+/// uniform epoch/checkpoint surface the CLI and the serving subsystem
+/// drive.
+pub enum Engine {
+    Tp(tp::TpEngine),
+    Dp(dp_full::DpEngine),
+    MiniBatch(minibatch::MiniBatchEngine),
+    Historical(historical::HistoricalEngine),
+}
+
+impl Engine {
+    pub fn new(ctx: &Ctx) -> crate::Result<Engine> {
+        Ok(match ctx.cfg.system {
+            System::NeutronTp => Engine::Tp(tp::TpEngine::new(ctx, true)?),
+            System::NaiveTp => Engine::Tp(tp::TpEngine::new(ctx, false)?),
+            System::DpFull => Engine::Dp(dp_full::DpEngine::new(ctx, false)?),
+            System::DpCache => Engine::Dp(dp_full::DpEngine::new(ctx, true)?),
+            System::MiniBatch => Engine::MiniBatch(minibatch::MiniBatchEngine::new(ctx)?),
+            System::Historical => Engine::Historical(historical::HistoricalEngine::new(ctx)?),
+        })
+    }
+
+    /// Run one epoch (engines track their own epoch counter).
+    pub fn run_epoch(&mut self, ctx: &Ctx) -> crate::Result<EpochReport> {
+        match self {
+            Engine::Tp(e) => e.run_epoch(ctx),
+            Engine::Dp(e) => e.run_epoch(ctx),
+            Engine::MiniBatch(e) => e.run_epoch(ctx),
+            Engine::Historical(e) => e.run_epoch(ctx),
+        }
+    }
+
+    /// Epochs completed so far.
+    pub fn epochs_done(&self) -> usize {
+        match self {
+            Engine::Tp(e) => e.epochs_done(),
+            Engine::Dp(e) => e.epochs_done(),
+            Engine::MiniBatch(e) => e.epochs_done(),
+            Engine::Historical(e) => e.epochs_done(),
+        }
+    }
+
+    /// Snapshot the evolving state (checkpointing).
+    pub fn export_state(&self) -> TrainState {
+        match self {
+            Engine::Tp(e) => e.export_state(),
+            Engine::Dp(e) => e.export_state(),
+            Engine::MiniBatch(e) => e.export_state(),
+            Engine::Historical(e) => e.export_state(),
+        }
+    }
+
+    /// Restore a snapshot taken from the same `(RunConfig, Dataset)`;
+    /// subsequent epochs are bit-identical to an uninterrupted run.
+    pub fn import_state(&mut self, st: TrainState) -> crate::Result<()> {
+        match self {
+            Engine::Tp(e) => e.import_state(st),
+            Engine::Dp(e) => e.import_state(st),
+            Engine::MiniBatch(e) => e.import_state(st),
+            Engine::Historical(e) => e.import_state(st),
+        }
+    }
+
+    /// The current parameter set (serving reads this without a snapshot).
+    pub fn params(&self) -> &GnnParams {
+        match self {
+            Engine::Tp(e) => e.params(),
+            Engine::Dp(e) => e.params(),
+            Engine::MiniBatch(e) => e.params(),
+            Engine::Historical(e) => e.params(),
+        }
+    }
+}
+
 /// Run `cfg.epochs` epochs of the configured system.
 pub fn run(ctx: &Ctx) -> crate::Result<Vec<EpochReport>> {
-    match ctx.cfg.system {
-        System::NeutronTp => tp::TpEngine::new(ctx, true)?.run(ctx),
-        System::NaiveTp => tp::TpEngine::new(ctx, false)?.run(ctx),
-        System::DpFull => dp_full::DpEngine::new(ctx, false)?.run(ctx),
-        System::DpCache => dp_full::DpEngine::new(ctx, true)?.run(ctx),
-        System::MiniBatch => minibatch::MiniBatchEngine::new(ctx)?.run(ctx),
-        System::Historical => historical::HistoricalEngine::new(ctx)?.run(ctx),
-    }
+    let mut engine = Engine::new(ctx)?;
+    (0..ctx.cfg.epochs).map(|_| engine.run_epoch(ctx)).collect()
 }

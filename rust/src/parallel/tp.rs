@@ -25,7 +25,6 @@ use crate::graph::Csr;
 use crate::metrics::EpochReport;
 use crate::model::layer_dims;
 use crate::model::params::{Adam, GnnParams};
-use crate::runtime::DeviceMemory;
 use crate::sched::{chunks as sched_chunks, PipelinePlan};
 use crate::tensor::{dim_slices, pad_tile, row_slices, Matrix};
 use crate::util::Rng;
@@ -61,45 +60,18 @@ impl TpEngine {
         let lp = cfg.task == crate::config::Task::LinkPrediction;
         let dims = layer_dims(p, cfg.layers, cfg.feat_dim, lp);
 
-        // device budget: resident panel = dim slice of the widest layer +
-        // local rows of every activation
-        let mem = DeviceMemory::from_mb(cfg.device_mem_mb);
-        let widest = *dims.iter().max().unwrap();
-        let resident = (p.v / cfg.workers) * dims.iter().sum::<usize>() * 4
-            + p.v * pad_tile(widest.div_ceil(cfg.workers)) * 4;
-        let geometry = sched_chunks::choose_geometry(
-            ctx.store,
-            &ctx.data.graph,
-            cfg.agg_impl == crate::config::AggImpl::Pallas,
-            resident,
-            &mem,
-            cfg.chunks,
-            cfg.chunk_sched,
-        )?;
+        // geometry + source graphs shared with the serving path (the
+        // serve-vs-train bit parity depends on deriving them in one place)
+        let geometry = common::decoupled_geometry(ctx, &dims)?;
         let build = |g: &Csr| {
             ChunkPlan::build(g, geometry.rows_per_chunk, geometry.c_bucket, geometry.e_bucket)
         };
-        let (fwd_plans, bwd_plans) = if cfg.model == crate::config::ModelKind::Rgcn {
-            let h = ctx.data.hetero.as_ref().expect("rgcn needs hetero profile");
-            // per-relation plans + a self-loop "relation" (the W_0 path)
-            let eye = {
-                let n_v = p.v;
-                let row_ptr: Vec<u32> = (0..=n_v as u32).collect();
-                let col: Vec<u32> = (0..n_v as u32).collect();
-                Csr::new(n_v, row_ptr, col, vec![1.0; n_v])
-            };
-            let mut f: Vec<ChunkPlan> = h.rels().iter().map(&build).collect();
-            let mut b: Vec<ChunkPlan> =
-                h.rels().iter().map(|g| build(&g.transpose())).collect();
-            f.push(build(&eye));
-            b.push(build(&eye));
-            (f, b)
-        } else {
-            (
-                vec![build(&ctx.data.graph)],
-                vec![build(&ctx.data.graph.transpose())],
-            )
-        };
+        // for R-GCN: per-relation graphs + the self-loop identity (whose
+        // transpose is itself, so the backward list stays correct)
+        let graphs = common::decoupled_graphs(ctx)?;
+        let fwd_plans: Vec<ChunkPlan> = graphs.iter().map(&build).collect();
+        let bwd_plans: Vec<ChunkPlan> =
+            graphs.iter().map(|g| build(&g.transpose())).collect();
         let params = GnnParams::init(&dims, 1, is_gat, cfg.seed);
         let adam = Adam::new(&params, cfg.lr);
         let attn_graph = is_gat.then(|| {
@@ -122,8 +94,36 @@ impl TpEngine {
         })
     }
 
-    pub fn run(&mut self, ctx: &Ctx) -> crate::Result<Vec<EpochReport>> {
-        (0..ctx.cfg.epochs).map(|_| self.run_epoch(ctx)).collect()
+    pub fn epochs_done(&self) -> usize {
+        self.epoch_idx
+    }
+
+    pub fn params(&self) -> &GnnParams {
+        &self.params
+    }
+
+    /// Snapshot for checkpointing (see `parallel::TrainState`). The LP
+    /// negative-sampling RNG is derived from `(seed, epoch_idx)`, so the
+    /// epoch counter carries it.
+    pub fn export_state(&self) -> super::TrainState {
+        super::TrainState {
+            epochs_done: self.epoch_idx,
+            params: self.params.clone(),
+            adam: self.adam.export_state(),
+            hist: Vec::new(),
+        }
+    }
+
+    /// Restore a snapshot taken under the same `(RunConfig, Dataset)`.
+    pub fn import_state(&mut self, st: super::TrainState) -> crate::Result<()> {
+        anyhow::ensure!(
+            self.params.same_shape(&st.params),
+            "checkpoint parameter shapes do not match this configuration"
+        );
+        self.params = st.params;
+        self.adam.import_state(st.adam)?;
+        self.epoch_idx = st.epochs_done;
+        Ok(())
     }
 
     pub fn run_epoch(&mut self, ctx: &Ctx) -> crate::Result<EpochReport> {

@@ -1,0 +1,633 @@
+//! Versioned binary checkpoints (DESIGN.md §7).
+//!
+//! A checkpoint freezes everything a training run accumulates —
+//! `GnnParams`, the Adam moments, the completed-epoch counter and (for
+//! the historical baseline) the staleness cache — together with a header
+//! describing the configuration that produced it. Restoring under the
+//! same `(RunConfig, Dataset)` resumes training *bit-identically* to an
+//! uninterrupted run: everything else an engine holds is rebuilt
+//! deterministically from the config and the seed (see
+//! `parallel::TrainState`).
+//!
+//! ## File layout (`.ntpc`, version 1, little-endian)
+//!
+//! ```text
+//! magic   b"NTPC"
+//! u32     format version (1)
+//! u64     payload length in bytes
+//! payload header:  system/profile/model/task names, workers, layers,
+//!                  seed, feat_dim override, lr, batch_size, fanouts,
+//!                  chunks/chunk_sched/device_mem_mb/agg_impl (pass
+//!                  geometry), epochs_done
+//!         params:  per stack, per layer: w shape + data, bias
+//!                  optional GAT attention vectors
+//!         adam:    step count t, per-slot first/second moments
+//!         hist:    optional per-layer-boundary embedding panels
+//! u64     FNV-1a 64 checksum of the payload
+//! ```
+//!
+//! Strings are u64-length-prefixed UTF-8; f32 slices are u64-length-
+//! prefixed raw bit patterns (bit-exact round-trip); matrices carry
+//! `rows, cols` then `rows * cols` f32s. Writes go through a temp file +
+//! rename so a crash mid-save never corrupts the previous checkpoint.
+
+use std::path::{Path, PathBuf};
+
+use crate::config::{AggImpl, ModelKind, RunConfig, System, Task};
+use crate::model::params::{AdamState, DenseLayer, GnnParams};
+use crate::parallel::TrainState;
+use crate::tensor::Matrix;
+
+const MAGIC: &[u8; 4] = b"NTPC";
+const VERSION: u32 = 1;
+/// File name checkpoints are saved under inside `--checkpoint-dir`.
+pub const FILE_NAME: &str = "latest.ntpc";
+
+/// `<dir>/latest.ntpc` — where `train --checkpoint-dir` writes and
+/// `--resume` reads.
+pub fn latest_path(dir: &str) -> PathBuf {
+    Path::new(dir).join(FILE_NAME)
+}
+
+/// The configuration fingerprint stored in every checkpoint header:
+/// every field that changes either the parameter shapes or the numeric
+/// trajectory of subsequent epochs. Execution knobs that are proven
+/// bit-transparent (`executor_threads`, `intra_threads`, `fused_nn`,
+/// `pipeline`, the network cost model) are deliberately *not* part of
+/// the fingerprint — a resumed run may change them freely.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CheckpointMeta {
+    pub system: System,
+    pub profile: String,
+    pub model: ModelKind,
+    pub task: Task,
+    pub workers: usize,
+    pub layers: usize,
+    pub seed: u64,
+    pub feat_dim: Option<usize>,
+    pub lr: f32,
+    /// LP / mini-batch batch size (changes sampling and step boundaries)
+    pub batch_size: usize,
+    /// mini-batch fan-outs (changes the sampled blocks)
+    pub fanouts: Vec<usize>,
+    /// chunk override + scheduling + device budget + aggregation
+    /// lowering: all change pass geometry, hence float accumulation
+    /// order
+    pub chunks: usize,
+    pub chunk_sched: bool,
+    pub device_mem_mb: usize,
+    pub agg_impl: AggImpl,
+}
+
+impl CheckpointMeta {
+    /// Fingerprint of a run configuration.
+    pub fn of(cfg: &RunConfig) -> Self {
+        CheckpointMeta {
+            system: cfg.system,
+            profile: cfg.profile.clone(),
+            model: cfg.model,
+            task: cfg.task,
+            workers: cfg.workers,
+            layers: cfg.layers,
+            seed: cfg.seed,
+            feat_dim: cfg.feat_dim,
+            lr: cfg.lr,
+            batch_size: cfg.batch_size,
+            fanouts: cfg.fanouts.clone(),
+            chunks: cfg.chunks,
+            chunk_sched: cfg.chunk_sched,
+            device_mem_mb: cfg.device_mem_mb,
+            agg_impl: cfg.agg_impl,
+        }
+    }
+
+    /// Check that resuming under `cfg` reproduces the checkpointed run.
+    /// Every field here changes either the parameter shapes or the
+    /// numerical trajectory, so a mismatch is an error, not a warning.
+    pub fn matches(&self, cfg: &RunConfig) -> crate::Result<()> {
+        let want = CheckpointMeta::of(cfg);
+        anyhow::ensure!(
+            self.lr.to_bits() == want.lr.to_bits(),
+            "checkpoint lr {} != configured lr {}",
+            self.lr,
+            want.lr
+        );
+        let mut mismatches = Vec::new();
+        if self.system != want.system {
+            mismatches.push(format!("system {} != {}", self.system.name(), want.system.name()));
+        }
+        if self.profile != want.profile {
+            mismatches.push(format!("profile {} != {}", self.profile, want.profile));
+        }
+        if self.model != want.model {
+            mismatches.push(format!("model {} != {}", self.model.name(), want.model.name()));
+        }
+        if self.task != want.task {
+            mismatches.push(format!("task {} != {}", self.task.name(), want.task.name()));
+        }
+        if self.workers != want.workers {
+            mismatches.push(format!("workers {} != {}", self.workers, want.workers));
+        }
+        if self.layers != want.layers {
+            mismatches.push(format!("layers {} != {}", self.layers, want.layers));
+        }
+        if self.seed != want.seed {
+            mismatches.push(format!("seed {} != {}", self.seed, want.seed));
+        }
+        if self.feat_dim != want.feat_dim {
+            mismatches.push(format!("feat_dim {:?} != {:?}", self.feat_dim, want.feat_dim));
+        }
+        if self.batch_size != want.batch_size {
+            mismatches.push(format!("batch_size {} != {}", self.batch_size, want.batch_size));
+        }
+        if self.fanouts != want.fanouts {
+            mismatches.push(format!("fanouts {:?} != {:?}", self.fanouts, want.fanouts));
+        }
+        if self.chunks != want.chunks {
+            mismatches.push(format!("chunks {} != {}", self.chunks, want.chunks));
+        }
+        if self.chunk_sched != want.chunk_sched {
+            mismatches.push(format!("chunk_sched {} != {}", self.chunk_sched, want.chunk_sched));
+        }
+        if self.device_mem_mb != want.device_mem_mb {
+            mismatches
+                .push(format!("device_mem_mb {} != {}", self.device_mem_mb, want.device_mem_mb));
+        }
+        if self.agg_impl != want.agg_impl {
+            mismatches
+                .push(format!("agg_impl {} != {}", self.agg_impl.name(), want.agg_impl.name()));
+        }
+        anyhow::ensure!(
+            mismatches.is_empty(),
+            "checkpoint header does not match the run configuration: {}",
+            mismatches.join(", ")
+        );
+        Ok(())
+    }
+
+    /// Overwrite `cfg`'s model-identity fields from the header (`serve`
+    /// builds its configuration *from* the checkpoint; execution knobs
+    /// like thread counts stay whatever the caller chose).
+    pub fn apply_to(&self, cfg: &mut RunConfig) {
+        cfg.system = self.system;
+        cfg.profile = self.profile.clone();
+        cfg.model = self.model;
+        cfg.task = self.task;
+        cfg.workers = self.workers;
+        cfg.layers = self.layers;
+        cfg.seed = self.seed;
+        cfg.feat_dim = self.feat_dim;
+        cfg.lr = self.lr;
+        cfg.batch_size = self.batch_size;
+        cfg.fanouts = self.fanouts.clone();
+        cfg.chunks = self.chunks;
+        cfg.chunk_sched = self.chunk_sched;
+        cfg.device_mem_mb = self.device_mem_mb;
+        cfg.agg_impl = self.agg_impl;
+    }
+}
+
+/// A loaded (or about-to-be-saved) checkpoint.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    pub meta: CheckpointMeta,
+    pub state: TrainState,
+}
+
+// ---------------------------------------------------------------------------
+// encoding
+// ---------------------------------------------------------------------------
+
+struct Writer(Vec<u8>);
+
+impl Writer {
+    fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.0.extend_from_slice(s.as_bytes());
+    }
+
+    fn f32s(&mut self, v: &[f32]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.f32(x);
+        }
+    }
+
+    fn matrix(&mut self, m: &Matrix) {
+        self.u64(m.rows() as u64);
+        self.u64(m.cols() as u64);
+        for &x in m.data() {
+            self.f32(x);
+        }
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> crate::Result<&'a [u8]> {
+        // overflow-safe: pos <= len is an invariant, so no `pos + n`
+        anyhow::ensure!(
+            n <= self.buf.len() - self.pos,
+            "checkpoint truncated: wanted {n} bytes at offset {}, payload has {}",
+            self.pos,
+            self.buf.len()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> crate::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> crate::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> crate::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn usize(&mut self) -> crate::Result<usize> {
+        Ok(self.u64()? as usize)
+    }
+
+    fn f32(&mut self) -> crate::Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    fn str(&mut self) -> crate::Result<String> {
+        let n = self.usize()?;
+        anyhow::ensure!(n <= 4096, "checkpoint string of {n} bytes is implausible");
+        Ok(std::str::from_utf8(self.take(n)?)?.to_string())
+    }
+
+    fn f32s_raw(&mut self, n: usize) -> crate::Result<Vec<f32>> {
+        let bytes = self.take(n.checked_mul(4).ok_or_else(|| {
+            anyhow::anyhow!("checkpoint f32 slice length overflows")
+        })?)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+
+    fn f32s(&mut self) -> crate::Result<Vec<f32>> {
+        let n = self.usize()?;
+        self.f32s_raw(n)
+    }
+
+    fn matrix(&mut self) -> crate::Result<Matrix> {
+        let rows = self.usize()?;
+        let cols = self.usize()?;
+        let n = rows.checked_mul(cols).ok_or_else(|| {
+            anyhow::anyhow!("checkpoint matrix shape {rows}x{cols} overflows")
+        })?;
+        Ok(Matrix::from_vec(rows, cols, self.f32s_raw(n)?))
+    }
+}
+
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn encode_payload(ckpt: &Checkpoint) -> Vec<u8> {
+    let mut w = Writer(Vec::new());
+    // header
+    w.str(ckpt.meta.system.name());
+    w.str(&ckpt.meta.profile);
+    w.str(ckpt.meta.model.name());
+    w.str(ckpt.meta.task.name());
+    w.u64(ckpt.meta.workers as u64);
+    w.u64(ckpt.meta.layers as u64);
+    w.u64(ckpt.meta.seed);
+    match ckpt.meta.feat_dim {
+        Some(d) => {
+            w.u8(1);
+            w.u64(d as u64);
+        }
+        None => w.u8(0),
+    }
+    w.f32(ckpt.meta.lr);
+    w.u64(ckpt.meta.batch_size as u64);
+    w.u64(ckpt.meta.fanouts.len() as u64);
+    for &f in &ckpt.meta.fanouts {
+        w.u64(f as u64);
+    }
+    w.u64(ckpt.meta.chunks as u64);
+    w.u8(ckpt.meta.chunk_sched as u8);
+    w.u64(ckpt.meta.device_mem_mb as u64);
+    w.str(ckpt.meta.agg_impl.name());
+    w.u64(ckpt.state.epochs_done as u64);
+    // params
+    let p = &ckpt.state.params;
+    w.u32(p.stacks.len() as u32);
+    for stack in &p.stacks {
+        w.u32(stack.len() as u32);
+        for layer in stack {
+            w.matrix(&layer.w);
+            w.f32s(&layer.b);
+        }
+    }
+    match &p.attn {
+        Some((a1, a2)) => {
+            w.u8(1);
+            w.f32s(a1);
+            w.f32s(a2);
+        }
+        None => w.u8(0),
+    }
+    // adam
+    let a = &ckpt.state.adam;
+    w.u32(a.t as u32);
+    w.u32(a.m.len() as u32);
+    for slot in a.m.iter().chain(&a.v) {
+        w.f32s(slot);
+    }
+    // historical cache
+    w.u32(ckpt.state.hist.len() as u32);
+    for panel in &ckpt.state.hist {
+        match panel {
+            Some(m) => {
+                w.u8(1);
+                w.matrix(m);
+            }
+            None => w.u8(0),
+        }
+    }
+    w.0
+}
+
+fn decode_payload(payload: &[u8]) -> crate::Result<Checkpoint> {
+    let mut r = Reader { buf: payload, pos: 0 };
+    let system: System = r.str()?.parse()?;
+    let profile = r.str()?;
+    let model: ModelKind = r.str()?.parse()?;
+    let task: Task = r.str()?.parse()?;
+    let workers = r.usize()?;
+    let layers = r.usize()?;
+    let seed = r.u64()?;
+    let feat_dim = if r.u8()? == 1 { Some(r.usize()?) } else { None };
+    let lr = r.f32()?;
+    let batch_size = r.usize()?;
+    let n_fanouts = r.usize()?;
+    anyhow::ensure!(n_fanouts <= 64, "implausible fanout count {n_fanouts}");
+    let mut fanouts = Vec::with_capacity(n_fanouts);
+    for _ in 0..n_fanouts {
+        fanouts.push(r.usize()?);
+    }
+    let chunks = r.usize()?;
+    let chunk_sched = r.u8()? == 1;
+    let device_mem_mb = r.usize()?;
+    let agg_impl: AggImpl = r.str()?.parse()?;
+    let epochs_done = r.usize()?;
+    // params
+    let n_stacks = r.u32()? as usize;
+    anyhow::ensure!((1..=64).contains(&n_stacks), "implausible stack count {n_stacks}");
+    let mut stacks = Vec::with_capacity(n_stacks);
+    for _ in 0..n_stacks {
+        let n_layers = r.u32()? as usize;
+        anyhow::ensure!((1..=64).contains(&n_layers), "implausible layer count {n_layers}");
+        let mut stack = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            let w = r.matrix()?;
+            let b = r.f32s()?;
+            stack.push(DenseLayer { w, b });
+        }
+        stacks.push(stack);
+    }
+    let attn = if r.u8()? == 1 {
+        let a1 = r.f32s()?;
+        let a2 = r.f32s()?;
+        Some((a1, a2))
+    } else {
+        None
+    };
+    let params = GnnParams { stacks, attn };
+    // adam
+    let t = r.u32()? as i32;
+    let n_slots = r.u32()? as usize;
+    anyhow::ensure!(n_slots <= 8192, "implausible Adam slot count {n_slots}");
+    let mut m = Vec::with_capacity(n_slots);
+    for _ in 0..n_slots {
+        m.push(r.f32s()?);
+    }
+    let mut v = Vec::with_capacity(n_slots);
+    for _ in 0..n_slots {
+        v.push(r.f32s()?);
+    }
+    // historical cache
+    let n_hist = r.u32()? as usize;
+    anyhow::ensure!(n_hist <= 64, "implausible historical panel count {n_hist}");
+    let mut hist = Vec::with_capacity(n_hist);
+    for _ in 0..n_hist {
+        hist.push(if r.u8()? == 1 { Some(r.matrix()?) } else { None });
+    }
+    anyhow::ensure!(
+        r.pos == payload.len(),
+        "checkpoint has {} trailing payload bytes",
+        payload.len() - r.pos
+    );
+    Ok(Checkpoint {
+        meta: CheckpointMeta {
+            system,
+            profile,
+            model,
+            task,
+            workers,
+            layers,
+            seed,
+            feat_dim,
+            lr,
+            batch_size,
+            fanouts,
+            chunks,
+            chunk_sched,
+            device_mem_mb,
+            agg_impl,
+        },
+        state: TrainState { epochs_done, params, adam: AdamState { t, m, v }, hist },
+    })
+}
+
+// ---------------------------------------------------------------------------
+// file I/O
+// ---------------------------------------------------------------------------
+
+/// Serialize to the in-memory file image (exposed for tests).
+pub fn to_bytes(ckpt: &Checkpoint) -> Vec<u8> {
+    let payload = encode_payload(ckpt);
+    let mut out = Vec::with_capacity(payload.len() + 24);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    let sum = fnv1a64(&payload);
+    out.extend_from_slice(&payload);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+/// Parse a file image produced by [`to_bytes`].
+pub fn from_bytes(bytes: &[u8]) -> crate::Result<Checkpoint> {
+    anyhow::ensure!(bytes.len() >= 24, "checkpoint too short ({} bytes)", bytes.len());
+    anyhow::ensure!(&bytes[..4] == MAGIC, "bad checkpoint magic (not an .ntpc file)");
+    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    anyhow::ensure!(
+        version == VERSION,
+        "unsupported checkpoint version {version} (want {VERSION})"
+    );
+    let plen = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+    anyhow::ensure!(
+        bytes.len() == 24 + plen,
+        "checkpoint length mismatch: header says {} payload bytes, file carries {}",
+        plen,
+        bytes.len().saturating_sub(24)
+    );
+    let payload = &bytes[16..16 + plen];
+    let want = u64::from_le_bytes(bytes[16 + plen..24 + plen].try_into().unwrap());
+    let got = fnv1a64(payload);
+    anyhow::ensure!(got == want, "checkpoint checksum mismatch (corrupt or truncated write)");
+    decode_payload(payload)
+}
+
+/// Atomically write `ckpt` to `path` (temp file + rename; parent
+/// directories are created).
+pub fn save(path: &Path, ckpt: &Checkpoint) -> crate::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let bytes = to_bytes(ckpt);
+    let tmp = path.with_extension("ntpc.tmp");
+    std::fs::write(&tmp, &bytes)?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Load and validate a checkpoint file.
+pub fn load(path: &Path) -> crate::Result<Checkpoint> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| anyhow::anyhow!("reading checkpoint {}: {e}", path.display()))?;
+    from_bytes(&bytes).map_err(|e| anyhow::anyhow!("loading checkpoint {}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::Adam;
+
+    fn sample() -> Checkpoint {
+        let params = GnnParams::init(&[8, 4, 2], 2, true, 11);
+        let adam = Adam::new(&params, 0.01);
+        Checkpoint {
+            meta: CheckpointMeta::of(&RunConfig::default()),
+            state: TrainState {
+                epochs_done: 3,
+                params,
+                adam: adam.export_state(),
+                hist: vec![None, Some(Matrix::from_fn(5, 4, |r, c| (r * 4 + c) as f32))],
+            },
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let ckpt = sample();
+        let back = from_bytes(&to_bytes(&ckpt)).unwrap();
+        assert_eq!(back.meta, ckpt.meta);
+        assert_eq!(back.state.epochs_done, 3);
+        assert_eq!(back.state.params.stacks.len(), 2);
+        let flat_back = back.state.params.stacks.iter().flatten();
+        let flat_want = ckpt.state.params.stacks.iter().flatten();
+        for (a, b) in flat_back.zip(flat_want) {
+            assert_eq!(a.w, b.w);
+            assert_eq!(a.b, b.b);
+        }
+        assert_eq!(back.state.params.attn, ckpt.state.params.attn);
+        assert_eq!(back.state.adam, ckpt.state.adam);
+        assert_eq!(back.state.hist.len(), 2);
+        assert!(back.state.hist[0].is_none());
+        assert_eq!(back.state.hist[1].as_ref().unwrap(), ckpt.state.hist[1].as_ref().unwrap());
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let bytes = to_bytes(&sample());
+        // flipped payload byte -> checksum failure
+        let mut bad = bytes.clone();
+        bad[40] ^= 0x20;
+        assert!(from_bytes(&bad).unwrap_err().to_string().contains("checksum"));
+        // truncation -> length failure
+        assert!(from_bytes(&bytes[..bytes.len() - 9]).is_err());
+        // wrong magic
+        let mut nom = bytes.clone();
+        nom[0] = b'X';
+        assert!(from_bytes(&nom).unwrap_err().to_string().contains("magic"));
+        // future version
+        let mut ver = bytes.clone();
+        ver[4] = 99;
+        assert!(from_bytes(&ver).unwrap_err().to_string().contains("version"));
+    }
+
+    #[test]
+    fn meta_match_rejects_config_drift() {
+        let cfg = RunConfig::default();
+        let meta = CheckpointMeta::of(&cfg);
+        meta.matches(&cfg).unwrap();
+        let other = RunConfig { layers: cfg.layers + 1, ..cfg.clone() };
+        let err = meta.matches(&other).unwrap_err().to_string();
+        assert!(err.contains("layers"), "{err}");
+        // trajectory-affecting knobs are part of the fingerprint too
+        let batched = RunConfig { batch_size: cfg.batch_size + 1, ..cfg.clone() };
+        let err = meta.matches(&batched).unwrap_err().to_string();
+        assert!(err.contains("batch_size"), "{err}");
+        let fanned = RunConfig { fanouts: vec![5], ..cfg.clone() };
+        let err = meta.matches(&fanned).unwrap_err().to_string();
+        assert!(err.contains("fanouts"), "{err}");
+        let lowered = RunConfig { agg_impl: crate::config::AggImpl::Scatter, ..cfg.clone() };
+        let err = meta.matches(&lowered).unwrap_err().to_string();
+        assert!(err.contains("agg_impl"), "{err}");
+        let mut applied = RunConfig { layers: 7, ..RunConfig::default() };
+        meta.apply_to(&mut applied);
+        assert_eq!(applied.layers, cfg.layers);
+    }
+
+    #[test]
+    fn save_load_via_disk() {
+        let dir = std::env::temp_dir().join("neutron-tp-ckpt-test");
+        let path = dir.join(FILE_NAME);
+        let ckpt = sample();
+        save(&path, &ckpt).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.meta, ckpt.meta);
+        assert_eq!(latest_path(dir.to_str().unwrap()), path);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,248 @@
+//! Forward-only full-graph inference over the decoupled TP layout
+//! (DESIGN.md §7).
+//!
+//! The forward pass is the first half of `parallel::tp`'s decoupled
+//! epoch, with every backward/optimizer structure deleted: per-worker NN
+//! chains on vertex row slices, ONE split, `L` chunked full-graph
+//! aggregation rounds, ONE gather. Because the collectives bracket the
+//! whole aggregation phase instead of every layer, a forward of *any*
+//! depth costs exactly **2 embedding collectives** — the serving-path
+//! payoff of the paper's decoupling (§4.1.2; training needs 4 plus the
+//! gradient allreduce).
+//!
+//! Construction runs that forward once and keeps two artifacts:
+//!
+//! * the full logits panel `A^L Z` — per-query answers are exact
+//!   full-graph inference results, and `test_accuracy` over it is
+//!   bit-identical to what the training forward would have reported for
+//!   the same parameters (asserted by `tests/serve.rs`);
+//! * the penultimate panel `A^(L-1) Z`, pre-sliced into dimension tiles —
+//!   [`InferenceEngine::serve_batch`] re-runs only the *final*
+//!   aggregation round for the queried rows against it, so each
+//!   micro-batch is real artifact work through the executor pool rather
+//!   than a host-side table lookup.
+
+use std::sync::Arc;
+
+use crate::config::ModelKind;
+use crate::graph::chunk::ChunkPlan;
+use crate::graph::{Csr, Dataset};
+use crate::model::layer_dims;
+use crate::model::params::GnnParams;
+use crate::parallel::{common, Ctx};
+use crate::runtime::ops::Ops;
+use crate::tensor::{pad_tile, row_slices, Matrix};
+
+/// A loaded model plus the precomputed full-graph forward.
+pub struct InferenceEngine {
+    num_vertices: usize,
+    num_classes: usize,
+    /// layer width chain `d -> h -> ... -> wf`
+    dims: Vec<usize>,
+    /// forward-orientation source graphs: one for GCN, one per relation
+    /// plus the self-loop identity for R-GCN (micro-batch passes are
+    /// lowered against these)
+    graphs: Vec<Csr>,
+    /// `A^(L-1) Z` split into `[V, DIM_TILE]` column buffers shared by
+    /// every batch job
+    penult_tiles: Vec<Arc<Vec<f32>>>,
+    /// padded width of the penultimate panel (`pad_tile(wf)`)
+    penult_pad_cols: usize,
+    /// `A^L Z`, cropped `[V, wf]`
+    logits: Matrix,
+    nn_device_secs: f64,
+    agg_device_secs: f64,
+    collective_rounds: usize,
+}
+
+impl InferenceEngine {
+    /// Build the engine and run the full-graph forward once with
+    /// `params`. The chunk geometry derivation is identical to the
+    /// training engine's, so aggregation accumulates in the same order
+    /// and the logits match the training forward bit-for-bit.
+    pub fn new(ctx: &Ctx, params: &GnnParams) -> crate::Result<Self> {
+        let cfg = ctx.cfg;
+        let data = ctx.data;
+        let p = &data.profile;
+        anyhow::ensure!(
+            cfg.model != ModelKind::Gat,
+            "serving implements the GCN/R-GCN decoupled forward \
+             (GAT attention precompute is training-path only)"
+        );
+        let lp = cfg.task == crate::config::Task::LinkPrediction;
+        let dims = layer_dims(p, cfg.layers, cfg.feat_dim, lp);
+        let shape_ok = params.stacks.len() == 1
+            && params.attn.is_none()
+            && params.layers().len() + 1 == dims.len()
+            && params
+                .layers()
+                .iter()
+                .zip(dims.windows(2))
+                .all(|(l, d)| l.w.shape() == (d[0], d[1]) && l.b.len() == d[1]);
+        anyhow::ensure!(
+            shape_ok,
+            "parameter shapes do not match this configuration \
+             (checkpoint from a different model/profile/layer count?)"
+        );
+
+        // geometry + source graphs shared with `TpEngine::new` — one
+        // derivation, so the plans (and thus float accumulation order)
+        // are identical to training's
+        let geometry = common::decoupled_geometry(ctx, &dims)?;
+        let graphs: Vec<Csr> = common::decoupled_graphs(ctx)?;
+        let plans: Vec<ChunkPlan> = graphs
+            .iter()
+            .map(|g| {
+                ChunkPlan::build(g, geometry.rows_per_chunk, geometry.c_bucket, geometry.e_bucket)
+            })
+            .collect();
+
+        // ---- Phase 1: per-worker NN chains on vertex row slices ----
+        let ops = ctx.ops();
+        let v = p.v;
+        let row_parts = row_slices(v, cfg.workers);
+        let xs: Vec<Matrix> =
+            row_parts.iter().map(|part| data.features.slice_rows(part.clone())).collect();
+        let (caches, chain_secs) = common::nn_chain_fwd_batch(&ops, params.layers(), &xs)?;
+        let nn_device_secs: f64 = chain_secs.iter().sum();
+        let h_rows: Vec<Matrix> = caches.into_iter().map(|c| c.out).collect();
+        let mut cur = Matrix::concat_rows(&h_rows);
+
+        // ---- Phases 2..4: split -> L aggregation rounds -> gather ----
+        // (2 collectives total; the aggregation itself runs full-width
+        // with dimension tiles, matching the training engine's numerics)
+        let rounds = cfg.layers;
+        let mut penult = cur.clone();
+        let mut agg_device_secs = 0.0;
+        for r in 0..rounds {
+            if r + 1 == rounds {
+                penult = cur.clone();
+            }
+            let hp = cur.padded(v, pad_tile(cur.cols()));
+            let tiles = common::tile_buffers(&ops, &hp);
+            let pending: Vec<common::PlanAgg> = plans
+                .iter()
+                .map(|plan| common::submit_plan_agg_tiles(&ops, plan, &tiles))
+                .collect::<crate::Result<_>>()?;
+            let mut acc = Matrix::zeros(v, hp.cols());
+            for agg in pending {
+                agg_device_secs += agg.wait_into(&mut acc)?;
+            }
+            cur = acc.cropped(v, cur.cols());
+        }
+
+        let wf = *dims.last().unwrap();
+        let wp = pad_tile(wf);
+        let pp = penult.padded(v, wp);
+        let tile = ctx.store.dim_tile;
+        let penult_tiles: Vec<Arc<Vec<f32>>> = (0..wp)
+            .step_by(tile)
+            .map(|t0| Arc::new(pp.slice_cols(t0..t0 + tile).into_vec()))
+            .collect();
+
+        Ok(InferenceEngine {
+            num_vertices: v,
+            num_classes: p.k,
+            dims,
+            graphs,
+            penult_tiles,
+            penult_pad_cols: wp,
+            logits: cur,
+            nn_device_secs,
+            agg_device_secs,
+            collective_rounds: 2,
+        })
+    }
+
+    /// Full-graph logits `A^L Z`, `[V, wf]`.
+    pub fn logits(&self) -> &Matrix {
+        &self.logits
+    }
+
+    /// Embedding collectives a forward costs (2, independent of depth).
+    pub fn collective_rounds(&self) -> usize {
+        self.collective_rounds
+    }
+
+    /// Measured device seconds of the startup forward: `(nn, aggregation)`.
+    pub fn device_secs(&self) -> (f64, f64) {
+        (self.nn_device_secs, self.agg_device_secs)
+    }
+
+    /// Predicted class per query (argmax over the unpadded classes).
+    pub fn predict(&self, ids: &[u32]) -> Vec<i32> {
+        ids.iter()
+            .map(|&id| {
+                let row = self.logits.row(id as usize);
+                let mut best = 0usize;
+                for c in 1..self.num_classes {
+                    if row[c] > row[best] {
+                        best = c;
+                    }
+                }
+                best as i32
+            })
+            .collect()
+    }
+
+    /// Test-split accuracy of the precomputed logits — equals the
+    /// training forward's `test_acc` for the same parameters.
+    pub fn test_accuracy(&self, data: &Dataset) -> f32 {
+        common::test_accuracy(data, &self.logits)
+    }
+
+    /// Serve one micro-batch of vertex queries: re-run the final
+    /// aggregation round for just these rows against the penultimate
+    /// panel. Returns the `[ids.len(), wf]` logits and the measured
+    /// device seconds. Every (tile x pass) job is submitted before any is
+    /// waited on (the executor's batched asynchronous protocol).
+    pub fn serve_batch(&self, ops: &Ops, ids: &[u32]) -> crate::Result<(Matrix, f64)> {
+        anyhow::ensure!(!ids.is_empty(), "empty query batch");
+        let v = self.num_vertices;
+        let wf = *self.dims.last().unwrap();
+        let row_cap = *ops
+            .store
+            .agg_row_buckets(v)
+            .last()
+            .ok_or_else(|| anyhow::anyhow!("no aggregation artifacts for s={v}"))?;
+        let mut out = Matrix::zeros(ids.len(), self.penult_pad_cols);
+        let mut secs = 0.0;
+        for (gi, group) in ids.chunks(row_cap).enumerate() {
+            let edges = self
+                .graphs
+                .iter()
+                .map(|g| {
+                    group.iter().map(|&i| g.in_edges(i as usize).0.len()).sum::<usize>()
+                })
+                .max()
+                .unwrap_or(1);
+            let art = ops.agg_artifact(group.len(), edges.max(1), v)?;
+            let c_bucket = art.inputs[0].shape[0] - 1;
+            let e_bucket = art.inputs[1].shape[0];
+            let per_graph: Vec<Vec<crate::graph::chunk::AggPass>> = self
+                .graphs
+                .iter()
+                .map(|g| ChunkPlan::lower_rows(g, group, c_bucket, e_bucket))
+                .collect();
+            let mut agg = common::PlanAgg::new();
+            let tile = ops.store.dim_tile;
+            let lo = gi * row_cap;
+            for (t, x_tile) in self.penult_tiles.iter().enumerate() {
+                for passes in &per_graph {
+                    for pass in passes {
+                        let p = ops.submit_agg_pass_shared(
+                            art,
+                            pass,
+                            group.len(),
+                            Arc::clone(x_tile),
+                            v,
+                        )?;
+                        agg.push(lo..lo + group.len(), t * tile, p);
+                    }
+                }
+            }
+            secs += agg.wait_into(&mut out)?;
+        }
+        Ok((out.cropped(ids.len(), wf), secs))
+    }
+}

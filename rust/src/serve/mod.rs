@@ -1,0 +1,111 @@
+//! Checkpointing + full-graph inference serving (DESIGN.md §7).
+//!
+//! This module opens the *serving* half of the pipeline the training
+//! engines leave off: persist a trained model ([`checkpoint`]), run the
+//! forward-only decoupled pass over the whole graph ([`infer`]), and
+//! answer vertex queries from a micro-batched request loop ([`serve`]).
+//!
+//! ## Why forward-only decoupled TP needs exactly 2 collectives
+//!
+//! NeutronTP's decoupling (paper §4.1.2) reorders an L-layer GNN into
+//! *all* NN work on vertex-sliced rows followed by *all* aggregation work
+//! on dimension slices. Training pays 4 embedding collectives per epoch —
+//! split + gather around the forward aggregation block and again around
+//! the backward one — plus a gradient allreduce. A forward-only pass
+//! keeps just the first block: one **split** (vertex-sliced NN outputs to
+//! dimension slices), L chunked full-graph aggregation rounds that each
+//! stay entirely local to a dimension slice, and one **gather** back to
+//! vertex-sliced logits. Depth never adds a collective, which is what
+//! makes the layout attractive for inference serving: deeper models cost
+//! more FLOPs but no extra communication rounds. The coupled layout by
+//! contrast pays `2L` collectives for the same forward.
+//!
+//! ## Serving loop
+//!
+//! [`serve`] precomputes the full-graph forward once at startup, then
+//! drains `requests` vertex queries in micro-batches of `batch_size`.
+//! Each batch re-runs the final aggregation round for just the queried
+//! rows ([`InferenceEngine::serve_batch`]) — real artifact executions
+//! through the `ExecutorPool` submit/`Ticket` seam — and the loop
+//! records per-query latency into a [`ServeReport`] (p50/p95/p99,
+//! queries/sec) along with the max deviation of served logits from the
+//! precomputed panel (a parity health check; pure float reassociation,
+//! ~1e-6). The `serve_scale` bench-harness experiment sweeps batch size
+//! against executor pool width on top of this loop.
+
+pub mod checkpoint;
+pub mod infer;
+
+pub use checkpoint::{Checkpoint, CheckpointMeta};
+pub use infer::InferenceEngine;
+
+use crate::metrics::ServeReport;
+use crate::model::params::GnnParams;
+use crate::parallel::Ctx;
+use crate::util::Rng;
+
+/// Request-loop knobs (`neutron-tp serve --requests N --batch-size B`).
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// total vertex queries to serve
+    pub requests: usize,
+    /// micro-batch size (the last batch may be short)
+    pub batch_size: usize,
+    /// query-stream RNG seed
+    pub seed: u64,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { requests: 256, batch_size: 32, seed: 0x5e7e }
+    }
+}
+
+/// Run the serving loop: build an [`InferenceEngine`] for `params`
+/// (startup forward), then serve `opts.requests` uniformly random vertex
+/// queries in micro-batches. Returns the latency/throughput report and
+/// the engine (callers reuse its logits for accuracy checks or further
+/// queries).
+pub fn serve(
+    ctx: &Ctx,
+    params: &GnnParams,
+    opts: &ServeOptions,
+) -> crate::Result<(ServeReport, InferenceEngine)> {
+    anyhow::ensure!(opts.requests > 0, "serve needs at least one request");
+    anyhow::ensure!(opts.batch_size > 0, "serve batch size must be positive");
+    let t_startup = std::time::Instant::now();
+    let engine = InferenceEngine::new(ctx, params)?;
+    let startup_secs = t_startup.elapsed().as_secs_f64();
+
+    let ops = ctx.ops();
+    let v = ctx.data.profile.v;
+    let mut rng = Rng::seed_from_u64(opts.seed);
+    let mut latencies = Vec::with_capacity(opts.requests);
+    let mut max_diff = 0.0f32;
+    let mut batches = 0usize;
+    let mut done = 0usize;
+    let t_loop = std::time::Instant::now();
+    while done < opts.requests {
+        let b = opts.batch_size.min(opts.requests - done);
+        let ids: Vec<u32> = (0..b).map(|_| rng.gen_range(v) as u32).collect();
+        let t_batch = std::time::Instant::now();
+        let (out, _device_secs) = engine.serve_batch(&ops, &ids)?;
+        let batch_secs = t_batch.elapsed().as_secs_f64();
+        // every query in the batch completes when the batch completes
+        latencies.resize(latencies.len() + b, batch_secs);
+        for (i, &id) in ids.iter().enumerate() {
+            for (served, full) in out.row(i).iter().zip(engine.logits().row(id as usize)) {
+                max_diff = max_diff.max((served - full).abs());
+            }
+        }
+        done += b;
+        batches += 1;
+    }
+    let wall_secs = t_loop.elapsed().as_secs_f64();
+
+    let mut report =
+        ServeReport::from_latencies(latencies, batches, opts.batch_size, startup_secs, wall_secs);
+    report.max_logit_diff = max_diff;
+    report.collective_rounds = engine.collective_rounds();
+    Ok((report, engine))
+}

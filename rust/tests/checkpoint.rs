@@ -1,0 +1,154 @@
+//! Checkpoint round-trip property (DESIGN.md §7.1): training saved at
+//! epoch k, serialized to disk, loaded into a *fresh* engine and resumed
+//! must produce losses and accuracies bit-identical to the uninterrupted
+//! run — for all six systems. The save point k=3 is deliberately an odd
+//! epoch so the historical baseline resumes onto a *stale* cache epoch
+//! (refresh period 2): dropping the cache from the checkpoint would
+//! silently refresh and diverge.
+
+use neutron_tp::config::{RunConfig, System};
+use neutron_tp::graph::datasets::{profile, Dataset};
+use neutron_tp::metrics::EpochReport;
+use neutron_tp::parallel::{Ctx, Engine};
+use neutron_tp::runtime::{ArtifactStore, ExecutorPool};
+use neutron_tp::serve::checkpoint::{self, Checkpoint, CheckpointMeta};
+
+fn store() -> ArtifactStore {
+    ArtifactStore::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .expect("artifact store must load")
+}
+
+fn dataset(cfg: &RunConfig) -> Dataset {
+    Dataset::generate(profile(&cfg.profile).unwrap(), cfg.seed)
+}
+
+const EPOCHS: usize = 5;
+const SAVE_AT: usize = 3;
+
+fn run_epochs(engine: &mut Engine, ctx: &Ctx, n: usize) -> Vec<EpochReport> {
+    (0..n).map(|_| engine.run_epoch(ctx).unwrap()).collect()
+}
+
+#[test]
+fn resume_is_bit_identical_for_all_six_systems() {
+    let s = store();
+    let tmp = std::env::temp_dir().join(format!("ntp-resume-{}", std::process::id()));
+    for &sys in System::ALL {
+        let cfg = RunConfig {
+            system: sys,
+            workers: 4,
+            epochs: EPOCHS,
+            batch_size: 256,
+            ..Default::default()
+        };
+        cfg.validate().unwrap();
+        let data = dataset(&cfg);
+
+        // uninterrupted reference run
+        let pool = ExecutorPool::new(&s, 2).unwrap();
+        let ctx = Ctx { cfg: &cfg, data: &data, store: &s, pool: &pool };
+        let mut engine = Engine::new(&ctx).unwrap();
+        let full = run_epochs(&mut engine, &ctx, EPOCHS);
+        drop(engine);
+
+        // interrupted run: k epochs, checkpoint to disk, fresh world, resume
+        let pool_a = ExecutorPool::new(&s, 2).unwrap();
+        let ctx_a = Ctx { cfg: &cfg, data: &data, store: &s, pool: &pool_a };
+        let mut eng_a = Engine::new(&ctx_a).unwrap();
+        let _ = run_epochs(&mut eng_a, &ctx_a, SAVE_AT);
+        assert_eq!(eng_a.epochs_done(), SAVE_AT);
+        let path = tmp.join(format!("{}.ntpc", sys.name()));
+        checkpoint::save(
+            &path,
+            &Checkpoint { meta: CheckpointMeta::of(&cfg), state: eng_a.export_state() },
+        )
+        .unwrap();
+        drop(eng_a);
+        drop(ctx_a);
+
+        let ckpt = checkpoint::load(&path).unwrap();
+        ckpt.meta.matches(&cfg).unwrap();
+        assert_eq!(ckpt.state.epochs_done, SAVE_AT);
+        let data_b = dataset(&cfg); // regenerate: resume must not need the old Dataset
+        let pool_b = ExecutorPool::new(&s, 2).unwrap();
+        let ctx_b = Ctx { cfg: &cfg, data: &data_b, store: &s, pool: &pool_b };
+        let mut eng_b = Engine::new(&ctx_b).unwrap();
+        eng_b.import_state(ckpt.state).unwrap();
+        assert_eq!(eng_b.epochs_done(), SAVE_AT);
+        let resumed = run_epochs(&mut eng_b, &ctx_b, EPOCHS - SAVE_AT);
+
+        for (off, (a, b)) in full[SAVE_AT..].iter().zip(&resumed).enumerate() {
+            let e = SAVE_AT + off;
+            assert_eq!(
+                a.loss.to_bits(),
+                b.loss.to_bits(),
+                "{}: epoch {e} loss diverged after resume: {} vs {}",
+                sys.label(),
+                a.loss,
+                b.loss
+            );
+            assert_eq!(
+                a.train_acc.to_bits(),
+                b.train_acc.to_bits(),
+                "{}: epoch {e} train_acc diverged after resume",
+                sys.label()
+            );
+            assert_eq!(
+                a.test_acc.to_bits(),
+                b.test_acc.to_bits(),
+                "{}: epoch {e} test_acc diverged after resume",
+                sys.label()
+            );
+        }
+    }
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+#[test]
+fn import_rejects_mismatched_shapes() {
+    let s = store();
+    let cfg = RunConfig { workers: 4, ..Default::default() };
+    let data = dataset(&cfg);
+    let pool = ExecutorPool::new(&s, 1).unwrap();
+    let ctx = Ctx { cfg: &cfg, data: &data, store: &s, pool: &pool };
+    let engine = Engine::new(&ctx).unwrap();
+    let state = engine.export_state();
+    drop(engine);
+
+    // an engine with a different depth must refuse the state
+    let deeper = RunConfig { layers: 3, ..cfg.clone() };
+    let ctx2 = Ctx { cfg: &deeper, data: &data, store: &s, pool: &pool };
+    let mut other = Engine::new(&ctx2).unwrap();
+    let err = other.import_state(state).unwrap_err().to_string();
+    assert!(err.contains("shape"), "unexpected error: {err}");
+}
+
+#[test]
+fn loaded_params_equal_saved_params_bitwise() {
+    let s = store();
+    let cfg = RunConfig { workers: 4, epochs: 1, ..Default::default() };
+    let data = dataset(&cfg);
+    let pool = ExecutorPool::new(&s, 2).unwrap();
+    let ctx = Ctx { cfg: &cfg, data: &data, store: &s, pool: &pool };
+    let mut engine = Engine::new(&ctx).unwrap();
+    engine.run_epoch(&ctx).unwrap();
+    let saved = engine.export_state();
+    let bytes = checkpoint::to_bytes(&Checkpoint {
+        meta: CheckpointMeta::of(&cfg),
+        state: saved.clone(),
+    });
+    let back = checkpoint::from_bytes(&bytes).unwrap();
+    for (a, b) in back
+        .state
+        .params
+        .stacks
+        .iter()
+        .flatten()
+        .zip(saved.params.stacks.iter().flatten())
+    {
+        assert_eq!(a.w, b.w, "weights must round-trip bit-exactly");
+        assert_eq!(a.b, b.b);
+    }
+    assert_eq!(back.state.adam, saved.adam);
+    assert_eq!(back.state.epochs_done, saved.epochs_done);
+}

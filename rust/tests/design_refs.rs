@@ -1,0 +1,194 @@
+//! Every DESIGN.md section citation in the source tree must resolve to
+//! a real section of `DESIGN.md` (the satellite contract of the
+//! checkpoint/serving PR: the codebase cited a design document that did
+//! not exist — now that it does, citations may never dangle again).
+//!
+//! Detection is deliberately simple: on any line mentioning `DESIGN.md`
+//! (plus the two lines after it, for wrapped doc comments), each section
+//! mark following the mention is extracted — numeric tokens resolve by
+//! their major section number, word tokens (like the artifact-shape or
+//! deliverables anchors) by word presence in a marked heading. Citations
+//! of the source paper and of other documents are excluded.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+const SECTION_MARK: char = '\u{a7}'; // '§'
+
+/// Roots scanned for citations, relative to the repo root.
+const SCAN_ROOTS: &[&str] = &["rust/src", "rust/tests", "rust/benches", "examples", "python"];
+
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("rust/ has a parent").to_path_buf()
+}
+
+fn source_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            if name != "target" && name != "__pycache__" && !name.starts_with('.') {
+                source_files(&path, out);
+            }
+        } else if matches!(
+            path.extension().and_then(|e| e.to_str()),
+            Some("rs") | Some("py")
+        ) {
+            out.push(path);
+        }
+    }
+}
+
+/// Extract section tokens from `text`: numeric ("3", "4.2") or the first
+/// word after the mark ("Artifact", "deliverables"). Tokens immediately
+/// preceded by the word "paper" cite the source paper, not this repo's
+/// design document.
+fn section_tokens(text: &str) -> Vec<String> {
+    let chars: Vec<char> = text.chars().collect();
+    let mut out = Vec::new();
+    for (i, &c) in chars.iter().enumerate() {
+        if c != SECTION_MARK {
+            continue;
+        }
+        let before: String = chars[..i].iter().collect();
+        if before.trim_end().to_lowercase().ends_with("paper") {
+            continue;
+        }
+        let rest: String = chars[i + 1..].iter().collect();
+        let rest = rest.trim_start();
+        if rest.starts_with(|ch: char| ch.is_ascii_digit()) {
+            let tok: String =
+                rest.chars().take_while(|ch| ch.is_ascii_digit() || *ch == '.').collect();
+            out.push(tok.trim_end_matches('.').to_string());
+        } else {
+            let tok: String = rest.chars().take_while(|ch| ch.is_alphanumeric()).collect();
+            if !tok.is_empty() {
+                out.push(tok.to_lowercase());
+            }
+        }
+    }
+    out
+}
+
+/// Section tokens *cited against DESIGN.md* within `window`: only the
+/// text between each `DESIGN.md` mention and the next mention of any
+/// other `.md` document counts (so `EXPERIMENTS.md` anchors sharing a
+/// window don't leak in).
+fn cited_tokens(window: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    for seg in window.split("DESIGN.md").skip(1) {
+        let stop = seg.find(".md").map(|p| p + 3).unwrap_or(seg.len());
+        out.extend(section_tokens(&seg[..stop]));
+    }
+    out
+}
+
+/// Anchors DESIGN.md offers: the major number of every numbered heading
+/// plus every lowercased word of a marked heading line.
+fn design_anchors(design: &str) -> BTreeSet<String> {
+    let mut anchors = BTreeSet::new();
+    for line in design.lines() {
+        if !line.starts_with('#') || !line.contains(SECTION_MARK) {
+            continue;
+        }
+        for tok in section_tokens(line) {
+            anchors.insert(major_of(&tok));
+        }
+        for word in line.split(|ch: char| !ch.is_alphanumeric()) {
+            if !word.is_empty() {
+                anchors.insert(word.to_lowercase());
+            }
+        }
+    }
+    anchors
+}
+
+fn major_of(token: &str) -> String {
+    token.split('.').next().unwrap_or(token).to_string()
+}
+
+#[test]
+fn every_design_md_citation_resolves() {
+    let root = repo_root();
+    let design_path = root.join("DESIGN.md");
+    let design = std::fs::read_to_string(&design_path)
+        .unwrap_or_else(|e| panic!("DESIGN.md must exist at {}: {e}", design_path.display()));
+    let anchors = design_anchors(&design);
+    assert!(
+        ["3", "4", "5", "6", "7"].iter().all(|s| anchors.contains(*s)),
+        "DESIGN.md must keep \u{a7}3/\u{a7}4/\u{a7}5/\u{a7}6/\u{a7}7 headings; found {anchors:?}"
+    );
+
+    let mut files = Vec::new();
+    for rel in SCAN_ROOTS {
+        source_files(&root.join(rel), &mut files);
+    }
+    assert!(files.len() > 20, "scanner found only {} source files", files.len());
+
+    let mut citations = 0usize;
+    let mut failures = Vec::new();
+    for file in &files {
+        let Ok(text) = std::fs::read_to_string(file) else { continue };
+        let lines: Vec<&str> = text.lines().collect();
+        for (i, line) in lines.iter().enumerate() {
+            if !line.contains("DESIGN.md") {
+                continue;
+            }
+            // the citation's section mark may wrap onto the next lines
+            let window = lines[i..(i + 3).min(lines.len())].join(" ");
+            for tok in cited_tokens(&window) {
+                citations += 1;
+                let key = if tok.starts_with(|c: char| c.is_ascii_digit()) {
+                    major_of(&tok)
+                } else {
+                    tok.clone()
+                };
+                if !anchors.contains(&key) {
+                    failures.push(format!(
+                        "{}:{}: cites DESIGN.md {SECTION_MARK}{tok}, which has no section",
+                        file.strip_prefix(&root).unwrap_or(file).display(),
+                        i + 1
+                    ));
+                }
+            }
+        }
+    }
+    assert!(
+        citations >= 10,
+        "expected the tree to carry DESIGN.md citations, found {citations} — scanner broken?"
+    );
+    assert!(failures.is_empty(), "dangling DESIGN.md citations:\n{}", failures.join("\n"));
+}
+
+#[test]
+fn token_extraction_understands_the_citation_styles_in_tree() {
+    assert_eq!(
+        cited_tokens("cluster (DESIGN.md \u{a7}3/\u{a7}4): real"),
+        vec!["3", "4"]
+    );
+    assert_eq!(
+        cited_tokens("see DESIGN.md \u{a7}Artifact shape strategy:"),
+        vec!["artifact"]
+    );
+    assert_eq!(
+        cited_tokens("driver (DESIGN.md \u{a7}deliverables): trains"),
+        vec!["deliverables"]
+    );
+    assert_eq!(
+        cited_tokens("paper \u{a7}4.1.2 with no design mention"),
+        Vec::<String>::new()
+    );
+    assert_eq!(
+        cited_tokens("schedules (DESIGN.md \u{a7}4) and (EXPERIMENTS.md \u{a7}Perf L3-1)"),
+        vec!["4"]
+    );
+    assert_eq!(
+        cited_tokens("DESIGN.md \u{a7}6 then later DESIGN.md \u{a7}7 again"),
+        vec!["6", "7"]
+    );
+    assert_eq!(
+        cited_tokens("marks before \u{a7}9 a DESIGN.md mention don't count"),
+        Vec::<String>::new()
+    );
+}

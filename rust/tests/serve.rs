@@ -1,0 +1,157 @@
+//! Serving-path parity (DESIGN.md §7.2/§7.3): the forward-only inference
+//! engine must reproduce the training forward exactly, micro-batched
+//! query serving must agree with the precomputed full-graph logits, and
+//! the request loop must produce a sane ServeReport.
+
+use neutron_tp::config::{ModelKind, RunConfig};
+use neutron_tp::graph::datasets::{profile, Dataset};
+use neutron_tp::model::layer_dims;
+use neutron_tp::model::params::GnnParams;
+use neutron_tp::parallel::{Ctx, Engine};
+use neutron_tp::runtime::{ArtifactStore, ExecutorPool};
+use neutron_tp::serve::{self, InferenceEngine, ServeOptions};
+
+fn store() -> ArtifactStore {
+    ArtifactStore::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .expect("artifact store must load")
+}
+
+fn dataset(cfg: &RunConfig) -> Dataset {
+    Dataset::generate(profile(&cfg.profile).unwrap(), cfg.seed)
+}
+
+fn fresh_params(cfg: &RunConfig) -> GnnParams {
+    let p = profile(&cfg.profile).unwrap();
+    let dims = layer_dims(&p, cfg.layers, cfg.feat_dim, false);
+    GnnParams::init(&dims, 1, false, cfg.seed)
+}
+
+/// The acceptance parity: logits served from a checkpoint taken after k
+/// epochs equal the training forward of epoch k+1 — the epoch whose
+/// `test_acc` is computed from exactly those parameters — bit for bit.
+#[test]
+fn serve_logits_match_training_forward() {
+    let s = store();
+    let cfg = RunConfig { workers: 4, epochs: 3, lr: 0.02, ..Default::default() };
+    cfg.validate().unwrap();
+    let data = dataset(&cfg);
+    let pool = ExecutorPool::new(&s, 2).unwrap();
+    let ctx = Ctx { cfg: &cfg, data: &data, store: &s, pool: &pool };
+    let mut engine = Engine::new(&ctx).unwrap();
+    engine.run_epoch(&ctx).unwrap();
+    engine.run_epoch(&ctx).unwrap();
+    let params = engine.export_state().params; // "checkpoint" after 2 epochs
+    let third = engine.run_epoch(&ctx).unwrap(); // forward uses those params
+
+    let infer = InferenceEngine::new(&ctx, &params).unwrap();
+    assert_eq!(
+        infer.test_accuracy(&data).to_bits(),
+        third.test_acc.to_bits(),
+        "serve-path accuracy {} != training forward accuracy {}",
+        infer.test_accuracy(&data),
+        third.test_acc
+    );
+    assert_eq!(infer.collective_rounds(), 2, "forward-only decoupled TP = 2 collectives");
+    assert_eq!(third.collective_rounds, 5, "training = 4 embedding collectives + allreduce");
+    let (nn, agg) = infer.device_secs();
+    assert!(nn > 0.0 && agg > 0.0);
+}
+
+#[test]
+fn served_batches_match_precomputed_logits() {
+    let s = store();
+    let cfg = RunConfig { workers: 4, ..Default::default() };
+    let data = dataset(&cfg);
+    let pool = ExecutorPool::new(&s, 2).unwrap();
+    let ctx = Ctx { cfg: &cfg, data: &data, store: &s, pool: &pool };
+    let infer = InferenceEngine::new(&ctx, &fresh_params(&cfg)).unwrap();
+    let ops = ctx.ops();
+    // non-contiguous ids including a hub-free corner and a repeat
+    let ids: Vec<u32> = vec![0, 513, 17, 1023, 17, 256, 999];
+    let (out, secs) = infer.serve_batch(&ops, &ids).unwrap();
+    assert_eq!(out.shape(), (ids.len(), infer.logits().cols()));
+    assert!(secs > 0.0);
+    let mut max_diff = 0.0f32;
+    for (i, &id) in ids.iter().enumerate() {
+        for (a, b) in out.row(i).iter().zip(infer.logits().row(id as usize)) {
+            max_diff = max_diff.max((a - b).abs());
+        }
+    }
+    assert!(
+        max_diff < 1e-4,
+        "served logits drifted {max_diff} from the full-graph forward"
+    );
+    // predictions agree with a host-side argmax of the full logits
+    let preds = infer.predict(&ids);
+    let k = data.profile.k;
+    for (i, &id) in ids.iter().enumerate() {
+        let row = infer.logits().row(id as usize);
+        let want = (0..k).fold(0usize, |best, c| if row[c] > row[best] { c } else { best });
+        assert_eq!(preds[i], want as i32, "query {id}");
+    }
+}
+
+#[test]
+fn serve_loop_reports_sane_statistics() {
+    let s = store();
+    let cfg = RunConfig { workers: 4, ..Default::default() };
+    let data = dataset(&cfg);
+    let pool = ExecutorPool::new(&s, 2).unwrap();
+    let ctx = Ctx { cfg: &cfg, data: &data, store: &s, pool: &pool };
+    let opts = ServeOptions { requests: 70, batch_size: 16, seed: 9 };
+    let (report, engine) = serve::serve(&ctx, &fresh_params(&cfg), &opts).unwrap();
+    assert_eq!(report.queries, 70);
+    assert_eq!(report.batches, 5, "70 queries at B=16 = 4 full batches + 1 short");
+    assert_eq!(report.batch_size, 16);
+    assert!(report.qps > 0.0);
+    assert!(report.wall_secs > 0.0 && report.startup_secs > 0.0);
+    assert!(
+        report.p50_ms <= report.p95_ms && report.p95_ms <= report.p99_ms,
+        "percentiles out of order: {}",
+        report.table_row()
+    );
+    assert!(report.max_logit_diff < 1e-3, "parity health: {}", report.max_logit_diff);
+    assert_eq!(report.collective_rounds, 2);
+    let acc = engine.test_accuracy(&data);
+    assert!((0.0..=1.0).contains(&acc));
+}
+
+#[test]
+fn rgcn_serves_with_tied_weight_forward() {
+    let s = store();
+    let cfg = RunConfig {
+        profile: "mag".into(),
+        model: ModelKind::Rgcn,
+        workers: 4,
+        ..Default::default()
+    };
+    cfg.validate().unwrap();
+    let data = dataset(&cfg);
+    let pool = ExecutorPool::new(&s, 2).unwrap();
+    let ctx = Ctx { cfg: &cfg, data: &data, store: &s, pool: &pool };
+    let infer = InferenceEngine::new(&ctx, &fresh_params(&cfg)).unwrap();
+    let ops = ctx.ops();
+    let ids: Vec<u32> = vec![5, 4096, 16000];
+    let (out, _) = infer.serve_batch(&ops, &ids).unwrap();
+    let mut max_diff = 0.0f32;
+    for (i, &id) in ids.iter().enumerate() {
+        for (a, b) in out.row(i).iter().zip(infer.logits().row(id as usize)) {
+            max_diff = max_diff.max((a - b).abs());
+        }
+    }
+    assert!(max_diff < 1e-3, "R-GCN served logits drifted {max_diff}");
+}
+
+#[test]
+fn gat_serving_is_rejected_loudly() {
+    let s = store();
+    let cfg = RunConfig { model: ModelKind::Gat, workers: 4, ..Default::default() };
+    let data = dataset(&cfg);
+    let pool = ExecutorPool::new(&s, 1).unwrap();
+    let ctx = Ctx { cfg: &cfg, data: &data, store: &s, pool: &pool };
+    let err = match InferenceEngine::new(&ctx, &fresh_params(&cfg)) {
+        Ok(_) => panic!("GAT serving must be rejected"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("GAT"), "unexpected error: {err}");
+}
