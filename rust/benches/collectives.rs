@@ -1,11 +1,12 @@
-//! Micro-bench: collectives data plane + sim accounting (L3 hot path).
-//! Hand-rolled harness (criterion is unavailable offline): median of
-//! repeated timed runs, printed criterion-style.
+//! Micro-bench: collectives data plane + sim accounting (L3 hot path),
+//! through the `cluster::Comm` communicator. Hand-rolled harness
+//! (criterion is unavailable offline): median of repeated timed runs,
+//! printed criterion-style.
 
 use std::time::Instant;
 
-use neutron_tp::cluster::{collectives, EventSim};
-use neutron_tp::config::NetModel;
+use neutron_tp::cluster::Comm;
+use neutron_tp::config::{AllToAllAlgo, CommTuning, NetModel};
 use neutron_tp::tensor::{dim_slices, row_slices, Matrix};
 
 fn bench(name: &str, iters: usize, mut f: impl FnMut()) {
@@ -27,28 +28,29 @@ fn bench(name: &str, iters: usize, mut f: impl FnMut()) {
 
 fn main() {
     let net = NetModel::default();
-    println!("# collectives microbench (data plane + event sim)");
+    println!("# collectives microbench (data plane + event sim, via cluster::Comm)");
     for (v, d, n) in [(8192usize, 64usize, 4usize), (8192, 64, 16), (65536, 128, 16)] {
         let full = Matrix::from_fn(v, d, |r, c| ((r + c) % 17) as f32);
         let rp = row_slices(v, n);
         let dp = dim_slices(d, n);
         let rows: Vec<Matrix> = rp.iter().map(|r| full.slice_rows(r.clone())).collect();
-        bench(&format!("split      v={v} d={d} n={n}"), 20, || {
-            let mut sim = EventSim::new(n);
-            let ready = vec![0.0; n];
-            let _ = collectives::split(&mut sim, &net, &rows, &rp, &dp, &ready);
-        });
+        for a2a in [AllToAllAlgo::Naive, AllToAllAlgo::Pairwise] {
+            let tuning = CommTuning { all_to_all: a2a, ..CommTuning::default() };
+            bench(&format!("split({})  v={v} d={d} n={n}", a2a.name()), 20, || {
+                let mut comm = Comm::new(n, net, &tuning);
+                let _ = comm.split(&rows, &rp, &dp);
+            });
+        }
         let slices: Vec<Matrix> = dp.iter().map(|dpj| full.slice_cols(dpj.clone())).collect();
         bench(&format!("gather     v={v} d={d} n={n}"), 20, || {
-            let mut sim = EventSim::new(n);
-            let ready = vec![0.0; n];
-            let _ = collectives::gather(&mut sim, &net, &slices, &rp, &dp, &ready);
+            let mut comm = Comm::new(n, net, &CommTuning::default());
+            let _ = comm.gather(&slices, &rp, &dp);
         });
-        let grads: Vec<Matrix> = (0..n).map(|_| Matrix::from_fn(256, d, |r, c| (r + c) as f32)).collect();
+        let grads: Vec<Matrix> =
+            (0..n).map(|_| Matrix::from_fn(256, d, |r, c| (r + c) as f32)).collect();
         bench(&format!("allreduce  256x{d} n={n}"), 50, || {
-            let mut sim = EventSim::new(n);
-            let ready = vec![0.0; n];
-            let _ = collectives::allreduce_sum(&mut sim, &net, &grads, &ready);
+            let mut comm = Comm::new(n, net, &CommTuning::default());
+            let _ = comm.allreduce_sum(&grads);
         });
     }
 }

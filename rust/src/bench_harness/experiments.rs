@@ -31,8 +31,9 @@ pub fn run_experiment(name: &str, store: &ArtifactStore, fast: bool) -> crate::R
         "exec_scale" => exec_scale(store, fast)?,
         "kernel_scale" => kernel_scale(store, fast)?,
         "serve_scale" => serve_scale(store, fast)?,
+        "comm_scale" => comm_scale(store, fast)?,
         _ => anyhow::bail!(
-            "unknown experiment '{name}' (try fig3/fig4/fig5/fig8/fig10..fig16/table2/table3/table4/exec_scale/kernel_scale/serve_scale/all)"
+            "unknown experiment '{name}' (try fig3/fig4/fig5/fig8/fig10..fig16/table2/table3/table4/exec_scale/kernel_scale/serve_scale/comm_scale/all)"
         ),
     };
     Ok(out)
@@ -41,6 +42,7 @@ pub fn run_experiment(name: &str, store: &ArtifactStore, fast: bool) -> crate::R
 pub const ALL: &[&str] = &[
     "fig3", "fig4", "fig5", "fig8", "fig10", "fig11", "fig12", "fig13", "fig14", "fig15",
     "fig16", "table2", "table3", "table4", "exec_scale", "kernel_scale", "serve_scale",
+    "comm_scale",
 ];
 
 fn run_cfg(store: &ArtifactStore, cfg: &RunConfig) -> crate::Result<Vec<EpochReport>> {
@@ -743,6 +745,81 @@ fn serve_scale(store: &ArtifactStore, fast: bool) -> crate::Result<String> {
                 rep.qps, rep.p50_ms, rep.p95_ms, rep.p99_ms, rep.startup_secs, rep.max_logit_diff
             )
             .unwrap();
+        }
+    }
+    Ok(s)
+}
+
+// ---------------------------------------------------------------------------
+// Communicator scaling: epoch makespan vs CommAlgo × workers × straggler
+// slowdown (one slow NIC), Fig-8-style. Numerics are identical across
+// algorithms (asserted by the propcheck suite); this table shows the
+// *time* consequences, with the per-collective CommStats breakdown the
+// redesigned `cluster::Comm` records (DESIGN.md §4.2).
+// ---------------------------------------------------------------------------
+fn comm_scale(store: &ArtifactStore, fast: bool) -> crate::Result<String> {
+    use crate::cluster::CommKind;
+    use crate::config::{AllReduceAlgo, AllToAllAlgo};
+
+    let workers: &[usize] = if fast { &[2, 4] } else { &[2, 4, 8] };
+    let stragglers: &[f64] = if fast { &[1.0, 4.0] } else { &[1.0, 2.0, 4.0] };
+    let mut s = String::from(
+        "# comm_scale — NeutronTP epoch makespan vs communicator algorithm,\n\
+         # cluster size and straggler slowdown (worker 0's NIC at 1/slowdown\n\
+         # bandwidth); tiny profile, slow interconnect so collectives dominate.\n\
+         # Payloads are bit-identical across algorithms — only times move.\n\
+         workers,all_to_all,allreduce,straggler,sim_epoch_secs,split_s,gather_s,allreduce_s,a2a_mb\n",
+    );
+    for &w in workers {
+        for a2a in [AllToAllAlgo::Naive, AllToAllAlgo::Pairwise] {
+            for ar in [AllReduceAlgo::Ring, AllReduceAlgo::FlatTree] {
+                for &slow in stragglers {
+                    let mut cfg = RunConfig {
+                        profile: "tiny".into(),
+                        workers: w,
+                        epochs: 1,
+                        pipeline: false,
+                        ..Default::default()
+                    };
+                    // comm-bound regime: slow wire + T4-class compute
+                    cfg.net.bandwidth_gbps = 0.25;
+                    cfg.net.gpu_speedup = 25.0;
+                    cfg.comm.all_to_all = a2a;
+                    cfg.comm.allreduce = ar;
+                    if slow > 1.0 {
+                        cfg.comm.bw_scale = vec![1.0 / slow];
+                    }
+                    match run_cfg(store, &cfg) {
+                        Ok(r) => {
+                            let r = r.last().unwrap();
+                            let st = &r.comm_stats;
+                            let a2a_mb = (st.kind(CommKind::Split).bytes_sent
+                                + st.kind(CommKind::Gather).bytes_sent)
+                                as f64
+                                / 1e6;
+                            writeln!(
+                                s,
+                                "{w},{},{},{slow},{:.4},{:.4},{:.4},{:.4},{:.3}",
+                                a2a.name(),
+                                ar.name(),
+                                r.sim_epoch_secs,
+                                st.kind(CommKind::Split).secs,
+                                st.kind(CommKind::Gather).secs,
+                                st.kind(CommKind::AllreduceSum).secs,
+                                a2a_mb
+                            )
+                            .unwrap();
+                        }
+                        Err(e) => writeln!(
+                            s,
+                            "{w},{},{},{slow},ERR({e}),-,-,-,-",
+                            a2a.name(),
+                            ar.name()
+                        )
+                        .unwrap(),
+                    }
+                }
+            }
         }
     }
     Ok(s)

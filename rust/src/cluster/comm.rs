@@ -1,0 +1,1099 @@
+//! `Comm` — the per-run communicator every engine speaks through
+//! (DESIGN.md §4.2). It owns the event sim and the network model, so no
+//! engine constructs an `EventSim` or threads per-worker ready-time
+//! vectors anymore: a collective's schedule point is the posting worker's
+//! current stream frontier, and its completion times travel inside the
+//! returned [`CommHandle`].
+//!
+//! The surface mirrors the executor seam (`submit` → `Ticket` →
+//! `wait`): every collective has a **nonblocking `i*` variant** that
+//! posts the NIC events immediately and returns a `CommHandle<T>`
+//! carrying the moved data plus per-worker done-times, resolved on
+//! `wait`. Because compute and comm are separate streams per worker,
+//! compute submitted *after* a post never delays it — posting a
+//! collective and computing past it is exactly the overlap the paper's
+//! chunk pipelining (§4.2.2) exploits, now expressible at the API level.
+//!
+//! GNN tensor parallelism needs two collectives (paper §3.1):
+//! * `gather` — dim-sliced `[V, D/N]` per worker → vertex-sliced
+//!   `[V/N, D]` per worker (before NN ops, which need complete rows);
+//! * `split`  — the inverse (before graph ops, which need dim slices).
+//!
+//! Plus `allreduce_sum` for parameter gradients, `allgather_rows` for
+//! sharing precomputed attention scores, the SANCUS-style
+//! `sequential_broadcast` pathology, and point-to-point `fetch_rows` /
+//! `p2p` for DepComm-style neighbour pulls.
+//!
+//! Each collective selects its **algorithm** from the run's
+//! [`CommTuning`]: naive all-to-all bursts vs pairwise-exchange rounds,
+//! ring vs flat-tree allreduce. Numerics are identical across algorithms
+//! (the data plane never depends on the algorithm) — only the modeled
+//! times differ. A [`Topology`] of per-worker bandwidth multipliers
+//! models straggler/hetero-NIC scenarios, and every byte and NIC-second
+//! is attributed per collective kind in [`CommStats`], which
+//! `metrics::EpochReport` surfaces for the Table-4 / `comm_scale`
+//! breakdowns.
+
+use std::ops::Range;
+
+use super::event::EventSim;
+use crate::config::{AllReduceAlgo, AllToAllAlgo, CommTuning, NetModel, RunConfig};
+use crate::tensor::Matrix;
+
+/// Per-worker completion times of a collective.
+pub type DoneTimes = Vec<f64>;
+
+/// Collective kinds a `Comm` attributes bytes/seconds to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommKind {
+    Split,
+    Gather,
+    AllreduceSum,
+    AllgatherRows,
+    SequentialBroadcast,
+    FetchRows,
+    PointToPoint,
+}
+
+impl CommKind {
+    pub const ALL: [CommKind; 7] = [
+        CommKind::Split,
+        CommKind::Gather,
+        CommKind::AllreduceSum,
+        CommKind::AllgatherRows,
+        CommKind::SequentialBroadcast,
+        CommKind::FetchRows,
+        CommKind::PointToPoint,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CommKind::Split => "split",
+            CommKind::Gather => "gather",
+            CommKind::AllreduceSum => "allreduce_sum",
+            CommKind::AllgatherRows => "allgather_rows",
+            CommKind::SequentialBroadcast => "sequential_broadcast",
+            CommKind::FetchRows => "fetch_rows",
+            CommKind::PointToPoint => "p2p",
+        }
+    }
+
+    fn index(self) -> usize {
+        CommKind::ALL.iter().position(|k| *k == self).unwrap()
+    }
+}
+
+/// Accumulated traffic of one collective kind.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct KindStats {
+    /// collective invocations of this kind
+    pub ops: usize,
+    /// bytes leaving any NIC under this kind
+    pub bytes_sent: usize,
+    /// bytes arriving at any NIC under this kind
+    pub bytes_recv: usize,
+    /// NIC-busy seconds charged across all workers
+    pub secs: f64,
+}
+
+/// Per-collective-kind breakdown of an epoch's communication
+/// (bytes + seconds), recorded by [`Comm`] and surfaced through
+/// `metrics::EpochReport`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CommStats {
+    per_kind: [KindStats; 7],
+}
+
+impl CommStats {
+    fn record(&mut self, kind: CommKind, sent: usize, recv: usize, secs: f64) {
+        let s = &mut self.per_kind[kind.index()];
+        s.ops += 1;
+        s.bytes_sent += sent;
+        s.bytes_recv += recv;
+        s.secs += secs;
+    }
+
+    pub fn kind(&self, kind: CommKind) -> &KindStats {
+        &self.per_kind[kind.index()]
+    }
+
+    pub fn total_sent(&self) -> usize {
+        self.per_kind.iter().map(|s| s.bytes_sent).sum()
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.per_kind.iter().map(|s| s.secs).sum()
+    }
+
+    /// Non-empty kinds in declaration order: `(name, stats)`.
+    pub fn breakdown(&self) -> Vec<(&'static str, KindStats)> {
+        CommKind::ALL
+            .iter()
+            .filter(|k| self.per_kind[k.index()].ops > 0)
+            .map(|k| (k.name(), self.per_kind[k.index()]))
+            .collect()
+    }
+}
+
+/// Per-worker NIC topology: bandwidth multipliers relative to the
+/// `NetModel` baseline (`0.5` = half bandwidth, i.e. a straggler NIC).
+/// Latency is uniform; only wire time scales.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    bw_scale: Vec<f64>,
+}
+
+impl Topology {
+    pub fn uniform(workers: usize) -> Topology {
+        Topology { bw_scale: vec![1.0; workers] }
+    }
+
+    /// Pad (with 1.0) or truncate `scale` to `workers` entries.
+    pub fn with_bw_scale(workers: usize, scale: &[f64]) -> Topology {
+        let mut bw_scale = vec![1.0; workers];
+        for (dst, s) in bw_scale.iter_mut().zip(scale) {
+            *dst = *s;
+        }
+        Topology { bw_scale }
+    }
+
+    pub fn bw_scale(&self, w: usize) -> f64 {
+        self.bw_scale[w]
+    }
+
+    fn wire_secs(&self, net: &NetModel, w: usize, bytes: usize) -> f64 {
+        net.wire_secs(bytes) / self.bw_scale[w].max(1e-9)
+    }
+
+    fn msg_secs(&self, net: &NetModel, w: usize, bytes: usize) -> f64 {
+        net.latency_us * 1e-6 + self.wire_secs(net, w, bytes)
+    }
+}
+
+/// A posted (in-flight) collective: the moved data plus the per-worker
+/// completion times, resolved on [`CommHandle::wait`]. Dropping a handle
+/// without waiting forfeits the done-times but never the NIC accounting
+/// (the events are posted at call time).
+#[must_use = "a posted collective's done-times are only reachable through wait()"]
+pub struct CommHandle<T> {
+    data: T,
+    done: DoneTimes,
+}
+
+impl<T> CommHandle<T> {
+    /// Resolve the collective: data plus per-worker done-times.
+    pub fn wait(self) -> (T, DoneTimes) {
+        (self.data, self.done)
+    }
+
+    /// Resolve and reduce the done-times to the slowest participant
+    /// (barrier-style join).
+    pub fn wait_barrier(self) -> (T, f64) {
+        let t = self.done.iter().copied().fold(0.0, f64::max);
+        (self.data, t)
+    }
+
+    /// Peek at the per-worker done-times without consuming the handle.
+    pub fn done(&self) -> &DoneTimes {
+        &self.done
+    }
+}
+
+/// The communicator: owns the run's `EventSim`, network model, algorithm
+/// selection and topology; every engine's comm *and* compute events flow
+/// through it.
+#[derive(Clone, Debug)]
+pub struct Comm {
+    sim: EventSim,
+    net: NetModel,
+    all_to_all: AllToAllAlgo,
+    allreduce: AllReduceAlgo,
+    topo: Topology,
+    stats: CommStats,
+    /// sent-side bytes per worker (feeds `WorkerLoad::comm_bytes`)
+    bytes_per_worker: Vec<usize>,
+}
+
+impl Comm {
+    pub fn new(workers: usize, net: NetModel, tuning: &CommTuning) -> Comm {
+        Comm {
+            sim: EventSim::new(workers),
+            net,
+            all_to_all: tuning.all_to_all,
+            allreduce: tuning.allreduce,
+            topo: Topology::with_bw_scale(workers, &tuning.bw_scale),
+            stats: CommStats::default(),
+            bytes_per_worker: vec![0; workers],
+        }
+    }
+
+    /// The communicator a run configuration asks for.
+    pub fn for_run(cfg: &RunConfig) -> Comm {
+        Comm::new(cfg.workers, cfg.net, &cfg.comm)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.sim.workers()
+    }
+
+    pub fn sim(&self) -> &EventSim {
+        &self.sim
+    }
+
+    pub fn stats(&self) -> &CommStats {
+        &self.stats
+    }
+
+    pub fn bytes_per_worker(&self) -> &[usize] {
+        &self.bytes_per_worker
+    }
+
+    // ---- compute-stream passthrough ------------------------------------
+    // (the sim is owned here; engines schedule device work through the
+    // same object so comm and compute share one timeline)
+
+    /// Schedule `dur` seconds of compute on worker `w`, not before
+    /// `ready`. Returns the finish time.
+    pub fn compute(&mut self, w: usize, dur: f64, ready: f64) -> f64 {
+        self.sim.compute(w, dur, ready)
+    }
+
+    /// Current frontier of worker `w` (both streams drained).
+    pub fn now(&self, w: usize) -> f64 {
+        self.sim.now(w)
+    }
+
+    /// Global synchronization of every stream (BSP phase boundary).
+    pub fn barrier(&mut self) -> f64 {
+        self.sim.barrier()
+    }
+
+    /// The slowest worker's frontier.
+    pub fn makespan(&self) -> f64 {
+        self.sim.makespan()
+    }
+
+    // ---- point-to-point -------------------------------------------------
+
+    /// Charge one message of `bytes` to worker `w`'s NIC at its current
+    /// frontier (DepComm-style neighbour/feature pull accounting).
+    /// Returns the completion time.
+    pub fn p2p(&mut self, w: usize, bytes: usize) -> f64 {
+        let dur = self.topo.msg_secs(&self.net, w, bytes);
+        let ready = self.sim.now(w);
+        let done = self.sim.comm(w, dur, ready);
+        self.stats.record(CommKind::PointToPoint, bytes, bytes, dur);
+        self.bytes_per_worker[w] += bytes;
+        done
+    }
+
+    /// Like [`Comm::p2p`] but wire time only — no per-message latency.
+    /// For bulk accounting of data that is already streaming (e.g. the
+    /// GAT alpha share, where the bytes ride existing connections).
+    pub fn p2p_wire(&mut self, w: usize, bytes: usize) -> f64 {
+        let dur = self.topo.wire_secs(&self.net, w, bytes);
+        let ready = self.sim.now(w);
+        let done = self.sim.comm(w, dur, ready);
+        self.stats.record(CommKind::PointToPoint, bytes, bytes, dur);
+        self.bytes_per_worker[w] += bytes;
+        done
+    }
+
+    /// Point-to-point fetch of specific rows from an owner worker
+    /// (DepComm neighbour pull). Returns the fetched rows and the
+    /// completion time (both NICs released).
+    pub fn fetch_rows(
+        &mut self,
+        owner_data: &Matrix,
+        owner_base: usize,
+        rows: &[u32],
+        owner: usize,
+        requester: usize,
+    ) -> (Matrix, f64) {
+        let (block, done) = self
+            .ifetch_rows(owner_data, owner_base, rows, owner, requester)
+            .wait();
+        let t = done[owner].max(done[requester]);
+        (block, t)
+    }
+
+    /// Nonblocking [`Comm::fetch_rows`]: done-times carry the owner's and
+    /// requester's completion (other entries are those workers' current
+    /// frontiers).
+    pub fn ifetch_rows(
+        &mut self,
+        owner_data: &Matrix,
+        owner_base: usize,
+        rows: &[u32],
+        owner: usize,
+        requester: usize,
+    ) -> CommHandle<Matrix> {
+        let local: Vec<u32> = rows.iter().map(|&r| r - owner_base as u32).collect();
+        let block = owner_data.gather_rows(&local);
+        let bytes = block.bytes();
+        let dur_o = self.topo.msg_secs(&self.net, owner, bytes);
+        let dur_r = self.topo.msg_secs(&self.net, requester, bytes);
+        let ready = self.sim.now(owner).max(self.sim.now(requester));
+        // occupies both NICs; the requester cannot finish receiving
+        // before the owner started sending
+        let t_owner = self.sim.comm(owner, dur_o, ready);
+        let t_req = self.sim.comm(requester, dur_r, ready.max(t_owner - dur_o));
+        self.stats.record(CommKind::FetchRows, bytes, bytes, dur_o + dur_r);
+        self.bytes_per_worker[owner] += bytes;
+        let mut done: DoneTimes = (0..self.workers()).map(|w| self.sim.now(w)).collect();
+        done[owner] = t_owner;
+        done[requester] = t_req.max(t_owner);
+        CommHandle { data: block, done }
+    }
+
+    // ---- split / gather (the TP embedding collectives) ------------------
+
+    /// `split`: vertex-sliced full-width inputs → dim-sliced outputs.
+    ///
+    /// `inputs[i]` holds rows `row_parts[i]` with full width `D`; output
+    /// `j` holds all `V` rows restricted to columns `dim_parts[j]`.
+    pub fn split(
+        &mut self,
+        inputs: &[Matrix],
+        row_parts: &[Range<usize>],
+        dim_parts: &[Range<usize>],
+    ) -> (Vec<Matrix>, DoneTimes) {
+        self.isplit(inputs, row_parts, dim_parts).wait()
+    }
+
+    /// Nonblocking [`Comm::split`].
+    pub fn isplit(
+        &mut self,
+        inputs: &[Matrix],
+        row_parts: &[Range<usize>],
+        dim_parts: &[Range<usize>],
+    ) -> CommHandle<Vec<Matrix>> {
+        let n = inputs.len();
+        let v: usize = row_parts.iter().map(Range::len).sum();
+        let mut outs: Vec<Matrix> =
+            dim_parts.iter().map(|d| Matrix::zeros(v, d.len())).collect();
+        let mut pair = vec![vec![0usize; n]; n];
+        for i in 0..n {
+            for (j, dp) in dim_parts.iter().enumerate() {
+                let block = inputs[i].slice_cols(dp.clone());
+                if i != j {
+                    pair[i][j] = block.bytes();
+                }
+                outs[j].write_rows(row_parts[i].start, &block);
+            }
+        }
+        let done = self.all_to_all(&pair, CommKind::Split);
+        CommHandle { data: outs, done }
+    }
+
+    /// `gather`: dim-sliced inputs → vertex-sliced full-width outputs.
+    pub fn gather(
+        &mut self,
+        inputs: &[Matrix],
+        row_parts: &[Range<usize>],
+        dim_parts: &[Range<usize>],
+    ) -> (Vec<Matrix>, DoneTimes) {
+        self.igather(inputs, row_parts, dim_parts).wait()
+    }
+
+    /// Nonblocking [`Comm::gather`].
+    pub fn igather(
+        &mut self,
+        inputs: &[Matrix],
+        row_parts: &[Range<usize>],
+        dim_parts: &[Range<usize>],
+    ) -> CommHandle<Vec<Matrix>> {
+        let n = inputs.len();
+        let d: usize = dim_parts.iter().map(Range::len).sum();
+        let mut outs: Vec<Matrix> =
+            row_parts.iter().map(|r| Matrix::zeros(r.len(), d)).collect();
+        let mut pair = vec![vec![0usize; n]; n];
+        for (j, dp) in dim_parts.iter().enumerate() {
+            for (i, rp) in row_parts.iter().enumerate() {
+                let block = inputs[j].slice_rows(rp.clone());
+                if i != j {
+                    pair[j][i] = block.bytes();
+                }
+                outs[i].write_cols(dp.start, &block);
+            }
+        }
+        let done = self.all_to_all(&pair, CommKind::Gather);
+        CommHandle { data: outs, done }
+    }
+
+    // ---- pipelined chunk pieces (paper §4.2.2) --------------------------
+
+    /// Post the chunk-level pieces of a segmented split: piece `k`
+    /// charges one message of `bytes_per_piece[k]` to every worker's NIC,
+    /// pieces queueing back-to-back on the comm stream. Returns one
+    /// handle per piece so the engine can start chunk `k`'s aggregation
+    /// the moment piece `k` lands while later pieces are still in flight
+    /// — overlap via posted handles instead of hand-merged ready vectors.
+    pub fn isplit_pieces(&mut self, bytes_per_piece: &[usize]) -> Vec<CommHandle<()>> {
+        bytes_per_piece
+            .iter()
+            .map(|&b| self.piece(b, CommKind::Split))
+            .collect()
+    }
+
+    /// Post one chunk-level gather piece (the inverse direction), at
+    /// every worker's current frontier.
+    pub fn igather_piece(&mut self, bytes: usize) -> CommHandle<()> {
+        self.piece(bytes, CommKind::Gather)
+    }
+
+    fn piece(&mut self, bytes: usize, kind: CommKind) -> CommHandle<()> {
+        let n = self.workers();
+        let mut done = vec![0.0; n];
+        let mut secs = 0.0;
+        for w in 0..n {
+            let dur = self.topo.msg_secs(&self.net, w, bytes);
+            let ready = self.sim.now(w);
+            done[w] = self.sim.comm(w, dur, ready);
+            secs += dur;
+            self.bytes_per_worker[w] += bytes;
+        }
+        self.stats.record(kind, bytes * n, bytes * n, secs);
+        CommHandle { data: (), done }
+    }
+
+    // ---- allreduce ------------------------------------------------------
+
+    /// Allreduce (sum) over per-worker equally-shaped tensors, e.g.
+    /// parameter gradients. Algorithm per [`CommTuning::allreduce`]:
+    /// ring (`2 (N-1)/N · bytes` wire per worker) or flat tree (root
+    /// serializes `N-1` receives, then re-broadcasts).
+    pub fn allreduce_sum(&mut self, inputs: &[Matrix]) -> (Matrix, DoneTimes) {
+        self.iallreduce_sum(inputs).wait()
+    }
+
+    /// Nonblocking [`Comm::allreduce_sum`].
+    pub fn iallreduce_sum(&mut self, inputs: &[Matrix]) -> CommHandle<Matrix> {
+        let n = inputs.len();
+        let mut sum = inputs[0].clone();
+        for m in &inputs[1..] {
+            sum.add_assign(m);
+        }
+        let bytes = sum.bytes();
+        if n <= 1 {
+            let done = vec![self.sim.now(0)];
+            return CommHandle { data: sum, done };
+        }
+        let ready: Vec<f64> = (0..n).map(|w| self.sim.now(w)).collect();
+        let done = match self.allreduce {
+            AllReduceAlgo::Ring => self.allreduce_ring(n, bytes, &ready),
+            AllReduceAlgo::FlatTree => self.allreduce_flat_tree(n, bytes, &ready),
+        };
+        CommHandle { data: sum, done }
+    }
+
+    fn allreduce_ring(&mut self, n: usize, bytes: usize, ready: &[f64]) -> DoneTimes {
+        let mut done = vec![0.0; n];
+        let mut secs = 0.0;
+        let mut sent_total = 0usize;
+        let share = 2.0 * (n - 1) as f64 / n as f64;
+        for w in 0..n {
+            let wire = share * self.topo.wire_secs(&self.net, w, bytes)
+                + 2.0 * (n - 1) as f64 * self.net.latency_us * 1e-6;
+            done[w] = self.sim.comm(w, wire, ready[w]);
+            secs += wire;
+            let b = (share * bytes as f64) as usize;
+            self.bytes_per_worker[w] += b;
+            sent_total += b;
+        }
+        // ring steps synchronize all participants
+        let t = done.iter().copied().fold(0.0, f64::max);
+        done.iter_mut().for_each(|d| *d = t);
+        // stats record the sum of the per-worker credits, so the
+        // per-worker/total invariant holds even when the share truncates
+        self.stats.record(CommKind::AllreduceSum, sent_total, sent_total, secs);
+        done
+    }
+
+    fn allreduce_flat_tree(&mut self, n: usize, bytes: usize, ready: &[f64]) -> DoneTimes {
+        let lat = self.net.latency_us * 1e-6;
+        let mut secs = 0.0;
+        // up: every non-root sends its block; the root's NIC serializes
+        // the N-1 receives
+        let mut up = 0.0f64;
+        for w in 1..n {
+            let dur = self.topo.msg_secs(&self.net, w, bytes);
+            up = up.max(self.sim.comm(w, dur, ready[w]));
+            secs += dur;
+        }
+        let root_up =
+            (n - 1) as f64 * (self.topo.wire_secs(&self.net, 0, bytes) + lat);
+        up = up.max(self.sim.comm(0, root_up, ready[0]));
+        secs += root_up;
+        // down: the root re-broadcasts the reduced block to everyone
+        let root_down = root_up; // same N-1 messages, outbound
+        let mut down = self.sim.comm(0, root_down, up);
+        secs += root_down;
+        for w in 1..n {
+            let dur = self.topo.msg_secs(&self.net, w, bytes);
+            down = down.max(self.sim.comm(w, dur, up));
+            secs += dur;
+        }
+        // sent side: the root re-broadcasts N-1 copies, everyone else
+        // sends its single block up (receives are tracked in the stats)
+        for (w, b) in self.bytes_per_worker.iter_mut().enumerate().take(n) {
+            *b += if w == 0 { (n - 1) * bytes } else { bytes };
+        }
+        // up: N-1 blocks into the root; down: N-1 copies out of it
+        let total = (2 * (n - 1)) * bytes;
+        self.stats.record(CommKind::AllreduceSum, total, total, secs);
+        // the tree synchronizes everyone at the final broadcast
+        vec![down; n]
+    }
+
+    // ---- allgather ------------------------------------------------------
+
+    /// All-gather of per-worker row blocks into the full matrix
+    /// everywhere (sharing precomputed attention scores, paper §4.1.1).
+    /// Block `i` lands at the global rows `row_parts[i]` describes.
+    pub fn allgather_rows(
+        &mut self,
+        inputs: &[Matrix],
+        row_parts: &[Range<usize>],
+    ) -> (Matrix, DoneTimes) {
+        self.iallgather_rows(inputs, row_parts).wait()
+    }
+
+    /// Nonblocking [`Comm::allgather_rows`].
+    pub fn iallgather_rows(
+        &mut self,
+        inputs: &[Matrix],
+        row_parts: &[Range<usize>],
+    ) -> CommHandle<Matrix> {
+        let n = inputs.len();
+        debug_assert_eq!(row_parts.len(), n);
+        let v: usize = row_parts.iter().map(Range::len).sum();
+        let d = inputs[0].cols();
+        let mut full = Matrix::zeros(v, d);
+        let mut pair = vec![vec![0usize; n]; n];
+        for (i, rp) in row_parts.iter().enumerate() {
+            debug_assert_eq!(inputs[i].rows(), rp.len());
+            full.write_rows(rp.start, &inputs[i]);
+            for (j, pij) in pair[i].iter_mut().enumerate() {
+                if i != j {
+                    *pij = inputs[i].bytes();
+                }
+            }
+        }
+        let done = self.all_to_all(&pair, CommKind::AllgatherRows);
+        CommHandle { data: full, done }
+    }
+
+    // ---- sequential broadcast (SANCUS pathology) ------------------------
+
+    /// SANCUS-style *sequential* broadcast: worker after worker
+    /// broadcasts its full local block to everyone, each waiting for the
+    /// previous broadcast — the serialization the paper blames for
+    /// Sancus's poor scaling (§5.2). Sender/receiver costs are
+    /// asymmetric; the round still ends at the slowest participant.
+    pub fn sequential_broadcast(&mut self, inputs: &[Matrix]) -> (Matrix, DoneTimes) {
+        self.isequential_broadcast(inputs).wait()
+    }
+
+    /// Nonblocking [`Comm::sequential_broadcast`].
+    pub fn isequential_broadcast(&mut self, inputs: &[Matrix]) -> CommHandle<Matrix> {
+        let n = inputs.len();
+        let full = Matrix::concat_rows(inputs);
+        let lat = self.net.latency_us * 1e-6;
+        let mut frontier = (0..n).map(|w| self.sim.now(w)).fold(0.0, f64::max);
+        let mut secs = 0.0;
+        let mut sent_total = 0usize;
+        for s in 0..n {
+            let peers = n.saturating_sub(1);
+            let bytes = inputs[s].bytes();
+            let send_dur =
+                self.topo.wire_secs(&self.net, s, bytes * peers) + lat * peers as f64;
+            let mut next = frontier;
+            for w in 0..n {
+                let dur = if w == s {
+                    send_dur
+                } else {
+                    self.topo.msg_secs(&self.net, w, bytes)
+                };
+                let d = self.sim.comm(w, dur, frontier);
+                secs += dur;
+                next = next.max(d);
+            }
+            self.bytes_per_worker[s] += bytes * peers;
+            sent_total += bytes * peers;
+            frontier = next;
+        }
+        self.stats
+            .record(CommKind::SequentialBroadcast, sent_total, sent_total, secs);
+        CommHandle { data: full, done: vec![frontier; n] }
+    }
+
+    // ---- all-to-all timing core -----------------------------------------
+
+    /// Time a symmetric block exchange from the per-pair byte matrix
+    /// (`pair[i][j]` = bytes `i` sends to `j`), per the configured
+    /// algorithm. Latency is charged **per actual message**: a peer
+    /// exchanged zero bytes with costs nothing (degenerate partitions
+    /// with empty slices don't pay phantom latency).
+    fn all_to_all(&mut self, pair: &[Vec<usize>], kind: CommKind) -> DoneTimes {
+        let n = pair.len();
+        let ready: Vec<f64> = (0..n).map(|w| self.sim.now(w)).collect();
+        let (done, secs) = match self.all_to_all {
+            AllToAllAlgo::Naive => self.a2a_naive(pair, &ready),
+            AllToAllAlgo::Pairwise => self.a2a_pairwise(pair, &ready),
+        };
+        // sent from row sums, received from column sums — derived
+        // independently so the conservation property (Σ sent == Σ recv)
+        // checks the byte matrix, not one accumulator against itself
+        let mut sent_total = 0usize;
+        let mut recv_total = 0usize;
+        for w in 0..n {
+            let sent: usize = pair[w].iter().sum();
+            let recv: usize = (0..n).map(|p| pair[p][w]).sum();
+            self.bytes_per_worker[w] += sent;
+            sent_total += sent;
+            recv_total += recv;
+        }
+        self.stats.record(kind, sent_total, recv_total, secs);
+        done
+    }
+
+    /// One burst per worker: full-duplex NIC occupancy is
+    /// `max(sent, received)` wire time plus latency per actual message.
+    fn a2a_naive(&mut self, pair: &[Vec<usize>], ready: &[f64]) -> (DoneTimes, f64) {
+        let n = pair.len();
+        let lat = self.net.latency_us * 1e-6;
+        let mut done = vec![0.0; n];
+        let mut secs = 0.0;
+        for w in 0..n {
+            let sent: usize = pair[w].iter().sum();
+            let recv: usize = (0..n).map(|p| pair[p][w]).sum();
+            let sent_msgs = pair[w].iter().filter(|&&b| b > 0).count();
+            let recv_msgs = (0..n).filter(|&p| pair[p][w] > 0).count();
+            let wire = self
+                .topo
+                .wire_secs(&self.net, w, sent)
+                .max(self.topo.wire_secs(&self.net, w, recv))
+                + lat * sent_msgs.max(recv_msgs) as f64;
+            done[w] = self.sim.comm(w, wire, ready[w]);
+            secs += wire;
+        }
+        (done, secs)
+    }
+
+    /// `N-1` pairwise-exchange rounds. For power-of-two clusters the
+    /// rounds are XOR-paired and pair-synchronized (a straggler NIC
+    /// delays its partner each round — the contagion flat bursts hide);
+    /// otherwise a round-robin offset schedule without pair coupling.
+    fn a2a_pairwise(&mut self, pair: &[Vec<usize>], ready: &[f64]) -> (DoneTimes, f64) {
+        let n = pair.len();
+        let lat = self.net.latency_us * 1e-6;
+        let mut done = ready.to_vec();
+        let mut secs = 0.0;
+        if n.is_power_of_two() {
+            for r in 1..n {
+                for w in 0..n {
+                    let p = w ^ r;
+                    if w > p {
+                        continue; // each unordered pair once per round
+                    }
+                    let exchange = |comm: &Self, a: usize, b: usize| -> f64 {
+                        let (s, v) = (pair[a][b], pair[b][a]);
+                        if s + v == 0 {
+                            return 0.0;
+                        }
+                        comm.topo
+                            .wire_secs(&comm.net, a, s)
+                            .max(comm.topo.wire_secs(&comm.net, a, v))
+                            + lat
+                    };
+                    let (dw, dp) = (exchange(self, w, p), exchange(self, p, w));
+                    if dw + dp == 0.0 {
+                        continue; // nothing exchanged: no round, no sync
+                    }
+                    let start = done[w].max(done[p]);
+                    let tw = self.sim.comm(w, dw, start);
+                    let tp = self.sim.comm(p, dp, start);
+                    secs += dw + dp;
+                    let t = tw.max(tp);
+                    done[w] = t;
+                    done[p] = t;
+                }
+            }
+        } else {
+            for r in 1..n {
+                for (w, d) in done.iter_mut().enumerate() {
+                    let to = (w + r) % n;
+                    let from = (w + n - r) % n;
+                    let (s, v) = (pair[w][to], pair[from][w]);
+                    if s + v == 0 {
+                        continue;
+                    }
+                    let dur = self
+                        .topo
+                        .wire_secs(&self.net, w, s)
+                        .max(self.topo.wire_secs(&self.net, w, v))
+                        + lat;
+                    *d = self.sim.comm(w, dur, *d);
+                    secs += dur;
+                }
+            }
+        }
+        (done, secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{dim_slices, row_slices};
+
+    fn comm(n: usize) -> Comm {
+        Comm::new(n, NetModel::default(), &CommTuning::default())
+    }
+
+    fn comm_with(n: usize, tuning: &CommTuning) -> Comm {
+        Comm::new(n, NetModel::default(), tuning)
+    }
+
+    /// split then gather must reproduce the original vertex-sliced data.
+    #[test]
+    fn split_gather_roundtrip() {
+        let (v, d, n) = (12, 10, 4);
+        let full = Matrix::from_fn(v, d, |r, c| (r * 100 + c) as f32);
+        let rp = row_slices(v, n);
+        let dp = dim_slices(d, n);
+        let inputs: Vec<Matrix> = rp.iter().map(|r| full.slice_rows(r.clone())).collect();
+        let mut comm = comm(n);
+        let (sliced, _t1) = comm.split(&inputs, &rp, &dp);
+        for (j, s) in sliced.iter().enumerate() {
+            assert_eq!(*s, full.slice_cols(dp[j].clone()));
+        }
+        let (back, _t2) = comm.gather(&sliced, &rp, &dp);
+        for (i, b) in back.iter().enumerate() {
+            assert_eq!(*b, inputs[i]);
+        }
+    }
+
+    /// Non-divisible shapes: V and D not multiples of N exercise the
+    /// `row_slices`/`dim_slices` remainder paths (first slices one wider).
+    #[test]
+    fn split_gather_roundtrip_non_divisible() {
+        for (v, d, n) in [(13usize, 10usize, 4usize), (7, 5, 3), (17, 9, 8), (5, 4, 5)] {
+            let full = Matrix::from_fn(v, d, |r, c| (r * 100 + c) as f32);
+            let rp = row_slices(v, n);
+            let dp = dim_slices(d, n);
+            assert_eq!(rp.iter().map(|r| r.len()).sum::<usize>(), v);
+            assert_eq!(dp.iter().map(|r| r.len()).sum::<usize>(), d);
+            let inputs: Vec<Matrix> = rp.iter().map(|r| full.slice_rows(r.clone())).collect();
+            let mut comm = comm(n);
+            let (sliced, _) = comm.split(&inputs, &rp, &dp);
+            for (j, s) in sliced.iter().enumerate() {
+                assert_eq!(*s, full.slice_cols(dp[j].clone()), "v={v} d={d} n={n} slice {j}");
+            }
+            let (back, _) = comm.gather(&sliced, &rp, &dp);
+            for (i, b) in back.iter().enumerate() {
+                assert_eq!(*b, inputs[i], "v={v} d={d} n={n} worker {i}");
+            }
+        }
+    }
+
+    /// Remainder slices differ by at most one row/column, so the
+    /// all-to-all volume stays balanced to within one slice row.
+    #[test]
+    fn non_divisible_comm_nearly_balanced() {
+        let (v, d, n) = (1021usize, 61usize, 4usize); // both indivisible by 4
+        let full = Matrix::from_fn(v, d, |r, c| (r + c) as f32);
+        let rp = row_slices(v, n);
+        let dp = dim_slices(d, n);
+        let inputs: Vec<Matrix> = rp.iter().map(|r| full.slice_rows(r.clone())).collect();
+        let mut comm = comm(n);
+        let _ = comm.split(&inputs, &rp, &dp);
+        let totals = comm.sim().comm_totals();
+        let max = totals.iter().copied().fold(0.0, f64::max);
+        let min = totals.iter().copied().fold(f64::MAX, f64::min);
+        assert!(max / min < 1.05, "remainder imbalance {max}/{min}");
+    }
+
+    #[test]
+    fn allgather_places_blocks_by_row_parts() {
+        let (v, d, n) = (11usize, 3usize, 3usize);
+        let full = Matrix::from_fn(v, d, |r, c| (10 * r + c) as f32);
+        let rp = row_slices(v, n);
+        let blocks: Vec<Matrix> = rp.iter().map(|r| full.slice_rows(r.clone())).collect();
+        let mut comm = comm(n);
+        let (got, done) = comm.allgather_rows(&blocks, &rp);
+        assert_eq!(got, full);
+        assert!(done.iter().all(|&t| t > 0.0));
+    }
+
+    #[test]
+    fn split_comm_time_balanced() {
+        let (v, d, n) = (1024, 64, 4);
+        let full = Matrix::from_fn(v, d, |r, c| (r + c) as f32);
+        let rp = row_slices(v, n);
+        let dp = dim_slices(d, n);
+        let inputs: Vec<Matrix> = rp.iter().map(|r| full.slice_rows(r.clone())).collect();
+        let mut comm = comm(n);
+        let _ = comm.split(&inputs, &rp, &dp);
+        let totals = comm.sim().comm_totals();
+        let max = totals.iter().copied().fold(0.0, f64::max);
+        let min = totals.iter().copied().fold(f64::MAX, f64::min);
+        assert!(max / min < 1.001, "TP collectives are perfectly balanced");
+    }
+
+    #[test]
+    fn allreduce_sums_and_times() {
+        let n = 4;
+        let inputs: Vec<Matrix> =
+            (0..n).map(|i| Matrix::from_fn(3, 3, |_, _| i as f32)).collect();
+        let mut comm = comm(n);
+        let (sum, done) = comm.allreduce_sum(&inputs);
+        assert_eq!(sum.get(0, 0), 0.0 + 1.0 + 2.0 + 3.0);
+        assert!(done.iter().all(|&t| t > 0.0));
+        assert!(done.windows(2).all(|w| (w[0] - w[1]).abs() < 1e-12));
+    }
+
+    #[test]
+    fn sequential_broadcast_serializes() {
+        let n = 4;
+        let rows = 256;
+        let inputs: Vec<Matrix> = (0..n).map(|_| Matrix::zeros(rows, 64)).collect();
+        let rp = row_slices(rows * n, n);
+        // sancus-style sequential broadcast strictly slower than allgather
+        let mut c1 = comm(n);
+        let (_, d1) = c1.sequential_broadcast(&inputs);
+        let mut c2 = comm(n);
+        let (_, d2) = c2.allgather_rows(&inputs, &rp);
+        assert!(d1[0] > d2[0] * 1.5, "seq {} vs allgather {}", d1[0], d2[0]);
+    }
+
+    #[test]
+    fn fetch_rows_moves_right_data() {
+        let owner_rows = Matrix::from_fn(8, 4, |r, c| (r * 10 + c) as f32);
+        let mut comm = comm(2);
+        // owner 1 owns global rows 8..16
+        let (block, t) = comm.fetch_rows(&owner_rows, 8, &[9, 12], 1, 0);
+        assert_eq!(block.row(0), owner_rows.row(1));
+        assert_eq!(block.row(1), owner_rows.row(4));
+        assert!(t > 0.0);
+    }
+
+    #[test]
+    fn gather_volume_constant_in_workers() {
+        // paper §3.2: TP total communication ~ 2 V D per round, independent
+        // of N — check gather totals stay ~flat as N grows
+        let (v, d) = (1024, 64);
+        let full = Matrix::from_fn(v, d, |r, c| (r + c) as f32);
+        let mut totals = Vec::new();
+        for n in [2usize, 4, 8] {
+            let rp = row_slices(v, n);
+            let dp = dim_slices(d, n);
+            let sliced: Vec<Matrix> =
+                dp.iter().map(|dpj| full.slice_cols(dpj.clone())).collect();
+            // isolate wire time: latency scales with peer count by design
+            let net0 = NetModel { latency_us: 0.0, ..NetModel::default() };
+            let mut comm = Comm::new(n, net0, &CommTuning::default());
+            let _ = comm.gather(&sliced, &rp, &dp);
+            totals.push(comm.sim().comm_totals().iter().sum::<f64>());
+        }
+        // total wire converges to (N-1)/N * V*D*4/bw: bounded, not linear
+        // in N (ratio n=8 : n=2 is exactly 1.75)
+        assert!(totals[2] < totals[0] * 1.8, "{totals:?}");
+        assert!(totals[2] > totals[1], "monotone but saturating: {totals:?}");
+    }
+
+    /// The satellite bugfix: latency is charged per actual message, so a
+    /// worker whose slices are empty (degenerate partition) pays nothing,
+    /// and partially-degenerate workers pay for their real peer count.
+    #[test]
+    fn latency_charged_per_actual_message() {
+        // v = d = 3 over n = 4: worker 3 owns zero rows AND zero columns
+        let (v, d, n) = (3usize, 3usize, 4usize);
+        let full = Matrix::from_fn(v, d, |r, c| (r * 10 + c) as f32);
+        let rp = row_slices(v, n);
+        let dp = dim_slices(d, n);
+        assert_eq!(rp[3].len(), 0, "test premise: worker 3 has no rows");
+        assert_eq!(dp[3].len(), 0, "test premise: worker 3 has no columns");
+        let inputs: Vec<Matrix> = rp.iter().map(|r| full.slice_rows(r.clone())).collect();
+        // near-infinite bandwidth isolates the latency term
+        let net = NetModel { bandwidth_gbps: 1e12, latency_us: 1e6, ..NetModel::default() };
+        let mut comm = Comm::new(n, net, &CommTuning::default());
+        let (_, done) = comm.split(&inputs, &rp, &dp);
+        let lat = 1.0; // 1e6 us
+        // worker 3 exchanges nothing: no messages, no latency
+        assert!(done[3] < 1e-6, "idle worker charged {}", done[3]);
+        // workers 0..2 send their row to the 2 *other* non-empty dim
+        // owners and receive 2 blocks: 2 messages, not n-1 = 3
+        for (w, t) in done.iter().enumerate().take(3) {
+            assert!(
+                (t - 2.0 * lat).abs() < 1e-6,
+                "worker {w} charged {t} (want 2 messages)"
+            );
+        }
+    }
+
+    /// All algorithm combinations move bit-identical payloads; only the
+    /// modeled times differ.
+    #[test]
+    fn algorithms_share_the_data_plane() {
+        let (v, d, n) = (64usize, 24usize, 4usize);
+        let full = Matrix::from_fn(v, d, |r, c| ((r * 13 + c * 7) % 19) as f32 - 9.0);
+        let rp = row_slices(v, n);
+        let dp = dim_slices(d, n);
+        let inputs: Vec<Matrix> = rp.iter().map(|r| full.slice_rows(r.clone())).collect();
+        let grads: Vec<Matrix> =
+            (0..n).map(|i| Matrix::from_fn(8, 8, |r, c| (r + c + i) as f32)).collect();
+        let mut outs: Vec<(Vec<Matrix>, Matrix)> = Vec::new();
+        for a2a in [AllToAllAlgo::Naive, AllToAllAlgo::Pairwise] {
+            for ar in [AllReduceAlgo::Ring, AllReduceAlgo::FlatTree] {
+                let tuning = CommTuning { all_to_all: a2a, allreduce: ar, bw_scale: vec![] };
+                let mut comm = comm_with(n, &tuning);
+                let (sliced, _) = comm.split(&inputs, &rp, &dp);
+                let (sum, _) = comm.allreduce_sum(&grads);
+                outs.push((sliced, sum));
+            }
+        }
+        for (sliced, sum) in &outs[1..] {
+            for (a, b) in sliced.iter().zip(&outs[0].0) {
+                assert_eq!(a, b, "payload differs across CommAlgo variants");
+            }
+            assert_eq!(sum, &outs[0].1);
+        }
+    }
+
+    /// The pairwise fallback for non-power-of-two clusters still moves
+    /// the right data and produces monotone, positive done-times.
+    #[test]
+    fn pairwise_handles_non_power_of_two_clusters() {
+        let (v, d, n) = (21usize, 9usize, 3usize);
+        let full = Matrix::from_fn(v, d, |r, c| (r * 7 + c) as f32);
+        let rp = row_slices(v, n);
+        let dp = dim_slices(d, n);
+        let inputs: Vec<Matrix> = rp.iter().map(|r| full.slice_rows(r.clone())).collect();
+        let tuning = CommTuning { all_to_all: AllToAllAlgo::Pairwise, ..CommTuning::default() };
+        let mut comm = comm_with(n, &tuning);
+        let (sliced, done) = comm.split(&inputs, &rp, &dp);
+        for (j, s) in sliced.iter().enumerate() {
+            assert_eq!(*s, full.slice_cols(dp[j].clone()));
+        }
+        assert!(done.iter().all(|&t| t > 0.0));
+        let (back, done2) = comm.gather(&sliced, &rp, &dp);
+        for (i, b) in back.iter().enumerate() {
+            assert_eq!(*b, inputs[i]);
+        }
+        for (a, b) in done.iter().zip(&done2) {
+            assert!(b >= a, "time went backwards: {a} -> {b}");
+        }
+    }
+
+    /// A straggler NIC (per-worker bandwidth multiplier < 1) stretches
+    /// the collective's makespan by the slowdown factor.
+    #[test]
+    fn straggler_topology_slows_the_collective() {
+        let (v, d, n) = (512usize, 32usize, 4usize);
+        let full = Matrix::from_fn(v, d, |r, c| (r + c) as f32);
+        let rp = row_slices(v, n);
+        let dp = dim_slices(d, n);
+        let inputs: Vec<Matrix> = rp.iter().map(|r| full.slice_rows(r.clone())).collect();
+        let run = |bw_scale: Vec<f64>| -> f64 {
+            let tuning = CommTuning { bw_scale, ..CommTuning::default() };
+            // zero latency isolates the wire term the topology scales
+            let net0 = NetModel { latency_us: 0.0, ..NetModel::default() };
+            let mut comm = Comm::new(n, net0, &tuning);
+            let (_, done) = comm.split(&inputs, &rp, &dp);
+            done.iter().copied().fold(0.0, f64::max)
+        };
+        let flat = run(vec![]);
+        let straggler = run(vec![0.25]);
+        assert!(straggler > flat * 2.0, "straggler {straggler} vs flat {flat}");
+    }
+
+    #[test]
+    fn flat_tree_allreduce_slower_than_ring_at_scale() {
+        let n = 8;
+        let grads: Vec<Matrix> =
+            (0..n).map(|_| Matrix::from_fn(64, 64, |r, c| (r + c) as f32)).collect();
+        let t = |algo: AllReduceAlgo| -> f64 {
+            let tuning = CommTuning { allreduce: algo, ..CommTuning::default() };
+            let mut comm = comm_with(n, &tuning);
+            let (_, done) = comm.allreduce_sum(&grads);
+            // sent-side accounting stays consistent for every algorithm
+            assert_eq!(
+                comm.bytes_per_worker().iter().sum::<usize>(),
+                comm.stats().total_sent(),
+                "{algo:?} per-worker bytes disagree with the stats total"
+            );
+            done[0]
+        };
+        assert!(
+            t(AllReduceAlgo::FlatTree) > t(AllReduceAlgo::Ring),
+            "the root bottleneck must show"
+        );
+    }
+
+    /// `i*` then `wait` is the blocking call: same data, same done-times.
+    #[test]
+    fn istar_then_wait_equals_blocking() {
+        let (v, d, n) = (40usize, 16usize, 4usize);
+        let full = Matrix::from_fn(v, d, |r, c| (r * 3 + c) as f32);
+        let rp = row_slices(v, n);
+        let dp = dim_slices(d, n);
+        let inputs: Vec<Matrix> = rp.iter().map(|r| full.slice_rows(r.clone())).collect();
+        let mut a = comm(n);
+        let mut b = comm(n);
+        let (da, ta) = a.split(&inputs, &rp, &dp);
+        let (db, tb) = b.isplit(&inputs, &rp, &dp).wait();
+        assert_eq!(da, db);
+        assert_eq!(ta, tb);
+        assert_eq!(a.stats(), b.stats());
+    }
+
+    /// Posting a collective then scheduling compute must not delay the
+    /// posted NIC events — the overlap contract engines rely on.
+    #[test]
+    fn posted_handle_overlaps_later_compute() {
+        let n = 2;
+        let rp = row_slices(64, n);
+        let dp = dim_slices(16, n);
+        let full = Matrix::from_fn(64, 16, |r, c| (r + c) as f32);
+        let inputs: Vec<Matrix> = rp.iter().map(|r| full.slice_rows(r.clone())).collect();
+        let mut comm = comm(n);
+        let handle = comm.isplit(&inputs, &rp, &dp);
+        let posted_done = handle.done().clone();
+        // heavy compute submitted after the post
+        for w in 0..n {
+            comm.compute(w, 10.0, 0.0);
+        }
+        let (_, done) = handle.wait();
+        assert_eq!(done, posted_done, "compute after the post delayed the collective");
+        assert!(done.iter().all(|&t| t < 1.0), "{done:?}");
+        assert_eq!(comm.makespan(), 10.0);
+    }
+
+    #[test]
+    fn stats_conserve_bytes_and_name_kinds() {
+        let (v, d, n) = (32usize, 8usize, 4usize);
+        let full = Matrix::from_fn(v, d, |r, c| (r + c) as f32);
+        let rp = row_slices(v, n);
+        let dp = dim_slices(d, n);
+        let inputs: Vec<Matrix> = rp.iter().map(|r| full.slice_rows(r.clone())).collect();
+        let mut comm = comm(n);
+        let (sliced, _) = comm.split(&inputs, &rp, &dp);
+        let _ = comm.gather(&sliced, &rp, &dp);
+        comm.p2p(0, 1024);
+        for kind in [CommKind::Split, CommKind::Gather] {
+            let s = comm.stats().kind(kind);
+            assert_eq!(s.ops, 1);
+            assert_eq!(s.bytes_sent, s.bytes_recv, "{}", kind.name());
+            assert!(s.bytes_sent > 0 && s.secs > 0.0);
+        }
+        assert_eq!(comm.stats().kind(CommKind::PointToPoint).bytes_sent, 1024);
+        let names: Vec<&str> = comm.stats().breakdown().iter().map(|(n, _)| *n).collect();
+        assert_eq!(names, vec!["split", "gather", "p2p"]);
+        assert_eq!(
+            comm.bytes_per_worker().iter().sum::<usize>(),
+            comm.stats().total_sent()
+        );
+    }
+}

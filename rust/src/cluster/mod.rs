@@ -1,8 +1,12 @@
 //! Simulated multi-worker cluster (DESIGN.md §3/§4): real data movement on
 //! shared memory, timing from a discrete-event simulation fed by measured
-//! device durations and the network cost model.
+//! device durations and the network cost model. Engines speak to the
+//! cluster exclusively through [`comm::Comm`], the per-run communicator
+//! that owns the event sim and exposes nonblocking, topology-aware
+//! collectives.
 
-pub mod collectives;
+pub mod comm;
 pub mod event;
 
+pub use comm::{Comm, CommHandle, CommKind, CommStats, DoneTimes, KindStats, Topology};
 pub use event::{EventSim, StreamKind};

@@ -169,6 +169,84 @@ impl FromStr for ModelKind {
     }
 }
 
+/// All-to-all algorithm for the split/gather/allgather collectives
+/// (`cluster::Comm`, DESIGN.md §4.2). Numerics are identical across
+/// algorithms; only the modeled times differ.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum AllToAllAlgo {
+    /// one full-duplex burst per worker, latency per actual message
+    #[default]
+    Naive,
+    /// `N-1` pairwise-exchange rounds (XOR-paired and pair-synchronized
+    /// on power-of-two clusters)
+    Pairwise,
+}
+
+impl AllToAllAlgo {
+    /// Canonical name — round-trips through `FromStr`.
+    pub fn name(self) -> &'static str {
+        match self {
+            AllToAllAlgo::Naive => "naive",
+            AllToAllAlgo::Pairwise => "pairwise",
+        }
+    }
+}
+
+impl FromStr for AllToAllAlgo {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s {
+            "naive" => AllToAllAlgo::Naive,
+            "pairwise" => AllToAllAlgo::Pairwise,
+            _ => anyhow::bail!("unknown all-to-all algorithm '{s}' (naive|pairwise)"),
+        })
+    }
+}
+
+/// Allreduce algorithm for the gradient sync (`cluster::Comm`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum AllReduceAlgo {
+    /// bandwidth-optimal ring: `2 (N-1)/N · bytes` wire per worker
+    #[default]
+    Ring,
+    /// flat tree: the root serializes `N-1` receives, then re-broadcasts
+    FlatTree,
+}
+
+impl AllReduceAlgo {
+    /// Canonical name — round-trips through `FromStr`.
+    pub fn name(self) -> &'static str {
+        match self {
+            AllReduceAlgo::Ring => "ring",
+            AllReduceAlgo::FlatTree => "flat_tree",
+        }
+    }
+}
+
+impl FromStr for AllReduceAlgo {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s {
+            "ring" => AllReduceAlgo::Ring,
+            "flat_tree" | "flattree" | "tree" => AllReduceAlgo::FlatTree,
+            _ => anyhow::bail!("unknown allreduce algorithm '{s}' (ring|flat_tree)"),
+        })
+    }
+}
+
+/// Communicator tuning (`cluster::Comm`): per-collective algorithm
+/// selection plus the NIC topology. TOML keys live under `[comm]`; CLI
+/// overrides are `--comm-all-to-all`, `--comm-allreduce`, `--bw-scale`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CommTuning {
+    pub all_to_all: AllToAllAlgo,
+    pub allreduce: AllReduceAlgo,
+    /// per-worker bandwidth multipliers (straggler/hetero-NIC scenarios):
+    /// `0.5` = half bandwidth. Empty = homogeneous; shorter lists pad
+    /// with 1.0, longer lists truncate to the worker count.
+    pub bw_scale: Vec<f64>,
+}
+
 /// Network cost model for the simulated cluster (DESIGN.md §4). Defaults
 /// mirror the paper's testbed: 15 Gbps, ~25 us per message.
 #[derive(Clone, Copy, Debug)]
@@ -223,6 +301,8 @@ pub struct RunConfig {
     /// simulated per-worker device memory budget in MiB (T4 = 16384)
     pub device_mem_mb: usize,
     pub net: NetModel,
+    /// communicator algorithm selection + NIC topology (`cluster::Comm`)
+    pub comm: CommTuning,
     /// PJRT executor pool size; 0 = auto
     pub executor_threads: usize,
     /// intra-job kernel team width for the CSR row-blocked aggregation
@@ -267,6 +347,7 @@ impl Default for RunConfig {
             pipeline: true,
             device_mem_mb: 16 * 1024,
             net: NetModel::default(),
+            comm: CommTuning::default(),
             executor_threads: 0,
             intra_threads: 1,
             fused_nn: true,
@@ -344,6 +425,13 @@ impl RunConfig {
             "net.bandwidth_gbps" => self.net.bandwidth_gbps = want_float()?,
             "net.latency_us" => self.net.latency_us = want_float()?,
             "net.gpu_speedup" => self.net.gpu_speedup = want_float()?,
+            "comm.all_to_all" => self.comm.all_to_all = want_str()?.parse()?,
+            "comm.allreduce" => self.comm.allreduce = want_str()?.parse()?,
+            "comm.bw_scale" => {
+                self.comm.bw_scale = v
+                    .as_f64_array()
+                    .ok_or_else(|| anyhow::anyhow!("{key}: expected number array"))?;
+            }
             _ => {
                 let _ = matches!(v, Value::Str(_));
                 anyhow::bail!("unknown config key '{key}'");
@@ -371,6 +459,9 @@ impl RunConfig {
             && crate::graph::datasets::profile(&self.profile).unwrap().hetero
         {
             anyhow::bail!("GAT artifacts are not emitted for hetero profiles");
+        }
+        if self.comm.bw_scale.iter().any(|s| !s.is_finite() || *s <= 0.0) {
+            anyhow::bail!("comm.bw_scale entries must be finite and > 0");
         }
         Ok(())
     }
@@ -455,6 +546,31 @@ mod tests {
         for a in [AggImpl::Scatter, AggImpl::Pallas] {
             assert_eq!(a.name().parse::<AggImpl>().unwrap(), a);
         }
+        for a in [AllToAllAlgo::Naive, AllToAllAlgo::Pairwise] {
+            assert_eq!(a.name().parse::<AllToAllAlgo>().unwrap(), a);
+        }
+        for a in [AllReduceAlgo::Ring, AllReduceAlgo::FlatTree] {
+            assert_eq!(a.name().parse::<AllReduceAlgo>().unwrap(), a);
+        }
+    }
+
+    #[test]
+    fn comm_tuning_keys_parse_and_validate() {
+        let text = r#"
+            [comm]
+            all_to_all = "pairwise"
+            allreduce = "flat_tree"
+            bw_scale = [1.0, 0.25, 1, 1]
+        "#;
+        let c = RunConfig::from_toml(text).unwrap();
+        assert_eq!(c.comm.all_to_all, AllToAllAlgo::Pairwise);
+        assert_eq!(c.comm.allreduce, AllReduceAlgo::FlatTree);
+        assert_eq!(c.comm.bw_scale, vec![1.0, 0.25, 1.0, 1.0]);
+        c.validate().unwrap();
+        let mut bad = RunConfig::default();
+        bad.comm.bw_scale = vec![0.0];
+        assert!(bad.validate().is_err(), "non-positive bw_scale must be rejected");
+        assert!(RunConfig::from_toml("[comm]\nall_to_all = \"bogus\"\n").is_err());
     }
 
     #[test]

@@ -6,7 +6,8 @@
 //! * **L3 (this crate)** — the paper's system contribution: a simulated
 //!   multi-worker cluster, the tensor-parallel training engine with
 //!   generalized decoupled training (paper §4.1), memory-efficient chunk
-//!   scheduling + inter-chunk pipelining (paper §4.2), the gather/split
+//!   scheduling + inter-chunk pipelining (paper §4.2), the nonblocking
+//!   topology-aware `cluster::Comm` communicator carrying the gather/split
 //!   collectives, and the data-parallel / mini-batch / historical-embedding
 //!   baselines the paper evaluates against.
 //! * **L2 (python/compile/model.py)** — the GNN compute pieces in JAX,

@@ -62,12 +62,19 @@ fn print_usage() {
          \x20                  [--agg-impl scatter|pallas] [--no-pipeline] [--no-chunk-sched]\n\
          \x20                  [--executor-threads N] [--intra-threads N] [--no-fused-nn]\n\
          \x20                  [--chunks C] [--device-mem-mb MB] [--feat-dim D] [--task nc|lp]\n\
-         \x20                  [--checkpoint-dir D] [--resume]\n\
+         \x20                  [--comm-all-to-all naive|pairwise] [--comm-allreduce ring|flat_tree]\n\
+         \x20                  [--bw-scale S0,S1,...] [--checkpoint-dir D] [--resume]\n\
          \x20 neutron-tp serve [--checkpoint F | --profile P [--warm-epochs K]]\n\
          \x20                  [--requests N] [--batch-size B] [--executor-threads N]\n\
          \x20 neutron-tp bench <{}|all> [--out DIR] [--fast]\n\
          \x20 neutron-tp inspect [--artifacts DIR]\n\n\
          systems: neutron_tp naive_tp dp_full dp_cache minibatch historical\n\n\
+         communicator (cluster::Comm): --comm-all-to-all picks the split/gather\n\
+         algorithm (naive bursts vs pairwise-exchange rounds), --comm-allreduce\n\
+         the gradient sync (ring vs flat_tree), --bw-scale gives per-worker NIC\n\
+         bandwidth multipliers (e.g. 0.25,1,1,1 = one straggler at quarter\n\
+         bandwidth). Numerics are identical for every choice; only modeled\n\
+         times change. TOML: [comm] all_to_all/allreduce/bw_scale.\n\n\
          checkpoints: --checkpoint-dir saves <D>/{} (versioned binary:\n\
          params + Adam moments + epoch counter; atomic rename) after every\n\
          epoch; --resume continues from it bit-identically. `serve` loads a\n\
@@ -130,6 +137,19 @@ fn apply_flag_overrides(cfg: &mut RunConfig, flags: &Flags) -> anyhow::Result<()
     }
     if let Some(v) = flags.get("gpu-speedup") {
         cfg.net.gpu_speedup = v.parse()?;
+    }
+    if let Some(v) = flags.get("comm-all-to-all") {
+        cfg.comm.all_to_all = neutron_tp::config::AllToAllAlgo::from_str(v)?;
+    }
+    if let Some(v) = flags.get("comm-allreduce") {
+        cfg.comm.allreduce = neutron_tp::config::AllReduceAlgo::from_str(v)?;
+    }
+    if let Some(v) = flags.get("bw-scale") {
+        cfg.comm.bw_scale = v
+            .split(',')
+            .map(|x| x.trim().parse::<f64>())
+            .collect::<Result<_, _>>()
+            .map_err(|e| anyhow::anyhow!("--bw-scale expects comma-separated numbers: {e}"))?;
     }
     if let Some(v) = flags.get("checkpoint-dir") {
         cfg.checkpoint_dir = Some(v.clone());
@@ -266,6 +286,19 @@ fn serve_cmd(flags: &Flags) -> anyhow::Result<()> {
     };
     let (report, engine) = serve::serve(&ctx, &params, &opts)?;
     println!("serve: {}", report.table_row());
+    let comm_lines: Vec<String> = engine
+        .comm_stats()
+        .breakdown()
+        .iter()
+        .map(|(name, s)| {
+            format!("{name} {:.1} KB / {:.1} us", s.bytes_sent as f64 / 1e3, s.secs * 1e6)
+        })
+        .collect();
+    println!(
+        "startup forward comm ({:.1} us simulated): {}",
+        engine.sim_forward_secs() * 1e6,
+        comm_lines.join(", ")
+    );
     println!(
         "test accuracy from served logits: {:.3}",
         engine.test_accuracy(&data)

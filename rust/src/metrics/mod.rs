@@ -2,7 +2,7 @@
 //! report — per-worker computation/communication (sim) time, communicated
 //! bytes, computed edges, loss/accuracy, plus the wall-clock honesty row.
 
-use crate::cluster::EventSim;
+use crate::cluster::{Comm, CommStats, EventSim};
 
 /// Load counters per worker (Fig 3 / Fig 10 bars).
 #[derive(Clone, Debug, Default)]
@@ -40,6 +40,9 @@ pub struct EpochReport {
     pub vd_edges: usize,
     /// named phase timings (Table 4 cost breakdown), sim seconds
     pub phase_secs: Vec<(String, f64)>,
+    /// per-collective-kind bytes + NIC seconds (`cluster::CommStats`),
+    /// the `comm_scale` breakdown
+    pub comm_stats: CommStats,
 }
 
 impl EpochReport {
@@ -65,6 +68,16 @@ impl EpochReport {
 
     pub fn total_edges(&self) -> f64 {
         self.workers.iter().map(|w| w.comp_edges).sum()
+    }
+
+    /// Fill per-worker comp/comm seconds, communicated bytes and the
+    /// per-kind collective breakdown from a finished communicator.
+    pub fn absorb_comm(&mut self, comm: &Comm) {
+        self.absorb_sim(comm.sim());
+        for (w, b) in comm.bytes_per_worker().iter().enumerate() {
+            self.workers[w].comm_bytes += *b;
+        }
+        self.comm_stats = comm.stats().clone();
     }
 
     /// Fill per-worker comp/comm seconds from a finished event sim.
@@ -216,6 +229,21 @@ mod tests {
         assert_eq!(r.workers[0].comp_secs, 2.0);
         assert_eq!(r.workers[1].comm_secs, 1.0);
         assert_eq!(r.sim_epoch_secs, 2.0);
+    }
+
+    #[test]
+    fn absorb_comm_carries_bytes_and_breakdown() {
+        use crate::config::{CommTuning, NetModel};
+        let mut comm = Comm::new(2, NetModel::default(), &CommTuning::default());
+        comm.p2p(0, 4096);
+        comm.compute(1, 0.5, 0.0);
+        let mut r = EpochReport { workers: vec![Default::default(); 2], ..Default::default() };
+        r.absorb_comm(&comm);
+        assert_eq!(r.workers[0].comm_bytes, 4096);
+        assert_eq!(r.workers[1].comp_secs, 0.5);
+        assert_eq!(r.total_bytes(), 4096);
+        let names: Vec<&str> = r.comm_stats.breakdown().iter().map(|(n, _)| *n).collect();
+        assert_eq!(names, vec!["p2p"]);
     }
 
     #[test]

@@ -16,8 +16,7 @@
 
 use std::sync::Arc;
 
-use crate::cluster::collectives;
-use crate::cluster::EventSim;
+use crate::cluster::Comm;
 use crate::config::RunConfig;
 use crate::graph::chunk::ChunkPlan;
 use crate::graph::{Csr, Dataset};
@@ -499,8 +498,7 @@ pub fn test_accuracy(data: &Dataset, logits: &Matrix) -> f32 {
 
 /// Sum per-worker gradient shares, account the allreduce, Adam-step.
 pub fn allreduce_and_step(
-    cfg: &RunConfig,
-    sim: &mut EventSim,
+    comm: &mut Comm,
     params: &mut GnnParams,
     adam: &mut crate::model::params::Adam,
     per_worker: Vec<Vec<(Matrix, Vec<f32>)>>,
@@ -517,15 +515,12 @@ pub fn allreduce_and_step(
             }
         }
     }
-    // sim plane: ring allreduce of the flat gradient
+    // sim plane: allreduce of the flat gradient (ring or flat tree per
+    // the run's CommTuning; byte accounting lands in the Comm's stats)
     let bytes = params.grad_bytes();
     if n > 1 {
         let flat: Vec<Matrix> = (0..n).map(|_| Matrix::zeros(1, bytes / 4)).collect();
-        let ready: Vec<f64> = (0..n).map(|w| sim.now(w)).collect();
-        let _ = collectives::allreduce_sum(sim, &cfg.net, &flat, &ready);
-        for w in report.workers.iter_mut().take(n) {
-            w.comm_bytes += bytes * 2 * (n - 1) / n;
-        }
+        let _ = comm.allreduce_sum(&flat);
         report.collective_rounds += 1;
     }
     adam.step(params, &grads);

@@ -14,7 +14,7 @@
 //! partition + all layer panels resident — on the big profiles that
 //! overflows the simulated T4 budget exactly like the OOM rows of Table 2.
 
-use crate::cluster::EventSim;
+use crate::cluster::{Comm, CommKind};
 use crate::graph::partition::{chunk_partition, Partition};
 use crate::metrics::EpochReport;
 use crate::model::layer_dims;
@@ -146,21 +146,18 @@ impl DpEngine {
         let v = data.profile.v;
         let rows_per = v / n;
         let row_parts = crate::tensor::row_slices(v, n);
-        let mut sim = EventSim::new(n);
+        let mut comm = Comm::for_run(cfg);
         let mut report = EpochReport {
             workers: vec![Default::default(); n],
             ..Default::default()
         };
-        let mut comm_sim_secs = 0.0f64;
         let mut redundant_sim_secs = 0.0f64;
 
         if self.cache {
             // one-time halo feature replication per epoch
             for w in 0..n {
                 let bytes = self.remote[w].len() * self.dims[0] * 4;
-                let now = sim.now(w);
-                sim.comm(w, cfg.net.msg_secs(bytes), now);
-                report.workers[w].comm_bytes += bytes;
+                comm.p2p(w, bytes);
             }
             report.collective_rounds += 1;
         }
@@ -174,15 +171,10 @@ impl DpEngine {
                 // DepComm: fetch remote src embeddings of width h.cols()
                 for w in 0..n {
                     let bytes = self.remote[w].len() * h.cols() * 4;
-                    let dur = cfg.net.msg_secs(bytes);
-                    let now = sim.now(w);
-                    let t = sim.comm(w, dur, now);
-                    comm_sim_secs += dur;
-                    report.workers[w].comm_bytes += bytes;
-                    let _ = t;
+                    comm.p2p(w, bytes);
                 }
                 report.collective_rounds += 1;
-                sim.barrier();
+                comm.barrier();
             }
             // --- aggregation over each worker's dst rows: every worker's
             // passes submitted before any wait, sharing one tile set ---
@@ -196,8 +188,8 @@ impl DpEngine {
                 let mut out = Matrix::zeros(v, hp.cols());
                 let secs = pend.wait_into(&mut out)?;
                 let m = common::modeled(cfg, secs);
-                let now = sim.now(w);
-                sim.compute(w, m, now);
+                let now = comm.now(w);
+                comm.compute(w, m, now);
                 // redundant halo aggregation for DepCache: scale measured
                 // time by the halo-edge ratio
                 if self.cache {
@@ -205,8 +197,8 @@ impl DpEngine {
                         self.plans[w].chunks.iter().map(|c| c.live_edges).sum();
                     let ratio = self.halo_edges[w] as f64 / own_edges.max(1) as f64;
                     let red = m * ratio;
-                    let now = sim.now(w);
-                    sim.compute(w, red, now);
+                    let now = comm.now(w);
+                    comm.compute(w, red, now);
                     redundant_sim_secs += red;
                     report.workers[w].comp_edges += self.halo_edges[w] as f64;
                 }
@@ -215,7 +207,7 @@ impl DpEngine {
                 report.workers[w].comp_edges +=
                     self.plans[w].chunks.iter().map(|c| c.live_edges).sum::<usize>() as f64;
             }
-            sim.barrier();
+            comm.barrier();
             // --- dense update on local rows (submit-all, wait-in-order) ---
             let relu = li + 1 != self.params.layers().len();
             let pending: Vec<(Matrix, _)> = row_parts
@@ -229,21 +221,21 @@ impl DpEngine {
             let mut rows_out = Vec::with_capacity(n);
             for (w, (xin, p)) in pending.into_iter().enumerate() {
                 let ((out, pre), secs) = p.wait()?;
-                let now = sim.now(w);
-                sim.compute(w, common::modeled(cfg, secs), now);
+                let now = comm.now(w);
+                comm.compute(w, common::modeled(cfg, secs), now);
                 caches[w].push((xin, pre));
                 rows_out.push(out);
             }
-            sim.barrier();
+            comm.barrier();
             h = Matrix::concat_rows(&rows_out);
         }
 
         let (loss, grad, correct, lsecs) = common::nc_loss(&ops, data, &h, &row_parts)?;
         for (w, s) in lsecs.iter().enumerate() {
-            let now = sim.now(w);
-            sim.compute(w, common::modeled(cfg, *s), now);
+            let now = comm.now(w);
+            comm.compute(w, common::modeled(cfg, *s), now);
         }
-        sim.barrier();
+        comm.barrier();
 
         // backward (mirror)
         let mut g = grad;
@@ -263,25 +255,21 @@ impl DpEngine {
             let mut g_rows = Vec::with_capacity(n);
             for (w, p) in pending.into_iter().enumerate() {
                 let ((gx, gw, gb), secs) = p.wait()?;
-                let now = sim.now(w);
-                sim.compute(w, common::modeled(cfg, secs), now);
+                let now = comm.now(w);
+                comm.compute(w, common::modeled(cfg, secs), now);
                 per_worker_grads[w].push((gw, gb));
                 g_rows.push(gx);
             }
-            sim.barrier();
+            comm.barrier();
             let gfull = Matrix::concat_rows(&g_rows);
             // transposed aggregation with dependency comm
             if !self.cache {
                 for w in 0..n {
                     let bytes = self.remote[w].len() * gfull.cols() * 4;
-                    let dur = cfg.net.msg_secs(bytes);
-                    let now = sim.now(w);
-                    sim.comm(w, dur, now);
-                    comm_sim_secs += dur;
-                    report.workers[w].comm_bytes += bytes;
+                    comm.p2p(w, bytes);
                 }
                 report.collective_rounds += 1;
-                sim.barrier();
+                comm.barrier();
             }
             let gp = gfull.padded(v, crate::tensor::pad_tile(gfull.cols()));
             let tiles = common::tile_buffers(&ops, &gp);
@@ -292,29 +280,28 @@ impl DpEngine {
             for (w, pend) in pending.into_iter().enumerate() {
                 let mut out = Matrix::zeros(v, gp.cols());
                 let secs = pend.wait_into(&mut out)?;
-                let now = sim.now(w);
-                sim.compute(w, common::modeled(cfg, secs), now);
+                let now = comm.now(w);
+                comm.compute(w, common::modeled(cfg, secs), now);
                 let range = w * rows_per..(w + 1) * rows_per;
                 gagg.write_rows(
                     range.start,
                     &out.cropped(v, gfull.cols()).slice_rows(range.clone()),
                 );
             }
-            sim.barrier();
+            comm.barrier();
             g = gagg;
         }
         for pw in &mut per_worker_grads {
             pw.reverse();
         }
         common::allreduce_and_step(
-            cfg,
-            &mut sim,
+            &mut comm,
             &mut self.params,
             &mut self.adam,
             per_worker_grads,
             &mut report,
         );
-        sim.barrier();
+        comm.barrier();
 
         let n_train: f32 = data.train_mask.iter().sum();
         report.system = ctx.cfg.system.label().to_string();
@@ -327,7 +314,10 @@ impl DpEngine {
             .map(Vec::len)
             .sum::<usize>()
             .max(if self.cache { self.halo_edges.iter().sum() } else { 0 });
-        report.absorb_sim(&sim);
+        // dependency-management share: all point-to-point traffic (DepComm
+        // fetches / DepCache halo replication) plus redundant aggregation
+        let comm_sim_secs = comm.stats().kind(CommKind::PointToPoint).secs;
+        report.absorb_comm(&comm);
         let total = report.sim_epoch_secs.max(1e-12);
         report.vd_overhead_frac =
             ((comm_sim_secs / ctx.cfg.workers as f64) + redundant_sim_secs / ctx.cfg.workers as f64)

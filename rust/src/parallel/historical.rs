@@ -9,7 +9,7 @@
 //! remote embeddings (bounded staleness), which slows accuracy convergence
 //! (Fig 16).
 
-use crate::cluster::{collectives, EventSim};
+use crate::cluster::Comm;
 use crate::graph::partition::{greedy_min_cut, Partition};
 use crate::metrics::EpochReport;
 use crate::model::layer_dims;
@@ -128,7 +128,7 @@ impl HistoricalEngine {
         let n = cfg.workers;
         let v = data.profile.v;
         let row_parts = crate::tensor::row_slices(v, n);
-        let mut sim = EventSim::new(n);
+        let mut comm = Comm::for_run(cfg);
         let mut report = EpochReport {
             workers: vec![Default::default(); n],
             ..Default::default()
@@ -147,12 +147,7 @@ impl HistoricalEngine {
                         h.gather_rows(&members)
                     })
                     .collect();
-                let ready: Vec<f64> = (0..n).map(|w| sim.now(w)).collect();
-                let (_full, _done) =
-                    collectives::sequential_broadcast(&mut sim, &cfg.net, &blocks, &ready);
-                for (w, b) in blocks.iter().enumerate() {
-                    report.workers[w].comm_bytes += b.bytes() * (n - 1);
-                }
+                let (_full, _done) = comm.sequential_broadcast(&blocks);
                 report.collective_rounds += n; // n sequential broadcasts
                 self.hist[li] = Some(h.clone());
                 h.clone()
@@ -169,7 +164,7 @@ impl HistoricalEngine {
                 }
                 mixed
             };
-            sim.barrier();
+            comm.barrier();
 
             // --- aggregation over each worker's member rows: every
             // worker's passes submitted before any wait, one tile set ---
@@ -182,8 +177,8 @@ impl HistoricalEngine {
             for (w, pend) in pending.into_iter().enumerate() {
                 let mut out = Matrix::zeros(v, inp.cols());
                 let secs = pend.wait_into(&mut out)?;
-                let now = sim.now(w);
-                sim.compute(w, common::modeled(cfg, secs), now);
+                let now = comm.now(w);
+                comm.compute(w, common::modeled(cfg, secs), now);
                 for m in self.partition.members(w) {
                     agg.row_mut(m as usize)
                         .copy_from_slice(&out.row(m as usize)[..input.cols()]);
@@ -191,7 +186,7 @@ impl HistoricalEngine {
                 report.workers[w].comp_edges +=
                     self.plans[w].chunks.iter().map(|c| c.live_edges).sum::<usize>() as f64;
             }
-            sim.barrier();
+            comm.barrier();
 
             // --- dense update on contiguous row shares (balanced,
             // submit-all then wait-in-order) ---
@@ -207,22 +202,22 @@ impl HistoricalEngine {
             let mut rows_out = Vec::with_capacity(n);
             for (w, (xin, p)) in pending.into_iter().enumerate() {
                 let ((out, pre), secs) = p.wait()?;
-                let now = sim.now(w);
-                sim.compute(w, common::modeled(cfg, secs), now);
+                let now = comm.now(w);
+                comm.compute(w, common::modeled(cfg, secs), now);
                 caches[w].push((xin, pre));
                 rows_out.push(out);
             }
-            sim.barrier();
+            comm.barrier();
             h = Matrix::concat_rows(&rows_out);
         }
         self.hist[self.params.layers().len()] = Some(h.clone());
 
         let (loss, grad, correct, lsecs) = common::nc_loss(&ops, data, &h, &row_parts)?;
         for (w, s) in lsecs.iter().enumerate() {
-            let now = sim.now(w);
-            sim.compute(w, common::modeled(cfg, *s), now);
+            let now = comm.now(w);
+            comm.compute(w, common::modeled(cfg, *s), now);
         }
-        sim.barrier();
+        comm.barrier();
 
         // backward: like DepComm but with broadcast-style exchanges
         let mut g = grad;
@@ -242,22 +237,18 @@ impl HistoricalEngine {
             let mut g_rows = Vec::with_capacity(n);
             for (w, p) in pending.into_iter().enumerate() {
                 let ((gx, gw, gb), secs) = p.wait()?;
-                let now = sim.now(w);
-                sim.compute(w, common::modeled(cfg, secs), now);
+                let now = comm.now(w);
+                comm.compute(w, common::modeled(cfg, secs), now);
                 per_worker_grads[w].push((gw, gb));
                 g_rows.push(gx);
             }
-            sim.barrier();
+            comm.barrier();
             let gfull = Matrix::concat_rows(&g_rows);
             if refresh {
                 let blocks: Vec<Matrix> = (0..n)
                     .map(|w| gfull.gather_rows(&self.partition.members(w)))
                     .collect();
-                let ready: Vec<f64> = (0..n).map(|w| sim.now(w)).collect();
-                let _ = collectives::sequential_broadcast(&mut sim, &cfg.net, &blocks, &ready);
-                for (w, b) in blocks.iter().enumerate() {
-                    report.workers[w].comm_bytes += b.bytes() * (n - 1);
-                }
+                let _ = comm.sequential_broadcast(&blocks);
                 report.collective_rounds += n;
             }
             let gp = gfull.padded(v, crate::tensor::pad_tile(gfull.cols()));
@@ -269,28 +260,27 @@ impl HistoricalEngine {
             for (w, pend) in pending.into_iter().enumerate() {
                 let mut out = Matrix::zeros(v, gp.cols());
                 let secs = pend.wait_into(&mut out)?;
-                let now = sim.now(w);
-                sim.compute(w, common::modeled(cfg, secs), now);
+                let now = comm.now(w);
+                comm.compute(w, common::modeled(cfg, secs), now);
                 for m in self.partition.members(w) {
                     gagg.row_mut(m as usize)
                         .copy_from_slice(&out.row(m as usize)[..gfull.cols()]);
                 }
             }
-            sim.barrier();
+            comm.barrier();
             g = gagg;
         }
         for pw in &mut per_worker_grads {
             pw.reverse();
         }
         common::allreduce_and_step(
-            cfg,
-            &mut sim,
+            &mut comm,
             &mut self.params,
             &mut self.adam,
             per_worker_grads,
             &mut report,
         );
-        sim.barrier();
+        comm.barrier();
 
         self.epoch_idx += 1;
         let n_train: f32 = data.train_mask.iter().sum();
@@ -299,9 +289,10 @@ impl HistoricalEngine {
         report.train_acc = if n_train > 0.0 { correct / n_train } else { 0.0 };
         report.test_acc = common::test_accuracy(data, &h);
         report.vd_edges = (0..n).map(|w| self.partition.remote_srcs(&data.graph, w).len()).sum();
-        report.absorb_sim(&sim);
-        let comm_avg: f64 =
-            sim.comm_totals().iter().sum::<f64>() / n as f64 / report.sim_epoch_secs.max(1e-12);
+        report.absorb_comm(&comm);
+        let comm_avg: f64 = comm.sim().comm_totals().iter().sum::<f64>()
+            / n as f64
+            / report.sim_epoch_secs.max(1e-12);
         report.vd_overhead_frac = comm_avg;
         report.wall_secs = wall.elapsed().as_secs_f64();
         Ok(report)

@@ -14,7 +14,7 @@
 //! asynchronous protocol. Per-worker numerics are untouched: workers'
 //! batches are independent, and waits drain in worker order.
 
-use crate::cluster::EventSim;
+use crate::cluster::{Comm, CommKind};
 use crate::graph::partition::{greedy_min_cut, Partition};
 use crate::metrics::EpochReport;
 use crate::model::layer_dims;
@@ -259,14 +259,13 @@ impl MiniBatchEngine {
         let ops = ctx.ops();
         let n = cfg.workers;
         let nlayers = self.params.layers().len();
-        let mut sim = EventSim::new(n);
+        let mut comm = Comm::for_run(cfg);
         let mut report = EpochReport {
             workers: vec![Default::default(); n],
             ..Default::default()
         };
         let mut rng = Rng::seed_from_u64(cfg.seed ^ ((self.epoch_idx as u64) << 16));
         let cmask = data.class_mask();
-        let mut comm_sim = 0.0f64;
 
         let mut loss_acc = 0.0f32;
         let mut correct_acc = 0.0f32;
@@ -298,18 +297,14 @@ impl MiniBatchEngine {
                 let t0 = std::time::Instant::now();
                 let (blocks, input_frontier) = self.sample_blocks(ctx, seeds, &mut rng);
                 let sampling = t0.elapsed().as_secs_f64();
-                let now = sim.now(w);
-                sim.compute(w, sampling, now); // random access: CPU-bound
+                let now = comm.now(w);
+                comm.compute(w, sampling, now); // random access: CPU-bound
                 let remote: usize = input_frontier
                     .iter()
                     .filter(|&&vtx| self.partition.assign[vtx as usize] as usize != w)
                     .count();
                 let bytes = remote * self.dims[0] * 4;
-                let dur = cfg.net.msg_secs(bytes);
-                let now = sim.now(w);
-                sim.comm(w, dur, now);
-                comm_sim += dur;
-                report.workers[w].comm_bytes += bytes;
+                comm.p2p(w, bytes);
                 report.vd_edges += remote;
 
                 let h = data.features.gather_rows(&input_frontier);
@@ -344,8 +339,8 @@ impl MiniBatchEngine {
                     batches.iter_mut().zip(agg_results).zip(dense_pend)
                 {
                     let ((out, pre), s2) = p.wait()?;
-                    let now = sim.now(b.w);
-                    sim.compute(b.w, common::modeled(cfg, s1 + s2), now);
+                    let now = comm.now(b.w);
+                    comm.compute(b.w, common::modeled(cfg, s1 + s2), now);
                     report.workers[b.w].comp_edges += b.blocks[li].col.len() as f64;
                     b.caches.push((agg, pre));
                     b.h = out;
@@ -369,8 +364,8 @@ impl MiniBatchEngine {
                 .collect::<crate::Result<_>>()?;
             for (b, p) in batches.iter_mut().zip(loss_pend) {
                 let ((l, grad, c), s) = p.wait()?;
-                let now = sim.now(b.w);
-                sim.compute(b.w, common::modeled(cfg, s), now);
+                let now = comm.now(b.w);
+                comm.compute(b.w, common::modeled(cfg, s), now);
                 loss_acc += l * b.seeds.len() as f32;
                 correct_acc += c;
                 seen += b.seeds.len() as f32;
@@ -393,8 +388,8 @@ impl MiniBatchEngine {
                 let mut gxs = Vec::with_capacity(batches.len());
                 for ((bi, b), p) in batches.iter().enumerate().zip(bwd_pend) {
                     let ((gx, gw, gb), s) = p.wait()?;
-                    let now = sim.now(b.w);
-                    sim.compute(b.w, common::modeled(cfg, s), now);
+                    let now = comm.now(b.w);
+                    comm.compute(b.w, common::modeled(cfg, s), now);
                     grads_rev[bi].push((gw, gb));
                     gxs.push(gx);
                 }
@@ -409,8 +404,8 @@ impl MiniBatchEngine {
                         .collect::<crate::Result<_>>()?;
                     for (b, pend) in batches.iter_mut().zip(t_pend) {
                         let (gsrc, s) = pend.wait()?;
-                        let now = sim.now(b.w);
-                        sim.compute(b.w, common::modeled(cfg, s), now);
+                        let now = comm.now(b.w);
+                        comm.compute(b.w, common::modeled(cfg, s), now);
                         b.g = gsrc;
                     }
                 }
@@ -419,12 +414,11 @@ impl MiniBatchEngine {
                 g.reverse();
             }
 
-            sim.barrier();
+            comm.barrier();
             // gradient sync each step
             if grads_rev.len() > 1 {
                 common::allreduce_and_step(
-                    cfg,
-                    &mut sim,
+                    &mut comm,
                     &mut self.params,
                     &mut self.adam,
                     grads_rev,
@@ -439,7 +433,9 @@ impl MiniBatchEngine {
         report.system = cfg.system.label().to_string();
         report.loss = if seen > 0.0 { loss_acc / seen } else { 0.0 };
         report.train_acc = if seen > 0.0 { correct_acc / seen } else { 0.0 };
-        report.absorb_sim(&sim);
+        // dependency-management share: the remote-feature fetch traffic
+        let comm_sim = comm.stats().kind(CommKind::PointToPoint).secs;
+        report.absorb_comm(&comm);
         report.vd_overhead_frac = (comm_sim / n as f64) / report.sim_epoch_secs.max(1e-12);
         report.wall_secs = wall.elapsed().as_secs_f64();
         Ok(report)

@@ -2,9 +2,11 @@
 //! contribution) and the baselines it is evaluated against.
 //!
 //! All engines share one contract: real numerics through the AOT artifacts
-//! and the collectives' data plane; timing through the event sim fed by
-//! measured device seconds (scaled by `net.gpu_speedup`) and the wire
-//! model. Every engine returns `EpochReport`s with the paper's metrics.
+//! and the collectives' data plane; timing through one `cluster::Comm`
+//! communicator per epoch (it owns the event sim), fed by measured device
+//! seconds (scaled by `net.gpu_speedup`) and the wire model. Every engine
+//! returns `EpochReport`s with the paper's metrics, including the
+//! communicator's per-collective `CommStats` breakdown.
 //!
 //! For checkpoint/resume every engine also exposes its *evolving* state —
 //! parameters, optimizer moments, completed-epoch count and (for the

@@ -17,9 +17,16 @@
 //! Every per-worker phase follows the batched asynchronous dispatch
 //! protocol (`runtime::executor` design note): all N workers' jobs are
 //! submitted before any ticket is waited on, and waits drain in worker
-//! order so the `EventSim` feed and every reduction stay deterministic.
+//! order so the communicator's timeline feed and every reduction stay
+//! deterministic.
+//!
+//! All communication — and the shared timeline — goes through one
+//! [`Comm`] per epoch: collectives are *posted* (`i*` variants returning
+//! `CommHandle`s) where the schedule overlaps them with compute, which
+//! is how the pipelined path expresses chunk `k+1`'s split riding under
+//! chunk `k`'s aggregation.
 
-use crate::cluster::{collectives, EventSim};
+use crate::cluster::{Comm, CommHandle};
 use crate::graph::chunk::ChunkPlan;
 use crate::graph::Csr;
 use crate::metrics::EpochReport;
@@ -151,7 +158,7 @@ impl TpEngine {
         let l = cfg.layers;
         let row_parts = row_slices(v, n);
         let dim_parts = dim_slices(wf, n);
-        let mut sim = EventSim::new(n);
+        let mut comm = Comm::for_run(cfg);
         let mut report = EpochReport {
             workers: vec![Default::default(); n],
             ..Default::default()
@@ -171,7 +178,7 @@ impl TpEngine {
         let mut nn_secs_total = 0.0;
         for (w, secs) in chain_secs.iter().enumerate() {
             let m = common::modeled(cfg, *secs);
-            sim.compute(w, m, 0.0);
+            comm.compute(w, m, 0.0);
             nn_secs_total += m;
         }
 
@@ -200,16 +207,15 @@ impl TpEngine {
                 s1[part.clone()].copy_from_slice(&p1);
                 s2[part.clone()].copy_from_slice(&p2);
                 let m = common::modeled(cfg, secs);
-                sim.compute(w, m, 0.0);
+                comm.compute(w, m, 0.0);
                 attn_secs += m;
             }
             // share scores (data parallel, paper §4.1.1)
-            let ready: Vec<f64> = (0..n).map(|w| sim.now(w)).collect();
             let blocks: Vec<Matrix> = row_parts
                 .iter()
                 .map(|p| Matrix::from_vec(p.len(), 1, s1[p.clone()].to_vec()))
                 .collect();
-            let _ = collectives::allgather_rows(&mut sim, &cfg.net, &blocks, &row_parts, &ready);
+            let _ = comm.allgather_rows(&blocks, &row_parts);
             report.collective_rounds += 1;
 
             // per-chunk edge softmax -> alpha in global CSR edge order:
@@ -241,7 +247,7 @@ impl TpEngine {
                 }
                 // chunks round-robin across workers (balanced: same order
                 // everywhere)
-                sim.compute(ci % n, common::modeled(cfg, secs), 0.0);
+                comm.compute(ci % n, common::modeled(cfg, secs), 0.0);
                 attn_secs += common::modeled(cfg, secs);
             }
             let mut weighted = ag.clone();
@@ -259,13 +265,11 @@ impl TpEngine {
                 self.geometry.e_bucket,
             )];
             gat_plans = Some((fwd, bwd));
-            // share alpha with all workers (bytes only; data already local)
+            // share alpha with all workers (bytes only; data already
+            // local, so wire time without per-message latency)
             let bytes = alpha.len() * 4;
             for w in 0..n {
-                let dur = cfg.net.wire_secs(bytes * (n - 1) / n.max(1));
-                let now = sim.now(w);
-                sim.comm(w, dur, now);
-                report.workers[w].comm_bytes += bytes * (n - 1) / n.max(1);
+                comm.p2p_wire(w, bytes * (n - 1) / n.max(1));
             }
             report.collective_rounds += 1;
         } else {
@@ -276,35 +280,36 @@ impl TpEngine {
             None => (&self.fwd_plans, &self.bwd_plans),
         };
 
-        sim.barrier();
+        comm.barrier();
 
         // ---- Phase 2..4: split -> L aggregation rounds -> gather ----
         self.agg_phase(
-            ctx, &mut sim, &mut report, fwd_plans, &mut h_full, wf, l, &row_parts, &dim_parts,
+            ctx, &mut comm, &mut report, fwd_plans, &mut h_full, wf, l, &row_parts, &dim_parts,
         )?;
-        let agg_fwd_done: Vec<f64> = (0..n).map(|w| sim.now(w)).collect();
-        let gnn_fwd_secs: f64 = sim.comp_totals().iter().sum::<f64>() - nn_secs_total - attn_secs;
+        let agg_fwd_done: Vec<f64> = (0..n).map(|w| comm.now(w)).collect();
+        let gnn_fwd_secs: f64 =
+            comm.sim().comp_totals().iter().sum::<f64>() - nn_secs_total - attn_secs;
 
         // ---- Phase 5: downstream task ----
         let (loss, mut grad_full, correct, task_secs) = match cfg.task {
             crate::config::Task::NodeClassification => {
                 let (loss, grad, correct, secs) = common::nc_loss(&ops, data, &h_full, &row_parts)?;
                 for (w, s) in secs.iter().enumerate() {
-                    sim.compute(w, common::modeled(cfg, *s), agg_fwd_done[w]);
+                    comm.compute(w, common::modeled(cfg, *s), agg_fwd_done[w]);
                 }
                 let t: f64 = secs.iter().sum();
                 (loss, grad, correct, common::modeled(cfg, t))
             }
             crate::config::Task::LinkPrediction => {
-                let (loss, grad, secs) = self.lp_loss(ctx, &mut sim, &mut report, &h_full)?;
+                let (loss, grad, secs) = self.lp_loss(ctx, &mut comm, &mut report, &h_full)?;
                 (loss, grad, 0.0, secs)
             }
         };
-        sim.barrier();
+        comm.barrier();
 
         // ---- Backward: split -> L transposed agg rounds -> gather ----
         self.agg_phase(
-            ctx, &mut sim, &mut report, bwd_plans, &mut grad_full, wf, l, &row_parts, &dim_parts,
+            ctx, &mut comm, &mut report, bwd_plans, &mut grad_full, wf, l, &row_parts, &dim_parts,
         )?;
 
         // ---- NN backward per worker (submit-all, wait-in-order) ----
@@ -313,20 +318,19 @@ impl TpEngine {
         let (per_worker_grads, _gx, bwd_secs) =
             common::nn_chain_bwd_batch(&ops, self.params.layers(), &caches, &grad_slices)?;
         for (w, secs) in bwd_secs.iter().enumerate() {
-            let now = sim.now(w);
-            sim.compute(w, common::modeled(cfg, *secs), now);
+            let now = comm.now(w);
+            comm.compute(w, common::modeled(cfg, *secs), now);
         }
-        sim.barrier();
+        comm.barrier();
 
         common::allreduce_and_step(
-            cfg,
-            &mut sim,
+            &mut comm,
             &mut self.params,
             &mut self.adam,
             per_worker_grads,
             &mut report,
         );
-        sim.barrier();
+        comm.barrier();
 
         // ---- bookkeeping ----
         let n_train: f32 = data.train_mask.iter().sum();
@@ -350,7 +354,7 @@ impl TpEngine {
             ("gnn_aggregation".into(), gnn_fwd_secs.max(0.0)),
             ("task".into(), task_secs),
         ]);
-        report.absorb_sim(&sim);
+        report.absorb_comm(&comm);
         Ok(report)
     }
 
@@ -358,11 +362,16 @@ impl TpEngine {
     /// (in place), with chunk pipelining when enabled. Aggregation rounds
     /// double-buffer between two padded panels (no per-round clone) and
     /// submit every chunk's passes before waiting on any.
+    ///
+    /// The pipelined path *posts* every chunk's split piece up front
+    /// ([`Comm::isplit_pieces`]) and joins each piece's `CommHandle` only
+    /// when its chunk is about to compute — chunk `k+1`'s split rides the
+    /// NIC while chunk `k` aggregates, with no hand-merged ready vectors.
     #[allow(clippy::too_many_arguments)]
     fn agg_phase(
         &self,
         ctx: &Ctx,
-        sim: &mut EventSim,
+        comm: &mut Comm,
         report: &mut EpochReport,
         plans: &[ChunkPlan],
         h: &mut Matrix,
@@ -379,28 +388,17 @@ impl TpEngine {
         // data plane of split (validates the reshuffle; numerics only)
         let rows_in: Vec<Matrix> = row_parts.iter().map(|p| h.slice_rows(p.clone())).collect();
         let slice_w = dim_parts[0].len().max(1);
-        let a2a_bytes = |m: usize| ((m * slice_w * 4) as f64 * (n - 1) as f64 / n as f64) as usize;
         let num_chunks = plans.iter().map(ChunkPlan::num_chunks).max().unwrap_or(1);
 
         if cfg.pipeline && num_chunks > 1 {
             // chunk-level pieces (paper Fig 9c/d); the piece geometry comes
             // from the first plan (plans share chunk row ranges)
             let pplan = PipelinePlan::build(&plans[0].chunks, slice_w, n, v);
-            // split pieces on the comm stream, in chunk order
-            let mut piece_done = vec![0.0; num_chunks];
-            for (ci, &bytes) in pplan.split_bytes.iter().enumerate() {
-                for w in 0..n {
-                    let dur = cfg.net.msg_secs(bytes);
-                    let done = sim.comm(w, dur, 0.0);
-                    if w == 0 {
-                        piece_done[ci] = done;
-                    } else {
-                        piece_done[ci] = piece_done[ci].max(done);
-                    }
-                    report.workers[w].comm_bytes += bytes;
-                }
-            }
+            // post all split pieces now; join each when its chunk computes
+            let mut split_handles: Vec<Option<CommHandle<()>>> =
+                comm.isplit_pieces(&pplan.split_bytes).into_iter().map(Some).collect();
             report.collective_rounds += 1;
+            let mut gather_handles: Vec<CommHandle<()>> = Vec::with_capacity(num_chunks);
             let mut src = h.padded(v, pad_tile(wf));
             let mut out = Matrix::zeros(src.rows(), src.cols());
             for r in 0..rounds {
@@ -427,34 +425,34 @@ impl TpEngine {
                         secs += agg.wait_into(&mut out)?;
                     }
                     let total = common::modeled(cfg, secs);
+                    // the first round's chunk waits for its split piece
+                    // (plans may disagree on chunk count; pieces beyond
+                    // plans[0]'s geometry carry no bytes and no wait)
+                    let ready = match split_handles.get_mut(ci).and_then(Option::take) {
+                        Some(handle) if r == 0 => handle.wait_barrier().1,
+                        _ => 0.0,
+                    };
                     for w in 0..n {
                         let frac = dim_parts[w].len() as f64 / wf as f64;
-                        let ready = if r == 0 { piece_done[ci] } else { 0.0 };
-                        sim.compute(w, total * frac, ready);
+                        comm.compute(w, total * frac, ready);
                     }
-                    // gather piece after the last round's chunk compute
+                    // post the gather piece behind the last round's chunk
                     if r + 1 == rounds {
-                        let bytes = pplan.gather_bytes[ci];
-                        for w in 0..n {
-                            let now = sim.now(w);
-                            sim.comm(w, cfg.net.msg_secs(bytes), now);
-                            report.workers[w].comm_bytes += bytes;
-                        }
+                        let bytes = pplan.gather_bytes.get(ci).copied().unwrap_or(0);
+                        gather_handles.push(comm.igather_piece(bytes));
                     }
                 }
+            }
+            for handle in gather_handles {
+                let _ = handle.wait();
             }
             report.collective_rounds += 1;
             *h = out.cropped(v, wf);
         } else {
             // serial: one big split, compute, one big gather
-            let ready: Vec<f64> = (0..n).map(|w| sim.now(w)).collect();
-            let (_slices, _done) =
-                collectives::split(sim, &cfg.net, &rows_in, row_parts, dim_parts, &ready);
-            for w in 0..n {
-                report.workers[w].comm_bytes += a2a_bytes(v);
-            }
+            let (_slices, _done) = comm.split(&rows_in, row_parts, dim_parts);
             report.collective_rounds += 1;
-            sim.barrier();
+            comm.barrier();
             let mut cur = h.clone();
             for _ in 0..rounds {
                 // all plans' passes in flight before the first wait,
@@ -473,22 +471,17 @@ impl TpEngine {
                 let total = common::modeled(cfg, secs);
                 for w in 0..n {
                     let frac = dim_parts[w].len() as f64 / wf as f64;
-                    let now = sim.now(w);
-                    sim.compute(w, total * frac, now);
+                    let now = comm.now(w);
+                    comm.compute(w, total * frac, now);
                 }
                 cur = acc.cropped(v, cur.cols());
             }
             // gather back to vertex-sliced
             let slices: Vec<Matrix> =
                 dim_parts.iter().map(|dp| cur.slice_cols(dp.clone())).collect();
-            let ready: Vec<f64> = (0..n).map(|w| sim.now(w)).collect();
-            let (_rows, _done) =
-                collectives::gather(sim, &cfg.net, &slices, row_parts, dim_parts, &ready);
-            for w in 0..n {
-                report.workers[w].comm_bytes += a2a_bytes(v);
-            }
+            let (_rows, _done) = comm.gather(&slices, row_parts, dim_parts);
             report.collective_rounds += 1;
-            sim.barrier();
+            comm.barrier();
             *h = cur;
         }
         Ok(())
@@ -500,7 +493,7 @@ impl TpEngine {
     fn lp_loss(
         &self,
         ctx: &Ctx,
-        sim: &mut EventSim,
+        comm: &mut Comm,
         report: &mut EpochReport,
         h: &Matrix,
     ) -> crate::Result<(f32, Matrix, f64)> {
@@ -550,9 +543,7 @@ impl TpEngine {
         for (w, (src, dst, neg)) in batches.iter().enumerate() {
             // fetching pair endpoints from remote owners
             let fetch_bytes = src.len() * h.cols() * 4 * 2;
-            let now = sim.now(w);
-            sim.comm(w, cfg.net.msg_secs(fetch_bytes), now);
-            report.workers[w].comm_bytes += fetch_bytes;
+            comm.p2p(w, fetch_bytes);
             pending.push(ops.submit_lp_loss(h, src, dst, neg)?);
         }
         let mut grad = Matrix::zeros(v, h.cols());
@@ -561,8 +552,8 @@ impl TpEngine {
         for (w, p) in pending.into_iter().enumerate() {
             let ((l, mut gh), secs) = p.wait()?;
             let m = common::modeled(cfg, secs);
-            let now = sim.now(w);
-            sim.compute(w, m, now);
+            let now = comm.now(w);
+            comm.compute(w, m, now);
             task_secs += m;
             loss += l / n as f32;
             gh.scale(1.0 / n as f32);
@@ -581,7 +572,7 @@ impl TpEngine {
         let n = cfg.workers;
         let v = data.profile.v;
         let row_parts = row_slices(v, n);
-        let mut sim = EventSim::new(n);
+        let mut comm = Comm::for_run(cfg);
         let mut report = EpochReport {
             workers: vec![Default::default(); n],
             ..Default::default()
@@ -595,7 +586,7 @@ impl TpEngine {
             let wl = h.cols();
             let dim_parts = dim_slices(wl, n);
             self.agg_phase(
-                ctx, &mut sim, &mut report, &self.fwd_plans, &mut h, wl, 1, &row_parts,
+                ctx, &mut comm, &mut report, &self.fwd_plans, &mut h, wl, 1, &row_parts,
                 &dim_parts,
             )?;
             let relu = li + 1 != self.params.layers().len();
@@ -610,12 +601,12 @@ impl TpEngine {
             let mut rows_out = Vec::with_capacity(n);
             for (w, (xin, p)) in pending.into_iter().enumerate() {
                 let ((out, pre), secs) = p.wait()?;
-                let now = sim.now(w);
-                sim.compute(w, common::modeled(cfg, secs), now);
+                let now = comm.now(w);
+                comm.compute(w, common::modeled(cfg, secs), now);
                 caches[w].push((xin, pre));
                 rows_out.push(out);
             }
-            sim.barrier();
+            comm.barrier();
             h = Matrix::concat_rows(&rows_out);
             for w in 0..n {
                 let frac = dim_parts[w].len() as f64 / wl.max(1) as f64;
@@ -630,10 +621,10 @@ impl TpEngine {
 
         let (loss, grad, correct, secs) = common::nc_loss(&ops, data, &h, &row_parts)?;
         for (w, s) in secs.iter().enumerate() {
-            let now = sim.now(w);
-            sim.compute(w, common::modeled(cfg, *s), now);
+            let now = comm.now(w);
+            comm.compute(w, common::modeled(cfg, *s), now);
         }
-        sim.barrier();
+        comm.barrier();
 
         // backward: reversed
         let mut g = grad;
@@ -653,17 +644,17 @@ impl TpEngine {
             let mut g_rows = Vec::with_capacity(n);
             for (w, p) in pending.into_iter().enumerate() {
                 let ((gx, gw, gb), secs) = p.wait()?;
-                let now = sim.now(w);
-                sim.compute(w, common::modeled(cfg, secs), now);
+                let now = comm.now(w);
+                comm.compute(w, common::modeled(cfg, secs), now);
                 per_worker_grads[w].push((gw, gb));
                 g_rows.push(gx);
             }
-            sim.barrier();
+            comm.barrier();
             g = Matrix::concat_rows(&g_rows);
             let wl = g.cols();
             let dim_parts = dim_slices(wl, n);
             self.agg_phase(
-                ctx, &mut sim, &mut report, &self.bwd_plans, &mut g, wl, 1, &row_parts,
+                ctx, &mut comm, &mut report, &self.bwd_plans, &mut g, wl, 1, &row_parts,
                 &dim_parts,
             )?;
         }
@@ -671,20 +662,19 @@ impl TpEngine {
             pw.reverse();
         }
         common::allreduce_and_step(
-            cfg,
-            &mut sim,
+            &mut comm,
             &mut self.params,
             &mut self.adam,
             per_worker_grads,
             &mut report,
         );
-        sim.barrier();
+        comm.barrier();
 
         let n_train: f32 = data.train_mask.iter().sum();
         report.loss = loss;
         report.train_acc = if n_train > 0.0 { correct / n_train } else { 0.0 };
         report.test_acc = common::test_accuracy(data, &h);
-        report.absorb_sim(&sim);
+        report.absorb_comm(&comm);
         Ok(report)
     }
 }

@@ -24,6 +24,7 @@
 
 use std::sync::Arc;
 
+use crate::cluster::{Comm, CommStats};
 use crate::config::ModelKind;
 use crate::graph::chunk::ChunkPlan;
 use crate::graph::{Csr, Dataset};
@@ -31,7 +32,7 @@ use crate::model::layer_dims;
 use crate::model::params::GnnParams;
 use crate::parallel::{common, Ctx};
 use crate::runtime::ops::Ops;
-use crate::tensor::{pad_tile, row_slices, Matrix};
+use crate::tensor::{dim_slices, pad_tile, row_slices, Matrix};
 
 /// A loaded model plus the precomputed full-graph forward.
 pub struct InferenceEngine {
@@ -53,6 +54,10 @@ pub struct InferenceEngine {
     nn_device_secs: f64,
     agg_device_secs: f64,
     collective_rounds: usize,
+    /// per-collective breakdown of the startup forward's communicator
+    comm_stats: CommStats,
+    /// simulated makespan of the startup forward
+    sim_forward_secs: f64,
 }
 
 impl InferenceEngine {
@@ -98,19 +103,36 @@ impl InferenceEngine {
             .collect();
 
         // ---- Phase 1: per-worker NN chains on vertex row slices ----
+        // The timeline runs through the same `Comm` the training engines
+        // use: compute events per worker, the split posted before the
+        // aggregation rounds, the gather joined after them — so the
+        // startup forward reports a real per-collective CommStats
+        // breakdown alongside its measured device seconds.
         let ops = ctx.ops();
         let v = p.v;
+        let mut comm = Comm::for_run(cfg);
         let row_parts = row_slices(v, cfg.workers);
         let xs: Vec<Matrix> =
             row_parts.iter().map(|part| data.features.slice_rows(part.clone())).collect();
         let (caches, chain_secs) = common::nn_chain_fwd_batch(&ops, params.layers(), &xs)?;
         let nn_device_secs: f64 = chain_secs.iter().sum();
+        for (w, secs) in chain_secs.iter().enumerate() {
+            comm.compute(w, common::modeled(cfg, *secs), 0.0);
+        }
         let h_rows: Vec<Matrix> = caches.into_iter().map(|c| c.out).collect();
         let mut cur = Matrix::concat_rows(&h_rows);
+        comm.barrier();
 
         // ---- Phases 2..4: split -> L aggregation rounds -> gather ----
         // (2 collectives total; the aggregation itself runs full-width
-        // with dimension tiles, matching the training engine's numerics)
+        // with dimension tiles, matching the training engine's numerics —
+        // the posted split's data plane validates the reshuffle, the
+        // aggregation consumes the engine's own full-width panel)
+        let wf = *dims.last().unwrap();
+        let dim_parts = dim_slices(wf, cfg.workers);
+        let rows_in: Vec<Matrix> =
+            row_parts.iter().map(|part| cur.slice_rows(part.clone())).collect();
+        let mut split = Some(comm.isplit(&rows_in, &row_parts, &dim_parts));
         let rounds = cfg.layers;
         let mut penult = cur.clone();
         let mut agg_device_secs = 0.0;
@@ -125,13 +147,29 @@ impl InferenceEngine {
                 .map(|plan| common::submit_plan_agg_tiles(&ops, plan, &tiles))
                 .collect::<crate::Result<_>>()?;
             let mut acc = Matrix::zeros(v, hp.cols());
+            let mut round_secs = 0.0;
             for agg in pending {
-                agg_device_secs += agg.wait_into(&mut acc)?;
+                round_secs += agg.wait_into(&mut acc)?;
+            }
+            agg_device_secs += round_secs;
+            let total = common::modeled(cfg, round_secs);
+            // the first round waits for the posted split to land
+            let ready = match split.take() {
+                Some(handle) if r == 0 => handle.wait_barrier().1,
+                _ => 0.0,
+            };
+            for w in 0..cfg.workers {
+                let frac = dim_parts[w].len() as f64 / wf.max(1) as f64;
+                let now = comm.now(w).max(ready);
+                comm.compute(w, total * frac, now);
             }
             cur = acc.cropped(v, cur.cols());
         }
-
-        let wf = *dims.last().unwrap();
+        // gather the dim slices back to vertex-sliced logits
+        let slices: Vec<Matrix> =
+            dim_parts.iter().map(|dp| cur.slice_cols(dp.clone())).collect();
+        let _ = comm.gather(&slices, &row_parts, &dim_parts);
+        comm.barrier();
         let wp = pad_tile(wf);
         let pp = penult.padded(v, wp);
         let tile = ctx.store.dim_tile;
@@ -151,6 +189,8 @@ impl InferenceEngine {
             nn_device_secs,
             agg_device_secs,
             collective_rounds: 2,
+            comm_stats: comm.stats().clone(),
+            sim_forward_secs: comm.makespan(),
         })
     }
 
@@ -167,6 +207,17 @@ impl InferenceEngine {
     /// Measured device seconds of the startup forward: `(nn, aggregation)`.
     pub fn device_secs(&self) -> (f64, f64) {
         (self.nn_device_secs, self.agg_device_secs)
+    }
+
+    /// Per-collective breakdown of the startup forward (one split, one
+    /// gather — depth-free, like the training engine's `EpochReport`).
+    pub fn comm_stats(&self) -> &CommStats {
+        &self.comm_stats
+    }
+
+    /// Simulated makespan of the startup forward.
+    pub fn sim_forward_secs(&self) -> f64 {
+        self.sim_forward_secs
     }
 
     /// Predicted class per query (argmax over the unpadded classes).

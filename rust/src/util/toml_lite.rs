@@ -50,6 +50,13 @@ impl Value {
             _ => None,
         }
     }
+
+    pub fn as_f64_array(&self) -> Option<Vec<f64>> {
+        match self {
+            Value::Array(v) => v.iter().map(Value::as_float).collect(),
+            _ => None,
+        }
+    }
 }
 
 pub fn parse(text: &str) -> anyhow::Result<BTreeMap<String, Value>> {
@@ -134,6 +141,13 @@ mod tests {
     fn parses_arrays() {
         let m = parse("fanouts = [25, 10]\n").unwrap();
         assert_eq!(m["fanouts"].as_usize_array(), Some(vec![25, 10]));
+    }
+
+    #[test]
+    fn parses_float_arrays_with_mixed_literals() {
+        let m = parse("bw_scale = [1.0, 0.25, 1]\n").unwrap();
+        assert_eq!(m["bw_scale"].as_f64_array(), Some(vec![1.0, 0.25, 1.0]));
+        assert_eq!(parse("x = 3\n").unwrap()["x"].as_f64_array(), None);
     }
 
     #[test]

@@ -114,6 +114,70 @@ fn deeper_models_cost_more_but_not_more_collectives() {
 }
 
 #[test]
+fn pipelined_overlap_beats_serial_on_slow_network() {
+    // The redesigned comm seam's acceptance test: with chunk pipelining,
+    // decoupled TP posts each chunk's split piece as a CommHandle and
+    // computes past it, so chunk k+1's transfer hides under chunk k's
+    // aggregation. On a slow interconnect (collectives dominate) the
+    // pipelined makespan must be *strictly* below the serial one — the
+    // serial path barriers between every collective and compute phase,
+    // and the pipelined path additionally dedups shared chunk sources.
+    let mut pipe = RunConfig {
+        profile: "tiny".into(),
+        workers: 4,
+        epochs: 2,
+        chunks: 4,
+        pipeline: true,
+        executor_threads: 1,
+        ..Default::default()
+    };
+    pipe.net.bandwidth_gbps = 0.02; // comm >> compute
+    let serial = RunConfig { pipeline: false, ..pipe.clone() };
+    // warm epoch only: epoch 0 carries one-time plan/cache setup noise
+    let tp = run(&pipe).unwrap()[1].sim_epoch_secs;
+    let ts = run(&serial).unwrap()[1].sim_epoch_secs;
+    assert!(
+        tp < ts,
+        "pipelined makespan {tp} must be strictly below serial {ts} via posted CommHandles"
+    );
+}
+
+#[test]
+fn comm_algorithms_do_not_change_numerics() {
+    // CommAlgo is a pure timing knob: per-epoch losses must be
+    // BIT-identical across every algorithm combination and topology.
+    use neutron_tp::config::{AllReduceAlgo, AllToAllAlgo};
+    let base = RunConfig { profile: "tiny".into(), workers: 4, epochs: 2, ..Default::default() };
+    let run_bits = |cfg: &RunConfig| -> Vec<u32> {
+        run(cfg).unwrap().iter().map(|r| r.loss.to_bits()).collect()
+    };
+    let want = run_bits(&base);
+    for a2a in [AllToAllAlgo::Naive, AllToAllAlgo::Pairwise] {
+        for ar in [AllReduceAlgo::Ring, AllReduceAlgo::FlatTree] {
+            let mut cfg = base.clone();
+            cfg.comm.all_to_all = a2a;
+            cfg.comm.allreduce = ar;
+            cfg.comm.bw_scale = vec![0.25];
+            assert_eq!(want, run_bits(&cfg), "{a2a:?}/{ar:?} changed the numerics");
+        }
+    }
+}
+
+#[test]
+fn epoch_report_carries_comm_breakdown() {
+    // the CommStats surface: a decoupled epoch shows split/gather and
+    // allreduce traffic, with conserved bytes per kind
+    use neutron_tp::cluster::CommKind;
+    let cfg = RunConfig { profile: "tiny".into(), workers: 4, epochs: 1, ..Default::default() };
+    let r = &run(&cfg).unwrap()[0];
+    for kind in [CommKind::Split, CommKind::Gather, CommKind::AllreduceSum] {
+        let s = r.comm_stats.kind(kind);
+        assert!(s.ops > 0, "{} missing from the breakdown", kind.name());
+        assert!(s.bytes_sent > 0 && s.secs > 0.0, "{} not accounted", kind.name());
+    }
+}
+
+#[test]
 fn seeds_change_data_not_contract() {
     let a = RunConfig { profile: "tiny".into(), epochs: 1, seed: 1, ..Default::default() };
     let b = RunConfig { seed: 2, ..a.clone() };

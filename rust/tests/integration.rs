@@ -4,8 +4,8 @@
 //! in-tree property-test driver (`util::propcheck`, the offline stand-in
 //! for proptest).
 
-use neutron_tp::cluster::{collectives, EventSim};
-use neutron_tp::config::{NetModel, RunConfig, System};
+use neutron_tp::cluster::{Comm, CommKind, EventSim};
+use neutron_tp::config::{AllReduceAlgo, AllToAllAlgo, CommTuning, NetModel, RunConfig, System};
 use neutron_tp::graph::chunk::ChunkPlan;
 use neutron_tp::graph::datasets::{profile, Dataset};
 use neutron_tp::graph::{generate, partition};
@@ -291,13 +291,75 @@ fn prop_split_gather_roundtrip_random_shapes() {
         let rp = row_slices(v, n);
         let dp = dim_slices(d, n);
         let rows: Vec<Matrix> = rp.iter().map(|r| full.slice_rows(r.clone())).collect();
-        let mut sim = EventSim::new(n);
-        let ready = vec![0.0; n];
-        let net = NetModel::default();
-        let (slices, t1) = collectives::split(&mut sim, &net, &rows, &rp, &dp, &ready);
-        let (back, _) = collectives::gather(&mut sim, &net, &slices, &rp, &dp, &t1);
+        let mut comm = Comm::new(n, NetModel::default(), &CommTuning::default());
+        let (slices, _t1) = comm.split(&rows, &rp, &dp);
+        let (back, _) = comm.gather(&slices, &rp, &dp);
         for (i, b) in back.iter().enumerate() {
             assert_eq!(*b, rows[i], "roundtrip failed at worker {i} (n={n} v={v} d={d})");
+        }
+    });
+}
+
+#[test]
+fn prop_comm_api_conserves_bytes_across_algorithms() {
+    // The communicator contract (DESIGN.md §4.2): for random (v, d, n),
+    // (1) every collective conserves bytes (Σ sent == Σ recv), (2) the
+    // payload is bit-identical across every CommAlgo combination, and
+    // (3) an `i*` post followed by `wait` equals the blocking call in
+    // both data and done-times.
+    propcheck::check("comm-algos-agree", 0xC0117, 15, |rng| {
+        let n = 1 << (1 + rng.gen_range(3)); // 2..8 workers
+        let v = n * (1 + rng.gen_range(48));
+        let d = n.max(1 + rng.gen_range(64));
+        let full = Matrix::from_fn(v, d, |r, c| ((r * 13 + c * 5) % 29) as f32 - 14.0);
+        let rp = row_slices(v, n);
+        let dp = dim_slices(d, n);
+        let rows: Vec<Matrix> = rp.iter().map(|r| full.slice_rows(r.clone())).collect();
+        let grads: Vec<Matrix> =
+            (0..n).map(|i| Matrix::from_fn(6, 9, |r, c| (r * 2 + c + i) as f32)).collect();
+        let net = NetModel::default();
+        let mut first: Option<(Vec<Matrix>, Vec<Matrix>, Matrix)> = None;
+        for a2a in [AllToAllAlgo::Naive, AllToAllAlgo::Pairwise] {
+            for ar in [AllReduceAlgo::Ring, AllReduceAlgo::FlatTree] {
+                let tuning = CommTuning { all_to_all: a2a, allreduce: ar, bw_scale: vec![] };
+                let mut comm = Comm::new(n, net, &tuning);
+                let (slices, _) = comm.split(&rows, &rp, &dp);
+                let (back, _) = comm.gather(&slices, &rp, &dp);
+                let (sum, _) = comm.allreduce_sum(&grads);
+                // byte conservation per collective kind
+                for kind in
+                    [CommKind::Split, CommKind::Gather, CommKind::AllreduceSum]
+                {
+                    let s = comm.stats().kind(kind);
+                    assert_eq!(
+                        s.bytes_sent,
+                        s.bytes_recv,
+                        "{} leaks bytes under {a2a:?}/{ar:?}",
+                        kind.name()
+                    );
+                }
+                // bit-identical payloads across all algorithm variants
+                match &first {
+                    None => first = Some((slices, back, sum)),
+                    Some((s0, b0, m0)) => {
+                        assert_eq!(&slices, s0, "split payload differs {a2a:?}/{ar:?}");
+                        assert_eq!(&back, b0, "gather payload differs {a2a:?}/{ar:?}");
+                        assert_eq!(&sum, m0, "allreduce differs {a2a:?}/{ar:?}");
+                    }
+                }
+                // i*-then-wait ≡ blocking, data and done-times
+                let mut blocking = Comm::new(n, net, &tuning);
+                let mut posted = Comm::new(n, net, &tuning);
+                let (bd, bt) = blocking.split(&rows, &rp, &dp);
+                let (pd, pt) = posted.isplit(&rows, &rp, &dp).wait();
+                assert_eq!(bd, pd);
+                assert_eq!(bt, pt);
+                let (bg, bgt) = blocking.allreduce_sum(&grads);
+                let (pg, pgt) = posted.iallreduce_sum(&grads).wait();
+                assert_eq!(bg, pg);
+                assert_eq!(bgt, pgt);
+                assert_eq!(blocking.stats(), posted.stats());
+            }
         }
     });
 }

@@ -55,6 +55,15 @@ fn serve_logits_match_training_forward() {
     assert_eq!(third.collective_rounds, 5, "training = 4 embedding collectives + allreduce");
     let (nn, agg) = infer.device_secs();
     assert!(nn > 0.0 && agg > 0.0);
+    // the startup forward's communicator breakdown: exactly one split and
+    // one gather, depth-free, with a positive simulated makespan
+    use neutron_tp::cluster::CommKind;
+    let st = infer.comm_stats();
+    assert_eq!(st.kind(CommKind::Split).ops, 1, "one split at any depth");
+    assert_eq!(st.kind(CommKind::Gather).ops, 1, "one gather at any depth");
+    assert_eq!(st.kind(CommKind::AllreduceSum).ops, 0, "forward-only: no gradient sync");
+    assert!(st.kind(CommKind::Split).bytes_sent > 0);
+    assert!(infer.sim_forward_secs() > 0.0);
 }
 
 #[test]
