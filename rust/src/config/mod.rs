@@ -247,6 +247,34 @@ pub struct CommTuning {
     pub bw_scale: Vec<f64>,
 }
 
+/// Host-staging memory model (`[mem]` TOML section; DESIGN.md §5.2): the
+/// modeled host↔device PCIe link plus the staging-planner knobs that let
+/// the decoupled engine train working sets larger than `device_mem_mb`.
+/// Every knob here is timing/accounting only — losses are bit-identical
+/// for any setting (asserted by `rust/tests/memory.rs`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MemModel {
+    /// host↔device link bandwidth in Gbit/s (PCIe 3.0 x16 ≈ 16 GB/s ≈
+    /// 128 Gbps; the default models a T4's measured ~16 GB/s as seen by
+    /// pinned-memory DMA, conservatively halved for bidirectional use)
+    pub pcie_gbps: f64,
+    /// per-DMA-transfer latency in microseconds
+    pub pcie_latency_us: f64,
+    /// how many schedule steps ahead panel fetches may be posted (>= 1;
+    /// 1 = classic double buffering)
+    pub prefetch_depth: usize,
+    /// allow the decoupled engine to fall back to host staging when the
+    /// resident working set exceeds the budget. Baselines never swap —
+    /// the Table 2 OOM-vs-trains contrast stays honest.
+    pub swap: bool,
+}
+
+impl Default for MemModel {
+    fn default() -> Self {
+        Self { pcie_gbps: 64.0, pcie_latency_us: 10.0, prefetch_depth: 2, swap: true }
+    }
+}
+
 /// Network cost model for the simulated cluster (DESIGN.md §4). Defaults
 /// mirror the paper's testbed: 15 Gbps, ~25 us per message.
 #[derive(Clone, Copy, Debug)]
@@ -300,6 +328,8 @@ pub struct RunConfig {
     pub pipeline: bool,
     /// simulated per-worker device memory budget in MiB (T4 = 16384)
     pub device_mem_mb: usize,
+    /// host-staging model: PCIe link + swap scheduler knobs (`[mem]`)
+    pub mem: MemModel,
     pub net: NetModel,
     /// communicator algorithm selection + NIC topology (`cluster::Comm`)
     pub comm: CommTuning,
@@ -346,6 +376,7 @@ impl Default for RunConfig {
             chunk_sched: true,
             pipeline: true,
             device_mem_mb: 16 * 1024,
+            mem: MemModel::default(),
             net: NetModel::default(),
             comm: CommTuning::default(),
             executor_threads: 0,
@@ -422,6 +453,13 @@ impl RunConfig {
                     .as_usize_array()
                     .ok_or_else(|| anyhow::anyhow!("{key}: expected int array"))?;
             }
+            "mem.pcie_gbps" => self.mem.pcie_gbps = want_float()?,
+            "mem.pcie_latency_us" => self.mem.pcie_latency_us = want_float()?,
+            "mem.prefetch_depth" => self.mem.prefetch_depth = want_int()?,
+            "mem.swap" => {
+                self.mem.swap =
+                    v.as_bool().ok_or_else(|| anyhow::anyhow!("{key}: expected bool"))?;
+            }
             "net.bandwidth_gbps" => self.net.bandwidth_gbps = want_float()?,
             "net.latency_us" => self.net.latency_us = want_float()?,
             "net.gpu_speedup" => self.net.gpu_speedup = want_float()?,
@@ -462,6 +500,15 @@ impl RunConfig {
         }
         if self.comm.bw_scale.iter().any(|s| !s.is_finite() || *s <= 0.0) {
             anyhow::bail!("comm.bw_scale entries must be finite and > 0");
+        }
+        if !self.mem.pcie_gbps.is_finite() || self.mem.pcie_gbps <= 0.0 {
+            anyhow::bail!("mem.pcie_gbps must be finite and > 0");
+        }
+        if !self.mem.pcie_latency_us.is_finite() || self.mem.pcie_latency_us < 0.0 {
+            anyhow::bail!("mem.pcie_latency_us must be finite and >= 0");
+        }
+        if self.mem.prefetch_depth == 0 {
+            anyhow::bail!("mem.prefetch_depth must be >= 1 (1 = double buffering)");
         }
         Ok(())
     }
@@ -571,6 +618,33 @@ mod tests {
         bad.comm.bw_scale = vec![0.0];
         assert!(bad.validate().is_err(), "non-positive bw_scale must be rejected");
         assert!(RunConfig::from_toml("[comm]\nall_to_all = \"bogus\"\n").is_err());
+    }
+
+    #[test]
+    fn mem_keys_parse_and_validate() {
+        let text = r#"
+            [mem]
+            pcie_gbps = 32.0
+            pcie_latency_us = 5.0
+            prefetch_depth = 4
+            swap = false
+        "#;
+        let c = RunConfig::from_toml(text).unwrap();
+        assert!((c.mem.pcie_gbps - 32.0).abs() < 1e-9);
+        assert!((c.mem.pcie_latency_us - 5.0).abs() < 1e-9);
+        assert_eq!(c.mem.prefetch_depth, 4);
+        assert!(!c.mem.swap);
+        c.validate().unwrap();
+        let mut bad = RunConfig::default();
+        bad.mem.pcie_gbps = 0.0;
+        assert!(bad.validate().is_err(), "non-positive pcie_gbps must be rejected");
+        let mut bad = RunConfig::default();
+        bad.mem.prefetch_depth = 0;
+        assert!(bad.validate().is_err(), "prefetch_depth 0 must be rejected");
+        // defaults: swap on, double-buffered-plus prefetch
+        let d = RunConfig::default();
+        assert!(d.mem.swap);
+        assert!(d.mem.prefetch_depth >= 1);
     }
 
     #[test]

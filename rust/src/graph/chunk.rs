@@ -12,6 +12,20 @@
 //! A pass may carry only part of a chunk's (or even a single hub row's)
 //! edges — aggregation is linear, so outputs of passes over disjoint edge
 //! subsets sum to the exact result (validated in the L1 tests and here).
+//!
+//! Pass cuts are **row-aligned**: a row whose edges fit in one pass is
+//! never split across passes (a full row is moved to a fresh pass
+//! instead), and a row bigger than the whole edge bucket starts its own
+//! pass, so its split offsets land at `e_bucket` multiples. Per-row
+//! accumulation therefore runs left-to-right in CSR edge order for every
+//! chunk geometry, which keeps the aggregated floats **bit-identical
+//! across chunk geometries** — the invariant the host-staging scheduler
+//! (DESIGN.md §5.2) relies on when a tight budget forces smaller chunks
+//! than an ample one would pick. The geometry chooser
+//! (`sched::chunks::geometry_for`) sizes the edge bucket to cover the
+//! graph's widest row, so in practice no row splits at all; only a row
+//! wider than the largest emitted artifact bucket would, and then its
+//! e_bucket-multiple offsets still depend on the bucket.
 
 use std::ops::Range;
 use std::sync::Arc;
@@ -100,8 +114,10 @@ impl ChunkPlan {
         let mut src_set: Vec<u32> = Vec::new();
         let mut live_total = 0usize;
 
-        // iterate rows, cutting a new pass whenever e_bucket fills; a row
-        // may straddle passes (exact: aggregation is linear in edges)
+        // iterate rows, cutting a new pass whenever e_bucket fills. Cuts
+        // are row-aligned (module docs): a row is split across passes only
+        // when it alone overflows the bucket, and then from a fresh pass,
+        // so its split offsets are e_bucket multiples.
         let mut cur = PassBuilder::new(rows.len(), c_bucket, e_bucket);
         for (local, v) in rows.clone().enumerate() {
             let (cols, ws) = g.in_edges(v);
@@ -110,7 +126,7 @@ impl ChunkPlan {
             let mut off = 0;
             while off < cols.len() {
                 let space = e_bucket - cur.edges;
-                if space == 0 {
+                if space == 0 || (off == 0 && cur.edges > 0 && cols.len() > space) {
                     passes.push(cur.finish());
                     cur = PassBuilder::new(rows.len(), c_bucket, e_bucket);
                     continue;
@@ -142,7 +158,7 @@ impl ChunkPlan {
             let mut off = 0;
             while off < cols.len() {
                 let space = e_bucket - cur.edges;
-                if space == 0 {
+                if space == 0 || (off == 0 && cur.edges > 0 && cols.len() > space) {
                     passes.push(cur.finish());
                     cur = PassBuilder::new(rows.len(), c_bucket, e_bucket);
                     continue;
@@ -359,6 +375,102 @@ mod tests {
             assert_eq!(pass.col.len(), 512);
             let last = *pass.row_ptr.last().unwrap();
             assert_eq!(last as usize, pass.live_edges);
+        }
+    }
+
+    #[test]
+    fn pass_cuts_are_row_aligned() {
+        // rows that fit a pass are never split across passes; a row
+        // bigger than e_bucket starts a fresh pass so its split offsets
+        // are e_bucket multiples. Both keep per-row accumulation order
+        // identical for every chunk geometry (the host-staging bitwise
+        // contract).
+        let g = generate::rmat(512, 16384, generate::RMAT_SKEWED, 11).gcn_normalized();
+        let e_bucket = 512usize;
+        for rows_per in [64usize, 128, 512] {
+            let plan = ChunkPlan::build(&g, rows_per, rows_per.max(256), e_bucket);
+            for chunk in &plan.chunks {
+                // per local row: which passes carry its edges, in order
+                let mut seen_rows: Vec<Vec<(usize, usize)>> =
+                    vec![Vec::new(); chunk.num_rows()];
+                for (pi, pass) in chunk.passes.iter().enumerate() {
+                    for local in 0..chunk.num_rows() {
+                        let (lo, hi) =
+                            (pass.row_ptr[local] as usize, pass.row_ptr[local + 1] as usize);
+                        if hi > lo {
+                            seen_rows[local].push((pi, hi - lo));
+                        }
+                    }
+                }
+                for (local, segs) in seen_rows.iter().enumerate() {
+                    let deg = g.in_deg(chunk.rows.start + local);
+                    if deg <= e_bucket {
+                        assert!(
+                            segs.len() <= 1,
+                            "row {local} (deg {deg}) split across passes {segs:?}"
+                        );
+                    } else {
+                        // oversized rows split at e_bucket multiples
+                        for (i, &(_, len)) in segs.iter().enumerate() {
+                            if i + 1 < segs.len() {
+                                assert_eq!(len, e_bucket, "row {local} split off-bucket");
+                            }
+                        }
+                    }
+                }
+            }
+            // coverage stays exact regardless of the cut policy
+            let total: usize = plan.chunks.iter().map(|c| c.live_edges).sum();
+            assert_eq!(total, g.num_edges());
+        }
+    }
+
+    /// Evaluate a plan the way the engine does — one *partial* per pass
+    /// (sequential per-row accumulation inside the pass), partials added
+    /// in submission order — so pass boundaries show up exactly where
+    /// they would in `PlanAgg::wait_into`.
+    fn eval_plan_partials(plan: &ChunkPlan, x: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(plan.num_vertices, x.cols());
+        for chunk in &plan.chunks {
+            for pass in &chunk.passes {
+                let mut part = Matrix::zeros(chunk.num_rows(), x.cols());
+                for e in 0..pass.live_edges {
+                    let dst = pass.edge_dst[e] as usize;
+                    let src = pass.col[e] as usize;
+                    let wv = pass.w[e];
+                    let prow = part.row_mut(dst);
+                    for (o, &xi) in prow.iter_mut().zip(x.row(src)) {
+                        *o += wv * xi;
+                    }
+                }
+                for (i, gv) in chunk.rows.clone().enumerate() {
+                    let orow = out.row_mut(gv);
+                    for (o, &p) in orow.iter_mut().zip(part.row(i)) {
+                        *o += p;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn chunk_geometry_does_not_change_row_sums_bitwise() {
+        // the staging scheduler's bitwise contract: as long as no single
+        // row overflows the edge bucket, aggregating under any chunk
+        // geometry yields the exact same floats per output row — pass
+        // cuts are row-aligned, so per-row accumulation never splits
+        let g = generate::uniform(1024, 32768, 23).gcn_normalized();
+        let x = Matrix::from_fn(1024, 8, |r, c| ((r * 37 + c * 11) % 97) as f32 * 0.031 - 1.5);
+        let whole = eval_plan_partials(&ChunkPlan::build(&g, 1024, 1024, 65536), &x);
+        for (rows_per, ebkt) in [(128usize, 1024usize), (256, 4096), (512, 2048)] {
+            let got =
+                eval_plan_partials(&ChunkPlan::build(&g, rows_per, rows_per.max(256), ebkt), &x);
+            assert_eq!(
+                got.max_abs_diff(&whole),
+                0.0,
+                "geometry rows={rows_per} e_bucket={ebkt} reassociated floats"
+            );
         }
     }
 

@@ -62,6 +62,7 @@ fn print_usage() {
          \x20                  [--agg-impl scatter|pallas] [--no-pipeline] [--no-chunk-sched]\n\
          \x20                  [--executor-threads N] [--intra-threads N] [--no-fused-nn]\n\
          \x20                  [--chunks C] [--device-mem-mb MB] [--feat-dim D] [--task nc|lp]\n\
+         \x20                  [--pcie-gbps G] [--prefetch-depth K] [--no-swap]\n\
          \x20                  [--comm-all-to-all naive|pairwise] [--comm-allreduce ring|flat_tree]\n\
          \x20                  [--bw-scale S0,S1,...] [--checkpoint-dir D] [--resume]\n\
          \x20 neutron-tp serve [--checkpoint F | --profile P [--warm-epochs K]]\n\
@@ -75,6 +76,13 @@ fn print_usage() {
          bandwidth multipliers (e.g. 0.25,1,1,1 = one straggler at quarter\n\
          bandwidth). Numerics are identical for every choice; only modeled\n\
          times change. TOML: [comm] all_to_all/allreduce/bw_scale.\n\n\
+         host staging ([mem], DESIGN.md §5.2): when the decoupled engine's\n\
+         working set exceeds --device-mem-mb, panels swap over a modeled\n\
+         PCIe link (--pcie-gbps bandwidth, prefetched --prefetch-depth steps\n\
+         ahead so transfers hide under aggregation) instead of OOMing;\n\
+         --no-swap restores the hard OOM. Baselines never swap (Table 2).\n\
+         Swap traffic/stall/overlap is printed per epoch when engaged.\n\
+         TOML: [mem] pcie_gbps/pcie_latency_us/prefetch_depth/swap.\n\n\
          checkpoints: --checkpoint-dir saves <D>/{} (versioned binary:\n\
          params + Adam moments + epoch counter; atomic rename) after every\n\
          epoch; --resume continues from it bit-identically. `serve` loads a\n\
@@ -137,6 +145,15 @@ fn apply_flag_overrides(cfg: &mut RunConfig, flags: &Flags) -> anyhow::Result<()
     }
     if let Some(v) = flags.get("gpu-speedup") {
         cfg.net.gpu_speedup = v.parse()?;
+    }
+    if let Some(v) = flags.get("pcie-gbps") {
+        cfg.mem.pcie_gbps = v.parse()?;
+    }
+    if let Some(v) = flags.get("prefetch-depth") {
+        cfg.mem.prefetch_depth = v.parse()?;
+    }
+    if flags.has("no-swap") {
+        cfg.mem.swap = false;
     }
     if let Some(v) = flags.get("comm-all-to-all") {
         cfg.comm.all_to_all = neutron_tp::config::AllToAllAlgo::from_str(v)?;
@@ -212,12 +229,15 @@ fn train(flags: &Flags) -> anyhow::Result<()> {
     }
     for e in start_epoch..cfg.epochs {
         let r = engine.run_epoch(&ctx)?;
+        let swap = r.swap_row();
         println!(
-            "epoch {e:>3}: {} | train_acc {:.3} test_acc {:.3} | wall {:.2}s",
+            "epoch {e:>3}: {} | train_acc {:.3} test_acc {:.3} | wall {:.2}s{}{}",
             r.table_row(),
             r.train_acc,
             r.test_acc,
-            r.wall_secs
+            r.wall_secs,
+            if swap.is_empty() { "" } else { " | " },
+            swap
         );
         if let Some(dir) = &cfg.checkpoint_dir {
             let path = checkpoint::latest_path(dir);
@@ -299,6 +319,10 @@ fn serve_cmd(flags: &Flags) -> anyhow::Result<()> {
         engine.sim_forward_secs() * 1e6,
         comm_lines.join(", ")
     );
+    let sw = engine.swap_stats();
+    if sw.engaged() {
+        println!("startup forward {}", sw.one_liner());
+    }
     println!(
         "test accuracy from served logits: {:.3}",
         engine.test_accuracy(&data)

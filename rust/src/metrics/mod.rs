@@ -3,6 +3,7 @@
 //! bytes, computed edges, loss/accuracy, plus the wall-clock honesty row.
 
 use crate::cluster::{Comm, CommStats, EventSim};
+use crate::sched::SwapStats;
 
 /// Load counters per worker (Fig 3 / Fig 10 bars).
 #[derive(Clone, Debug, Default)]
@@ -43,6 +44,9 @@ pub struct EpochReport {
     /// per-collective-kind bytes + NIC seconds (`cluster::CommStats`),
     /// the `comm_scale` breakdown
     pub comm_stats: CommStats,
+    /// host-staging swap accounting (`sched::staging`, DESIGN.md §5.2):
+    /// zeroed unless the epoch ran with the swap path engaged
+    pub swap: SwapStats,
 }
 
 impl EpochReport {
@@ -90,6 +94,15 @@ impl EpochReport {
             self.workers[w].comm_secs = sim.comm_totals()[w];
         }
         self.sim_epoch_secs = sim.makespan();
+    }
+
+    /// Swap one-liner for host-staged epochs (empty when the swap path
+    /// never engaged, so callers can print it conditionally).
+    pub fn swap_row(&self) -> String {
+        if !self.swap.engaged() {
+            return String::new();
+        }
+        self.swap.one_liner()
     }
 
     /// Table-2-style one-liner.

@@ -25,19 +25,32 @@ use crate::model::params::{DenseLayer, GnnParams};
 use crate::runtime::ops::{Ops, Pending};
 use crate::runtime::DeviceMemory;
 use crate::sched::chunks as sched_chunks;
+use crate::sched::{PcieModel, StagingSpec};
 use crate::tensor::{pad_tile, Matrix};
 
 use super::Ctx;
 
-/// Chunk geometry of the decoupled TP aggregation phase, derived from
-/// the device budget and the layer width chain. Shared by training
-/// (`tp::TpEngine`) and serving (`serve::InferenceEngine`): the serving
-/// bit-parity contract depends on both sides deriving *identical* plans,
-/// so this derivation must have exactly one home.
-pub fn decoupled_geometry(
+/// Memory plan of the decoupled TP aggregation phase: the chunk geometry
+/// plus, when the resident working set overflows the budget and `[mem]
+/// swap` is on, the host-staging spec the engine drives transfers with.
+pub struct MemPlan {
+    pub geometry: sched_chunks::ChunkGeometry,
+    /// `Some` ⇒ the run host-stages panels over the modeled PCIe link
+    /// (`sched::staging`, DESIGN.md §5.2); `None` ⇒ fully resident
+    pub staging: Option<StagingSpec>,
+}
+
+/// Derive the memory plan from the device budget and the layer width
+/// chain. Shared by training (`tp::TpEngine`) and serving
+/// (`serve::InferenceEngine`): the serving bit-parity contract depends on
+/// both sides deriving *identical* plans, so this derivation must have
+/// exactly one home. `allow_swap` is false for the swap-less baselines
+/// (naive TP) so the Table 2 OOM-vs-trains contrast stays honest.
+pub fn decoupled_memplan(
     ctx: &Ctx,
     dims: &[usize],
-) -> crate::Result<sched_chunks::ChunkGeometry> {
+    allow_swap: bool,
+) -> crate::Result<MemPlan> {
     let cfg = ctx.cfg;
     let p = &ctx.data.profile;
     // device budget: resident panel = dim slice of the widest layer +
@@ -46,15 +59,50 @@ pub fn decoupled_geometry(
     let widest = *dims.iter().max().unwrap();
     let resident = (p.v / cfg.workers) * dims.iter().sum::<usize>() * 4
         + p.v * pad_tile(widest.div_ceil(cfg.workers)) * 4;
-    sched_chunks::choose_geometry(
+    let pallas = cfg.agg_impl == crate::config::AggImpl::Pallas;
+    match sched_chunks::choose_geometry(
         ctx.store,
         &ctx.data.graph,
-        cfg.agg_impl == crate::config::AggImpl::Pallas,
+        pallas,
         resident,
         &mem,
         cfg.chunks,
         cfg.chunk_sched,
-    )
+    ) {
+        Ok(geometry) => Ok(MemPlan { geometry, staging: None }),
+        Err(resident_err) => {
+            // host-staging fallback: only per-step panels must fit. Gated
+            // on the engine opting in (decoupled TP + serving), the config
+            // switch, chunk scheduling being on (disabling it models the
+            // no-chunking baselines, which must keep OOMing), no
+            // user-pinned chunk count (staging picks its own geometry),
+            // and the failure actually being an OOM — artifact-store or
+            // configuration errors must surface untouched.
+            let is_oom = format!("{resident_err:#}").contains("OOM");
+            if !(allow_swap && cfg.mem.swap && cfg.chunk_sched && cfg.chunks == 0 && is_oom) {
+                return Err(resident_err);
+            }
+            let wf = *dims.last().unwrap();
+            let slice_w = crate::tensor::dim_slices(wf, cfg.workers)[0].len();
+            let geometry = sched_chunks::choose_geometry_staged(
+                ctx.store,
+                &ctx.data.graph,
+                pallas,
+                &mem,
+                slice_w,
+            )?;
+            let pinned = sched_chunks::pass_bytes(&geometry, p.v, ctx.store.dim_tile);
+            Ok(MemPlan {
+                geometry,
+                staging: Some(StagingSpec {
+                    budget_bytes: mem.budget(),
+                    pinned_bytes: pinned,
+                    pcie: PcieModel::from_cfg(&cfg.mem),
+                    prefetch_depth: cfg.mem.prefetch_depth,
+                }),
+            })
+        }
+    }
 }
 
 /// Forward-orientation source graphs of the decoupled engines: the

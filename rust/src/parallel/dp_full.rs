@@ -65,7 +65,9 @@ impl DpEngine {
         anyhow::ensure!(
             mem.fits(need),
             "device OOM: full-graph DP needs ~{} MiB resident per worker \
-             (> {} MiB budget) — the paper's NeutronStar/Sancus OOM case",
+             (> {} MiB budget) — raise device_mem_mb, add workers, or use \
+             the chunk-scheduled decoupled system (the paper's \
+             NeutronStar/Sancus OOM case; DP baselines never host-stage)",
             need >> 20,
             mem.budget() >> 20
         );

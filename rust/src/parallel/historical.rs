@@ -57,7 +57,9 @@ impl HistoricalEngine {
         anyhow::ensure!(
             mem.fits(need),
             "device OOM: historical embeddings need ~{} MiB resident \
-             (> {} MiB budget) — the paper's Sancus OOM case",
+             (> {} MiB budget) — raise device_mem_mb or use the \
+             chunk-scheduled decoupled system (the paper's Sancus OOM \
+             case; the historical baseline never host-stages)",
             need >> 20,
             mem.budget() >> 20
         );

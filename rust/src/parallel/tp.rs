@@ -32,7 +32,7 @@ use crate::graph::Csr;
 use crate::metrics::EpochReport;
 use crate::model::layer_dims;
 use crate::model::params::{Adam, GnnParams};
-use crate::sched::{chunks as sched_chunks, PipelinePlan};
+use crate::sched::{chunks as sched_chunks, PipelinePlan, StagingRun, StagingSpec};
 use crate::tensor::{dim_slices, pad_tile, row_slices, Matrix};
 use crate::util::Rng;
 
@@ -49,6 +49,10 @@ pub struct TpEngine {
     fwd_plans: Vec<ChunkPlan>,
     bwd_plans: Vec<ChunkPlan>,
     geometry: sched_chunks::ChunkGeometry,
+    /// `Some` ⇒ the working set overflows the budget and every
+    /// aggregation phase host-stages panels over the modeled PCIe link
+    /// (`sched::staging`); timing/accounting only, numerics untouched
+    staging: Option<StagingSpec>,
     dims: Vec<usize>,
     /// unnormalized (self-loop) graph for GAT attention
     attn_graph: Option<Csr>,
@@ -68,8 +72,10 @@ impl TpEngine {
         let dims = layer_dims(p, cfg.layers, cfg.feat_dim, lp);
 
         // geometry + source graphs shared with the serving path (the
-        // serve-vs-train bit parity depends on deriving them in one place)
-        let geometry = common::decoupled_geometry(ctx, &dims)?;
+        // serve-vs-train bit parity depends on deriving them in one
+        // place). Naive TP is a baseline and never swaps (Table 2).
+        let memplan = common::decoupled_memplan(ctx, &dims, decoupled)?;
+        let geometry = memplan.geometry;
         let build = |g: &Csr| {
             ChunkPlan::build(g, geometry.rows_per_chunk, geometry.c_bucket, geometry.e_bucket)
         };
@@ -95,6 +101,7 @@ impl TpEngine {
             fwd_plans,
             bwd_plans,
             geometry,
+            staging: memplan.staging,
             dims,
             attn_graph,
             epoch_idx: 0,
@@ -389,8 +396,28 @@ impl TpEngine {
         let rows_in: Vec<Matrix> = row_parts.iter().map(|p| h.slice_rows(p.clone())).collect();
         let slice_w = dim_parts[0].len().max(1);
         let num_chunks = plans.iter().map(ChunkPlan::num_chunks).max().unwrap_or(1);
+        let pipelined = cfg.pipeline && num_chunks > 1;
 
-        if cfg.pipeline && num_chunks > 1 {
+        // host-staging plan for this phase: panels of plans[0]'s chunks
+        // cycle through the budget over the modeled PCIe link; transfers
+        // are posted as nonblocking tickets whose ready times feed the
+        // chunk computes below. (R-GCN models the primary relation's
+        // plan; sharing one link timeline across relations would only
+        // raise the modeled traffic, never change numerics.)
+        let mut staging = match &self.staging {
+            // (the chunk-count guard is belt and braces: every plan is
+            // built from one geometry over the same vertex set)
+            Some(spec) if plans[0].num_chunks() == num_chunks => Some(StagingRun::new(
+                spec,
+                &plans[0].chunks,
+                slice_w,
+                rounds,
+                pipelined,
+            )?),
+            _ => None,
+        };
+
+        if pipelined {
             // chunk-level pieces (paper Fig 9c/d); the piece geometry comes
             // from the first plan (plans share chunk row ranges)
             let pplan = PipelinePlan::build(&plans[0].chunks, slice_w, n, v);
@@ -428,10 +455,16 @@ impl TpEngine {
                     // the first round's chunk waits for its split piece
                     // (plans may disagree on chunk count; pieces beyond
                     // plans[0]'s geometry carry no bytes and no wait)
-                    let ready = match split_handles.get_mut(ci).and_then(Option::take) {
+                    let mut ready = match split_handles.get_mut(ci).and_then(Option::take) {
                         Some(handle) if r == 0 => handle.wait_barrier().1,
                         _ => 0.0,
                     };
+                    // ...and for its staged panels: prefetched H2D tickets
+                    // ride the PCIe link under earlier chunks' compute
+                    if let Some(st) = staging.as_mut() {
+                        let t = (0..n).map(|w| comm.now(w)).fold(ready, f64::max);
+                        ready = ready.max(st.ready_for_step(r * num_chunks + ci, t)?);
+                    }
                     for w in 0..n {
                         let frac = dim_parts[w].len() as f64 / wf as f64;
                         comm.compute(w, total * frac, ready);
@@ -454,7 +487,7 @@ impl TpEngine {
             report.collective_rounds += 1;
             comm.barrier();
             let mut cur = h.clone();
-            for _ in 0..rounds {
+            for r in 0..rounds {
                 // all plans' passes in flight before the first wait,
                 // sharing one tile set of the padded panel
                 let hp = cur.padded(v, pad_tile(cur.cols()));
@@ -469,9 +502,17 @@ impl TpEngine {
                     secs += agg.wait_into(&mut acc)?;
                 }
                 let total = common::modeled(cfg, secs);
+                // serial staging: the round's swap traffic cannot hide
+                // under compute (no chunk interleaving) — its ready time
+                // simply pushes the round's compute back
+                let mut swap_ready = 0.0;
+                if let Some(st) = staging.as_mut() {
+                    let t = (0..n).map(|w| comm.now(w)).fold(0.0, f64::max);
+                    swap_ready = st.ready_for_round(r, num_chunks, t)?;
+                }
                 for w in 0..n {
                     let frac = dim_parts[w].len() as f64 / wf as f64;
-                    let now = comm.now(w);
+                    let now = comm.now(w).max(swap_ready);
                     comm.compute(w, total * frac, now);
                 }
                 cur = acc.cropped(v, cur.cols());
@@ -483,6 +524,13 @@ impl TpEngine {
             report.collective_rounds += 1;
             comm.barrier();
             *h = cur;
+        }
+        if let Some(st) = staging {
+            // planned peak == accounted peak is a debug-asserted contract
+            // of the replay; the stats roll up per phase into the report
+            let (stats, mem) = st.finish();
+            debug_assert_eq!(mem.used(), 0, "staged panels leaked");
+            report.swap.merge(&stats);
         }
         Ok(())
     }

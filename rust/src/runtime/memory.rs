@@ -3,7 +3,12 @@
 //! Systems without chunk scheduling must hold the whole graph + all layer
 //! embeddings + intermediates resident — on the large profiles that
 //! overflows and raises `DeviceOom`, reproducing the OOM rows of Table 2.
-//! The chunk scheduler instead sizes chunks so each pass fits.
+//! The chunk scheduler instead sizes chunks so each pass fits, and the
+//! host-staging scheduler (`sched::staging`, DESIGN.md §5.2) goes one
+//! step further: panels cycle through the budget over a modeled PCIe
+//! link, reserved when their transfer is posted and committed when the
+//! consuming step runs — so the staging planner's modeled peak and this
+//! accountant's `peak()` must land on exactly the same number.
 
 use anyhow::bail;
 
@@ -11,13 +16,17 @@ use anyhow::bail;
 #[derive(Clone, Debug)]
 pub struct DeviceMemory {
     budget: usize,
+    /// committed bytes (materialized allocations)
     used: usize,
+    /// bytes reserved for in-flight staged transfers (counted against the
+    /// budget, promoted to `used` by [`DeviceMemory::commit`])
+    reserved: usize,
     peak: usize,
 }
 
 impl DeviceMemory {
     pub fn new(budget_bytes: usize) -> Self {
-        Self { budget: budget_bytes, used: 0, peak: 0 }
+        Self { budget: budget_bytes, used: 0, reserved: 0, peak: 0 }
     }
 
     pub fn from_mb(mb: usize) -> Self {
@@ -29,26 +38,86 @@ impl DeviceMemory {
     /// reproduction path) leaves `used`/`peak` exactly as they were and
     /// subsequent engines sharing the accounting see clean numbers.
     pub fn alloc(&mut self, bytes: usize, what: &str) -> crate::Result<()> {
-        let would_use = self.used + bytes;
+        let would_use = self.used + self.reserved + bytes;
         if would_use > self.budget {
             bail!(
                 "device OOM allocating {what}: {} MiB used > {} MiB budget \
-                 (enable chunk_sched or add workers)",
+                 (raise device_mem_mb, enable chunk_sched, or add workers)",
                 would_use >> 20,
                 self.budget >> 20
             );
         }
-        self.used = would_use;
-        self.peak = self.peak.max(self.used);
+        self.used += bytes;
+        self.peak = self.peak.max(self.used + self.reserved);
         Ok(())
     }
 
+    /// Reserve `bytes` for an in-flight staged transfer (`sched::staging`
+    /// posts the H2D ticket, then reserves the panel's footprint). Same
+    /// check-before-mutate contract as [`DeviceMemory::alloc`]; the
+    /// reservation counts against the budget and the peak immediately.
+    pub fn reserve(&mut self, bytes: usize, what: &str) -> crate::Result<()> {
+        let would_use = self.used + self.reserved + bytes;
+        if would_use > self.budget {
+            bail!(
+                "device OOM reserving {what}: {} MiB used > {} MiB budget \
+                 (raise device_mem_mb or lower [mem] prefetch_depth)",
+                would_use >> 20,
+                self.budget >> 20
+            );
+        }
+        self.reserved += bytes;
+        self.peak = self.peak.max(self.used + self.reserved);
+        Ok(())
+    }
+
+    /// Promote `bytes` of reservation to a committed allocation (the
+    /// staged panel's consuming step ran). Committing more than is
+    /// reserved is an accounting bug.
+    pub fn commit(&mut self, bytes: usize) {
+        debug_assert!(
+            bytes <= self.reserved,
+            "over-commit: committing {bytes} B with only {} B reserved",
+            self.reserved
+        );
+        let b = bytes.min(self.reserved);
+        self.reserved -= b;
+        self.used += b;
+        // used + reserved is unchanged; peak already covers it
+    }
+
+    /// Cancel an unconsumed reservation (a staged transfer abandoned
+    /// before its step ran).
+    pub fn cancel_reserved(&mut self, bytes: usize) {
+        debug_assert!(
+            bytes <= self.reserved,
+            "over-cancel: releasing {bytes} B with only {} B reserved",
+            self.reserved
+        );
+        self.reserved = self.reserved.saturating_sub(bytes);
+    }
+
+    /// Release `bytes` of committed allocation. Freeing more than is
+    /// `used` is an accounting bug — it would silently launder a
+    /// double-free or a misattributed panel size, so it trips a
+    /// `debug_assert!` (an error under `cargo test`); release builds
+    /// saturate, preserving the old lenient behaviour.
     pub fn free(&mut self, bytes: usize) {
+        debug_assert!(
+            bytes <= self.used,
+            "over-free: freeing {bytes} B with only {} B used",
+            self.used
+        );
         self.used = self.used.saturating_sub(bytes);
     }
 
     pub fn used(&self) -> usize {
         self.used
+    }
+
+    /// Bytes reserved for in-flight staged transfers.
+    pub fn reserved(&self) -> usize {
+        self.reserved
     }
 
     pub fn peak(&self) -> usize {
@@ -61,7 +130,7 @@ impl DeviceMemory {
 
     /// Would `bytes` more fit right now?
     pub fn fits(&self, bytes: usize) -> bool {
-        self.used + bytes <= self.budget
+        self.used + self.reserved + bytes <= self.budget
     }
 }
 
@@ -117,6 +186,52 @@ mod tests {
         // the budget headroom is still usable afterwards
         m.alloc(512 << 10, "retry smaller").unwrap();
         assert_eq!(m.used(), (256 << 10) + (512 << 10));
+    }
+
+    #[test]
+    fn reserve_commit_counts_once() {
+        let mut m = DeviceMemory::from_mb(1);
+        m.reserve(256 << 10, "panel").unwrap();
+        assert_eq!(m.used(), 0);
+        assert_eq!(m.reserved(), 256 << 10);
+        // the reservation already holds budget and peak
+        assert!(!m.fits(800 << 10));
+        assert_eq!(m.peak(), 256 << 10);
+        m.commit(256 << 10);
+        assert_eq!(m.used(), 256 << 10);
+        assert_eq!(m.reserved(), 0);
+        assert_eq!(m.peak(), 256 << 10, "commit must not double-count");
+        m.free(256 << 10);
+        assert_eq!(m.used(), 0);
+    }
+
+    #[test]
+    fn failed_reserve_leaves_accounting_untouched() {
+        let mut m = DeviceMemory::from_mb(1);
+        m.alloc(512 << 10, "resident").unwrap();
+        assert!(m.reserve(1 << 20, "too big").is_err());
+        assert_eq!(m.used(), 512 << 10);
+        assert_eq!(m.reserved(), 0);
+        assert_eq!(m.peak(), 512 << 10);
+    }
+
+    #[test]
+    fn cancel_reserved_releases_budget() {
+        let mut m = DeviceMemory::from_mb(1);
+        m.reserve(512 << 10, "panel").unwrap();
+        m.cancel_reserved(512 << 10);
+        assert_eq!(m.reserved(), 0);
+        assert!(m.fits(1 << 20));
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "over-free")]
+    fn over_free_is_an_accounting_bug() {
+        // regression: `saturating_sub` used to swallow over-frees silently
+        let mut m = DeviceMemory::from_mb(1);
+        m.alloc(256 << 10, "x").unwrap();
+        m.free(512 << 10);
     }
 
     #[test]

@@ -17,11 +17,51 @@ pub struct ChunkGeometry {
     pub num_chunks: usize,
 }
 
+/// Geometry for `rows_per_chunk`-row chunks: the smallest row bucket and
+/// the expected-degree edge bucket the store offers (shared by the
+/// resident and host-staged choosers). `max_deg` is the graph's widest
+/// in-row (callers compute it once per chooser invocation): the edge
+/// bucket must cover it so no row ever straddles a pass boundary under
+/// the row-aligned cut policy (graph/chunk.rs), which is what keeps
+/// aggregation bit-identical across chunk geometries — the host-staging
+/// parity contract (DESIGN.md §5.2). Only a row wider than the largest
+/// emitted bucket could still split (no built-in profile comes close).
+fn geometry_for(
+    store: &ArtifactStore,
+    g: &Csr,
+    pallas: bool,
+    rows_per_chunk: usize,
+    max_deg: usize,
+) -> crate::Result<ChunkGeometry> {
+    let v = g.num_vertices();
+    let buckets = store.agg_row_buckets(v);
+    let c_bucket = *buckets
+        .iter()
+        .find(|&&c| c >= rows_per_chunk)
+        .ok_or_else(|| anyhow::anyhow!("no row bucket >= {rows_per_chunk} (|V|={v})"))?;
+    // expected edges per chunk guides the e bucket; overflow multi-passes
+    let avg_e = (g.num_edges() * rows_per_chunk).div_ceil(v.max(1));
+    let art = store.find_agg(pallas, rows_per_chunk.min(c_bucket), avg_e.max(max_deg), v)?;
+    Ok(ChunkGeometry {
+        rows_per_chunk,
+        c_bucket: art.inputs[0].shape[0] - 1,
+        e_bucket: art.inputs[1].shape[0],
+        num_chunks: v.div_ceil(rows_per_chunk),
+    })
+}
+
+/// Widest in-row of `g` — computed once per chooser invocation.
+fn max_in_degree(g: &Csr) -> usize {
+    (0..g.num_vertices()).map(|r| g.in_deg(r)).max().unwrap_or(0)
+}
+
 /// Pick geometry for graph `g` given the store's available buckets.
 ///
 /// `resident_bytes` is what must stay on the device besides one pass's
 /// buffers (the dim-slice panel, parameters, current chunk outputs).
-/// Errors when even the smallest bucket cannot fit — the true OOM case.
+/// Errors when even the smallest bucket cannot fit — the true OOM case
+/// (the decoupled engine may then fall back to [`choose_geometry_staged`]
+/// when `[mem] swap` is on).
 pub fn choose_geometry(
     store: &ArtifactStore,
     g: &Csr,
@@ -34,32 +74,18 @@ pub fn choose_geometry(
     let v = g.num_vertices();
     let buckets = store.agg_row_buckets(v);
     anyhow::ensure!(!buckets.is_empty(), "no aggregation artifacts for |V|={v}");
-
-    let geometry_for = |rows_per_chunk: usize| -> crate::Result<ChunkGeometry> {
-        let c_bucket = *buckets
-            .iter()
-            .find(|&&c| c >= rows_per_chunk)
-            .ok_or_else(|| anyhow::anyhow!("no row bucket >= {rows_per_chunk} (|V|={v})"))?;
-        // expected edges per chunk guides the e bucket; overflow multi-passes
-        let avg_e = (g.num_edges() * rows_per_chunk).div_ceil(v.max(1));
-        let art = store.find_agg(pallas, rows_per_chunk.min(c_bucket), avg_e, v)?;
-        Ok(ChunkGeometry {
-            rows_per_chunk,
-            c_bucket: art.inputs[0].shape[0] - 1,
-            e_bucket: art.inputs[1].shape[0],
-            num_chunks: v.div_ceil(rows_per_chunk),
-        })
-    };
+    let max_deg = max_in_degree(g);
 
     if !chunk_sched {
         // whole graph as one chunk — must both have a bucket and fit
-        let geo = geometry_for(v)
+        let geo = geometry_for(store, g, pallas, v, max_deg)
             .map_err(|e| anyhow::anyhow!("chunk scheduling disabled and {e}"))?;
         let need = pass_bytes(&geo, v, store.dim_tile) + resident_bytes;
         anyhow::ensure!(
             mem.fits(need),
             "device OOM: whole-graph pass needs {} MiB > {} MiB budget \
-             (chunk scheduling disabled)",
+             (chunk scheduling disabled — enable chunk_sched or raise \
+             device_mem_mb)",
             need >> 20,
             mem.budget() >> 20
         );
@@ -67,12 +93,12 @@ pub fn choose_geometry(
     }
 
     if chunks_override > 0 {
-        return geometry_for(v.div_ceil(chunks_override));
+        return geometry_for(store, g, pallas, v.div_ceil(chunks_override), max_deg);
     }
 
     // largest bucket that fits
     for &c in buckets.iter().rev() {
-        let geo = geometry_for(c)?;
+        let geo = geometry_for(store, g, pallas, c, max_deg)?;
         let need = pass_bytes(&geo, v, store.dim_tile) + resident_bytes;
         if mem.fits(need) {
             return Ok(geo);
@@ -80,7 +106,43 @@ pub fn choose_geometry(
     }
     anyhow::bail!(
         "device OOM: even the smallest chunk bucket ({} rows) exceeds the \
-         {} MiB budget",
+         {} MiB budget — raise device_mem_mb (the decoupled engine can also \
+         host-stage with [mem] swap = true)",
+        buckets[0],
+        mem.budget() >> 20
+    )
+}
+
+/// Geometry for a **host-staged** run (`sched::staging`, DESIGN.md §5.2):
+/// the resident working set no longer needs to fit — only one step's
+/// pass buffers plus its staged panels, bounded worst-case by every
+/// vertex being a source of some chunk. Mirrors [`choose_geometry`]'s
+/// paper-§4.2 preference for the largest bucket that fits.
+pub fn choose_geometry_staged(
+    store: &ArtifactStore,
+    g: &Csr,
+    pallas: bool,
+    mem: &DeviceMemory,
+    slice_width: usize,
+) -> crate::Result<ChunkGeometry> {
+    let v = g.num_vertices();
+    let buckets = store.agg_row_buckets(v);
+    anyhow::ensure!(!buckets.is_empty(), "no aggregation artifacts for |V|={v}");
+    let bpe = slice_width.max(1) * 4;
+    let max_deg = max_in_degree(g);
+    for &c in buckets.iter().rev() {
+        let geo = geometry_for(store, g, pallas, c, max_deg)?;
+        // worst-case step panels: a full-graph source gather + the chunk's
+        // output rows (StagingPlan::build re-checks with the real src sets)
+        let need = pass_bytes(&geo, v, store.dim_tile) + (v + geo.rows_per_chunk) * bpe;
+        if mem.fits(need) {
+            return Ok(geo);
+        }
+    }
+    anyhow::bail!(
+        "device OOM: even host-staged execution of the smallest chunk bucket \
+         ({} rows) exceeds the {} MiB budget — raise device_mem_mb or add \
+         workers (narrower dim slices)",
         buckets[0],
         mem.budget() >> 20
     )
@@ -131,6 +193,25 @@ mod tests {
         let err = choose_geometry(&s, &g, false, 100 << 20, &DeviceMemory::from_mb(32), 0, false)
             .unwrap_err();
         assert!(err.to_string().contains("OOM"), "{err}");
+    }
+
+    #[test]
+    fn staged_chooser_rescues_oversized_working_sets() {
+        let s = store();
+        let g = generate::uniform(65536, 1_310_720, 1);
+        // a resident working set far over the budget: the plain chooser
+        // OOMs, the staged one still finds a geometry
+        let mem = DeviceMemory::from_mb(48);
+        let resident = 400 << 20;
+        let plain = choose_geometry(&s, &g, false, resident, &mem, 0, true);
+        assert!(plain.unwrap_err().to_string().contains("OOM"));
+        let staged = choose_geometry_staged(&s, &g, false, &mem, 16).unwrap();
+        assert!(staged.rows_per_chunk <= 65536);
+        // and an absurdly small budget still OOMs with the remedy named
+        let tiny = DeviceMemory::from_mb(1);
+        let err = choose_geometry_staged(&s, &g, false, &tiny, 16).unwrap_err();
+        assert!(err.to_string().contains("OOM"), "{err}");
+        assert!(err.to_string().contains("device_mem_mb"), "{err}");
     }
 
     #[test]

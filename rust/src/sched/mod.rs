@@ -1,9 +1,13 @@
 //! Memory-efficient task scheduling (paper §4.2): chunk geometry selection
-//! under the device memory budget, and the inter-chunk pipeline plan with
-//! per-vertex communication dedup (Fig 9d).
+//! under the device memory budget, the inter-chunk pipeline plan with
+//! per-vertex communication dedup (Fig 9d), and the host-staging memory
+//! scheduler that swaps panels over a modeled PCIe link when the working
+//! set exceeds the budget (DESIGN.md §5.2).
 
 pub mod chunks;
 pub mod pipeline;
+pub mod staging;
 
 pub use chunks::ChunkGeometry;
 pub use pipeline::PipelinePlan;
+pub use staging::{PcieModel, StagingPlan, StagingRun, StagingSpec, SwapStats};

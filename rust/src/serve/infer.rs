@@ -32,6 +32,7 @@ use crate::model::layer_dims;
 use crate::model::params::GnnParams;
 use crate::parallel::{common, Ctx};
 use crate::runtime::ops::Ops;
+use crate::sched::{StagingRun, SwapStats};
 use crate::tensor::{dim_slices, pad_tile, row_slices, Matrix};
 
 /// A loaded model plus the precomputed full-graph forward.
@@ -58,6 +59,9 @@ pub struct InferenceEngine {
     comm_stats: CommStats,
     /// simulated makespan of the startup forward
     sim_forward_secs: f64,
+    /// host-staging swap accounting of the startup forward (zeroed when
+    /// the working set fit the budget; DESIGN.md §5.2)
+    swap_stats: SwapStats,
 }
 
 impl InferenceEngine {
@@ -92,8 +96,11 @@ impl InferenceEngine {
 
         // geometry + source graphs shared with `TpEngine::new` — one
         // derivation, so the plans (and thus float accumulation order)
-        // are identical to training's
-        let geometry = common::decoupled_geometry(ctx, &dims)?;
+        // are identical to training's. Serving inherits the host-staging
+        // fallback: graphs whose working set overflows the budget still
+        // serve, with the swap traffic modeled on the forward's timeline.
+        let memplan = common::decoupled_memplan(ctx, &dims, true)?;
+        let geometry = memplan.geometry;
         let graphs: Vec<Csr> = common::decoupled_graphs(ctx)?;
         let plans: Vec<ChunkPlan> = graphs
             .iter()
@@ -134,6 +141,20 @@ impl InferenceEngine {
             row_parts.iter().map(|part| cur.slice_rows(part.clone())).collect();
         let mut split = Some(comm.isplit(&rows_in, &row_parts, &dim_parts));
         let rounds = cfg.layers;
+        let num_chunks = plans[0].num_chunks();
+        // the startup forward is a serial (non-pipelined) pass: staged
+        // panel transfers push each round's compute back rather than
+        // hiding under chunk interleaving
+        let mut staging = match &memplan.staging {
+            Some(spec) => Some(StagingRun::new(
+                spec,
+                &plans[0].chunks,
+                dim_parts[0].len().max(1),
+                rounds,
+                false,
+            )?),
+            None => None,
+        };
         let mut penult = cur.clone();
         let mut agg_device_secs = 0.0;
         for r in 0..rounds {
@@ -154,10 +175,15 @@ impl InferenceEngine {
             agg_device_secs += round_secs;
             let total = common::modeled(cfg, round_secs);
             // the first round waits for the posted split to land
-            let ready = match split.take() {
+            let mut ready = match split.take() {
                 Some(handle) if r == 0 => handle.wait_barrier().1,
                 _ => 0.0,
             };
+            // ...and every round for its staged panels
+            if let Some(st) = staging.as_mut() {
+                let t = (0..cfg.workers).map(|w| comm.now(w)).fold(ready, f64::max);
+                ready = ready.max(st.ready_for_round(r, num_chunks, t)?);
+            }
             for w in 0..cfg.workers {
                 let frac = dim_parts[w].len() as f64 / wf.max(1) as f64;
                 let now = comm.now(w).max(ready);
@@ -165,6 +191,10 @@ impl InferenceEngine {
             }
             cur = acc.cropped(v, cur.cols());
         }
+        let swap_stats = match staging {
+            Some(st) => st.finish().0,
+            None => SwapStats::default(),
+        };
         // gather the dim slices back to vertex-sliced logits
         let slices: Vec<Matrix> =
             dim_parts.iter().map(|dp| cur.slice_cols(dp.clone())).collect();
@@ -191,7 +221,14 @@ impl InferenceEngine {
             collective_rounds: 2,
             comm_stats: comm.stats().clone(),
             sim_forward_secs: comm.makespan(),
+            swap_stats,
         })
+    }
+
+    /// Host-staging swap accounting of the startup forward (zeroed when
+    /// the whole working set fit `device_mem_mb`).
+    pub fn swap_stats(&self) -> &SwapStats {
+        &self.swap_stats
     }
 
     /// Full-graph logits `A^L Z`, `[V, wf]`.

@@ -1,0 +1,360 @@
+//! Budget/OOM test matrix + host-staging invariants (DESIGN.md §5.2).
+//!
+//! The Table 2 memory story, asserted instead of eyeballed: every system
+//! under {tiny, borderline, ample} budgets either trains — via the swap
+//! path for the decoupled engine under a sub-working-set budget — or
+//! fails with a clean `DeviceOom` whose message names the remedy. On top
+//! of that, the staging planner's contracts run under the propcheck
+//! driver: the plan never exceeds the budget at any point, prefetched
+//! panels are consumed before eviction, the link ledger conserves bytes
+//! (Σ H2D == Σ D2H + retained), and the planner's modeled peak equals
+//! the `DeviceMemory`-replayed peak exactly.
+
+use neutron_tp::config::{RunConfig, System};
+use neutron_tp::graph::chunk::ChunkPlan;
+use neutron_tp::graph::datasets::{profile, Dataset};
+use neutron_tp::graph::generate;
+use neutron_tp::metrics::EpochReport;
+use neutron_tp::parallel::{self, Ctx};
+use neutron_tp::runtime::{ArtifactStore, DeviceMemory, ExecutorPool};
+use neutron_tp::sched::{PcieModel, StagingPlan, StagingRun, StagingSpec};
+use neutron_tp::serve::InferenceEngine;
+use neutron_tp::util::propcheck;
+
+fn store() -> ArtifactStore {
+    ArtifactStore::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .expect("run `make artifacts` first")
+}
+
+/// The matrix profile: rdt with 128-dim features keeps the epochs cheap
+/// while the working set (~7 MiB resident for decoupled TP, ~15 MiB for
+/// DP, ~61 MiB for the historical panels) straddles the three budgets.
+fn rdt128() -> Dataset {
+    Dataset::generate_with_dim(profile("rdt").unwrap(), 128, 42)
+}
+
+fn run(
+    s: &ArtifactStore,
+    data: &Dataset,
+    cfg: &RunConfig,
+    threads: usize,
+) -> anyhow::Result<Vec<EpochReport>> {
+    cfg.validate()?;
+    let pool = ExecutorPool::new(s, threads)?;
+    let ctx = Ctx { cfg, data, store: s, pool: &pool };
+    parallel::run(&ctx)
+}
+
+fn cfg_mb(system: System, mb: usize) -> RunConfig {
+    RunConfig {
+        system,
+        profile: "rdt".into(),
+        feat_dim: Some(128),
+        workers: 4,
+        epochs: 1,
+        device_mem_mb: mb,
+        ..Default::default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The Table 2 reproduction: system × budget matrix
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq)]
+enum Want {
+    /// trains without touching the swap path
+    Trains,
+    /// trains *through* the swap path (h2d bytes > 0)
+    Swaps,
+    /// clean DeviceOom naming the remedy
+    Oom,
+}
+
+#[test]
+fn oom_matrix_every_system_across_three_budgets() {
+    let s = store();
+    let data = rdt128();
+    // budgets in MiB: tiny (below every resident working set), borderline
+    // (DP fits, historical panels do not), ample (everything fits)
+    let expectations: &[(System, [Want; 3])] = &[
+        (System::NeutronTp, [Want::Swaps, Want::Trains, Want::Trains]),
+        (System::NaiveTp, [Want::Oom, Want::Trains, Want::Trains]),
+        (System::DpFull, [Want::Oom, Want::Trains, Want::Trains]),
+        (System::DpCache, [Want::Oom, Want::Trains, Want::Trains]),
+        (System::Historical, [Want::Oom, Want::Oom, Want::Trains]),
+        // sampled mini-batches always fit — DistDGL's Table 2 row trains
+        // everywhere (slowly), never OOMs
+        (System::MiniBatch, [Want::Trains, Want::Trains, Want::Trains]),
+    ];
+    for (system, wants) in expectations {
+        for (budget, want) in [3usize, 30, 16 * 1024].into_iter().zip(wants) {
+            let result = run(&s, &data, &cfg_mb(*system, budget), 2);
+            match want {
+                Want::Oom => {
+                    let err = result.expect_err(&format!(
+                        "{system:?} must OOM at {budget} MiB"
+                    ));
+                    let msg = format!("{err:#}");
+                    assert!(msg.contains("OOM"), "{system:?}@{budget}: {msg}");
+                    assert!(
+                        msg.contains("device_mem_mb"),
+                        "{system:?}@{budget} OOM must name the remedy: {msg}"
+                    );
+                }
+                Want::Trains | Want::Swaps => {
+                    let reports = result.unwrap_or_else(|e| {
+                        panic!("{system:?} must train at {budget} MiB: {e:#}")
+                    });
+                    let r = reports.last().unwrap();
+                    assert!(r.loss.is_finite(), "{system:?}@{budget}: loss {}", r.loss);
+                    if *want == Want::Swaps {
+                        assert!(
+                            r.swap.engaged() && r.swap.h2d_bytes > 0,
+                            "{system:?}@{budget} should have trained via the swap path"
+                        );
+                        let of = r.swap.overlap_frac();
+                        assert!((0.0..=1.0).contains(&of), "overlap_frac {of}");
+                    } else {
+                        assert!(
+                            !r.swap.engaged(),
+                            "{system:?}@{budget} unexpectedly swapped ({} B h2d)",
+                            r.swap.h2d_bytes
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn caught_oom_leaves_device_accounting_clean() {
+    // the matrix above catches OOM errors and keeps going; the accountant
+    // they share must come out of a refused alloc/reserve untouched
+    let mut m = DeviceMemory::from_mb(2);
+    m.alloc(1 << 20, "resident").unwrap();
+    let (used, peak) = (m.used(), m.peak());
+    assert!(m.alloc(2 << 20, "overflow").is_err());
+    assert!(m.reserve(2 << 20, "overflow reservation").is_err());
+    assert_eq!(m.used(), used);
+    assert_eq!(m.reserved(), 0);
+    assert_eq!(m.peak(), peak);
+    // reserve/commit promotes without double counting
+    m.reserve(512 << 10, "panel").unwrap();
+    m.commit(512 << 10);
+    assert_eq!(m.used(), (1 << 20) + (512 << 10));
+    assert_eq!(m.peak(), (1 << 20) + (512 << 10));
+    m.free(512 << 10);
+    m.free(1 << 20);
+    assert_eq!(m.used(), 0);
+}
+
+// ---------------------------------------------------------------------------
+// Determinism/parity: swap is a timing/accounting plane only
+// ---------------------------------------------------------------------------
+
+#[test]
+fn swap_path_matches_ample_budget_bitwise() {
+    // The acceptance contract: a profile whose working set exceeds the
+    // budget trains through host staging to the SAME losses, bit for
+    // bit, as an ample-budget run — across prefetch depths, link speeds
+    // and executor pool widths. (Pass cuts are row-aligned, so even the
+    // different chunk geometry the tight budget forces cannot
+    // reassociate floats; extends thread_counts_do_not_change_numerics
+    // to the memory axes.)
+    let s = store();
+    let data = rdt128();
+    let run_bits = |mb: usize, depth: usize, gbps: f64, swap: bool, threads: usize| {
+        let mut cfg = cfg_mb(System::NeutronTp, mb);
+        cfg.epochs = 2;
+        cfg.mem.prefetch_depth = depth;
+        cfg.mem.pcie_gbps = gbps;
+        cfg.mem.swap = swap;
+        run(&s, &data, &cfg, threads)
+            .unwrap()
+            .iter()
+            .map(|r| r.loss.to_bits())
+            .collect::<Vec<u32>>()
+    };
+    let ample = run_bits(16 * 1024, 2, 16.0, true, 2);
+    // ample budget: the swap switch is inert (staging never engages)
+    assert_eq!(ample, run_bits(16 * 1024, 2, 16.0, false, 2));
+    // sub-working-set budget: swap engages, numerics must not move —
+    // across prefetch_depth ∈ {1, 4}, a 32x slower link, and pool widths
+    for (depth, gbps, threads) in [(1usize, 16.0, 2usize), (4, 16.0, 2), (4, 0.5, 2), (1, 16.0, 4)]
+    {
+        assert_eq!(
+            ample,
+            run_bits(3, depth, gbps, true, threads),
+            "losses moved under swap (depth={depth} gbps={gbps} threads={threads})"
+        );
+    }
+    // and with swap disabled the same tight budget is the honest OOM
+    let mut cfg = cfg_mb(System::NeutronTp, 3);
+    cfg.mem.swap = false;
+    let err = run(&s, &data, &cfg, 2).unwrap_err();
+    assert!(format!("{err:#}").contains("OOM"), "{err:#}");
+}
+
+#[test]
+fn swapped_epoch_reports_real_traffic_and_overlap() {
+    let s = store();
+    let data = rdt128();
+    let mut cfg = cfg_mb(System::NeutronTp, 3);
+    cfg.epochs = 2;
+    let reports = run(&s, &data, &cfg, 2).unwrap();
+    for r in &reports {
+        assert!(r.swap.engaged());
+        assert!(r.swap.h2d_bytes > 0 && r.swap.h2d_ops > 0);
+        // conservation holds per epoch too: everything fetched was either
+        // written back or retained until the phase ended — and retained
+        // panels were freed, so d2h + retained == h2d means d2h <= h2d
+        assert!(r.swap.d2h_bytes <= r.swap.h2d_bytes);
+        assert!(r.swap.link_secs > 0.0);
+        assert!(r.swap.stall_secs >= 0.0);
+        // the acceptance bar: prefetched transfers actually hide under
+        // aggregation compute in the pipelined path
+        let of = r.swap.overlap_frac();
+        assert!(of > 0.0 && of <= 1.0, "no overlap achieved: {of}");
+    }
+    // swap is not free: on a glacial link the modeled transfers take
+    // whole seconds and dwarf the resident run — far beyond kernel
+    // measurement noise, so the inequality is robust
+    let mut slow = cfg_mb(System::NeutronTp, 3);
+    slow.mem.pcie_gbps = 0.05; // ~50 Mbit/s: seconds of modeled swap
+    let slow_reports = run(&s, &data, &slow, 2).unwrap();
+    let ample = run(&s, &data, &cfg_mb(System::NeutronTp, 16 * 1024), 2).unwrap();
+    assert!(slow_reports[0].swap.link_secs > 1.0, "{}", slow_reports[0].swap.link_secs);
+    assert!(
+        slow_reports[0].sim_epoch_secs > ample[0].sim_epoch_secs + 1.0,
+        "glacial-link staged epoch {} should dwarf the resident epoch {}",
+        slow_reports[0].sim_epoch_secs,
+        ample[0].sim_epoch_secs
+    );
+}
+
+#[test]
+fn serving_inherits_the_swap_path_with_identical_logits() {
+    // the serve forward under a sub-working-set budget stages panels too
+    // — and still produces bit-identical logits to an ample-budget engine
+    let s = store();
+    let data = rdt128();
+    let dims = neutron_tp::model::layer_dims(&data.profile, 2, Some(128), false);
+    let params = neutron_tp::model::params::GnnParams::init(&dims, 1, false, 42);
+    let build = |mb: usize| {
+        let cfg = cfg_mb(System::NeutronTp, mb);
+        let pool = ExecutorPool::new(&s, 2).unwrap();
+        let ctx = Ctx { cfg: &cfg, data: &data, store: &s, pool: &pool };
+        InferenceEngine::new(&ctx, &params).unwrap()
+    };
+    let staged = build(3);
+    let resident = build(16 * 1024);
+    assert!(staged.swap_stats().engaged(), "3 MiB serve forward must stage");
+    assert!(!resident.swap_stats().engaged());
+    assert_eq!(
+        staged.logits().max_abs_diff(resident.logits()),
+        0.0,
+        "staged serve forward reassociated floats"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Staging planner invariants (propcheck)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_staging_plan_budget_pinning_and_conservation() {
+    propcheck::check("staging-plan-invariants", 0x57A6E, 25, |rng| {
+        let v = 256 << rng.gen_range(3); // 256..2048
+        let e = v * (2 + rng.gen_range(8));
+        let g = generate::rmat(v, e, generate::RMAT_SKEWED, rng.next_u64()).gcn_normalized();
+        let rows = (v / (1 << rng.gen_range(4))).max(64);
+        let plan = ChunkPlan::build(&g, rows, rows.max(256), 1 << (10 + rng.gen_range(4)));
+        let slice_w = 1 + rng.gen_range(32);
+        let rounds = 1 + rng.gen_range(3);
+        let bpe = slice_w * 4;
+        let max_step = plan
+            .chunks
+            .iter()
+            .map(|c| (c.src_set.len() + c.num_rows()) * bpe)
+            .max()
+            .unwrap();
+        let pinned = 1024 + rng.gen_range(1 << 16);
+        let budget = pinned + max_step + rng.gen_range(4 * max_step + 1);
+        let spec = StagingSpec {
+            budget_bytes: budget,
+            pinned_bytes: pinned,
+            pcie: PcieModel { gbps: 8.0 + rng.gen_f64() * 56.0, latency_us: 10.0 },
+            prefetch_depth: 1 + rng.gen_range(4),
+        };
+        let sp = StagingPlan::build(&spec, &plan.chunks, slice_w, rounds).unwrap();
+        let n_steps = rounds * plan.num_chunks();
+        assert_eq!(sp.num_steps(), n_steps);
+
+        // replay the ops: budget respected at every point, panels fetched
+        // once, prefetched panels consumed before eviction, bytes conserved
+        let mut resident: Vec<Option<(usize, usize)>> = vec![None; 2 * n_steps];
+        let mut used = pinned;
+        let mut peak = used;
+        let (mut h2d, mut d2h) = (0usize, 0usize);
+        for op in &sp.ops {
+            if op.h2d {
+                assert!(
+                    resident[op.panel].is_none(),
+                    "panel {} fetched twice",
+                    op.panel
+                );
+                assert_eq!(op.panel / 2, op.dep_step, "fetch serves a foreign step");
+                assert!(op.post_step <= op.dep_step, "fetch posted after its step");
+                assert!(
+                    op.dep_step - op.post_step <= spec.prefetch_depth,
+                    "fetch posted beyond the prefetch window"
+                );
+                assert!(op.bytes <= op.footprint, "fetch moved more than the panel");
+                resident[op.panel] = Some((op.footprint, op.bytes));
+                used += op.footprint;
+                h2d += op.bytes;
+            } else {
+                let (fp, fetched) =
+                    resident[op.panel].take().expect("evicted a non-resident panel");
+                assert!(
+                    op.panel / 2 < op.post_step,
+                    "panel of step {} evicted at step {} before consumption",
+                    op.panel / 2,
+                    op.post_step
+                );
+                assert_eq!(op.footprint, fp);
+                assert_eq!(op.bytes, fetched, "eviction must write back the fetch");
+                used -= fp;
+                d2h += fetched;
+            }
+            peak = peak.max(used);
+            assert!(used <= budget, "plan exceeds the budget: {used} > {budget}");
+        }
+        let retained: usize = resident.iter().flatten().map(|(_, f)| *f).sum();
+        assert_eq!(h2d, sp.h2d_bytes);
+        assert_eq!(d2h, sp.d2h_bytes);
+        assert_eq!(h2d, d2h + sp.retained_bytes, "link ledger must conserve bytes");
+        assert_eq!(retained, sp.retained_bytes);
+        assert_eq!(peak, sp.planned_peak);
+
+        // DeviceMemory replay through reserve/commit/free: planned peak
+        // == accounted peak, and nothing leaks
+        for pipelined in [true, false] {
+            let mut run =
+                StagingRun::new(&spec, &plan.chunks, slice_w, rounds, pipelined).unwrap();
+            let mut t = 0.0;
+            for step in 0..n_steps {
+                t = run.ready_for_step(step, t).unwrap().max(t) + 1e-4;
+            }
+            let (stats, mem) = run.finish();
+            assert_eq!(mem.peak(), sp.planned_peak, "planned != accounted peak");
+            assert_eq!(mem.used(), 0, "staged panels leaked");
+            assert_eq!(stats.h2d_bytes, sp.h2d_bytes);
+            assert_eq!(stats.d2h_bytes, sp.d2h_bytes);
+            assert!(stats.stall_secs >= 0.0);
+            assert!(stats.link_secs > 0.0 || sp.h2d_bytes == 0);
+        }
+    });
+}
