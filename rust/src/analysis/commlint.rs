@@ -1,0 +1,326 @@
+//! Comm-schedule linter (DESIGN.md §8, family 2): check the trace a
+//! record-mode [`Comm`](crate::cluster::Comm) captured — matched
+//! post/wait pairs in order, conserved send/recv volume per collective,
+//! and per-algorithm round-structure well-formedness (XOR-pairwise
+//! exchange only on power-of-two clusters, ring/tree arity, burst
+//! messages that add up to the posted volumes).
+
+use std::collections::HashMap;
+
+use super::Finding;
+use crate::cluster::{Rounds, TraceEvent};
+
+const REMEDY_ENGINE: &str =
+    "fix the engine's collective schedule (cluster::Comm call order)";
+const REMEDY_ALGO: &str =
+    "fix the collective's round derivation in cluster::comm";
+
+/// Lint one captured schedule. `workers` is the cluster size every
+/// event's volume vectors must agree with.
+pub fn check_trace(events: &[TraceEvent], workers: usize) -> Vec<Finding> {
+    let mut out = Vec::new();
+    // seq -> (event index, waited count)
+    let mut posts: HashMap<usize, (usize, usize)> = HashMap::new();
+    let mut last_seq: Option<usize> = None;
+
+    for (i, ev) in events.iter().enumerate() {
+        match ev {
+            TraceEvent::Post { seq, kind, algo, workers: w, sent, recv, rounds } => {
+                let site = format!("trace[{i}] {}#{seq}", kind.name());
+                if posts.insert(*seq, (i, 0)).is_some() {
+                    out.push(Finding::error(
+                        &site,
+                        "duplicate post sequence number",
+                        REMEDY_ALGO,
+                    ));
+                }
+                if last_seq.is_some_and(|p| *seq <= p) {
+                    out.push(Finding::error(
+                        &site,
+                        "post sequence numbers must increase monotonically",
+                        REMEDY_ALGO,
+                    ));
+                }
+                last_seq = Some(*seq);
+                if *w != workers {
+                    out.push(Finding::error(
+                        &site,
+                        format!("collective spans {w} workers on a {workers}-worker cluster"),
+                        REMEDY_ENGINE,
+                    ));
+                }
+                if sent.len() != workers || recv.len() != workers {
+                    out.push(Finding::error(
+                        &site,
+                        format!(
+                            "volume vectors have {} send / {} recv entries, expected {workers}",
+                            sent.len(),
+                            recv.len()
+                        ),
+                        REMEDY_ENGINE,
+                    ));
+                    continue;
+                }
+                let (s, r) = (sent.iter().sum::<usize>(), recv.iter().sum::<usize>());
+                if s != r {
+                    out.push(Finding::error(
+                        &site,
+                        format!("{s} bytes posted for send but {r} for receive"),
+                        "every byte sent must land somewhere: fix the pair matrix derivation",
+                    ));
+                }
+                check_rounds(&site, algo, rounds, sent, recv, workers, &mut out);
+            }
+            TraceEvent::Wait { seq } => {
+                let site = format!("trace[{i}] wait#{seq}");
+                match posts.get_mut(seq) {
+                    None => out.push(Finding::error(
+                        &site,
+                        "wait on a collective that was never posted (or waited before its post)",
+                        REMEDY_ENGINE,
+                    )),
+                    Some((_, waited)) => {
+                        *waited += 1;
+                        if *waited > 1 {
+                            out.push(Finding::error(
+                                &site,
+                                "collective waited more than once",
+                                REMEDY_ENGINE,
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // a posted-but-never-waited collective is a dropped CommHandle: its
+    // done-times never feed the timeline (the #[must_use] lint's static
+    // twin)
+    let mut dropped: Vec<(usize, usize)> = posts
+        .iter()
+        .filter(|(_, (_, waited))| *waited == 0)
+        .map(|(seq, (idx, _))| (*idx, *seq))
+        .collect();
+    dropped.sort_unstable();
+    for (idx, seq) in dropped {
+        out.push(Finding::error(
+            format!("trace[{idx}] post#{seq}"),
+            "collective posted but never waited (dropped CommHandle)",
+            "join every posted handle with wait()/wait_barrier()",
+        ));
+    }
+    out
+}
+
+/// Per-algorithm round-structure checks.
+fn check_rounds(
+    site: &str,
+    algo: &str,
+    rounds: &Rounds,
+    sent: &[usize],
+    recv: &[usize],
+    workers: usize,
+    out: &mut Vec<Finding>,
+) {
+    match rounds {
+        Rounds::Burst { msgs } => {
+            let mut per_src = vec![0usize; workers];
+            let mut per_dst = vec![0usize; workers];
+            for &(s, d, b) in msgs {
+                if s >= workers || d >= workers {
+                    out.push(Finding::error(
+                        site,
+                        format!("burst message {s}->{d} names a worker outside the cluster"),
+                        REMEDY_ALGO,
+                    ));
+                    return;
+                }
+                if s == d {
+                    out.push(Finding::error(
+                        site,
+                        format!("burst message {s}->{d} is a self-send"),
+                        REMEDY_ALGO,
+                    ));
+                }
+                if b == 0 {
+                    out.push(Finding::error(
+                        site,
+                        format!("burst message {s}->{d} carries zero bytes"),
+                        REMEDY_ALGO,
+                    ));
+                }
+                per_src[s] += b;
+                per_dst[d] += b;
+            }
+            if per_src != sent || per_dst != recv {
+                out.push(Finding::error(
+                    site,
+                    "burst messages do not add up to the posted per-worker volumes",
+                    REMEDY_ALGO,
+                ));
+            }
+        }
+        Rounds::PairRounds { rounds } => {
+            if !workers.is_power_of_two() {
+                out.push(Finding::error(
+                    site,
+                    format!("XOR-pairwise exchange on a {workers}-worker (non power-of-two) cluster"),
+                    "use the offset schedule (or the naive algorithm) off powers of two",
+                ));
+            }
+            if rounds.len() > workers.saturating_sub(1) {
+                out.push(Finding::error(
+                    site,
+                    format!("{} pairwise rounds exceed the {workers}-worker bound", rounds.len()),
+                    REMEDY_ALGO,
+                ));
+            }
+            let mut seen_pairs: Vec<(usize, usize)> = Vec::new();
+            for (r, pairs) in rounds.iter().enumerate() {
+                let mut busy = vec![false; workers];
+                for &(a, b) in pairs {
+                    if a >= b || b >= workers {
+                        out.push(Finding::error(
+                            site,
+                            format!("round {r} pair ({a},{b}) is not an ordered in-cluster pair"),
+                            REMEDY_ALGO,
+                        ));
+                        continue;
+                    }
+                    if busy[a] || busy[b] {
+                        out.push(Finding::error(
+                            site,
+                            format!("round {r} schedules a worker into two simultaneous pairs"),
+                            REMEDY_ALGO,
+                        ));
+                    }
+                    busy[a] = true;
+                    busy[b] = true;
+                    if seen_pairs.contains(&(a, b)) {
+                        out.push(Finding::error(
+                            site,
+                            format!("pair ({a},{b}) exchanges in two different rounds"),
+                            REMEDY_ALGO,
+                        ));
+                    }
+                    seen_pairs.push((a, b));
+                }
+            }
+        }
+        Rounds::OffsetRounds { rounds } => {
+            if *rounds > workers.saturating_sub(1) {
+                out.push(Finding::error(
+                    site,
+                    format!("{rounds} offset rounds exceed the {workers}-worker bound"),
+                    REMEDY_ALGO,
+                ));
+            }
+        }
+        Rounds::Ring { participants } => {
+            if *participants != workers {
+                out.push(Finding::error(
+                    site,
+                    format!("ring spans {participants} participants on a {workers}-worker cluster"),
+                    REMEDY_ALGO,
+                ));
+            }
+            if sent.windows(2).any(|w| w[0] != w[1]) {
+                out.push(Finding::error(
+                    site,
+                    "ring allreduce must move the same share through every participant",
+                    REMEDY_ALGO,
+                ));
+            }
+        }
+        Rounds::Tree { root, fan_in, fan_out } => {
+            let root = *root;
+            if root >= workers {
+                out.push(Finding::error(
+                    site,
+                    format!("tree root {root} outside the {workers}-worker cluster"),
+                    REMEDY_ALGO,
+                ));
+                return;
+            }
+            if *fan_in != workers - 1 || *fan_out != workers - 1 {
+                out.push(Finding::error(
+                    site,
+                    format!("flat tree fan-in {fan_in}/fan-out {fan_out} != {}", workers - 1),
+                    REMEDY_ALGO,
+                ));
+            }
+            let mut leaf = 0usize;
+            for (w, &b) in sent.iter().enumerate() {
+                if w != root {
+                    leaf = b;
+                    break;
+                }
+            }
+            if sent.iter().enumerate().any(|(w, &b)| w != root && b != leaf) {
+                out.push(Finding::error(
+                    site,
+                    "flat-tree leaves must send equal blocks",
+                    REMEDY_ALGO,
+                ));
+            }
+            if workers > 1 && sent[root] != leaf * (workers - 1) {
+                out.push(Finding::error(
+                    site,
+                    format!(
+                        "root re-broadcast {} != {} leaves x {leaf} bytes",
+                        sent[root],
+                        workers - 1
+                    ),
+                    REMEDY_ALGO,
+                ));
+            }
+        }
+        Rounds::Piece => {
+            if sent.windows(2).any(|w| w[0] != w[1]) {
+                out.push(Finding::error(
+                    site,
+                    "pipeline pieces charge one uniform message per worker",
+                    REMEDY_ALGO,
+                ));
+            }
+        }
+        Rounds::Sequential { senders } => {
+            if *senders != workers {
+                out.push(Finding::error(
+                    site,
+                    format!("sequential broadcast serializes {senders} senders, expected {workers}"),
+                    REMEDY_ALGO,
+                ));
+            }
+        }
+        Rounds::P2p => {
+            if sent.iter().filter(|&&b| b > 0).count() > 1 {
+                out.push(Finding::error(
+                    site,
+                    "point-to-point post charges more than one sender",
+                    REMEDY_ENGINE,
+                ));
+            }
+        }
+    }
+    // algorithm label / round-structure agreement
+    let ok = matches!(
+        (algo, rounds),
+        ("naive", Rounds::Burst { .. })
+            | ("pairwise", Rounds::PairRounds { .. })
+            | ("pairwise", Rounds::OffsetRounds { .. })
+            | ("ring", Rounds::Ring { .. })
+            | ("flat_tree", Rounds::Tree { .. })
+            | ("piece", Rounds::Piece)
+            | ("sequential", Rounds::Sequential { .. })
+            | ("p2p", Rounds::P2p)
+    );
+    if !ok {
+        out.push(Finding::error(
+            site,
+            format!("algorithm '{algo}' does not match its round structure"),
+            REMEDY_ALGO,
+        ));
+    }
+}

@@ -1,0 +1,200 @@
+//! Chunk-geometry checker (DESIGN.md §8, family 4): a
+//! [`ChunkPlan`](crate::graph::chunk::ChunkPlan) must cover every
+//! destination row exactly once with contiguous chunks, carry every edge
+//! exactly once, and cut passes row-aligned — a row splits across passes
+//! only when it alone overflows the edge bucket, and then at `e_bucket`
+//! multiples (the bitwise accumulation-order contract the host-staging
+//! scheduler relies on).
+
+use super::Finding;
+use crate::graph::chunk::ChunkPlan;
+use crate::graph::Csr;
+
+const REMEDY_LOWER: &str = "fix graph::chunk::ChunkPlan::build (lowering invariant)";
+
+pub fn check_chunk_plan(plan: &ChunkPlan, g: &Csr) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let v = g.num_vertices();
+    if plan.num_vertices != v {
+        out.push(Finding::error(
+            "chunk plan",
+            format!("plan built over {} vertices, graph has {v}", plan.num_vertices),
+            REMEDY_LOWER,
+        ));
+    }
+
+    // rows covered exactly once, in order, no gaps or overlaps
+    let mut next = 0usize;
+    for (ci, c) in plan.chunks.iter().enumerate() {
+        if c.rows.start != next {
+            out.push(Finding::error(
+                format!("chunk {ci}"),
+                format!("rows start at {} but previous chunk ended at {next}", c.rows.start),
+                "chunks must tile the vertex range contiguously",
+            ));
+        }
+        if c.rows.end <= c.rows.start {
+            out.push(Finding::error(
+                format!("chunk {ci}"),
+                "empty or inverted row range".to_string(),
+                REMEDY_LOWER,
+            ));
+        }
+        next = c.rows.end;
+    }
+    if next != v {
+        out.push(Finding::error(
+            "chunk plan",
+            format!("chunks cover rows up to {next}, graph has {v}"),
+            "chunks must tile the vertex range contiguously",
+        ));
+    }
+
+    // every edge carried exactly once
+    let carried: usize = plan.chunks.iter().map(|c| c.live_edges).sum();
+    if carried != g.num_edges() {
+        out.push(Finding::error(
+            "chunk plan",
+            format!("chunks carry {carried} edges, graph has {}", g.num_edges()),
+            "each destination row's full in-edge list belongs to exactly one chunk",
+        ));
+    }
+
+    for (ci, c) in plan.chunks.iter().enumerate() {
+        check_chunk(plan, ci, g, &mut out);
+        // the dedup basis must be a sorted unique src list
+        if c.src_set.windows(2).any(|w| w[0] >= w[1]) {
+            out.push(Finding::error(
+                format!("chunk {ci} src_set"),
+                "source set is not sorted-unique".to_string(),
+                "the pipeline dedup (Fig 9d) requires a sorted unique src basis",
+            ));
+        }
+    }
+    out
+}
+
+fn check_chunk(plan: &ChunkPlan, ci: usize, g: &Csr, out: &mut Vec<Finding>) {
+    let c = &plan.chunks[ci];
+    let nr = c.num_rows();
+    let mut pass_total = 0usize;
+    // per local row: (pass index, segment length) in pass order
+    let mut segs: Vec<Vec<(usize, usize)>> = vec![Vec::new(); nr];
+
+    for (pi, pass) in c.passes.iter().enumerate() {
+        let site = format!("chunk {ci} pass {pi}");
+        if pass.row_ptr.len() != plan.c_bucket + 1 {
+            out.push(Finding::error(
+                &site,
+                format!("row_ptr length {} != c_bucket+1 {}", pass.row_ptr.len(), plan.c_bucket + 1),
+                REMEDY_LOWER,
+            ));
+            return;
+        }
+        for arr_len in [pass.col.len(), pass.edge_dst.len(), pass.w.len()] {
+            if arr_len != plan.e_bucket {
+                out.push(Finding::error(
+                    &site,
+                    format!("edge array length {arr_len} != e_bucket {}", plan.e_bucket),
+                    "pass buffers pad to the artifact's edge bucket exactly",
+                ));
+                return;
+            }
+        }
+        if pass.live_edges > plan.e_bucket {
+            out.push(Finding::error(
+                &site,
+                format!("{} live edges overflow the {} edge bucket", pass.live_edges, plan.e_bucket),
+                REMEDY_LOWER,
+            ));
+        }
+        let mut prev = 0i64;
+        for (r, &p) in pass.row_ptr.iter().enumerate() {
+            if (p as i64) < prev {
+                out.push(Finding::error(
+                    &site,
+                    format!("row_ptr decreases at row {r}"),
+                    REMEDY_LOWER,
+                ));
+                return;
+            }
+            prev = p as i64;
+        }
+        let last = pass.row_ptr.last().copied().unwrap_or(0) as usize;
+        if last != pass.live_edges {
+            out.push(Finding::error(
+                &site,
+                format!("row_ptr ends at {last} but the pass claims {} live edges", pass.live_edges),
+                REMEDY_LOWER,
+            ));
+        }
+        // segment bookkeeping + edge_dst/col consistency on live entries
+        for local in 0..nr {
+            let (lo, hi) = (pass.row_ptr[local] as usize, pass.row_ptr[local + 1] as usize);
+            if hi > lo {
+                segs[local].push((pi, hi - lo));
+                for e in lo..hi {
+                    if pass.edge_dst[e] as usize != local {
+                        out.push(Finding::error(
+                            &site,
+                            format!("edge {e} routed to row {} inside row {local}'s segment", pass.edge_dst[e]),
+                            REMEDY_LOWER,
+                        ));
+                        return;
+                    }
+                    if pass.col[e] as usize >= plan.num_vertices {
+                        out.push(Finding::error(
+                            &site,
+                            format!("edge {e} sources vertex {} outside the graph", pass.col[e]),
+                            REMEDY_LOWER,
+                        ));
+                        return;
+                    }
+                }
+            }
+        }
+        pass_total += pass.live_edges;
+    }
+
+    if pass_total != c.live_edges {
+        out.push(Finding::error(
+            format!("chunk {ci}"),
+            format!("passes carry {pass_total} edges, chunk claims {}", c.live_edges),
+            REMEDY_LOWER,
+        ));
+    }
+
+    // row-aligned, e_bucket-multiple cuts; per-row edge counts exact
+    for (local, row_segs) in segs.iter().enumerate() {
+        let deg = g.in_deg(c.rows.start + local);
+        let got: usize = row_segs.iter().map(|&(_, len)| len).sum();
+        if got != deg {
+            out.push(Finding::error(
+                format!("chunk {ci} row {local}"),
+                format!("passes carry {got} of the row's {deg} in-edges"),
+                "every row's full in-edge list must be lowered exactly once",
+            ));
+            continue;
+        }
+        if deg <= plan.e_bucket {
+            if row_segs.len() > 1 {
+                out.push(Finding::error(
+                    format!("chunk {ci} row {local}"),
+                    format!("row of degree {deg} straddles {} passes", row_segs.len()),
+                    "rows that fit one pass must never split (row-aligned cuts)",
+                ));
+            }
+        } else {
+            for (i, &(_, len)) in row_segs.iter().enumerate() {
+                if i + 1 < row_segs.len() && len != plan.e_bucket {
+                    out.push(Finding::error(
+                        format!("chunk {ci} row {local}"),
+                        format!("oversized row splits off-bucket (segment of {len} edges)"),
+                        "oversized rows must split at e_bucket multiples",
+                    ));
+                    break;
+                }
+            }
+        }
+    }
+}

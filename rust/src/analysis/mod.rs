@@ -1,0 +1,204 @@
+//! Static plan/schedule verification (DESIGN.md §8): prove a run
+//! configuration's declarative plans sound **without executing any
+//! epoch** — no artifact runs, no `EventSim` advance.
+//!
+//! Four invariant families, one checker module each:
+//!
+//! * [`shape`] — shape/dtype flow through the artifact plan: every dense
+//!   chain, aggregation panel and loss artifact a run will request
+//!   exists and composes (the class of defect otherwise caught by
+//!   refexec panics minutes into an epoch);
+//! * [`commlint`] — the collective schedule captured by a record-mode
+//!   [`Comm`](crate::cluster::Comm) is well-formed: matched post/wait
+//!   pairs, conserved send/recv volumes, per-algorithm round structure;
+//! * [`staging`] — the host-staging residency plan honours the device
+//!   budget at every point and its byte ledger conserves exactly;
+//! * [`geometry`] — chunk geometry covers every row exactly once with
+//!   row-aligned, e_bucket-multiple pass cuts.
+//!
+//! Every violation is a structured [`Finding`] carrying severity, the
+//! site, and a remedy — the same spirit as the scheduler's OOM messages
+//! that name the knob to turn. `neutron-tp check` runs the whole pass
+//! from the CLI; `train`/`serve --pre-flight` run it before committing
+//! to a run. The pass is mutation-tested (`rust/tests/analysis.rs`):
+//! seeded defects in each family must each surface as a Finding.
+
+pub mod commlint;
+pub mod geometry;
+pub mod shape;
+pub mod staging;
+
+use std::fmt;
+
+use crate::config::{RunConfig, System, Task};
+use crate::graph::chunk::ChunkPlan;
+use crate::graph::datasets::{self, Dataset, Profile};
+use crate::graph::Csr;
+use crate::model::layer_dims;
+use crate::parallel::common as par_common;
+use crate::parallel::trace;
+use crate::runtime::ArtifactStore;
+use crate::sched::StagingPlan;
+use crate::tensor::dim_slices;
+
+/// How bad a finding is. `Error` findings fail `check` (and a
+/// `--pre-flight` run); warnings are reported but don't gate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+/// One violated invariant: where, what, and which knob fixes it.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub severity: Severity,
+    /// the plan location (e.g. `trace[12] Split#4`, `staging op 9`)
+    pub site: String,
+    pub message: String,
+    pub remedy: String,
+}
+
+impl Finding {
+    pub fn error(
+        site: impl Into<String>,
+        message: impl Into<String>,
+        remedy: impl Into<String>,
+    ) -> Finding {
+        Finding {
+            severity: Severity::Error,
+            site: site.into(),
+            message: message.into(),
+            remedy: remedy.into(),
+        }
+    }
+
+    pub fn warning(
+        site: impl Into<String>,
+        message: impl Into<String>,
+        remedy: impl Into<String>,
+    ) -> Finding {
+        Finding {
+            severity: Severity::Warning,
+            site: site.into(),
+            message: message.into(),
+            remedy: remedy.into(),
+        }
+    }
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let sev = match self.severity {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        };
+        write!(
+            f,
+            "{sev}[{}]: {} (remedy: {})",
+            self.site, self.message, self.remedy
+        )
+    }
+}
+
+/// True when any finding is `Error`-severity (the gate `check` and
+/// `--pre-flight` apply).
+pub fn has_errors(findings: &[Finding]) -> bool {
+    findings.iter().any(|f| f.severity == Severity::Error)
+}
+
+/// Statically verify one run configuration end to end. Materializes only
+/// the training graph (no features, labels or artifacts execute), derives
+/// every plan the run would derive, and checks all four invariant
+/// families. An invalid config is itself a Finding, not an `Err` — the
+/// verifier's job is to report, not to crash.
+pub fn check_run(cfg: &RunConfig, store: &ArtifactStore) -> Vec<Finding> {
+    if let Err(e) = cfg.validate() {
+        return vec![Finding::error(
+            "config",
+            format!("{e:#}"),
+            "fix the run configuration before planning",
+        )];
+    }
+    let Some(p) = datasets::profile(&cfg.profile) else {
+        return vec![Finding::error(
+            format!("config profile '{}'", cfg.profile),
+            "unknown dataset profile",
+            "pick a builtin profile (see graph::datasets::PROFILES)",
+        )];
+    };
+    let g = Dataset::generate_graph(p, cfg.seed);
+    check_with_graph(cfg, &p, &g, store)
+}
+
+/// [`check_run`] with the training graph already materialized (the
+/// `--all-profiles` matrix shares one graph per profile across systems).
+pub fn check_with_graph(
+    cfg: &RunConfig,
+    p: &Profile,
+    g: &Csr,
+    store: &ArtifactStore,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+
+    // family 1a: the artifact plan itself is internally consistent
+    out.extend(shape::check_store(store));
+
+    let lp = cfg.task == Task::LinkPrediction;
+    let dims = layer_dims(p, cfg.layers, cfg.feat_dim, lp);
+    let tp = matches!(cfg.system, System::NeutronTp | System::NaiveTp);
+
+    // families 3 + 4 apply to the TP engines, the only ones that derive
+    // chunk geometry and (NeutronTP only) a host-staging plan
+    let mut geo = None;
+    if tp {
+        let allow_swap = cfg.system == System::NeutronTp;
+        match par_common::memplan_for(cfg, p, g, store, &dims, allow_swap) {
+            Ok(plan) => {
+                geo = Some(plan.geometry);
+                let cp = ChunkPlan::build(
+                    g,
+                    plan.geometry.rows_per_chunk,
+                    plan.geometry.c_bucket,
+                    plan.geometry.e_bucket,
+                );
+                out.extend(geometry::check_chunk_plan(&cp, g));
+                if let Some(spec) = &plan.staging {
+                    let wf = dims.last().copied().unwrap_or(1);
+                    let slice_w = dim_slices(wf, cfg.workers)[0].len().max(1);
+                    match StagingPlan::build(spec, &cp.chunks, slice_w, cfg.layers) {
+                        Ok(sp) => out.extend(staging::check_staging_plan(
+                            &sp,
+                            cp.num_chunks() * cfg.layers,
+                        )),
+                        Err(e) => out.push(Finding::error(
+                            "staging plan",
+                            format!("{e:#}"),
+                            "raise device_mem_mb or add workers (narrower dim slices)",
+                        )),
+                    }
+                }
+            }
+            Err(e) => out.push(Finding::error(
+                "memory plan",
+                format!("{e:#}"),
+                "enable chunk_sched, raise device_mem_mb, or turn on [mem] swap",
+            )),
+        }
+    }
+
+    // family 1b: the shape flow this run will demand from the plan
+    out.extend(shape::check_shape_flow(cfg, p, store, geo.as_ref()));
+
+    // family 2: the collective schedule, captured in record mode
+    match trace::record_comm_schedule(cfg, p, g, store) {
+        Ok((events, _comm)) => out.extend(commlint::check_trace(&events, cfg.workers)),
+        Err(e) => out.push(Finding::error(
+            "comm schedule",
+            format!("cannot capture schedule: {e:#}"),
+            "fix the memory plan findings first",
+        )),
+    }
+
+    out
+}

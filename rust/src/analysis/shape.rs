@@ -1,0 +1,382 @@
+//! Shape/dtype-flow checks (DESIGN.md §8, family 1): the artifact plan is
+//! internally consistent, and the specific artifacts a run configuration
+//! will request — dense chains, aggregation panels, attention and loss
+//! heads — all exist and compose. Statically catches what otherwise
+//! surfaces as a refexec shape panic mid-epoch.
+
+use super::Finding;
+use crate::config::{AggImpl, ModelKind, RunConfig, System, Task};
+use crate::graph::datasets::Profile;
+use crate::runtime::artifacts::{ArtifactInfo, DType};
+use crate::runtime::ArtifactStore;
+use crate::sched::ChunkGeometry;
+use crate::tensor::{pad_dim, row_slices};
+
+const REMEDY_REGEN: &str =
+    "regenerate the artifact plan (make artifacts) or fix the manifest entry";
+const REMEDY_BUCKET: &str =
+    "pick a planned bucket: builtin feat dims, workers in {1,2,4,8,16}, layers <= 8";
+
+/// Internal consistency of every artifact in the store: per-kind input
+/// arity, dtype, and cross-input dimension agreement. A manifest edited
+/// by hand (or a buggy aot.py change) fails here before any run reads it.
+pub fn check_store(store: &ArtifactStore) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for a in store.infos() {
+        for msg in artifact_defects(a) {
+            out.push(Finding::error(format!("artifact {}", a.name), msg, REMEDY_REGEN));
+        }
+        if !KNOWN_KINDS.contains(&a.kind.as_str()) {
+            out.push(Finding::warning(
+                format!("artifact {}", a.name),
+                format!("unknown artifact kind '{}' — not statically checked", a.kind),
+                "teach analysis::shape about the new kind",
+            ));
+        }
+    }
+    // deterministic report order regardless of hash-map iteration
+    out.sort_by(|x, y| x.site.cmp(&y.site).then(x.message.cmp(&y.message)));
+    out
+}
+
+const KNOWN_KINDS: &[&str] = &[
+    "dense_relu_fwd",
+    "dense_linear_fwd",
+    "dense_relu_bwd",
+    "dense_linear_bwd",
+    "nn_chain_fwd",
+    "nn_chain_bwd",
+    "softmax_xent",
+    "attn_scores",
+    "agg_pallas",
+    "agg_scatter",
+    "edge_softmax",
+    "lp_loss",
+];
+
+/// dimension of input `name` along `axis`; 0 when absent (absence is
+/// reported separately by the arity check)
+fn dim_of(a: &ArtifactInfo, name: &str, axis: usize) -> usize {
+    a.inputs
+        .iter()
+        .find(|i| i.name == name)
+        .and_then(|i| i.shape.get(axis).copied())
+        .unwrap_or(0)
+}
+
+fn artifact_defects(a: &ArtifactInfo) -> Vec<String> {
+    let mut msgs = Vec::new();
+    let dim = |name: &str, axis: usize| dim_of(a, name, axis);
+    let have_all = |names: &[&str], msgs: &mut Vec<String>| -> bool {
+        let mut ok = true;
+        for n in names {
+            if !a.inputs.iter().any(|i| i.name == *n) {
+                msgs.push(format!("missing input '{n}' for kind {}", a.kind));
+                ok = false;
+            }
+        }
+        ok
+    };
+    let want_dtype = |name: &str, dt: DType, msgs: &mut Vec<String>| {
+        if let Some(i) = a.inputs.iter().find(|i| i.name == name) {
+            if i.dtype != dt {
+                msgs.push(format!("input '{name}' has dtype {:?}, expected {dt:?}", i.dtype));
+            }
+        }
+    };
+
+    match a.kind.as_str() {
+        "dense_relu_fwd" | "dense_linear_fwd" => {
+            if have_all(&["x", "w", "b"], &mut msgs) {
+                want_dtype("x", DType::F32, &mut msgs);
+                want_dtype("w", DType::F32, &mut msgs);
+                if dim("x", 1) != dim("w", 0) {
+                    msgs.push(format!("x cols {} != w rows {}", dim("x", 1), dim("w", 0)));
+                }
+                if dim("b", 0) != dim("w", 1) {
+                    msgs.push(format!("bias width {} != w cols {}", dim("b", 0), dim("w", 1)));
+                }
+            }
+        }
+        "dense_relu_bwd" | "dense_linear_bwd" => {
+            if have_all(&["g", "x", "w", "pre"], &mut msgs) {
+                if dim("g", 1) != dim("w", 1) {
+                    msgs.push(format!("grad cols {} != w cols {}", dim("g", 1), dim("w", 1)));
+                }
+                if dim("x", 1) != dim("w", 0) {
+                    msgs.push(format!("x cols {} != w rows {}", dim("x", 1), dim("w", 0)));
+                }
+                if dim("pre", 0) != dim("g", 0) || dim("pre", 1) != dim("g", 1) {
+                    msgs.push("pre-activation shape differs from grad shape".to_string());
+                }
+                if dim("x", 0) != dim("g", 0) {
+                    msgs.push(format!("x rows {} != grad rows {}", dim("x", 0), dim("g", 0)));
+                }
+            }
+        }
+        "nn_chain_fwd" | "nn_chain_bwd" => nn_chain_defects(a, &mut msgs),
+        "softmax_xent" => {
+            if have_all(&["logits", "labels", "smask", "cmask"], &mut msgs) {
+                want_dtype("labels", DType::I32, &mut msgs);
+                want_dtype("logits", DType::F32, &mut msgs);
+                let b = dim("logits", 0);
+                if dim("labels", 0) != b || dim("smask", 0) != b {
+                    msgs.push("labels/smask length differs from logits rows".to_string());
+                }
+                if dim("cmask", 0) != dim("logits", 1) {
+                    msgs.push(format!(
+                        "class mask width {} != logits cols {}",
+                        dim("cmask", 0),
+                        dim("logits", 1)
+                    ));
+                }
+            }
+        }
+        "attn_scores" => {
+            if have_all(&["h", "a1", "a2"], &mut msgs)
+                && (dim("a1", 0) != dim("h", 1) || dim("a2", 0) != dim("h", 1))
+            {
+                msgs.push("attention vector width differs from h cols".to_string());
+            }
+        }
+        "agg_pallas" | "agg_scatter" => {
+            if have_all(&["row_ptr", "edge_dst", "col_idx", "edge_w", "x"], &mut msgs) {
+                want_dtype("row_ptr", DType::I32, &mut msgs);
+                want_dtype("col_idx", DType::I32, &mut msgs);
+                want_dtype("edge_w", DType::F32, &mut msgs);
+                let e = dim("col_idx", 0);
+                if dim("edge_dst", 0) != e || dim("edge_w", 0) != e {
+                    msgs.push("edge arrays disagree on the edge bucket".to_string());
+                }
+                if dim("row_ptr", 0) < 2 {
+                    msgs.push("row_ptr bucket must cover at least one row".to_string());
+                }
+            }
+        }
+        "edge_softmax" => {
+            if have_all(&["col_idx", "edge_dst", "valid", "s_src", "s_dst"], &mut msgs) {
+                let e = dim("col_idx", 0);
+                if dim("edge_dst", 0) != e || dim("valid", 0) != e {
+                    msgs.push("edge arrays disagree on the edge bucket".to_string());
+                }
+            }
+        }
+        "lp_loss" => {
+            if have_all(&["h", "src", "dst", "neg", "mask"], &mut msgs) {
+                want_dtype("src", DType::I32, &mut msgs);
+                let pb = dim("src", 0);
+                if dim("dst", 0) != pb || dim("neg", 0) != pb || dim("mask", 0) != pb {
+                    msgs.push("pair arrays disagree on the pair bucket".to_string());
+                }
+            }
+        }
+        _ => {}
+    }
+    msgs
+}
+
+/// Chain artifacts carry their per-layer weights positionally
+/// (`x, w0, b0, ...` / `g, x, w0, pre0, ...`); verify the transition
+/// chain composes left to right.
+fn nn_chain_defects(a: &ArtifactInfo, msgs: &mut Vec<String>) {
+    let fwd = a.kind == "nn_chain_fwd";
+    let (fixed, w0, stride) = if fwd { (1, 1, 2) } else { (2, 2, 2) };
+    if a.inputs.len() < fixed + stride || (a.inputs.len() - fixed) % stride != 0 {
+        msgs.push(format!("chain arity {} malformed for {}", a.inputs.len(), a.kind));
+        return;
+    }
+    let l = (a.inputs.len() - fixed) / stride;
+    let shape = |i: usize, axis: usize| a.inputs[i].shape.get(axis).copied().unwrap_or(0);
+    let b = shape(0, 0);
+    let mut width = if fwd { shape(0, 1) } else { shape(1, 1) };
+    for i in 0..l {
+        let w = &a.inputs[w0 + stride * i];
+        if w.shape.len() != 2 {
+            msgs.push(format!("w{i} is not a matrix"));
+            return;
+        }
+        if w.shape[0] != width {
+            msgs.push(format!("w{i} rows {} != incoming width {width}", w.shape[0]));
+        }
+        // companion input: bias (fwd) or pre-activation (bwd)
+        let comp = &a.inputs[w0 + stride * i + 1];
+        let comp_width = comp.shape.last().copied().unwrap_or(0);
+        if comp_width != w.shape[1] {
+            msgs.push(format!(
+                "layer {i} companion width {comp_width} != w{i} cols {}",
+                w.shape[1]
+            ));
+        }
+        if !fwd && comp.shape.first().copied().unwrap_or(0) != b {
+            msgs.push(format!("pre{i} rows differ from the batch bucket {b}"));
+        }
+        width = w.shape[1];
+    }
+    if !fwd && shape(0, 1) != width {
+        msgs.push(format!("grad cols {} != chain output width {width}", shape(0, 1)));
+    }
+}
+
+/// The shape flow a run will demand: walk the layer-dimension chain and
+/// resolve every artifact the engines would request, reporting a Finding
+/// wherever the plan has no composing artifact.
+pub fn check_shape_flow(
+    cfg: &RunConfig,
+    p: &Profile,
+    store: &ArtifactStore,
+    geo: Option<&ChunkGeometry>,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let lp = cfg.task == Task::LinkPrediction;
+    let dims = crate::model::layer_dims(p, cfg.layers, cfg.feat_dim, lp);
+    let kp = pad_dim(p.k);
+    let l = dims.len() - 1;
+    // NN-phase batch: the widest row part (TP + full-graph DP) or the
+    // sampled mini-batch
+    let b = match cfg.system {
+        System::MiniBatch => cfg.batch_size.max(1),
+        _ => row_slices(p.v, cfg.workers)[0].len(),
+    };
+
+    // dense chain: fused when available, else the per-layer fallback the
+    // engines take — mirror both lookups
+    let fused = cfg.fused_nn && store.find_nn_chain(true, b, &dims).is_some();
+    if fused {
+        if store.find_nn_chain(false, b, &dims).is_none() {
+            out.push(Finding::error(
+                "nn chain bwd",
+                format!("fused forward chain exists but no backward chain for dims {dims:?}"),
+                REMEDY_REGEN,
+            ));
+        }
+    } else {
+        for i in 0..l {
+            let relu = i + 1 != l;
+            for fwd in [true, false] {
+                let dir = if fwd { "fwd" } else { "bwd" };
+                match store.find_dense(relu, fwd, b, dims[i], dims[i + 1]) {
+                    Ok(a) => check_dense_flow(a, fwd, b, dims[i], dims[i + 1], &mut out),
+                    Err(e) => out.push(Finding::error(
+                        format!("dense {dir} layer {i}"),
+                        format!("{e:#}"),
+                        REMEDY_BUCKET,
+                    )),
+                }
+            }
+        }
+    }
+
+    // loss head
+    match cfg.task {
+        Task::NodeClassification => match store.find_xent(b, kp) {
+            Ok(a) => {
+                let logit_w = dim_of(a, "logits", 1);
+                if logit_w != kp {
+                    out.push(Finding::error(
+                        format!("artifact {}", a.name),
+                        format!("logit width {logit_w} != padded classes {kp}"),
+                        REMEDY_REGEN,
+                    ));
+                }
+            }
+            Err(e) => {
+                out.push(Finding::error("loss head", format!("{e:#}"), REMEDY_BUCKET))
+            }
+        },
+        Task::LinkPrediction => {
+            if let Err(e) = store.find_lp(b, kp, 1) {
+                out.push(Finding::error("lp loss head", format!("{e:#}"), REMEDY_BUCKET));
+            }
+        }
+    }
+
+    // GAT attention head + per-chunk edge softmax
+    if cfg.model == ModelKind::Gat {
+        if let Err(e) = store.find_attn(b, kp) {
+            out.push(Finding::error(
+                "attention scores",
+                format!("{e:#}"),
+                REMEDY_BUCKET,
+            ));
+        }
+        if let Some(geo) = geo {
+            if let Err(e) = store.find_edge_softmax(geo.rows_per_chunk, geo.e_bucket, p.v) {
+                out.push(Finding::error(
+                    "edge softmax",
+                    format!("{e:#}"),
+                    REMEDY_BUCKET,
+                ));
+            }
+        }
+    }
+
+    // aggregation panel for the derived geometry (TP family), plus a
+    // bare availability check for the full-graph baselines
+    let pallas = cfg.agg_impl == AggImpl::Pallas;
+    match geo {
+        Some(geo) => match store.find_agg(pallas, geo.rows_per_chunk, geo.e_bucket, p.v) {
+            Ok(a) => {
+                let x0 = dim_of(a, "x", 0);
+                if x0 != p.v {
+                    out.push(Finding::error(
+                        format!("artifact {}", a.name),
+                        format!("source bucket {x0} != |V| {}", p.v),
+                        REMEDY_REGEN,
+                    ));
+                }
+            }
+            Err(e) => out.push(Finding::error(
+                "aggregation panel",
+                format!("{e:#}"),
+                "enable chunk_sched so geometry tracks the store's buckets",
+            )),
+        },
+        None => {
+            if let Err(e) = store.find_agg(pallas, 0, 1, p.v) {
+                out.push(Finding::error(
+                    "aggregation panel",
+                    format!("{e:#}"),
+                    REMEDY_BUCKET,
+                ));
+            }
+        }
+    }
+
+    out
+}
+
+/// The selected dense artifact must still compose with the symbolic flow
+/// (its selector keys on `w`; a mutated manifest can desynchronize the
+/// other inputs).
+fn check_dense_flow(
+    a: &ArtifactInfo,
+    fwd: bool,
+    b: usize,
+    d: usize,
+    h: usize,
+    out: &mut Vec<Finding>,
+) {
+    let site = format!("artifact {}", a.name);
+    let batch = if fwd { dim_of(a, "x", 0) } else { dim_of(a, "g", 0) };
+    if batch < b {
+        out.push(Finding::error(
+            site.clone(),
+            format!("batch bucket {batch} smaller than demanded rows {b}"),
+            REMEDY_BUCKET,
+        ));
+    }
+    if fwd && dim_of(a, "x", 1) != d {
+        out.push(Finding::error(
+            site.clone(),
+            format!("x width {} != layer input {d}", dim_of(a, "x", 1)),
+            REMEDY_REGEN,
+        ));
+    }
+    if !fwd && dim_of(a, "g", 1) != h {
+        out.push(Finding::error(
+            site,
+            format!("grad width {} != layer output {h}", dim_of(a, "g", 1)),
+            REMEDY_REGEN,
+        ));
+    }
+}

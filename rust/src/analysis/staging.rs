@@ -1,0 +1,201 @@
+//! Staging prover (DESIGN.md §8, family 3): replay a
+//! [`StagingPlan`](crate::sched::StagingPlan)'s transfer schedule
+//! symbolically and prove the residency invariants the host-staging
+//! scheduler promises — budget bound at every op, every prefetched panel
+//! consumed before eviction, exact byte-ledger conservation
+//! (`h2d == d2h + retained`), and no fetch of an evicted panel.
+
+use super::Finding;
+use crate::sched::staging::{StagingPlan, NO_DEP};
+
+const REMEDY_PLANNER: &str = "fix sched::staging::StagingPlan::build (planner invariant)";
+
+/// Prove one staging plan sound. `expected_steps` is the schedule length
+/// the engine will drive (`rounds * num_chunks`).
+pub fn check_staging_plan(plan: &StagingPlan, expected_steps: usize) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if plan.steps.len() != expected_steps {
+        out.push(Finding::error(
+            "staging steps",
+            format!("plan has {} steps, schedule drives {expected_steps}", plan.steps.len()),
+            REMEDY_PLANNER,
+        ));
+    }
+    if plan.pinned_bytes > plan.budget_bytes {
+        out.push(Finding::error(
+            "staging budget",
+            format!(
+                "pinned pass buffers {} exceed the {} budget outright",
+                plan.pinned_bytes, plan.budget_bytes
+            ),
+            "raise device_mem_mb",
+        ));
+        return out;
+    }
+
+    // per-step mandatory panels must fit next to the pinned base
+    for (s, step) in plan.steps.iter().enumerate() {
+        let need = plan.pinned_bytes + step.in_footprint + step.out_footprint;
+        if need > plan.budget_bytes {
+            out.push(Finding::error(
+                format!("staging step {s}"),
+                format!(
+                    "step panels need {need} bytes on device, budget is {}",
+                    plan.budget_bytes
+                ),
+                "raise device_mem_mb or add workers (narrower dim slices)",
+            ));
+        }
+    }
+
+    // replay the op schedule: residency, budget, ledger
+    let n_panels = 2 * plan.steps.len();
+    let mut resident: Vec<Option<(usize, usize)>> = vec![None; n_panels]; // (footprint, bytes)
+    let mut fetched_once = vec![false; n_panels];
+    let mut used = plan.pinned_bytes;
+    let mut peak = used;
+    let (mut h2d, mut d2h) = (0usize, 0usize);
+    let mut last_post = 0usize;
+
+    for (i, op) in plan.ops.iter().enumerate() {
+        let site = format!("staging op {i} (panel {})", op.panel);
+        if op.post_step < last_post {
+            out.push(Finding::error(
+                &site,
+                "ops are not in schedule order",
+                REMEDY_PLANNER,
+            ));
+        }
+        last_post = op.post_step;
+        if op.panel >= n_panels {
+            out.push(Finding::error(
+                &site,
+                format!("panel index outside the {n_panels}-panel schedule"),
+                REMEDY_PLANNER,
+            ));
+            continue;
+        }
+        if op.bytes > op.footprint {
+            out.push(Finding::error(
+                &site,
+                format!("moves {} bytes into a {}-byte panel", op.bytes, op.footprint),
+                REMEDY_PLANNER,
+            ));
+        }
+        if op.h2d {
+            if fetched_once[op.panel] {
+                out.push(Finding::error(
+                    &site,
+                    "panel fetched twice (re-fetch of an evicted panel)",
+                    "a panel's lifetime is fetch -> consume -> evict, exactly once",
+                ));
+            }
+            fetched_once[op.panel] = true;
+            if resident[op.panel].is_some() {
+                out.push(Finding::error(&site, "fetch of an already-resident panel", REMEDY_PLANNER));
+            }
+            if op.dep_step != op.panel / 2 {
+                out.push(Finding::error(
+                    &site,
+                    format!("fetch dependency step {} is not the panel's consumer", op.dep_step),
+                    REMEDY_PLANNER,
+                ));
+            }
+            if op.dep_step != NO_DEP && op.post_step > op.dep_step {
+                out.push(Finding::error(
+                    &site,
+                    "fetch posted after the step that needs it",
+                    REMEDY_PLANNER,
+                ));
+            }
+            resident[op.panel] = Some((op.footprint, op.bytes));
+            used += op.footprint;
+            h2d += op.bytes;
+            peak = peak.max(used);
+            if used > plan.budget_bytes {
+                out.push(Finding::error(
+                    &site,
+                    format!("residency {used} bytes exceeds the {} budget", plan.budget_bytes),
+                    "raise device_mem_mb or lower prefetch_depth",
+                ));
+            }
+        } else {
+            if op.dep_step != NO_DEP {
+                out.push(Finding::error(
+                    &site,
+                    "eviction carries a compute dependency",
+                    REMEDY_PLANNER,
+                ));
+            }
+            // consumed-before-evict: the panel's own step must have run
+            if op.panel / 2 >= op.post_step {
+                out.push(Finding::error(
+                    &site,
+                    format!(
+                        "panel for step {} evicted at step {} before being consumed",
+                        op.panel / 2,
+                        op.post_step
+                    ),
+                    "prefetched panels stay pinned until their step runs",
+                ));
+            }
+            match resident[op.panel].take() {
+                Some((fp, bytes)) => {
+                    if fp != op.footprint || bytes != op.bytes {
+                        out.push(Finding::error(
+                            &site,
+                            "eviction writes back a different footprint/volume than the fetch",
+                            "evictions must mirror their fetch exactly (byte-ledger conservation)",
+                        ));
+                    }
+                    used -= fp;
+                    d2h += bytes;
+                }
+                None => out.push(Finding::error(
+                    &site,
+                    "eviction of a panel that is not resident",
+                    REMEDY_PLANNER,
+                )),
+            }
+        }
+    }
+
+    // every scheduled panel must be fetched at some point
+    for (panel, fetched) in fetched_once.iter().enumerate() {
+        if !fetched {
+            out.push(Finding::error(
+                format!("staging panel {panel}"),
+                format!("panel for step {} is never fetched", panel / 2),
+                REMEDY_PLANNER,
+            ));
+        }
+    }
+
+    // ledger totals against the plan's own accounting
+    let retained: usize = resident.iter().flatten().map(|&(_, b)| b).sum();
+    let end_fp: usize = resident.iter().flatten().map(|&(fp, _)| fp).sum();
+    let totals = [
+        (h2d, plan.h2d_bytes, "H2D bytes"),
+        (d2h, plan.d2h_bytes, "D2H bytes"),
+        (peak, plan.planned_peak, "peak residency"),
+        (retained, plan.retained_bytes, "retained bytes"),
+        (end_fp, plan.end_resident_footprint, "end-resident footprint"),
+    ];
+    for (got, claimed, what) in totals {
+        if got != claimed {
+            out.push(Finding::error(
+                "staging ledger",
+                format!("replayed {what} {got} != planned {claimed}"),
+                REMEDY_PLANNER,
+            ));
+        }
+    }
+    if h2d != d2h + retained {
+        out.push(Finding::error(
+            "staging ledger",
+            format!("conservation broken: {h2d} H2D != {d2h} D2H + {retained} retained"),
+            "every fetched byte is either written back or still resident",
+        ));
+    }
+    out
+}

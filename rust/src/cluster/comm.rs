@@ -35,6 +35,7 @@
 //! breakdowns.
 
 use std::ops::Range;
+use std::sync::{Arc, Mutex};
 
 use super::event::EventSim;
 use crate::config::{AllReduceAlgo, AllToAllAlgo, CommTuning, NetModel, RunConfig};
@@ -42,6 +43,75 @@ use crate::tensor::Matrix;
 
 /// Per-worker completion times of a collective.
 pub type DoneTimes = Vec<f64>;
+
+// ---- record mode (static comm-schedule capture, DESIGN.md §8) ----------
+
+/// The round structure a collective committed to, captured in record mode
+/// so `analysis::commlint` can check per-algorithm well-formedness without
+/// replaying any timing.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Rounds {
+    /// Naive all-to-all: one burst of point-to-point messages
+    /// `(src, dst, bytes)`, every entry a real (non-zero) message.
+    Burst { msgs: Vec<(usize, usize, usize)> },
+    /// XOR-paired pairwise exchange (power-of-two clusters): the
+    /// unordered pairs that actually exchanged, per round.
+    PairRounds { rounds: Vec<Vec<(usize, usize)>> },
+    /// Round-robin offset schedule (non-power-of-two clusters).
+    OffsetRounds { rounds: usize },
+    /// Ring allreduce: every participant relays `2 (N-1)/N` of the block.
+    Ring { participants: usize },
+    /// Flat-tree allreduce: `fan_in` blocks into the root, `fan_out`
+    /// copies back out.
+    Tree { root: usize, fan_in: usize, fan_out: usize },
+    /// Chunk-level pipeline piece: one uniform message per worker.
+    Piece,
+    /// SANCUS-style sequential broadcast, `senders` serialized rounds.
+    Sequential { senders: usize },
+    /// Point-to-point message (p2p / fetch_rows).
+    P2p,
+}
+
+/// One captured schedule event. `Post` carries the per-worker sent/recv
+/// byte vectors — derived independently (row sums vs column sums of the
+/// pair matrix) so Σ sent == Σ recv checks the schedule, not one
+/// accumulator against itself. `Wait` marks the handle join point.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceEvent {
+    Post {
+        seq: usize,
+        kind: CommKind,
+        algo: &'static str,
+        workers: usize,
+        sent: Vec<usize>,
+        recv: Vec<usize>,
+        rounds: Rounds,
+    },
+    Wait {
+        seq: usize,
+    },
+}
+
+/// Shared capture buffer handed out by [`Comm::record`]. Cloning shares
+/// the buffer (the `Comm` and its outstanding `CommHandle`s all append to
+/// the same schedule).
+#[derive(Clone, Debug, Default)]
+pub struct CommTrace {
+    events: Arc<Mutex<Vec<TraceEvent>>>,
+}
+
+impl CommTrace {
+    /// Snapshot of the captured schedule so far.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.events.lock().map(|e| e.clone()).unwrap_or_default()
+    }
+
+    fn push(&self, ev: TraceEvent) {
+        if let Ok(mut e) = self.events.lock() {
+            e.push(ev);
+        }
+    }
+}
 
 /// Collective kinds a `Comm` attributes bytes/seconds to.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -178,19 +248,26 @@ impl Topology {
 pub struct CommHandle<T> {
     data: T,
     done: DoneTimes,
+    /// record mode only: the trace to append the `Wait` event to, and the
+    /// sequence number of this handle's `Post`.
+    rec: Option<(CommTrace, usize)>,
 }
 
 impl<T> CommHandle<T> {
     /// Resolve the collective: data plus per-worker done-times.
     pub fn wait(self) -> (T, DoneTimes) {
+        if let Some((trace, seq)) = &self.rec {
+            trace.push(TraceEvent::Wait { seq: *seq });
+        }
         (self.data, self.done)
     }
 
     /// Resolve and reduce the done-times to the slowest participant
     /// (barrier-style join).
     pub fn wait_barrier(self) -> (T, f64) {
-        let t = self.done.iter().copied().fold(0.0, f64::max);
-        (self.data, t)
+        let (data, done) = self.wait();
+        let t = done.iter().copied().fold(0.0, f64::max);
+        (data, t)
     }
 
     /// Peek at the per-worker done-times without consuming the handle.
@@ -212,6 +289,12 @@ pub struct Comm {
     stats: CommStats,
     /// sent-side bytes per worker (feeds `WorkerLoad::comm_bytes`)
     bytes_per_worker: Vec<usize>,
+    /// record mode (DESIGN.md §8): capture the collective schedule instead
+    /// of advancing the `EventSim`
+    trace: Option<CommTrace>,
+    next_seq: usize,
+    /// seq of the most recent `Post`, consumed by the next handle wrap
+    pending_seq: Option<usize>,
 }
 
 impl Comm {
@@ -224,6 +307,9 @@ impl Comm {
             topo: Topology::with_bw_scale(workers, &tuning.bw_scale),
             stats: CommStats::default(),
             bytes_per_worker: vec![0; workers],
+            trace: None,
+            next_seq: 0,
+            pending_seq: None,
         }
     }
 
@@ -246,6 +332,62 @@ impl Comm {
 
     pub fn bytes_per_worker(&self) -> &[usize] {
         &self.bytes_per_worker
+    }
+
+    // ---- record mode ----------------------------------------------------
+
+    /// Switch this communicator into **record mode** (DESIGN.md §8):
+    /// every collective posted from here on is captured as a
+    /// [`TraceEvent`] behind the unchanged API — same pair matrices, same
+    /// algorithm dispatch, same stats attribution — but **no `EventSim`
+    /// event is scheduled** and all done-times are zero. The returned
+    /// trace is the capture buffer; `analysis::commlint` checks it.
+    pub fn record(&mut self) -> CommTrace {
+        let trace = CommTrace::default();
+        self.trace = Some(trace.clone());
+        trace
+    }
+
+    /// True when [`Comm::record`] was called: collectives capture their
+    /// schedule instead of advancing the event sim.
+    pub fn recording(&self) -> bool {
+        self.trace.is_some()
+    }
+
+    /// Append a `Post` event and remember its seq for the handle about to
+    /// be wrapped. No-op outside record mode.
+    fn push_post(
+        &mut self,
+        kind: CommKind,
+        algo: &'static str,
+        sent: Vec<usize>,
+        recv: Vec<usize>,
+        rounds: Rounds,
+    ) {
+        if let Some(trace) = &self.trace {
+            let seq = self.next_seq;
+            self.next_seq += 1;
+            trace.push(TraceEvent::Post {
+                seq,
+                kind,
+                algo,
+                workers: self.workers(),
+                sent,
+                recv,
+                rounds,
+            });
+            self.pending_seq = Some(seq);
+        }
+    }
+
+    /// Wrap collective results in a `CommHandle`, attaching the pending
+    /// `Post` seq so the handle's `wait` lands a matching `Wait` event.
+    fn wrap<T>(&mut self, data: T, done: DoneTimes) -> CommHandle<T> {
+        let rec = match (&self.trace, self.pending_seq.take()) {
+            (Some(trace), Some(seq)) => Some((trace.clone(), seq)),
+            _ => None,
+        };
+        CommHandle { data, done, rec }
     }
 
     // ---- compute-stream passthrough ------------------------------------
@@ -279,6 +421,9 @@ impl Comm {
     /// frontier (DepComm-style neighbour/feature pull accounting).
     /// Returns the completion time.
     pub fn p2p(&mut self, w: usize, bytes: usize) -> f64 {
+        if self.record_p2p(w, bytes) {
+            return 0.0;
+        }
         let dur = self.topo.msg_secs(&self.net, w, bytes);
         let ready = self.sim.now(w);
         let done = self.sim.comm(w, dur, ready);
@@ -291,12 +436,34 @@ impl Comm {
     /// For bulk accounting of data that is already streaming (e.g. the
     /// GAT alpha share, where the bytes ride existing connections).
     pub fn p2p_wire(&mut self, w: usize, bytes: usize) -> f64 {
+        if self.record_p2p(w, bytes) {
+            return 0.0;
+        }
         let dur = self.topo.wire_secs(&self.net, w, bytes);
         let ready = self.sim.now(w);
         let done = self.sim.comm(w, dur, ready);
         self.stats.record(CommKind::PointToPoint, bytes, bytes, dur);
         self.bytes_per_worker[w] += bytes;
         done
+    }
+
+    /// Record-mode p2p capture: a blocking point-to-point is its own join
+    /// point, so the `Wait` lands immediately after the `Post`. Returns
+    /// false outside record mode.
+    fn record_p2p(&mut self, w: usize, bytes: usize) -> bool {
+        if self.trace.is_none() {
+            return false;
+        }
+        let n = self.workers();
+        let mut vol = vec![0usize; n];
+        vol[w] = bytes;
+        self.push_post(CommKind::PointToPoint, "p2p", vol.clone(), vol, Rounds::P2p);
+        if let (Some(trace), Some(seq)) = (&self.trace, self.pending_seq.take()) {
+            trace.push(TraceEvent::Wait { seq });
+        }
+        self.stats.record(CommKind::PointToPoint, bytes, bytes, 0.0);
+        self.bytes_per_worker[w] += bytes;
+        true
     }
 
     /// Point-to-point fetch of specific rows from an owner worker
@@ -331,6 +498,18 @@ impl Comm {
         let local: Vec<u32> = rows.iter().map(|&r| r - owner_base as u32).collect();
         let block = owner_data.gather_rows(&local);
         let bytes = block.bytes();
+        if self.trace.is_some() {
+            let n = self.workers();
+            let mut sent = vec![0usize; n];
+            let mut recv = vec![0usize; n];
+            sent[owner] = bytes;
+            recv[requester] = bytes;
+            self.push_post(CommKind::FetchRows, "p2p", sent, recv, Rounds::P2p);
+            self.stats.record(CommKind::FetchRows, bytes, bytes, 0.0);
+            self.bytes_per_worker[owner] += bytes;
+            let done = vec![0.0; n];
+            return self.wrap(block, done);
+        }
         let dur_o = self.topo.msg_secs(&self.net, owner, bytes);
         let dur_r = self.topo.msg_secs(&self.net, requester, bytes);
         let ready = self.sim.now(owner).max(self.sim.now(requester));
@@ -343,7 +522,7 @@ impl Comm {
         let mut done: DoneTimes = (0..self.workers()).map(|w| self.sim.now(w)).collect();
         done[owner] = t_owner;
         done[requester] = t_req.max(t_owner);
-        CommHandle { data: block, done }
+        self.wrap(block, done)
     }
 
     // ---- split / gather (the TP embedding collectives) ------------------
@@ -383,7 +562,7 @@ impl Comm {
             }
         }
         let done = self.all_to_all(&pair, CommKind::Split);
-        CommHandle { data: outs, done }
+        self.wrap(outs, done)
     }
 
     /// `gather`: dim-sliced inputs → vertex-sliced full-width outputs.
@@ -418,7 +597,65 @@ impl Comm {
             }
         }
         let done = self.all_to_all(&pair, CommKind::Gather);
-        CommHandle { data: outs, done }
+        self.wrap(outs, done)
+    }
+
+    /// Schedule-only [`Comm::isplit`]: the same pair matrix — worker `i`
+    /// sends its `row_parts[i]` rows restricted to `dim_parts[j]` columns
+    /// to worker `j`, f32 elements — without allocating or moving any
+    /// matrix data. The static verifier's split probe (DESIGN.md §8).
+    pub fn isplit_bytes(
+        &mut self,
+        row_parts: &[Range<usize>],
+        dim_parts: &[Range<usize>],
+    ) -> CommHandle<()> {
+        let n = row_parts.len();
+        let mut pair = vec![vec![0usize; n]; n];
+        for (i, rp) in row_parts.iter().enumerate() {
+            for (j, dp) in dim_parts.iter().enumerate() {
+                if i != j {
+                    pair[i][j] = rp.len() * dp.len() * 4;
+                }
+            }
+        }
+        let done = self.all_to_all(&pair, CommKind::Split);
+        self.wrap((), done)
+    }
+
+    /// Schedule-only [`Comm::igather`]: worker `j` sends rows
+    /// `row_parts[i]` of its `dim_parts[j]`-wide slice to worker `i`.
+    pub fn igather_bytes(
+        &mut self,
+        row_parts: &[Range<usize>],
+        dim_parts: &[Range<usize>],
+    ) -> CommHandle<()> {
+        let n = row_parts.len();
+        let mut pair = vec![vec![0usize; n]; n];
+        for (j, dp) in dim_parts.iter().enumerate() {
+            for (i, rp) in row_parts.iter().enumerate() {
+                if i != j {
+                    pair[j][i] = rp.len() * dp.len() * 4;
+                }
+            }
+        }
+        let done = self.all_to_all(&pair, CommKind::Gather);
+        self.wrap((), done)
+    }
+
+    /// Schedule-only [`Comm::iallgather_rows`]: worker `i` broadcasts a
+    /// block of `block_bytes[i]` to every peer.
+    pub fn iallgather_bytes(&mut self, block_bytes: &[usize]) -> CommHandle<()> {
+        let n = block_bytes.len();
+        let mut pair = vec![vec![0usize; n]; n];
+        for (i, &b) in block_bytes.iter().enumerate() {
+            for (j, pij) in pair[i].iter_mut().enumerate() {
+                if i != j {
+                    *pij = b;
+                }
+            }
+        }
+        let done = self.all_to_all(&pair, CommKind::AllgatherRows);
+        self.wrap((), done)
     }
 
     // ---- pipelined chunk pieces (paper §4.2.2) --------------------------
@@ -444,6 +681,15 @@ impl Comm {
 
     fn piece(&mut self, bytes: usize, kind: CommKind) -> CommHandle<()> {
         let n = self.workers();
+        if self.trace.is_some() {
+            let vol = vec![bytes; n];
+            self.push_post(kind, "piece", vol.clone(), vol, Rounds::Piece);
+            self.stats.record(kind, bytes * n, bytes * n, 0.0);
+            for b in self.bytes_per_worker.iter_mut() {
+                *b += bytes;
+            }
+            return self.wrap((), vec![0.0; n]);
+        }
         let mut done = vec![0.0; n];
         let mut secs = 0.0;
         for w in 0..n {
@@ -454,7 +700,7 @@ impl Comm {
             self.bytes_per_worker[w] += bytes;
         }
         self.stats.record(kind, bytes * n, bytes * n, secs);
-        CommHandle { data: (), done }
+        self.wrap((), done)
     }
 
     // ---- allreduce ------------------------------------------------------
@@ -477,14 +723,59 @@ impl Comm {
         let bytes = sum.bytes();
         if n <= 1 {
             let done = vec![self.sim.now(0)];
-            return CommHandle { data: sum, done };
+            return self.wrap(sum, done);
+        }
+        let done = self.allreduce_times(n, bytes);
+        self.wrap(sum, done)
+    }
+
+    /// Schedule-only allreduce over the full cluster: identical algorithm
+    /// dispatch and byte accounting as [`Comm::iallreduce_sum`] without
+    /// moving any data. The static verifier's entry point (DESIGN.md §8);
+    /// also usable as a pure cost-model probe.
+    pub fn iallreduce_bytes(&mut self, bytes: usize) -> CommHandle<()> {
+        let n = self.workers();
+        if n <= 1 {
+            let done = vec![self.sim.now(0)];
+            return self.wrap((), done);
+        }
+        let done = self.allreduce_times(n, bytes);
+        self.wrap((), done)
+    }
+
+    /// Allreduce timing core shared by the data-plane and byte-only
+    /// entries: in record mode, capture the algorithm's round structure
+    /// and per-worker volumes instead of advancing the sim.
+    fn allreduce_times(&mut self, n: usize, bytes: usize) -> DoneTimes {
+        if self.trace.is_some() {
+            let (algo, sent, rounds) = match self.allreduce {
+                AllReduceAlgo::Ring => {
+                    let share = 2.0 * (n - 1) as f64 / n as f64;
+                    let b = (share * bytes as f64) as usize;
+                    ("ring", vec![b; n], Rounds::Ring { participants: n })
+                }
+                AllReduceAlgo::FlatTree => {
+                    let mut sent = vec![bytes; n];
+                    sent[0] = (n - 1) * bytes;
+                    let rounds = Rounds::Tree { root: 0, fan_in: n - 1, fan_out: n - 1 };
+                    ("flat_tree", sent, rounds)
+                }
+            };
+            for (w, b) in sent.iter().enumerate() {
+                self.bytes_per_worker[w] += b;
+            }
+            let total: usize = sent.iter().sum();
+            // both algorithms move symmetric volumes: every sent byte of
+            // the reduce phase is a received byte of the broadcast phase
+            self.push_post(CommKind::AllreduceSum, algo, sent.clone(), sent, rounds);
+            self.stats.record(CommKind::AllreduceSum, total, total, 0.0);
+            return vec![0.0; n];
         }
         let ready: Vec<f64> = (0..n).map(|w| self.sim.now(w)).collect();
-        let done = match self.allreduce {
+        match self.allreduce {
             AllReduceAlgo::Ring => self.allreduce_ring(n, bytes, &ready),
             AllReduceAlgo::FlatTree => self.allreduce_flat_tree(n, bytes, &ready),
-        };
-        CommHandle { data: sum, done }
+        }
     }
 
     fn allreduce_ring(&mut self, n: usize, bytes: usize, ready: &[f64]) -> DoneTimes {
@@ -581,7 +872,7 @@ impl Comm {
             }
         }
         let done = self.all_to_all(&pair, CommKind::AllgatherRows);
-        CommHandle { data: full, done }
+        self.wrap(full, done)
     }
 
     // ---- sequential broadcast (SANCUS pathology) ------------------------
@@ -599,6 +890,26 @@ impl Comm {
     pub fn isequential_broadcast(&mut self, inputs: &[Matrix]) -> CommHandle<Matrix> {
         let n = inputs.len();
         let full = Matrix::concat_rows(inputs);
+        if self.trace.is_some() {
+            let peers = n.saturating_sub(1);
+            let sent: Vec<usize> = inputs.iter().map(|m| m.bytes() * peers).collect();
+            let total_in: usize = inputs.iter().map(Matrix::bytes).sum();
+            let recv: Vec<usize> =
+                inputs.iter().map(|m| total_in - m.bytes()).collect();
+            let sent_total: usize = sent.iter().sum();
+            for (w, b) in sent.iter().enumerate() {
+                self.bytes_per_worker[w] += b;
+            }
+            self.push_post(
+                CommKind::SequentialBroadcast,
+                "sequential",
+                sent,
+                recv,
+                Rounds::Sequential { senders: n },
+            );
+            self.stats.record(CommKind::SequentialBroadcast, sent_total, sent_total, 0.0);
+            return self.wrap(full, vec![0.0; n]);
+        }
         let lat = self.net.latency_us * 1e-6;
         let mut frontier = (0..n).map(|w| self.sim.now(w)).fold(0.0, f64::max);
         let mut secs = 0.0;
@@ -625,7 +936,7 @@ impl Comm {
         }
         self.stats
             .record(CommKind::SequentialBroadcast, sent_total, sent_total, secs);
-        CommHandle { data: full, done: vec![frontier; n] }
+        self.wrap(full, vec![frontier; n])
     }
 
     // ---- all-to-all timing core -----------------------------------------
@@ -637,6 +948,27 @@ impl Comm {
     /// with empty slices don't pay phantom latency).
     fn all_to_all(&mut self, pair: &[Vec<usize>], kind: CommKind) -> DoneTimes {
         let n = pair.len();
+        if self.trace.is_some() {
+            let sent: Vec<usize> = pair.iter().map(|row| row.iter().sum()).collect();
+            let recv: Vec<usize> =
+                (0..n).map(|w| (0..n).map(|p| pair[p][w]).sum()).collect();
+            let (algo, rounds) = match self.all_to_all {
+                AllToAllAlgo::Naive => ("naive", Rounds::Burst { msgs: burst_msgs(pair) }),
+                AllToAllAlgo::Pairwise if n.is_power_of_two() => {
+                    ("pairwise", Rounds::PairRounds { rounds: pairwise_rounds(pair) })
+                }
+                AllToAllAlgo::Pairwise => {
+                    ("pairwise", Rounds::OffsetRounds { rounds: n.saturating_sub(1) })
+                }
+            };
+            for (w, b) in sent.iter().enumerate() {
+                self.bytes_per_worker[w] += b;
+            }
+            let (s, r) = (sent.iter().sum(), recv.iter().sum());
+            self.push_post(kind, algo, sent, recv, rounds);
+            self.stats.record(kind, s, r, 0.0);
+            return vec![0.0; n];
+        }
         let ready: Vec<f64> = (0..n).map(|w| self.sim.now(w)).collect();
         let (done, secs) = match self.all_to_all {
             AllToAllAlgo::Naive => self.a2a_naive(pair, &ready),
@@ -741,6 +1073,38 @@ impl Comm {
         }
         (done, secs)
     }
+}
+
+/// The naive algorithm's burst: every real (non-zero) off-diagonal
+/// message of the pair matrix.
+fn burst_msgs(pair: &[Vec<usize>]) -> Vec<(usize, usize, usize)> {
+    let mut msgs = Vec::new();
+    for (i, row) in pair.iter().enumerate() {
+        for (j, &b) in row.iter().enumerate() {
+            if b > 0 {
+                msgs.push((i, j, b));
+            }
+        }
+    }
+    msgs
+}
+
+/// The XOR-paired exchange schedule (mirrors `a2a_pairwise`'s
+/// power-of-two path, including its skip of empty exchanges).
+fn pairwise_rounds(pair: &[Vec<usize>]) -> Vec<Vec<(usize, usize)>> {
+    let n = pair.len();
+    let mut rounds = Vec::with_capacity(n.saturating_sub(1));
+    for r in 1..n {
+        let mut round = Vec::new();
+        for w in 0..n {
+            let p = w ^ r;
+            if w < p && pair[w][p] + pair[p][w] > 0 {
+                round.push((w, p));
+            }
+        }
+        rounds.push(round);
+    }
+    rounds
 }
 
 #[cfg(test)]

@@ -8,5 +8,8 @@
 pub mod comm;
 pub mod event;
 
-pub use comm::{Comm, CommHandle, CommKind, CommStats, DoneTimes, KindStats, Topology};
+pub use comm::{
+    Comm, CommHandle, CommKind, CommStats, CommTrace, DoneTimes, KindStats, Rounds, Topology,
+    TraceEvent,
+};
 pub use event::{EventSim, StreamKind};

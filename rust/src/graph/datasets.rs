@@ -133,6 +133,21 @@ impl Dataset {
         }
     }
 
+    /// The normalized training graph of `(p, seed)` **without** features,
+    /// labels or masks: bit-identical to `generate(p, seed).graph` (the
+    /// SBM path consumes its RNG stream in label→edge→feature order, so
+    /// stopping after the edges preserves the draw). The static verifier
+    /// (`analysis`, DESIGN.md §8) plans against this so checking an
+    /// e2e-scale config stays allocation-light and sub-second.
+    pub fn generate_graph(p: Profile, seed: u64) -> Csr {
+        let raw = match p.skew {
+            Skew::Community => generate::sbm_graph(p.v, p.k, p.e / p.v, 0.8, seed),
+            Skew::Power => generate::rmat(p.v, p.e, generate::RMAT_SKEWED, seed),
+            Skew::Mild => generate::rmat(p.v, p.e, generate::RMAT_MILD, seed),
+        };
+        raw.with_self_loops().gcn_normalized()
+    }
+
     /// Padded class count used by all artifact heads.
     pub fn padded_classes(&self) -> usize {
         pad_dim(self.profile.k)

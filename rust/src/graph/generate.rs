@@ -68,25 +68,7 @@ pub struct Sbm {
 /// Assumption 1 of the paper's convergence analysis (§4.1.3).
 pub fn sbm(n: usize, k: usize, feat_dim: usize, avg_deg: usize, p_intra: f64, seed: u64) -> Sbm {
     let mut rng = Rng::seed_from_u64(seed);
-    let labels: Vec<i32> = (0..n).map(|_| rng.gen_range(k) as i32).collect();
-    // vertices grouped by community for fast intra sampling
-    let mut by_comm: Vec<Vec<u32>> = vec![Vec::new(); k];
-    for (v, &l) in labels.iter().enumerate() {
-        by_comm[l as usize].push(v as u32);
-    }
-    let mut edges = Vec::with_capacity(n * avg_deg);
-    for v in 0..n {
-        let comm = &by_comm[labels[v] as usize];
-        for _ in 0..avg_deg {
-            let src = if rng.gen_bool(p_intra) && !comm.is_empty() {
-                comm[rng.gen_range(comm.len())]
-            } else {
-                rng.gen_range(n) as u32
-            };
-            edges.push((src, v as u32));
-        }
-    }
-    let graph = Csr::from_edges(n, &edges);
+    let (labels, graph) = sbm_structure(n, k, avg_deg, p_intra, &mut rng);
 
     // centroids: +-2 pattern per community over a random sign basis
     let centroids = Matrix::from_fn(k, feat_dim, |r, c| {
@@ -110,6 +92,47 @@ pub fn sbm(n: usize, k: usize, feat_dim: usize, avg_deg: usize, p_intra: f64, se
         }
     }
     Sbm { graph, features, labels }
+}
+
+/// Labels + edges of the SBM, drawn from `rng` in the exact order
+/// [`sbm`] commits to (labels first, then `avg_deg` edge draws per
+/// vertex, features only afterwards) — so a graph-only caller consuming
+/// the same stream gets the bit-identical graph.
+fn sbm_structure(
+    n: usize,
+    k: usize,
+    avg_deg: usize,
+    p_intra: f64,
+    rng: &mut Rng,
+) -> (Vec<i32>, Csr) {
+    let labels: Vec<i32> = (0..n).map(|_| rng.gen_range(k) as i32).collect();
+    // vertices grouped by community for fast intra sampling
+    let mut by_comm: Vec<Vec<u32>> = vec![Vec::new(); k];
+    for (v, &l) in labels.iter().enumerate() {
+        by_comm[l as usize].push(v as u32);
+    }
+    let mut edges = Vec::with_capacity(n * avg_deg);
+    for v in 0..n {
+        let comm = &by_comm[labels[v] as usize];
+        for _ in 0..avg_deg {
+            let src = if rng.gen_bool(p_intra) && !comm.is_empty() {
+                comm[rng.gen_range(comm.len())]
+            } else {
+                rng.gen_range(n) as u32
+            };
+            edges.push((src, v as u32));
+        }
+    }
+    (labels, Csr::from_edges(n, &edges))
+}
+
+/// Graph-only SBM: the identical graph [`sbm`] would generate for the
+/// same arguments, without materializing features (the static verifier's
+/// path — checking an e2e-scale plan must not allocate a 100+ MB feature
+/// matrix).
+pub fn sbm_graph(n: usize, k: usize, avg_deg: usize, p_intra: f64, seed: u64) -> Csr {
+    let mut rng = Rng::seed_from_u64(seed);
+    sbm_structure(n, k, avg_deg, p_intra, &mut rng).1
 }
 
 /// Random features/labels for graphs without ground truth (paper's

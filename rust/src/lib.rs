@@ -28,6 +28,7 @@
 //! for the paper's 16-node GPU testbed (§4), and the checkpoint/serving
 //! path (§7).
 
+pub mod analysis;
 pub mod bench_harness;
 pub mod cluster;
 pub mod config;

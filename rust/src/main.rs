@@ -5,6 +5,7 @@
 //!                   [--checkpoint-dir D [--resume]] ...
 //! neutron-tp serve  [--checkpoint F | --profile P [--warm-epochs K]]
 //!                   [--requests N] [--batch-size B]
+//! neutron-tp check  [--all-profiles | same flags as train]
 //! neutron-tp bench  <fig3|fig4|...|serve_scale|all> [--out results/] [--fast]
 //! neutron-tp inspect [--artifacts artifacts/]
 //! ```
@@ -13,6 +14,7 @@
 
 use std::str::FromStr;
 
+use neutron_tp::analysis;
 use neutron_tp::bench_harness::experiments;
 use neutron_tp::config::RunConfig;
 use neutron_tp::graph::datasets::{self, Dataset};
@@ -44,13 +46,16 @@ fn run() -> anyhow::Result<()> {
     match cmd.as_str() {
         "train" => train(&flags),
         "serve" => serve_cmd(&flags),
+        "check" => check_cmd(&flags),
         "bench" => bench(&args[1..], &flags),
         "inspect" => inspect(&flags),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
         }
-        other => anyhow::bail!("unknown command '{other}' (try: train, serve, bench, inspect)"),
+        other => {
+            anyhow::bail!("unknown command '{other}' (try: train, serve, check, bench, inspect)")
+        }
     }
 }
 
@@ -67,6 +72,7 @@ fn print_usage() {
          \x20                  [--bw-scale S0,S1,...] [--checkpoint-dir D] [--resume]\n\
          \x20 neutron-tp serve [--checkpoint F | --profile P [--warm-epochs K]]\n\
          \x20                  [--requests N] [--batch-size B] [--executor-threads N]\n\
+         \x20 neutron-tp check [--all-profiles | same flags as train]\n\
          \x20 neutron-tp bench <{}|all> [--out DIR] [--fast]\n\
          \x20 neutron-tp inspect [--artifacts DIR]\n\n\
          systems: neutron_tp naive_tp dp_full dp_cache minibatch historical\n\n\
@@ -83,6 +89,13 @@ fn print_usage() {
          --no-swap restores the hard OOM. Baselines never swap (Table 2).\n\
          Swap traffic/stall/overlap is printed per epoch when engaged.\n\
          TOML: [mem] pcie_gbps/pcie_latency_us/prefetch_depth/swap.\n\n\
+         static verification (analysis, DESIGN.md §8): `check` proves a run's\n\
+         plans sound without executing an epoch — artifact shape/dtype flow,\n\
+         the collective schedule (record-mode Comm), the host-staging byte\n\
+         ledger, and chunk geometry; every violation names its site and the\n\
+         knob that fixes it. `check --all-profiles` sweeps all builtin\n\
+         profile x system combinations; `train`/`serve --pre-flight` run the\n\
+         same pass and abort on errors before any epoch executes.\n\n\
          checkpoints: --checkpoint-dir saves <D>/{} (versioned binary:\n\
          params + Adam moments + epoch counter; atomic rename) after every\n\
          epoch; --resume continues from it bit-identically. `serve` loads a\n\
@@ -195,6 +208,9 @@ fn train(flags: &Flags) -> anyhow::Result<()> {
     cfg.validate()?;
 
     let store = ArtifactStore::load(artifacts_dir(flags))?;
+    if flags.has("pre-flight") {
+        pre_flight(&cfg, &store)?;
+    }
     let p = datasets::profile(&cfg.profile).unwrap();
     eprintln!(
         "profile {} (stand-in for {}): |V|={} |E|={} d={} k={} h={}",
@@ -275,6 +291,9 @@ fn serve_cmd(flags: &Flags) -> anyhow::Result<()> {
         None => None,
     };
     cfg.validate()?;
+    if flags.has("pre-flight") {
+        pre_flight(&cfg, &store)?;
+    }
 
     let p = datasets::profile(&cfg.profile).unwrap();
     let data = match cfg.feat_dim {
@@ -360,6 +379,96 @@ fn bench(args: &[String], flags: &Flags) -> anyhow::Result<()> {
             std::fs::write(format!("{d}/{name}.csv"), &text)?;
         }
     }
+    Ok(())
+}
+
+/// `neutron-tp check`: static plan/schedule verification (DESIGN.md §8).
+/// Default mode verifies the one config `train` would run; `--all-profiles`
+/// sweeps every builtin profile x system combination.
+fn check_cmd(flags: &Flags) -> anyhow::Result<()> {
+    let store = ArtifactStore::load(artifacts_dir(flags))?;
+    if flags.has("all-profiles") {
+        return check_all_profiles(&store);
+    }
+    let mut cfg = match flags.get("config") {
+        Some(path) => RunConfig::from_toml(&std::fs::read_to_string(path)?)?,
+        None => RunConfig::default(),
+    };
+    apply_flag_overrides(&mut cfg, flags)?;
+    let findings = analysis::check_run(&cfg, &store);
+    for f in &findings {
+        println!("{f}");
+    }
+    let errors = findings
+        .iter()
+        .filter(|f| f.severity == analysis::Severity::Error)
+        .count();
+    if errors > 0 {
+        anyhow::bail!(
+            "check failed: {errors} error(s), {} warning(s) for {} on {}",
+            findings.len() - errors,
+            cfg.system.label(),
+            cfg.profile
+        );
+    }
+    println!(
+        "check clean: {} on {} ({} warning(s))",
+        cfg.system.label(),
+        cfg.profile,
+        findings.len()
+    );
+    Ok(())
+}
+
+fn check_all_profiles(store: &ArtifactStore) -> anyhow::Result<()> {
+    let mut failed = 0usize;
+    for p in datasets::PROFILES {
+        // one graph per profile, shared across all six systems
+        let g = Dataset::generate_graph(*p, RunConfig::default().seed);
+        for &system in neutron_tp::config::System::ALL {
+            let mut cfg = RunConfig::default();
+            cfg.profile = p.name.to_string();
+            cfg.system = system;
+            let findings = analysis::check_with_graph(&cfg, p, &g, store);
+            let errors = findings
+                .iter()
+                .filter(|f| f.severity == analysis::Severity::Error)
+                .count();
+            println!(
+                "{:<6} x {:<12} {}",
+                p.name,
+                system.name(),
+                if findings.is_empty() {
+                    "clean".to_string()
+                } else {
+                    format!("{errors} error(s), {} warning(s)", findings.len() - errors)
+                }
+            );
+            for f in &findings {
+                println!("  {f}");
+            }
+            if errors > 0 {
+                failed += 1;
+            }
+        }
+    }
+    if failed > 0 {
+        anyhow::bail!("check --all-profiles: {failed} combination(s) with errors");
+    }
+    Ok(())
+}
+
+/// `--pre-flight`: run the static verifier before committing to a
+/// train/serve run; errors abort before any epoch executes.
+fn pre_flight(cfg: &RunConfig, store: &ArtifactStore) -> anyhow::Result<()> {
+    let findings = analysis::check_run(cfg, store);
+    for f in &findings {
+        eprintln!("pre-flight: {f}");
+    }
+    if analysis::has_errors(&findings) {
+        anyhow::bail!("pre-flight check failed ({} finding(s)); see `neutron-tp check`", findings.len());
+    }
+    eprintln!("pre-flight check clean ({} warning(s))", findings.len());
     Ok(())
 }
 

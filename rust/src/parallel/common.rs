@@ -51,8 +51,22 @@ pub fn decoupled_memplan(
     dims: &[usize],
     allow_swap: bool,
 ) -> crate::Result<MemPlan> {
-    let cfg = ctx.cfg;
-    let p = &ctx.data.profile;
+    memplan_for(ctx.cfg, &ctx.data.profile, &ctx.data.graph, ctx.store, dims, allow_swap)
+}
+
+/// [`decoupled_memplan`] without a full `Ctx`: the same derivation from
+/// just `(cfg, profile, graph, store)`, so the static verifier
+/// (`analysis`, DESIGN.md §8) plans against the identical geometry and
+/// staging spec the engines would build — without features, labels or an
+/// executor pool existing.
+pub fn memplan_for(
+    cfg: &RunConfig,
+    p: &crate::graph::datasets::Profile,
+    g: &Csr,
+    store: &crate::runtime::ArtifactStore,
+    dims: &[usize],
+    allow_swap: bool,
+) -> crate::Result<MemPlan> {
     // device budget: resident panel = dim slice of the widest layer +
     // local rows of every activation
     let mem = DeviceMemory::from_mb(cfg.device_mem_mb);
@@ -61,8 +75,8 @@ pub fn decoupled_memplan(
         + p.v * pad_tile(widest.div_ceil(cfg.workers)) * 4;
     let pallas = cfg.agg_impl == crate::config::AggImpl::Pallas;
     match sched_chunks::choose_geometry(
-        ctx.store,
-        &ctx.data.graph,
+        store,
+        g,
         pallas,
         resident,
         &mem,
@@ -85,13 +99,13 @@ pub fn decoupled_memplan(
             let wf = *dims.last().unwrap();
             let slice_w = crate::tensor::dim_slices(wf, cfg.workers)[0].len();
             let geometry = sched_chunks::choose_geometry_staged(
-                ctx.store,
-                &ctx.data.graph,
+                store,
+                g,
                 pallas,
                 &mem,
                 slice_w,
             )?;
-            let pinned = sched_chunks::pass_bytes(&geometry, p.v, ctx.store.dim_tile);
+            let pinned = sched_chunks::pass_bytes(&geometry, p.v, store.dim_tile);
             Ok(MemPlan {
                 geometry,
                 staging: Some(StagingSpec {

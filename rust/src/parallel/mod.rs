@@ -22,6 +22,7 @@ pub mod dp_full;
 pub mod historical;
 pub mod minibatch;
 pub mod tp;
+pub mod trace;
 
 use crate::config::{RunConfig, System};
 use crate::graph::Dataset;

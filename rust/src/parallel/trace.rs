@@ -1,0 +1,209 @@
+//! Record-mode comm-schedule capture (DESIGN.md §8): replay one epoch's
+//! collective order for a run configuration against a recording [`Comm`]
+//! — no artifacts executed, no `EventSim` advance — producing the trace
+//! the static comm-schedule linter (`analysis::commlint`) checks.
+//!
+//! The mirrors below follow each engine's posting order exactly where the
+//! schedule is the point (the TP family: split/gather, pipelined pieces,
+//! GAT's attention prologue, the gradient allreduce). The data-parallel
+//! baselines' only *scheduled* collective is the gradient allreduce —
+//! their halo / broadcast traffic is blocking and self-joining — so their
+//! mirror is deliberately that one collective.
+
+use crate::cluster::{Comm, TraceEvent};
+use crate::config::{ModelKind, RunConfig, System, Task};
+use crate::graph::chunk::ChunkPlan;
+use crate::graph::datasets::Profile;
+use crate::graph::Csr;
+use crate::model::layer_dims;
+use crate::runtime::ArtifactStore;
+use crate::sched::PipelinePlan;
+use crate::tensor::{dim_slices, row_slices};
+
+use super::common;
+
+/// Capture the collective schedule of one epoch of `cfg` over the graph
+/// `g` (which must be the normalized training graph of `cfg.profile`).
+/// Returns the recorded events plus the communicator, whose
+/// `bytes_per_worker` ledger the caller may also inspect.
+pub fn record_comm_schedule(
+    cfg: &RunConfig,
+    p: &Profile,
+    g: &Csr,
+    store: &ArtifactStore,
+) -> crate::Result<(Vec<TraceEvent>, Comm)> {
+    let mut comm = Comm::for_run(cfg);
+    let trace = comm.record();
+    let lp = cfg.task == Task::LinkPrediction;
+    let dims = layer_dims(p, cfg.layers, cfg.feat_dim, lp);
+    match cfg.system {
+        System::NeutronTp => trace_tp(cfg, p, g, store, &dims, &mut comm, true)?,
+        System::NaiveTp => trace_tp(cfg, p, g, store, &dims, &mut comm, false)?,
+        System::DpFull | System::DpCache | System::MiniBatch | System::Historical => {
+            trace_allreduce(cfg, &dims, &mut comm);
+        }
+    }
+    Ok((trace.events(), comm))
+}
+
+/// The TP engines' epoch (`parallel::tp`): decoupled posts ONE
+/// split + gather pair around `layers` aggregation rounds per direction,
+/// naive TP posts one pair per layer per direction.
+fn trace_tp(
+    cfg: &RunConfig,
+    p: &Profile,
+    g: &Csr,
+    store: &ArtifactStore,
+    dims: &[usize],
+    comm: &mut Comm,
+    decoupled: bool,
+) -> crate::Result<()> {
+    let n = cfg.workers;
+    let v = p.v;
+    // same geometry derivation as TpEngine::new (naive TP never swaps)
+    let memplan = common::memplan_for(cfg, p, g, store, dims, decoupled)?;
+    let geo = memplan.geometry;
+    let plan = ChunkPlan::build(g, geo.rows_per_chunk, geo.c_bucket, geo.e_bucket);
+    let row_parts = row_slices(v, n);
+    let l = cfg.layers;
+
+    if decoupled {
+        let wf = *dims.last().expect("layer_dims is never empty");
+        let dim_parts = dim_slices(wf, n);
+        if cfg.model == ModelKind::Gat {
+            // attention prologue: allgather of the per-part score columns
+            // (one f32 per local row), then each worker wires its alpha
+            // share to the n-1 peers
+            let block_bytes: Vec<usize> = row_parts.iter().map(|r| r.len() * 4).collect();
+            let _ = comm.iallgather_bytes(&block_bytes).wait();
+            let alpha_bytes = g.num_edges() * 4;
+            for w in 0..n {
+                comm.p2p_wire(w, alpha_bytes * (n - 1) / n.max(1));
+            }
+        }
+        // forward: one split, `l` aggregation rounds, one gather
+        agg_phase(cfg, comm, &plan, v, &row_parts, &dim_parts, l);
+        if cfg.task == Task::LinkPrediction {
+            // negative-edge endpoint fetches (2 embedding rows per
+            // sampled pair, mirroring TpEngine::lp_loss's volume)
+            for (w, r) in row_parts.iter().enumerate() {
+                comm.p2p(w, r.len() * wf * 4 * 2);
+            }
+        }
+        // backward mirrors the forward phase
+        agg_phase(cfg, comm, &plan, v, &row_parts, &dim_parts, l);
+    } else {
+        // naive TP: coupled aggregate-then-update, split + gather at the
+        // layer's input width every layer, forward then reversed backward
+        for li in 0..l {
+            let dp = dim_slices(dims[li], n);
+            agg_phase(cfg, comm, &plan, v, &row_parts, &dp, 1);
+        }
+        for li in (0..l).rev() {
+            let dp = dim_slices(dims[li], n);
+            agg_phase(cfg, comm, &plan, v, &row_parts, &dp, 1);
+        }
+    }
+    trace_allreduce(cfg, dims, comm);
+    Ok(())
+}
+
+/// One aggregation phase's collectives: pipelined chunk pieces when the
+/// run pipelines (split piece waited as its chunk starts, gather piece
+/// posted as it finishes), else the blocking split/gather pair.
+fn agg_phase(
+    cfg: &RunConfig,
+    comm: &mut Comm,
+    plan: &ChunkPlan,
+    v: usize,
+    row_parts: &[std::ops::Range<usize>],
+    dim_parts: &[std::ops::Range<usize>],
+    rounds: usize,
+) {
+    let n = row_parts.len();
+    let num_chunks = plan.num_chunks();
+    let slice_w = dim_parts[0].len().max(1);
+    // aggregation rounds themselves carry no collectives; only the
+    // chunk count decides the schedule shape
+    let _ = rounds;
+    if cfg.pipeline && num_chunks > 1 {
+        let pplan = PipelinePlan::build(&plan.chunks, slice_w, n, v);
+        let split_handles = comm.isplit_pieces(&pplan.split_bytes);
+        let mut gathers = Vec::with_capacity(num_chunks);
+        for (ci, h) in split_handles.into_iter().enumerate() {
+            let _ = h.wait_barrier();
+            gathers.push(comm.igather_piece(pplan.gather_bytes.get(ci).copied().unwrap_or(0)));
+        }
+        for gh in gathers {
+            let _ = gh.wait();
+        }
+    } else {
+        let _ = comm.isplit_bytes(row_parts, dim_parts).wait();
+        let _ = comm.igather_bytes(row_parts, dim_parts).wait();
+    }
+}
+
+/// The per-epoch gradient allreduce every training engine ends with
+/// (`common::allreduce_and_step`); volume = the GCN parameter stack.
+fn trace_allreduce(cfg: &RunConfig, dims: &[usize], comm: &mut Comm) {
+    if cfg.workers <= 1 {
+        return;
+    }
+    let param_bytes: usize = dims.windows(2).map(|w| (w[0] * w[1] + w[1]) * 4).sum();
+    let _ = comm.iallreduce_bytes(param_bytes).wait();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets::{profile, Dataset};
+
+    fn capture(system: System, model: ModelKind, pipeline: bool) -> Vec<TraceEvent> {
+        let mut cfg = RunConfig::default();
+        cfg.system = system;
+        cfg.model = model;
+        cfg.pipeline = pipeline;
+        let p = profile("tiny").unwrap();
+        let g = Dataset::generate_graph(p, cfg.seed);
+        let store =
+            ArtifactStore::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")).unwrap();
+        record_comm_schedule(&cfg, &p, &g, &store).unwrap().0
+    }
+
+    #[test]
+    fn decoupled_trace_has_two_split_gather_pairs() {
+        let ev = capture(System::NeutronTp, ModelKind::Gcn, false);
+        let posts: Vec<_> = ev
+            .iter()
+            .filter_map(|e| match e {
+                TraceEvent::Post { kind, .. } => Some(*kind),
+                _ => None,
+            })
+            .collect();
+        use crate::cluster::CommKind::*;
+        assert_eq!(posts, vec![Split, Gather, Split, Gather, AllreduceSum]);
+    }
+
+    #[test]
+    fn naive_trace_scales_with_layers() {
+        let ev = capture(System::NaiveTp, ModelKind::Gcn, false);
+        let splits = ev
+            .iter()
+            .filter(|e| {
+                matches!(e, TraceEvent::Post { kind, .. } if *kind == crate::cluster::CommKind::Split)
+            })
+            .count();
+        // 2 layers fwd + 2 bwd
+        assert_eq!(splits, 4);
+    }
+
+    #[test]
+    fn every_post_is_waited() {
+        for system in [System::NeutronTp, System::DpFull] {
+            let ev = capture(system, ModelKind::Gcn, true);
+            let posts = ev.iter().filter(|e| matches!(e, TraceEvent::Post { .. })).count();
+            let waits = ev.iter().filter(|e| matches!(e, TraceEvent::Wait { .. })).count();
+            assert_eq!(posts, waits, "{system:?}");
+        }
+    }
+}

@@ -124,6 +124,7 @@ pub struct ExecutorPool {
     intra_threads: usize,
 }
 
+#[must_use = "a dropped Ticket abandons a submitted job; join it with wait()"]
 pub struct Ticket(mpsc::Receiver<Reply>);
 
 impl Ticket {

@@ -22,6 +22,7 @@ use super::executor::{Arg, ExecutorPool, Job, JobResult, Ticket};
 
 /// An in-flight artifact call plus the post-processing (crop / unpack)
 /// that turns its raw outputs into the op's typed result.
+#[must_use = "a dropped Pending abandons an in-flight artifact call; join it with finish()"]
 pub struct Pending<T> {
     ticket: Ticket,
     finish: Box<dyn FnOnce(JobResult) -> T>,

@@ -1,0 +1,454 @@
+//! Mutation tests for the static verifier (`analysis`, DESIGN.md §8).
+//!
+//! Two directions, both required for the verifier to be worth trusting:
+//!
+//! * **zero false positives** — every unmutated builtin plan, schedule
+//!   and geometry checks clean, across the system matrix and a
+//!   property-randomized config space;
+//! * **zero false negatives** — a seeded defect in each invariant family
+//!   (staging ledger, comm schedule, chunk geometry, shape flow) must
+//!   surface as an `Error` finding naming the defect's site.
+//!
+//! The mutations below are the defect classes the verifier exists to
+//! catch: byte-ledger corruption, evict-before-consume, budget
+//! overflow, double fetch, dropped/duplicated/unknown waits, volume
+//! mismatches, algorithm/round disagreement, chunk gaps, edge
+//! miscounts, row_ptr corruption, and unsatisfiable shape flow.
+
+use std::sync::Arc;
+
+use neutron_tp::analysis::{self, Finding, Severity};
+use neutron_tp::cluster::TraceEvent;
+use neutron_tp::config::{AllReduceAlgo, AllToAllAlgo, ModelKind, RunConfig, System, Task};
+use neutron_tp::graph::chunk::ChunkPlan;
+use neutron_tp::graph::datasets::{profile, Dataset, Profile};
+use neutron_tp::graph::Csr;
+use neutron_tp::parallel::trace::record_comm_schedule;
+use neutron_tp::runtime::ArtifactStore;
+use neutron_tp::sched::{PcieModel, StagingPlan, StagingSpec};
+use neutron_tp::util::propcheck;
+
+fn store() -> ArtifactStore {
+    ArtifactStore::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .expect("builtin plan loads without AOT output")
+}
+
+fn tiny_graph() -> (Profile, Csr) {
+    let p = profile("tiny").expect("tiny profile");
+    let g = Dataset::generate_graph(p, 42);
+    (p, g)
+}
+
+fn error_findings(f: &[Finding]) -> Vec<&Finding> {
+    f.iter().filter(|x| x.severity == Severity::Error).collect()
+}
+
+/// The mutation contract: at least one `Error` finding mentions `what`
+/// (in its site or message), and every finding names a site and remedy.
+fn assert_catches(f: &[Finding], what: &str) {
+    for x in f {
+        assert!(!x.site.is_empty(), "finding with empty site: {x:?}");
+        assert!(!x.remedy.is_empty(), "finding with empty remedy: {x:?}");
+    }
+    assert!(
+        f.iter().any(|x| {
+            x.severity == Severity::Error
+                && (x.site.contains(what) || x.message.contains(what))
+        }),
+        "expected an Error finding mentioning {what:?}, got: {f:#?}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Zero false positives: unmutated plans check clean
+// ---------------------------------------------------------------------------
+
+#[test]
+fn builtin_tiny_matrix_checks_clean() {
+    let store = store();
+    let (p, g) = tiny_graph();
+    for &system in System::ALL {
+        let cfg = RunConfig { system, ..Default::default() };
+        let f = analysis::check_with_graph(&cfg, &p, &g, &store);
+        let errs = error_findings(&f);
+        assert!(errs.is_empty(), "{system:?} on tiny: {errs:#?}");
+    }
+}
+
+#[test]
+fn model_task_and_schedule_variants_check_clean() {
+    let store = store();
+    let (p, g) = tiny_graph();
+    let variants = [
+        RunConfig { model: ModelKind::Gat, ..Default::default() },
+        RunConfig { task: Task::LinkPrediction, ..Default::default() },
+        RunConfig { pipeline: false, ..Default::default() },
+        RunConfig { fused_nn: false, ..Default::default() },
+        RunConfig {
+            comm: neutron_tp::config::CommTuning {
+                all_to_all: AllToAllAlgo::Naive,
+                allreduce: AllReduceAlgo::FlatTree,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        RunConfig { workers: 8, ..Default::default() },
+    ];
+    for cfg in variants {
+        let f = analysis::check_with_graph(&cfg, &p, &g, &store);
+        let errs = error_findings(&f);
+        assert!(
+            errs.is_empty(),
+            "{:?}/{:?} pipeline={} fused={} w={}: {errs:#?}",
+            cfg.model,
+            cfg.task,
+            cfg.pipeline,
+            cfg.fused_nn,
+            cfg.workers
+        );
+    }
+}
+
+#[test]
+fn check_run_accepts_the_default_config() {
+    let f = analysis::check_run(&RunConfig::default(), &store());
+    assert!(error_findings(&f).is_empty(), "{f:#?}");
+}
+
+#[test]
+fn check_run_reports_invalid_config_as_finding() {
+    let cfg = RunConfig { workers: 3, ..Default::default() };
+    let f = analysis::check_run(&cfg, &store());
+    assert_catches(&f, "config");
+}
+
+// ---------------------------------------------------------------------------
+// Staging prover: fixture + mutations
+// ---------------------------------------------------------------------------
+
+fn staging_fixture() -> (StagingPlan, usize) {
+    let (_p, g) = tiny_graph();
+    let cp = ChunkPlan::build(&g, 256, 256, 4096);
+    let spec = StagingSpec {
+        budget_bytes: 96 * 1024,
+        pinned_bytes: 4096,
+        pcie: PcieModel { gbps: 16.0, latency_us: 5.0 },
+        prefetch_depth: 2,
+    };
+    let rounds = 2;
+    let plan = StagingPlan::build(&spec, &cp.chunks, 8, rounds).expect("fixture plan builds");
+    (plan, cp.num_chunks() * rounds)
+}
+
+#[test]
+fn staging_fixture_proves_clean() {
+    let (plan, steps) = staging_fixture();
+    // the fixture must actually exercise eviction, or the mutations
+    // below prove nothing
+    assert!(plan.d2h_bytes > 0, "fixture never evicts; shrink the budget");
+    let f = analysis::staging::check_staging_plan(&plan, steps);
+    assert!(f.is_empty(), "{f:#?}");
+}
+
+#[test]
+fn mutation_staging_byte_ledger_flip() {
+    let (mut plan, steps) = staging_fixture();
+    let op = plan
+        .ops
+        .iter_mut()
+        .find(|o| o.h2d && o.bytes > 4)
+        .expect("an h2d op with volume");
+    op.bytes -= 4;
+    let f = analysis::staging::check_staging_plan(&plan, steps);
+    assert_catches(&f, "H2D");
+}
+
+#[test]
+fn mutation_staging_evict_before_consume() {
+    let (mut plan, steps) = staging_fixture();
+    let op =
+        plan.ops.iter_mut().find(|o| !o.h2d).expect("fixture evicts at least one panel");
+    op.post_step = op.panel / 2;
+    let f = analysis::staging::check_staging_plan(&plan, steps);
+    assert_catches(&f, "before being consumed");
+}
+
+#[test]
+fn mutation_staging_step_over_budget() {
+    let (mut plan, steps) = staging_fixture();
+    plan.steps[0].in_footprint = plan.budget_bytes + 1;
+    let f = analysis::staging::check_staging_plan(&plan, steps);
+    assert_catches(&f, "budget");
+}
+
+#[test]
+fn mutation_staging_double_fetch() {
+    let (mut plan, steps) = staging_fixture();
+    let dup = *plan.ops.iter().find(|o| o.h2d).expect("an h2d op");
+    let pos = plan.ops.iter().position(|o| o.h2d).unwrap();
+    plan.ops.insert(pos + 1, dup);
+    let f = analysis::staging::check_staging_plan(&plan, steps);
+    assert_catches(&f, "fetched twice");
+}
+
+// ---------------------------------------------------------------------------
+// Comm-schedule linter: fixture + mutations
+// ---------------------------------------------------------------------------
+
+fn trace_fixture() -> (Vec<TraceEvent>, usize) {
+    let store = store();
+    let (p, g) = tiny_graph();
+    let cfg = RunConfig::default();
+    let (events, _comm) =
+        record_comm_schedule(&cfg, &p, &g, &store).expect("trace captures");
+    assert!(!events.is_empty(), "empty trace");
+    (events, cfg.workers)
+}
+
+#[test]
+fn trace_fixture_lints_clean() {
+    let (events, workers) = trace_fixture();
+    let f = analysis::commlint::check_trace(&events, workers);
+    assert!(f.is_empty(), "{f:#?}");
+}
+
+#[test]
+fn mutation_comm_dropped_wait() {
+    let (mut events, workers) = trace_fixture();
+    let last_wait = events
+        .iter()
+        .rposition(|e| matches!(e, TraceEvent::Wait { .. }))
+        .expect("trace has waits");
+    events.remove(last_wait);
+    let f = analysis::commlint::check_trace(&events, workers);
+    assert_catches(&f, "never waited");
+}
+
+#[test]
+fn mutation_comm_volume_mismatch() {
+    let (mut events, workers) = trace_fixture();
+    let post = events
+        .iter_mut()
+        .find_map(|e| match e {
+            TraceEvent::Post { recv, .. } => Some(recv),
+            _ => None,
+        })
+        .expect("trace has posts");
+    post[0] += 1;
+    let f = analysis::commlint::check_trace(&events, workers);
+    assert_catches(&f, "send");
+}
+
+#[test]
+fn mutation_comm_wait_without_post() {
+    let (mut events, workers) = trace_fixture();
+    events.push(TraceEvent::Wait { seq: 999_999 });
+    let f = analysis::commlint::check_trace(&events, workers);
+    assert_catches(&f, "never posted");
+}
+
+#[test]
+fn mutation_comm_algorithm_round_disagreement() {
+    let (mut events, workers) = trace_fixture();
+    let algo = events
+        .iter_mut()
+        .find_map(|e| match e {
+            TraceEvent::Post { algo, .. } if *algo != "ring" => Some(algo),
+            _ => None,
+        })
+        .expect("a non-ring post");
+    *algo = "ring";
+    let f = analysis::commlint::check_trace(&events, workers);
+    assert_catches(&f, "does not match");
+}
+
+#[test]
+fn mutation_comm_double_wait() {
+    let (mut events, workers) = trace_fixture();
+    let wait = events
+        .iter()
+        .position(|e| matches!(e, TraceEvent::Wait { .. }))
+        .expect("trace has waits");
+    let dup = events[wait].clone();
+    events.push(dup);
+    let f = analysis::commlint::check_trace(&events, workers);
+    assert_catches(&f, "more than once");
+}
+
+// ---------------------------------------------------------------------------
+// Chunk-geometry checker: fixture + mutations
+// ---------------------------------------------------------------------------
+
+fn geometry_fixture() -> (ChunkPlan, Csr) {
+    let (_p, g) = tiny_graph();
+    let plan = ChunkPlan::build(&g, 256, 256, 4096);
+    (plan, g)
+}
+
+#[test]
+fn geometry_fixture_checks_clean() {
+    let (plan, g) = geometry_fixture();
+    let f = analysis::geometry::check_chunk_plan(&plan, &g);
+    assert!(f.is_empty(), "{f:#?}");
+}
+
+#[test]
+fn mutation_geometry_row_gap() {
+    let (mut plan, g) = geometry_fixture();
+    plan.chunks[1].rows.start += 1;
+    let f = analysis::geometry::check_chunk_plan(&plan, &g);
+    assert_catches(&f, "previous chunk ended");
+}
+
+#[test]
+fn mutation_geometry_edge_miscount() {
+    let (mut plan, g) = geometry_fixture();
+    plan.chunks[0].live_edges += 1;
+    let f = analysis::geometry::check_chunk_plan(&plan, &g);
+    assert_catches(&f, "edges");
+}
+
+#[test]
+fn mutation_geometry_row_ptr_corruption() {
+    let (mut plan, g) = geometry_fixture();
+    let rp = Arc::make_mut(&mut plan.chunks[0].passes[0].row_ptr);
+    *rp.last_mut().expect("row_ptr nonempty") -= 1;
+    let f = analysis::geometry::check_chunk_plan(&plan, &g);
+    assert_catches(&f, "row_ptr");
+}
+
+// ---------------------------------------------------------------------------
+// Shape-flow checker: mutations through the full pass
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mutation_shape_unplanned_feat_dim() {
+    let store = store();
+    let (p, g) = tiny_graph();
+    let cfg = RunConfig { feat_dim: Some(333), ..Default::default() };
+    let f = analysis::check_with_graph(&cfg, &p, &g, &store);
+    assert_catches(&f, "dense");
+}
+
+#[test]
+fn mutation_shape_oversized_minibatch() {
+    let store = store();
+    let (p, g) = tiny_graph();
+    let cfg = RunConfig {
+        system: System::MiniBatch,
+        batch_size: 1 << 20,
+        ..Default::default()
+    };
+    let f = analysis::check_with_graph(&cfg, &p, &g, &store);
+    assert_catches(&f, "loss head");
+}
+
+// ---------------------------------------------------------------------------
+// Properties: random valid configs accept, random mutations reject
+// ---------------------------------------------------------------------------
+
+#[test]
+fn propcheck_valid_configs_are_accepted() {
+    let store = store();
+    let (p, g) = tiny_graph();
+    propcheck::check("analysis_valid_accept", 0xA11_AC3, 24, |rng| {
+        let system = System::ALL[rng.gen_range(System::ALL.len())];
+        let cfg = RunConfig {
+            system,
+            workers: 1 << (1 + rng.gen_range(3)), // 2/4/8
+            pipeline: rng.gen_bool(0.5),
+            fused_nn: rng.gen_bool(0.5),
+            // GAT and link prediction ride the decoupled engine only
+            model: if system == System::NeutronTp && rng.gen_bool(0.3) {
+                ModelKind::Gat
+            } else {
+                ModelKind::Gcn
+            },
+            task: if system == System::NeutronTp && rng.gen_bool(0.3) {
+                Task::LinkPrediction
+            } else {
+                Task::NodeClassification
+            },
+            comm: neutron_tp::config::CommTuning {
+                all_to_all: if rng.gen_bool(0.5) {
+                    AllToAllAlgo::Naive
+                } else {
+                    AllToAllAlgo::Pairwise
+                },
+                allreduce: if rng.gen_bool(0.5) {
+                    AllReduceAlgo::Ring
+                } else {
+                    AllReduceAlgo::FlatTree
+                },
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        // GAT + link prediction in one run is not a planned combination
+        let cfg = if cfg.model == ModelKind::Gat {
+            RunConfig { task: Task::NodeClassification, ..cfg }
+        } else {
+            cfg
+        };
+        let f = analysis::check_with_graph(&cfg, &p, &g, &store);
+        let errs = error_findings(&f);
+        assert!(
+            errs.is_empty(),
+            "{:?} w={} pipeline={} fused={} {:?}/{:?}: {errs:#?}",
+            cfg.system,
+            cfg.workers,
+            cfg.pipeline,
+            cfg.fused_nn,
+            cfg.model,
+            cfg.task
+        );
+    });
+}
+
+#[test]
+fn propcheck_mutated_plans_are_rejected() {
+    let (base_plan, steps) = staging_fixture();
+    let (base_events, workers) = trace_fixture();
+    propcheck::check("analysis_mutation_reject", 0xDEF_EC7, 24, |rng| {
+        if rng.gen_bool(0.5) {
+            // staging: corrupt one random op's byte volume
+            let mut plan = base_plan.clone();
+            let i = rng.gen_range(plan.ops.len());
+            plan.ops[i].bytes += 4 * (1 + rng.gen_range(16));
+            let f = analysis::staging::check_staging_plan(&plan, steps);
+            assert!(analysis::has_errors(&f), "mutated op {i} not caught");
+        } else {
+            // comm: drop one random wait from the schedule
+            let mut events = base_events.clone();
+            let waits: Vec<usize> = events
+                .iter()
+                .enumerate()
+                .filter_map(|(i, e)| matches!(e, TraceEvent::Wait { .. }).then_some(i))
+                .collect();
+            let victim = waits[rng.gen_range(waits.len())];
+            events.remove(victim);
+            let f = analysis::commlint::check_trace(&events, workers);
+            assert!(analysis::has_errors(&f), "dropped wait {victim} not caught");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Scale: the verification pass itself stays interactive
+// ---------------------------------------------------------------------------
+
+#[test]
+fn check_on_largest_profile_is_subsecond() {
+    if cfg!(debug_assertions) {
+        return; // the bound is a release-build contract
+    }
+    let store = store();
+    let p = profile("e2e").expect("e2e profile");
+    let g = Dataset::generate_graph(p, 42);
+    let cfg = RunConfig { profile: "e2e".into(), ..Default::default() };
+    let t0 = std::time::Instant::now();
+    let f = analysis::check_with_graph(&cfg, &p, &g, &store);
+    let secs = t0.elapsed().as_secs_f64();
+    assert!(error_findings(&f).is_empty(), "{f:#?}");
+    assert!(secs < 1.0, "static check took {secs:.3}s on e2e");
+}

@@ -1,0 +1,141 @@
+//! Grep-style source lints (the static-verification PR's satellite,
+//! same detection style as `design_refs.rs`): the engine/communicator/
+//! scheduler/serving layers must not panic on recoverable errors, and
+//! the simulated clock may only be constructed by the cluster layer.
+//!
+//! * `.unwrap()` / `.expect(` in non-test code under `rust/src/
+//!   {parallel,cluster,sched,serve}` is banned except for the checked-in
+//!   allowlist below. The count is a ratchet: going over fails (convert
+//!   the new site to `?`/`context`), going under also fails (shrink the
+//!   allowlist so the win sticks).
+//! * `EventSim` construction outside `rust/src/cluster/` non-test code
+//!   is banned outright: engines receive the clock through
+//!   `cluster::Comm`; a second clock would fork the timeline.
+//!
+//! "Non-test code" is everything before the first `#[cfg(test)]` line —
+//! every module in this tree keeps its test module last.
+
+use std::path::{Path, PathBuf};
+
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("rust/ has a parent").to_path_buf()
+}
+
+fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            rust_files(&path, out);
+        } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// The file's text with the trailing `#[cfg(test)]` module cut off.
+fn non_test_code(text: &str) -> String {
+    match text.find("#[cfg(test)]") {
+        Some(pos) => text[..pos].to_string(),
+        None => text.to_string(),
+    }
+}
+
+fn count_occurrences(haystack: &str, needle: &str) -> usize {
+    haystack.matches(needle).count()
+}
+
+/// Allowed `.unwrap()`/`.expect(` sites in non-test code, per file
+/// (paths relative to `rust/src`). Every entry is a debt marker: these
+/// are infallible-by-construction cases (e.g. `last()` of a vec the
+/// same function just filled) that predate the lint or document their
+/// invariant in an `expect` message.
+const UNWRAP_ALLOWLIST: &[(&str, usize)] = &[
+    ("cluster/comm.rs", 1),
+    ("parallel/common.rs", 2),
+    ("parallel/minibatch.rs", 1),
+    ("parallel/tp.rs", 2),
+    ("parallel/trace.rs", 1),
+    ("sched/staging.rs", 1),
+    ("serve/checkpoint.rs", 6),
+    ("serve/infer.rs", 2),
+];
+
+#[test]
+fn unwrap_expect_stays_on_the_allowlist() {
+    let src = repo_root().join("rust/src");
+    let mut files = Vec::new();
+    for dir in ["parallel", "cluster", "sched", "serve"] {
+        rust_files(&src.join(dir), &mut files);
+    }
+    assert!(files.len() >= 10, "lint scanner found only {} files", files.len());
+    files.sort();
+
+    let mut failures = Vec::new();
+    let mut seen = std::collections::BTreeSet::new();
+    for file in &files {
+        let rel = file.strip_prefix(&src).unwrap_or(file).to_string_lossy().replace('\\', "/");
+        let text = std::fs::read_to_string(file).unwrap_or_default();
+        let code = non_test_code(&text);
+        let count =
+            count_occurrences(&code, ".unwrap()") + count_occurrences(&code, ".expect(");
+        let allowed = UNWRAP_ALLOWLIST
+            .iter()
+            .find(|(p, _)| *p == rel)
+            .map(|&(_, n)| n)
+            .unwrap_or(0);
+        seen.insert(rel.clone());
+        if count > allowed {
+            failures.push(format!(
+                "{rel}: {count} unwrap/expect site(s) in non-test code, allowlist permits \
+                 {allowed} — propagate with ?/.context() instead"
+            ));
+        } else if count < allowed {
+            failures.push(format!(
+                "{rel}: only {count} unwrap/expect site(s) left but the allowlist still \
+                 permits {allowed} — ratchet the allowlist down"
+            ));
+        }
+    }
+    for (path, _) in UNWRAP_ALLOWLIST {
+        if !seen.contains(*path) {
+            failures.push(format!("allowlist names {path}, which no longer exists"));
+        }
+    }
+    assert!(failures.is_empty(), "unwrap/expect lint:\n{}", failures.join("\n"));
+}
+
+#[test]
+fn event_sim_is_constructed_only_inside_cluster() {
+    let src = repo_root().join("rust/src");
+    let mut files = Vec::new();
+    rust_files(&src, &mut files);
+    files.sort();
+
+    let mut failures = Vec::new();
+    for file in &files {
+        let rel = file.strip_prefix(&src).unwrap_or(file).to_string_lossy().replace('\\', "/");
+        if rel.starts_with("cluster/") {
+            continue;
+        }
+        let text = std::fs::read_to_string(file).unwrap_or_default();
+        let code = non_test_code(&text);
+        for (i, line) in code.lines().enumerate() {
+            if line.contains("EventSim::new") || line.contains("EventSim {") {
+                failures.push(format!(
+                    "{rel}:{}: constructs EventSim outside cluster/ — engines must take \
+                     the clock from cluster::Comm",
+                    i + 1
+                ));
+            }
+        }
+    }
+    assert!(failures.is_empty(), "EventSim lint:\n{}", failures.join("\n"));
+}
+
+#[test]
+fn non_test_truncation_finds_the_test_module() {
+    let text = "fn a() {}\n#[cfg(test)]\nmod tests { fn b() { x.unwrap() } }\n";
+    assert_eq!(non_test_code(text), "fn a() {}\n");
+    assert_eq!(count_occurrences(non_test_code(text).as_str(), ".unwrap()"), 0);
+}
