@@ -37,19 +37,19 @@ fn main() {
         for a2a in [AllToAllAlgo::Naive, AllToAllAlgo::Pairwise] {
             let tuning = CommTuning { all_to_all: a2a, ..CommTuning::default() };
             bench(&format!("split({})  v={v} d={d} n={n}", a2a.name()), 20, || {
-                let mut comm = Comm::new(n, net, &tuning);
+                let mut comm = Comm::new(n, net, &tuning).unwrap();
                 let _ = comm.split(&rows, &rp, &dp);
             });
         }
         let slices: Vec<Matrix> = dp.iter().map(|dpj| full.slice_cols(dpj.clone())).collect();
         bench(&format!("gather     v={v} d={d} n={n}"), 20, || {
-            let mut comm = Comm::new(n, net, &CommTuning::default());
+            let mut comm = Comm::new(n, net, &CommTuning::default()).unwrap();
             let _ = comm.gather(&slices, &rp, &dp);
         });
         let grads: Vec<Matrix> =
             (0..n).map(|_| Matrix::from_fn(256, d, |r, c| (r + c) as f32)).collect();
         bench(&format!("allreduce  256x{d} n={n}"), 50, || {
-            let mut comm = Comm::new(n, net, &CommTuning::default());
+            let mut comm = Comm::new(n, net, &CommTuning::default()).unwrap();
             let _ = comm.allreduce_sum(&grads);
         });
     }

@@ -128,7 +128,53 @@ pub fn check_run(cfg: &RunConfig, store: &ArtifactStore) -> Vec<Finding> {
         )];
     };
     let g = Dataset::generate_graph(p, cfg.seed);
-    check_with_graph(cfg, &p, &g, store)
+    let mut out = check_with_graph(cfg, &p, &g, store);
+    out.extend(check_resume(cfg));
+    out
+}
+
+/// Checkpoint-compatibility pass: when `cfg` asks to resume
+/// (`resume = true` + `checkpoint_dir`), load the saved header and
+/// classify the resume before any epoch runs. An exact fingerprint match
+/// passes silently; an elastic N→M re-shard (DESIGN.md §9.2) is a
+/// warning — legal, but worth surfacing; anything else (unreadable file,
+/// drifted fields) is an error Finding carrying every drifted field in
+/// one message.
+pub fn check_resume(cfg: &RunConfig) -> Vec<Finding> {
+    if !cfg.resume {
+        return Vec::new();
+    }
+    let Some(dir) = cfg.checkpoint_dir.as_deref() else {
+        return vec![Finding::error(
+            "resume",
+            "resume = true but no checkpoint_dir is configured",
+            "set checkpoint_dir (--checkpoint-dir) to the directory holding latest.ntpc",
+        )];
+    };
+    let path = crate::serve::checkpoint::latest_path(dir);
+    let ckpt = match crate::serve::checkpoint::load(&path) {
+        Ok(c) => c,
+        Err(e) => {
+            return vec![Finding::error(
+                format!("resume {}", path.display()),
+                format!("{e:#}"),
+                "point checkpoint_dir at a directory a previous train run saved into",
+            )]
+        }
+    };
+    match ckpt.meta.compatible(cfg) {
+        Ok(crate::serve::ResumeMode::Exact) => Vec::new(),
+        Ok(crate::serve::ResumeMode::Reshard { from, to }) => vec![Finding::warning(
+            format!("resume {}", path.display()),
+            format!("elastic re-shard: checkpoint written by {from} workers, resuming on {to}"),
+            "expected for an elastic N->M resume; decoupled TP keeps losses bit-identical",
+        )],
+        Err(e) => vec![Finding::error(
+            format!("resume {}", path.display()),
+            format!("{e:#}"),
+            "match the checkpointed configuration (or retrain from scratch)",
+        )],
+    }
 }
 
 /// [`check_run`] with the training graph already materialized (the

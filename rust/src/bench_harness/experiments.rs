@@ -33,8 +33,9 @@ pub fn run_experiment(name: &str, store: &ArtifactStore, fast: bool) -> crate::R
         "serve_scale" => serve_scale(store, fast)?,
         "comm_scale" => comm_scale(store, fast)?,
         "mem_scale" => mem_scale(store, fast)?,
+        "fault_scale" => fault_scale(store, fast)?,
         _ => anyhow::bail!(
-            "unknown experiment '{name}' (try fig3/fig4/fig5/fig8/fig10..fig16/table2/table3/table4/exec_scale/kernel_scale/serve_scale/comm_scale/mem_scale/all)"
+            "unknown experiment '{name}' (try fig3/fig4/fig5/fig8/fig10..fig16/table2/table3/table4/exec_scale/kernel_scale/serve_scale/comm_scale/mem_scale/fault_scale/all)"
         ),
     };
     Ok(out)
@@ -43,7 +44,7 @@ pub fn run_experiment(name: &str, store: &ArtifactStore, fast: bool) -> crate::R
 pub const ALL: &[&str] = &[
     "fig3", "fig4", "fig5", "fig8", "fig10", "fig11", "fig12", "fig13", "fig14", "fig15",
     "fig16", "table2", "table3", "table4", "exec_scale", "kernel_scale", "serve_scale",
-    "comm_scale", "mem_scale",
+    "comm_scale", "mem_scale", "fault_scale",
 ];
 
 fn run_cfg(store: &ArtifactStore, cfg: &RunConfig) -> crate::Result<Vec<EpochReport>> {
@@ -903,6 +904,107 @@ fn mem_scale(store: &ArtifactStore, fast: bool) -> crate::Result<String> {
         losses.len()
     )
     .unwrap();
+    Ok(s)
+}
+
+// ---------------------------------------------------------------------------
+// Elastic training (DESIGN.md §9). Two sections:
+//  A) straggler-aware dim re-balancing: one slow NIC, comm-bound regime;
+//     the between-epoch refit should strictly shrink NeutronTP's epoch
+//     makespan while the loss column stays bit-identical (re-balancing
+//     moves only dim-slice widths, which carry no numerics);
+//  B) modeled kill/recovery: lose a worker mid-epoch, replay the epoch on
+//     the survivors (optionally rejoin later); per-epoch losses must be
+//     bit-identical to the undisturbed run — the canonical data partition
+//     at work — with the wasted partial epoch reported as recovery time.
+// ---------------------------------------------------------------------------
+fn fault_scale(store: &ArtifactStore, fast: bool) -> crate::Result<String> {
+    let skews: &[f64] = if fast { &[0.25] } else { &[0.5, 0.25, 0.125] };
+    let epochs = if fast { 3 } else { 5 };
+    let mut s = String::from(
+        "# fault_scale A — between-epoch dim re-balancing under one slow NIC\n\
+         # (worker 0 at `skew` bandwidth; comm-bound regime). `last_secs` is\n\
+         # the final epoch's makespan — rebalance=true must not be slower —\n\
+         # and the loss must not move.\n\
+         skew,rebalance,first_secs,last_secs,loss\n",
+    );
+    let base = |skew: f64, rebalance: bool| {
+        let mut cfg = RunConfig {
+            system: System::NeutronTp,
+            workers: 4,
+            epochs,
+            pipeline: false,
+            ..Default::default()
+        };
+        // slow wire + fast compute so dim-slice widths dominate makespan
+        cfg.net.bandwidth_gbps = 0.1;
+        cfg.net.gpu_speedup = 100.0;
+        cfg.comm.bw_scale = vec![skew];
+        cfg.fault.rebalance = rebalance;
+        cfg
+    };
+    for &skew in skews {
+        for rebalance in [false, true] {
+            let cfg = base(skew, rebalance);
+            match run_cfg(store, &cfg) {
+                Ok(r) => {
+                    let first = r.first().map(|e| e.sim_epoch_secs).unwrap_or(f64::NAN);
+                    let last = r.last().map(|e| e.sim_epoch_secs).unwrap_or(f64::NAN);
+                    let loss = r.last().map(|e| e.loss).unwrap_or(f32::NAN);
+                    writeln!(s, "{skew},{rebalance},{first:.4},{last:.4},{loss:.4}").unwrap();
+                }
+                Err(e) => writeln!(s, "{skew},{rebalance},ERR({e}),-,-").unwrap(),
+            }
+        }
+    }
+
+    writeln!(
+        s,
+        "\n# fault_scale B — modeled worker loss at epoch E, replay on N-1\n\
+         # survivors (optional rejoin). `losses_match` compares every epoch's\n\
+         # loss bit-for-bit against the undisturbed run.\n\
+         kill_worker,kill_epoch,rejoin,recovery_secs,losses_match"
+    )
+    .unwrap();
+    let kills: &[(usize, usize, Option<usize>)] =
+        if fast { &[(1, 1, None)] } else { &[(0, 1, None), (3, 1, Some(3)), (2, 0, Some(2))] };
+    let mk = |kill: Option<(usize, usize, Option<usize>)>| {
+        let mut cfg = RunConfig {
+            system: System::NeutronTp,
+            workers: 4,
+            epochs,
+            ..Default::default()
+        };
+        if let Some((w, e, rejoin)) = kill {
+            cfg.fault.kill_worker = Some(w);
+            cfg.fault.kill_epoch = Some(e);
+            cfg.fault.rejoin_epoch = rejoin;
+        }
+        cfg
+    };
+    let undisturbed: Vec<u32> =
+        run_cfg(store, &mk(None))?.iter().map(|r| r.loss.to_bits()).collect();
+    for &(w, e, rejoin) in kills {
+        match run_cfg(store, &mk(Some((w, e, rejoin)))) {
+            Ok(r) => {
+                let got: Vec<u32> = r.iter().map(|x| x.loss.to_bits()).collect();
+                let recovery: f64 = r.iter().map(|x| x.recovery_secs).sum();
+                writeln!(
+                    s,
+                    "{w},{e},{},{recovery:.4},{}",
+                    rejoin.map(|x| x.to_string()).unwrap_or_else(|| "-".into()),
+                    got == undisturbed
+                )
+                .unwrap();
+            }
+            Err(err) => writeln!(
+                s,
+                "{w},{e},{},ERR({err}),-",
+                rejoin.map(|x| x.to_string()).unwrap_or_else(|| "-".into())
+            )
+            .unwrap(),
+        }
+    }
     Ok(s)
 }
 

@@ -218,13 +218,23 @@ impl Topology {
         Topology { bw_scale: vec![1.0; workers] }
     }
 
-    /// Pad (with 1.0) or truncate `scale` to `workers` entries.
-    pub fn with_bw_scale(workers: usize, scale: &[f64]) -> Topology {
+    /// Pad `scale` (with 1.0) to `workers` entries. A list *longer* than
+    /// the cluster is rejected: silently dropping the tail would ignore
+    /// straggler entries the user asked for (the classic foot-gun of
+    /// tuning `comm.bw_scale` for 8 workers, then running with 4).
+    pub fn with_bw_scale(workers: usize, scale: &[f64]) -> crate::Result<Topology> {
+        anyhow::ensure!(
+            scale.len() <= workers,
+            "comm.bw_scale has {} entries but the cluster has {} workers — \
+             trim the list or raise --workers (shorter lists pad with 1.0)",
+            scale.len(),
+            workers
+        );
         let mut bw_scale = vec![1.0; workers];
         for (dst, s) in bw_scale.iter_mut().zip(scale) {
             *dst = *s;
         }
-        Topology { bw_scale }
+        Ok(Topology { bw_scale })
     }
 
     pub fn bw_scale(&self, w: usize) -> f64 {
@@ -295,27 +305,82 @@ pub struct Comm {
     next_seq: usize,
     /// seq of the most recent `Post`, consumed by the next handle wrap
     pending_seq: Option<usize>,
+    /// armed modeled fault: `(worker, collective ordinal)` at which the
+    /// worker "dies" (DESIGN.md §9.1)
+    fault_arm: Option<(usize, usize)>,
+    /// collectives timed so far (record mode never counts)
+    collectives_seen: usize,
+    /// the recorded loss, once the armed collective fires
+    fault: Option<super::fault::FaultEvent>,
 }
 
 impl Comm {
-    pub fn new(workers: usize, net: NetModel, tuning: &CommTuning) -> Comm {
-        Comm {
+    pub fn new(workers: usize, net: NetModel, tuning: &CommTuning) -> crate::Result<Comm> {
+        Ok(Comm {
             sim: EventSim::new(workers),
             net,
             all_to_all: tuning.all_to_all,
             allreduce: tuning.allreduce,
-            topo: Topology::with_bw_scale(workers, &tuning.bw_scale),
+            topo: Topology::with_bw_scale(workers, &tuning.bw_scale)?,
             stats: CommStats::default(),
             bytes_per_worker: vec![0; workers],
             trace: None,
             next_seq: 0,
             pending_seq: None,
-        }
+            fault_arm: None,
+            collectives_seen: 0,
+            fault: None,
+        })
     }
 
     /// The communicator a run configuration asks for.
-    pub fn for_run(cfg: &RunConfig) -> Comm {
+    pub fn for_run(cfg: &RunConfig) -> crate::Result<Comm> {
         Comm::new(cfg.workers, cfg.net, &cfg.comm)
+    }
+
+    /// The communicator for epoch `epoch` of `cfg`: [`Comm::for_run`],
+    /// plus the `[fault]` plan armed when this is the kill epoch — the
+    /// modeled loss of `fault.kill_worker` fires at the epoch's first
+    /// collective and is recorded as a [`super::fault::FaultEvent`]
+    /// (DESIGN.md §9.1). Engines keep computing (the data plane is
+    /// host-side and the epoch will be discarded); the elastic driver
+    /// reads the event off the epoch report.
+    pub fn for_epoch(cfg: &RunConfig, epoch: usize) -> crate::Result<Comm> {
+        let mut comm = Comm::for_run(cfg)?;
+        if let (Some(w), Some(e)) = (cfg.fault.kill_worker, cfg.fault.kill_epoch) {
+            if e == epoch {
+                comm.arm_fault(w, 1);
+            }
+        }
+        Ok(comm)
+    }
+
+    /// Arm a modeled loss of worker `w`, detected at the
+    /// `at_collective`-th collective (1-based) timed by this
+    /// communicator.
+    pub fn arm_fault(&mut self, w: usize, at_collective: usize) {
+        self.fault_arm = Some((w, at_collective.max(1)));
+    }
+
+    /// The recorded worker loss, if the armed collective has fired.
+    pub fn fault_event(&self) -> Option<&super::fault::FaultEvent> {
+        self.fault.as_ref()
+    }
+
+    /// Count one timed collective and record the armed fault when its
+    /// ordinal comes up. Called from the timing cores *after* the sim
+    /// advanced, so `at_secs` is the makespan the partial epoch wasted.
+    fn note_collective(&mut self) {
+        self.collectives_seen += 1;
+        if let Some((w, at)) = self.fault_arm {
+            if self.fault.is_none() && self.collectives_seen >= at {
+                self.fault = Some(super::fault::FaultEvent {
+                    worker: w,
+                    at_collective: self.collectives_seen,
+                    at_secs: self.sim.makespan(),
+                });
+            }
+        }
     }
 
     pub fn workers(&self) -> usize {
@@ -700,6 +765,7 @@ impl Comm {
             self.bytes_per_worker[w] += bytes;
         }
         self.stats.record(kind, bytes * n, bytes * n, secs);
+        self.note_collective();
         self.wrap((), done)
     }
 
@@ -772,10 +838,12 @@ impl Comm {
             return vec![0.0; n];
         }
         let ready: Vec<f64> = (0..n).map(|w| self.sim.now(w)).collect();
-        match self.allreduce {
+        let done = match self.allreduce {
             AllReduceAlgo::Ring => self.allreduce_ring(n, bytes, &ready),
             AllReduceAlgo::FlatTree => self.allreduce_flat_tree(n, bytes, &ready),
-        }
+        };
+        self.note_collective();
+        done
     }
 
     fn allreduce_ring(&mut self, n: usize, bytes: usize, ready: &[f64]) -> DoneTimes {
@@ -936,6 +1004,7 @@ impl Comm {
         }
         self.stats
             .record(CommKind::SequentialBroadcast, sent_total, sent_total, secs);
+        self.note_collective();
         self.wrap(full, vec![frontier; n])
     }
 
@@ -987,6 +1056,7 @@ impl Comm {
             recv_total += recv;
         }
         self.stats.record(kind, sent_total, recv_total, secs);
+        self.note_collective();
         done
     }
 
@@ -1113,11 +1183,11 @@ mod tests {
     use crate::tensor::{dim_slices, row_slices};
 
     fn comm(n: usize) -> Comm {
-        Comm::new(n, NetModel::default(), &CommTuning::default())
+        Comm::new(n, NetModel::default(), &CommTuning::default()).unwrap()
     }
 
     fn comm_with(n: usize, tuning: &CommTuning) -> Comm {
-        Comm::new(n, NetModel::default(), tuning)
+        Comm::new(n, NetModel::default(), tuning).unwrap()
     }
 
     /// split then gather must reproduce the original vertex-sliced data.
@@ -1257,7 +1327,7 @@ mod tests {
                 dp.iter().map(|dpj| full.slice_cols(dpj.clone())).collect();
             // isolate wire time: latency scales with peer count by design
             let net0 = NetModel { latency_us: 0.0, ..NetModel::default() };
-            let mut comm = Comm::new(n, net0, &CommTuning::default());
+            let mut comm = Comm::new(n, net0, &CommTuning::default()).unwrap();
             let _ = comm.gather(&sliced, &rp, &dp);
             totals.push(comm.sim().comm_totals().iter().sum::<f64>());
         }
@@ -1282,7 +1352,7 @@ mod tests {
         let inputs: Vec<Matrix> = rp.iter().map(|r| full.slice_rows(r.clone())).collect();
         // near-infinite bandwidth isolates the latency term
         let net = NetModel { bandwidth_gbps: 1e12, latency_us: 1e6, ..NetModel::default() };
-        let mut comm = Comm::new(n, net, &CommTuning::default());
+        let mut comm = Comm::new(n, net, &CommTuning::default()).unwrap();
         let (_, done) = comm.split(&inputs, &rp, &dp);
         let lat = 1.0; // 1e6 us
         // worker 3 exchanges nothing: no messages, no latency
@@ -1364,7 +1434,7 @@ mod tests {
             let tuning = CommTuning { bw_scale, ..CommTuning::default() };
             // zero latency isolates the wire term the topology scales
             let net0 = NetModel { latency_us: 0.0, ..NetModel::default() };
-            let mut comm = Comm::new(n, net0, &tuning);
+            let mut comm = Comm::new(n, net0, &tuning).unwrap();
             let (_, done) = comm.split(&inputs, &rp, &dp);
             done.iter().copied().fold(0.0, f64::max)
         };
@@ -1459,5 +1529,53 @@ mod tests {
             comm.bytes_per_worker().iter().sum::<usize>(),
             comm.stats().total_sent()
         );
+    }
+
+    /// The satellite bugfix: a `bw_scale` list *longer* than the cluster
+    /// used to be silently truncated — now it's a config error, while
+    /// shorter lists still pad with 1.0.
+    #[test]
+    fn over_long_bw_scale_is_rejected_not_truncated() {
+        let err = Topology::with_bw_scale(4, &[1.0; 5]).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("5 entries"), "{msg}");
+        assert!(msg.contains("4 workers"), "{msg}");
+        let tuning = CommTuning { bw_scale: vec![0.5; 5], ..CommTuning::default() };
+        assert!(Comm::new(4, NetModel::default(), &tuning).is_err());
+        // padding still works: 1 entry over 4 workers fills with 1.0
+        let topo = Topology::with_bw_scale(4, &[0.25]).unwrap();
+        assert_eq!(topo.bw_scale(0), 0.25);
+        assert_eq!(topo.bw_scale(3), 1.0);
+        // and an exact-length list is taken verbatim
+        assert!(Topology::with_bw_scale(2, &[0.5, 2.0]).is_ok());
+    }
+
+    /// An armed fault fires at the requested collective ordinal with the
+    /// sim's makespan at that point; an unarmed comm never reports one.
+    #[test]
+    fn armed_fault_fires_at_the_requested_collective() {
+        let (v, d, n) = (32usize, 8usize, 4usize);
+        let full = Matrix::from_fn(v, d, |r, c| (r + c) as f32);
+        let rp = row_slices(v, n);
+        let dp = dim_slices(d, n);
+        let inputs: Vec<Matrix> = rp.iter().map(|r| full.slice_rows(r.clone())).collect();
+        let mut quiet = comm(n);
+        let (sliced, _) = quiet.split(&inputs, &rp, &dp);
+        let _ = quiet.gather(&sliced, &rp, &dp);
+        assert_eq!(quiet.fault_event(), None);
+
+        let mut armed = comm(n);
+        armed.arm_fault(2, 2);
+        let (sliced, _) = armed.split(&inputs, &rp, &dp);
+        assert_eq!(armed.fault_event(), None, "first collective survives");
+        let _ = armed.gather(&sliced, &rp, &dp);
+        let ev = armed.fault_event().expect("second collective kills");
+        assert_eq!(ev.worker, 2);
+        assert_eq!(ev.at_collective, 2);
+        assert!(ev.at_secs > 0.0);
+        assert!(ev.at_secs <= armed.makespan() + 1e-12);
+        // the event is recorded once, not re-armed by later collectives
+        let _ = armed.allreduce_sum(&inputs);
+        assert_eq!(armed.fault_event().map(|e| e.at_collective), Some(2));
     }
 }

@@ -1,0 +1,174 @@
+//! Modeled worker failure and elastic dim-slice bookkeeping
+//! (DESIGN.md §9).
+//!
+//! Tensor parallelism makes elasticity cheap: a worker owns a *column
+//! range* of the embedding panel, not a graph partition, so losing or
+//! adding a worker is a re-derivation of `dim_slices` — pure bookkeeping,
+//! no vertex dependencies to re-home. This module holds the pieces the
+//! elastic layer shares:
+//!
+//! * [`FaultEvent`] — the deterministic record a [`super::Comm`] armed via
+//!   `Comm::for_epoch` writes when the modeled worker "dies" at its
+//!   scheduled collective. Engines finish the epoch normally (the data
+//!   plane is host-side); the elastic driver reads the event off the
+//!   epoch report, discards the partial epoch, and re-replays it on the
+//!   survivors.
+//! * [`weighted_dim_slices`] — dim-slice widths proportional to per-worker
+//!   speed weights (largest-remainder rounding, exact cover of `[0, d)`).
+//!   Slice widths only steer modeled timing and the split/gather byte
+//!   plan, never the aggregation numerics, so re-balancing is loss-free
+//!   by construction (DESIGN.md §9.3).
+//! * [`refit_weights`] — turn one epoch's per-worker NIC feedback into the
+//!   next epoch's slice weights (the straggler re-balancer).
+
+use std::ops::Range;
+
+/// A modeled worker loss, recorded by the communicator at the collective
+/// it was armed for. Deterministic: same config, same epoch, same event.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultEvent {
+    /// the worker that died
+    pub worker: usize,
+    /// ordinal of the collective (1-based, within the epoch's
+    /// communicator) at which the loss is detected
+    pub at_collective: usize,
+    /// simulated makespan at detection — the modeled time the partial
+    /// epoch wasted before the survivors could react
+    pub at_secs: f64,
+}
+
+/// Contiguous dim slices of `[0, d)` with widths proportional to
+/// `weights` (per-worker speed estimates). Largest-remainder rounding;
+/// ties go to the lower index, so the result is deterministic. Degenerate
+/// weights (non-finite or non-positive entries) fall back to uniform.
+///
+/// The cover invariant — slices are adjacent, disjoint, and sum to `d` —
+/// is what keeps re-balancing loss-free: split/gather move exactly the
+/// same scalars under any cover (DESIGN.md §9.3), only the per-worker
+/// byte volumes (and thus modeled times) shift.
+pub fn weighted_dim_slices(d: usize, weights: &[f64]) -> Vec<Range<usize>> {
+    let n = weights.len();
+    assert!(n > 0, "weighted_dim_slices needs at least one worker");
+    let uniform = vec![1.0; n];
+    let ws: &[f64] = if weights.iter().all(|w| w.is_finite() && *w > 0.0) {
+        weights
+    } else {
+        &uniform
+    };
+    let total: f64 = ws.iter().sum();
+    let ideal: Vec<f64> = ws.iter().map(|w| d as f64 * w / total).collect();
+    let mut width: Vec<usize> = ideal.iter().map(|x| x.floor() as usize).collect();
+    // distribute the remainder by largest fractional part, lower index
+    // first on ties; the trim loop only runs if fp error over-assigned
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        let (fa, fb) = (ideal[a] - ideal[a].floor(), ideal[b] - ideal[b].floor());
+        fb.partial_cmp(&fa).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    let mut assigned: usize = width.iter().sum();
+    let mut k = 0usize;
+    while assigned < d {
+        width[order[k % n]] += 1;
+        assigned += 1;
+        k += 1;
+    }
+    k = 0;
+    while assigned > d {
+        let i = order[n - 1 - (k % n)];
+        if width[i] > 0 {
+            width[i] -= 1;
+            assigned -= 1;
+        }
+        k += 1;
+    }
+    let mut slices = Vec::with_capacity(n);
+    let mut start = 0usize;
+    for w in width {
+        slices.push(start..start + w);
+        start += w;
+    }
+    slices
+}
+
+/// Next-epoch slice weights from one epoch's feedback: worker `w` moved a
+/// `widths[w]`-column slice in `comm_secs[w]` NIC-busy seconds, so its
+/// effective speed is `widths[w] / comm_secs[w]` columns per second
+/// (`Topology::bw_scale` shows up here without being read directly — a
+/// straggler NIC takes longer per column). Returns `None` on degenerate
+/// feedback (an empty slice or a worker with no measured traffic), in
+/// which case the caller keeps its current slicing.
+pub fn refit_weights(widths: &[usize], comm_secs: &[f64]) -> Option<Vec<f64>> {
+    if widths.len() != comm_secs.len() || widths.len() < 2 {
+        return None;
+    }
+    let mut ws = Vec::with_capacity(widths.len());
+    for (&wd, &s) in widths.iter().zip(comm_secs) {
+        if wd == 0 || !s.is_finite() || s <= 0.0 {
+            return None;
+        }
+        ws.push(wd as f64 / s);
+    }
+    Some(ws)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::dim_slices;
+
+    fn assert_cover(slices: &[Range<usize>], d: usize) {
+        let mut next = 0usize;
+        for s in slices {
+            assert_eq!(s.start, next, "slices must be adjacent: {slices:?}");
+            assert!(s.end >= s.start);
+            next = s.end;
+        }
+        assert_eq!(next, d, "slices must cover [0, {d}): {slices:?}");
+    }
+
+    #[test]
+    fn uniform_weights_match_dim_slices() {
+        for (d, n) in [(64usize, 4usize), (61, 4), (7, 3), (3, 4), (1, 8)] {
+            let got = weighted_dim_slices(d, &vec![1.0; n]);
+            assert_eq!(got, dim_slices(d, n), "d={d} n={n}");
+        }
+    }
+
+    #[test]
+    fn skewed_weights_shift_width_toward_fast_workers() {
+        let s = weighted_dim_slices(64, &[0.25, 1.0, 1.0, 1.0]);
+        assert_cover(&s, 64);
+        assert!(
+            s[0].len() < s[1].len(),
+            "straggler kept {} columns vs {}",
+            s[0].len(),
+            s[1].len()
+        );
+        // 64 * 0.25/3.25 ≈ 4.9 → the straggler gets ~5 columns
+        assert!(s[0].len() <= 6, "straggler width {}", s[0].len());
+    }
+
+    #[test]
+    fn degenerate_weights_fall_back_to_uniform() {
+        for bad in [vec![0.0, 1.0], vec![f64::NAN, 1.0], vec![-1.0, 1.0]] {
+            assert_eq!(weighted_dim_slices(10, &bad), dim_slices(10, 2));
+        }
+    }
+
+    #[test]
+    fn extreme_skew_may_empty_a_slice_but_still_covers() {
+        let s = weighted_dim_slices(4, &[1e-9, 1.0, 1.0, 1.0]);
+        assert_cover(&s, 4);
+    }
+
+    #[test]
+    fn refit_inverts_nic_time() {
+        // worker 0 took 4x the time per column: its weight drops 4x
+        let ws = refit_weights(&[16, 16], &[4.0, 1.0]).unwrap();
+        assert!((ws[0] / ws[1] - 0.25).abs() < 1e-12, "{ws:?}");
+        // degenerate feedback declines to refit
+        assert_eq!(refit_weights(&[16, 0], &[1.0, 1.0]), None);
+        assert_eq!(refit_weights(&[16, 16], &[1.0, 0.0]), None);
+        assert_eq!(refit_weights(&[16], &[1.0]), None);
+    }
+}

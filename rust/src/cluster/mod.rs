@@ -7,9 +7,11 @@
 
 pub mod comm;
 pub mod event;
+pub mod fault;
 
 pub use comm::{
     Comm, CommHandle, CommKind, CommStats, CommTrace, DoneTimes, KindStats, Rounds, Topology,
     TraceEvent,
 };
 pub use event::{EventSim, StreamKind};
+pub use fault::{refit_weights, weighted_dim_slices, FaultEvent};

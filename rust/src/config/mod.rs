@@ -243,8 +243,35 @@ pub struct CommTuning {
     pub allreduce: AllReduceAlgo,
     /// per-worker bandwidth multipliers (straggler/hetero-NIC scenarios):
     /// `0.5` = half bandwidth. Empty = homogeneous; shorter lists pad
-    /// with 1.0, longer lists truncate to the worker count.
+    /// with 1.0. Lists longer than the worker count are a config error
+    /// (they used to truncate silently, dropping straggler entries).
     pub bw_scale: Vec<f64>,
+}
+
+/// Deterministic fault-injection plan (`[fault]` TOML section; DESIGN.md
+/// §9.1): model the loss of `kill_worker` at the first collective of
+/// epoch `kill_epoch`. The elastic driver (`parallel::elastic`) discards
+/// the partial epoch and re-replays it on the `N-1` survivors; with
+/// `rejoin_epoch` set, the worker comes back and the cluster re-shards
+/// to `N` again. `rebalance` turns on the straggler-aware dim-slice
+/// re-balancer (timing-only; losses never change).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultCfg {
+    /// rank of the worker that dies (must be < `workers`)
+    pub kill_worker: Option<usize>,
+    /// epoch (0-based) during which the loss fires
+    pub kill_epoch: Option<usize>,
+    /// epoch at which the dead worker rejoins (must be > `kill_epoch`)
+    pub rejoin_epoch: Option<usize>,
+    /// refit dim-slice widths from each epoch's NIC feedback
+    pub rebalance: bool,
+}
+
+impl FaultCfg {
+    /// Whether a worker loss is scheduled at all.
+    pub fn armed(&self) -> bool {
+        self.kill_worker.is_some() && self.kill_epoch.is_some()
+    }
 }
 
 /// Host-staging memory model (`[mem]` TOML section; DESIGN.md §5.2): the
@@ -357,6 +384,9 @@ pub struct RunConfig {
     /// resume from `checkpoint_dir`'s latest checkpoint instead of epoch 0
     /// (`--resume`); the saved header must match this configuration
     pub resume: bool,
+    /// modeled fault injection + elastic knobs (`[fault]`,
+    /// `--kill-worker`/`--kill-epoch`/`--rejoin-epoch`/`--rebalance`)
+    pub fault: FaultCfg,
 }
 
 impl Default for RunConfig {
@@ -387,6 +417,7 @@ impl Default for RunConfig {
             batch_size: 1024,
             checkpoint_dir: None,
             resume: false,
+            fault: FaultCfg::default(),
         }
     }
 }
@@ -470,6 +501,13 @@ impl RunConfig {
                     .as_f64_array()
                     .ok_or_else(|| anyhow::anyhow!("{key}: expected number array"))?;
             }
+            "fault.kill_worker" => self.fault.kill_worker = Some(want_int()?),
+            "fault.kill_epoch" => self.fault.kill_epoch = Some(want_int()?),
+            "fault.rejoin_epoch" => self.fault.rejoin_epoch = Some(want_int()?),
+            "fault.rebalance" => {
+                self.fault.rebalance =
+                    v.as_bool().ok_or_else(|| anyhow::anyhow!("{key}: expected bool"))?;
+            }
             _ => {
                 let _ = matches!(v, Value::Str(_));
                 anyhow::bail!("unknown config key '{key}'");
@@ -500,6 +538,53 @@ impl RunConfig {
         }
         if self.comm.bw_scale.iter().any(|s| !s.is_finite() || *s <= 0.0) {
             anyhow::bail!("comm.bw_scale entries must be finite and > 0");
+        }
+        if self.comm.bw_scale.len() > self.workers {
+            anyhow::bail!(
+                "comm.bw_scale has {} entries but the cluster has {} workers — \
+                 trim the list or raise --workers (shorter lists pad with 1.0)",
+                self.comm.bw_scale.len(),
+                self.workers
+            );
+        }
+        match (self.fault.kill_worker, self.fault.kill_epoch) {
+            (None, None) => {}
+            (Some(_), None) | (None, Some(_)) => {
+                anyhow::bail!(
+                    "fault injection needs both fault.kill_worker and fault.kill_epoch"
+                );
+            }
+            (Some(w), Some(e)) => {
+                if w >= self.workers {
+                    anyhow::bail!(
+                        "fault.kill_worker {} out of range for {} workers",
+                        w,
+                        self.workers
+                    );
+                }
+                if self.workers < 2 {
+                    anyhow::bail!("fault injection needs at least 2 workers to survive");
+                }
+                if self.system != System::NeutronTp {
+                    anyhow::bail!(
+                        "elastic fault recovery is only supported for system = neutron_tp \
+                         (got {})",
+                        self.system.name()
+                    );
+                }
+                if let Some(r) = self.fault.rejoin_epoch {
+                    anyhow::ensure!(
+                        r > e,
+                        "fault.rejoin_epoch ({r}) must be after fault.kill_epoch ({e})"
+                    );
+                }
+            }
+        }
+        if self.fault.rejoin_epoch.is_some() && !self.fault.armed() {
+            anyhow::bail!("fault.rejoin_epoch needs fault.kill_worker/fault.kill_epoch");
+        }
+        if self.fault.rebalance && self.system != System::NeutronTp {
+            anyhow::bail!("fault.rebalance only applies to system = neutron_tp");
         }
         if !self.mem.pcie_gbps.is_finite() || self.mem.pcie_gbps <= 0.0 {
             anyhow::bail!("mem.pcie_gbps must be finite and > 0");
@@ -645,6 +730,58 @@ mod tests {
         let d = RunConfig::default();
         assert!(d.mem.swap);
         assert!(d.mem.prefetch_depth >= 1);
+    }
+
+    #[test]
+    fn over_long_bw_scale_rejected_by_validate() {
+        let mut c = RunConfig::default(); // 4 workers
+        c.comm.bw_scale = vec![1.0, 1.0, 1.0, 0.5, 0.5];
+        let msg = c.validate().unwrap_err().to_string();
+        assert!(msg.contains("5 entries"), "{msg}");
+        // shorter lists are fine (they pad)
+        c.comm.bw_scale = vec![0.5];
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn fault_keys_parse_and_validate() {
+        let text = r#"
+            [fault]
+            kill_worker = 2
+            kill_epoch = 1
+            rejoin_epoch = 3
+            rebalance = true
+        "#;
+        let c = RunConfig::from_toml(text).unwrap();
+        assert_eq!(c.fault.kill_worker, Some(2));
+        assert_eq!(c.fault.kill_epoch, Some(1));
+        assert_eq!(c.fault.rejoin_epoch, Some(3));
+        assert!(c.fault.rebalance);
+        assert!(c.fault.armed());
+        c.validate().unwrap();
+        // defaults: nothing armed
+        assert!(!RunConfig::default().fault.armed());
+
+        let mut bad = RunConfig::default();
+        bad.fault.kill_worker = Some(1); // no kill_epoch
+        assert!(bad.validate().is_err());
+        let mut bad = RunConfig::default();
+        bad.fault.kill_worker = Some(9); // out of range for 4 workers
+        bad.fault.kill_epoch = Some(1);
+        assert!(bad.validate().is_err());
+        let mut bad = RunConfig::default();
+        bad.fault.kill_worker = Some(0);
+        bad.fault.kill_epoch = Some(2);
+        bad.fault.rejoin_epoch = Some(2); // must be strictly after the kill
+        assert!(bad.validate().is_err());
+        let mut bad = RunConfig::default();
+        bad.system = System::DpFull;
+        bad.fault.kill_worker = Some(0);
+        bad.fault.kill_epoch = Some(1);
+        assert!(bad.validate().is_err(), "elastic recovery is TP-only");
+        let mut bad = RunConfig::default();
+        bad.fault.rejoin_epoch = Some(3); // rejoin without a kill
+        assert!(bad.validate().is_err());
     }
 
     #[test]

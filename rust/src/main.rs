@@ -70,6 +70,7 @@ fn print_usage() {
          \x20                  [--pcie-gbps G] [--prefetch-depth K] [--no-swap]\n\
          \x20                  [--comm-all-to-all naive|pairwise] [--comm-allreduce ring|flat_tree]\n\
          \x20                  [--bw-scale S0,S1,...] [--checkpoint-dir D] [--resume]\n\
+         \x20                  [--kill-worker W --kill-epoch E [--rejoin-epoch R]] [--rebalance]\n\
          \x20 neutron-tp serve [--checkpoint F | --profile P [--warm-epochs K]]\n\
          \x20                  [--requests N] [--batch-size B] [--executor-threads N]\n\
          \x20 neutron-tp check [--all-profiles | same flags as train]\n\
@@ -96,6 +97,16 @@ fn print_usage() {
          knob that fixes it. `check --all-profiles` sweeps all builtin\n\
          profile x system combinations; `train`/`serve --pre-flight` run the\n\
          same pass and abort on errors before any epoch executes.\n\n\
+         elastic training ([fault], DESIGN.md §9): --kill-worker W --kill-epoch E\n\
+         models losing worker W mid-epoch E — the loss is detected at the next\n\
+         collective, the partial epoch is discarded and replayed on the N-1\n\
+         survivors; --rejoin-epoch R re-admits the worker at epoch R. --rebalance\n\
+         refits NeutronTP's dim slices to measured per-worker comm rates between\n\
+         epochs (straggler-aware; pairs well with --bw-scale). Losses stay\n\
+         bit-identical to the undisturbed run; only modeled time changes. A\n\
+         `--resume` may also change --workers: the checkpoint re-shards N->M\n\
+         (decoupled TP only). TOML: [fault] kill_worker/kill_epoch/\n\
+         rejoin_epoch/rebalance.\n\n\
          checkpoints: --checkpoint-dir saves <D>/{} (versioned binary:\n\
          params + Adam moments + epoch counter; atomic rename) after every\n\
          epoch; --resume continues from it bit-identically. `serve` loads a\n\
@@ -181,6 +192,18 @@ fn apply_flag_overrides(cfg: &mut RunConfig, flags: &Flags) -> anyhow::Result<()
             .collect::<Result<_, _>>()
             .map_err(|e| anyhow::anyhow!("--bw-scale expects comma-separated numbers: {e}"))?;
     }
+    if let Some(v) = flags.get("kill-worker") {
+        cfg.fault.kill_worker = Some(v.parse()?);
+    }
+    if let Some(v) = flags.get("kill-epoch") {
+        cfg.fault.kill_epoch = Some(v.parse()?);
+    }
+    if let Some(v) = flags.get("rejoin-epoch") {
+        cfg.fault.rejoin_epoch = Some(v.parse()?);
+    }
+    if flags.has("rebalance") {
+        cfg.fault.rebalance = true;
+    }
     if let Some(v) = flags.get("checkpoint-dir") {
         cfg.checkpoint_dir = Some(v.clone());
     }
@@ -223,6 +246,45 @@ fn train(flags: &Flags) -> anyhow::Result<()> {
     let pool = ExecutorPool::with_intra(&store, cfg.executor_threads, cfg.intra_threads)?;
     let ctx = Ctx { cfg: &cfg, data: &data, store: &store, pool: &pool };
 
+    if cfg.fault.armed() {
+        anyhow::ensure!(
+            !cfg.resume,
+            "--kill-worker/--kill-epoch model an in-run failure and cannot combine with \
+             --resume (an N->M resume re-shards via --workers instead)"
+        );
+        let outcome = parallel::elastic::run_elastic_full(&ctx)?;
+        for (e, r) in outcome.reports.iter().enumerate() {
+            let swap = r.swap_row();
+            println!(
+                "epoch {e:>3}: {} | train_acc {:.3} test_acc {:.3} | wall {:.2}s{}{}",
+                r.table_row(),
+                r.train_acc,
+                r.test_acc,
+                r.wall_secs,
+                if swap.is_empty() { "" } else { " | " },
+                swap
+            );
+            if let Some(ev) = &r.fault {
+                println!(
+                    "  worker {} lost at collective {} ({:.1} us of partial epoch discarded); \
+                     replayed on survivors",
+                    ev.worker,
+                    ev.at_collective,
+                    r.recovery_secs * 1e6
+                );
+            }
+        }
+        if let Some(dir) = &cfg.checkpoint_dir {
+            // record the cluster size the run ENDED on, so a later
+            // --resume at a different --workers takes the re-shard path
+            let mut meta = checkpoint::CheckpointMeta::of(&cfg);
+            meta.workers = outcome.final_workers;
+            let path = checkpoint::latest_path(dir);
+            checkpoint::save(&path, &checkpoint::Checkpoint { meta, state: outcome.state })?;
+        }
+        return Ok(());
+    }
+
     let mut engine = parallel::Engine::new(&ctx)?;
     let mut start_epoch = 0usize;
     if cfg.resume {
@@ -232,7 +294,15 @@ fn train(flags: &Flags) -> anyhow::Result<()> {
             .ok_or_else(|| anyhow::anyhow!("--resume needs --checkpoint-dir"))?;
         let path = checkpoint::latest_path(dir);
         let ckpt = checkpoint::load(&path)?;
-        ckpt.meta.matches(&cfg)?;
+        match ckpt.meta.compatible(&cfg)? {
+            serve::ResumeMode::Exact => {}
+            serve::ResumeMode::Reshard { from, to } => {
+                eprintln!(
+                    "elastic re-shard: checkpoint written by {from} worker(s), resuming on {to} \
+                     (losses stay bit-identical; dim slices and chunk geometry re-derived)"
+                );
+            }
+        }
         start_epoch = ckpt.state.epochs_done;
         engine.import_state(ckpt.state)?;
         eprintln!("resumed from {} after {start_epoch} epoch(s)", path.display());

@@ -47,6 +47,13 @@ pub struct EpochReport {
     /// host-staging swap accounting (`sched::staging`, DESIGN.md §5.2):
     /// zeroed unless the epoch ran with the swap path engaged
     pub swap: SwapStats,
+    /// modeled worker loss recorded during this epoch (DESIGN.md §9.1);
+    /// set means the epoch's numerics were discarded and re-replayed by
+    /// the elastic driver
+    pub fault: Option<crate::cluster::FaultEvent>,
+    /// modeled seconds the fault wasted: the partial epoch's makespan at
+    /// detection, folded into the replacement epoch's accounting
+    pub recovery_secs: f64,
 }
 
 impl EpochReport {
@@ -82,6 +89,7 @@ impl EpochReport {
             self.workers[w].comm_bytes += *b;
         }
         self.comm_stats = comm.stats().clone();
+        self.fault = comm.fault_event().cloned();
     }
 
     /// Fill per-worker comp/comm seconds from a finished event sim.
@@ -154,7 +162,13 @@ impl ServeReport {
     ) -> ServeReport {
         let queries = lat_secs.len();
         lat_secs.sort_by(f64::total_cmp);
-        let qps = if wall_secs > 0.0 { queries as f64 / wall_secs } else { 0.0 };
+        // guard both legs: zero queries over zero wall time is 0 qps, not
+        // NaN, and a non-finite wall clock must not poison the report
+        let qps = if queries > 0 && wall_secs.is_finite() && wall_secs > 0.0 {
+            queries as f64 / wall_secs
+        } else {
+            0.0
+        };
         ServeReport {
             queries,
             batches,
@@ -247,7 +261,7 @@ mod tests {
     #[test]
     fn absorb_comm_carries_bytes_and_breakdown() {
         use crate::config::{CommTuning, NetModel};
-        let mut comm = Comm::new(2, NetModel::default(), &CommTuning::default());
+        let mut comm = Comm::new(2, NetModel::default(), &CommTuning::default()).unwrap();
         comm.p2p(0, 4096);
         comm.compute(1, 0.5, 0.0);
         let mut r = EpochReport { workers: vec![Default::default(); 2], ..Default::default() };
@@ -268,6 +282,42 @@ mod tests {
         assert_eq!(percentile(&v, 1.0), 100.0);
         assert_eq!(percentile(&[7.0], 0.5), 7.0);
         assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    /// Nearest-rank boundary cases: q=0 clamps to the first sample (rank
+    /// 0 would underflow), q=1 to the last, and n=1 answers the single
+    /// sample for every q.
+    #[test]
+    fn percentile_edge_cases() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 1.0), 4.0);
+        // just over a rank boundary rounds up (nearest-rank, not interp)
+        assert_eq!(percentile(&v, 0.251), 2.0);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(percentile(&[42.0], q), 42.0, "n=1, q={q}");
+        }
+        assert_eq!(percentile(&[], 0.0), 0.0);
+        assert_eq!(percentile(&[], 1.0), 0.0);
+    }
+
+    /// The satellite bugfix: an empty serve run (zero queries and/or zero
+    /// wall time) reports zeros, never NaN, and the printed row is clean.
+    #[test]
+    fn empty_serve_report_is_all_zeros_not_nan() {
+        let r = ServeReport::from_latencies(vec![], 0, 8, 0.0, 0.0);
+        assert_eq!(r.queries, 0);
+        assert_eq!(r.qps, 0.0);
+        assert_eq!(r.p50_ms, 0.0);
+        assert_eq!(r.p95_ms, 0.0);
+        assert_eq!(r.p99_ms, 0.0);
+        assert!(!r.table_row().contains("NaN"), "{}", r.table_row());
+        // queries but a zero/broken wall clock: percentiles real, qps 0
+        let r = ServeReport::from_latencies(vec![0.002], 1, 1, 0.1, 0.0);
+        assert_eq!(r.qps, 0.0);
+        assert!((r.p50_ms - 2.0).abs() < 1e-9);
+        let r = ServeReport::from_latencies(vec![0.002], 1, 1, 0.1, f64::NAN);
+        assert_eq!(r.qps, 0.0);
     }
 
     #[test]

@@ -30,6 +30,18 @@ use crate::tensor::{pad_tile, Matrix};
 
 use super::Ctx;
 
+/// Fixed row-partition count the decoupled data plane is evaluated over,
+/// independent of the cluster size (DESIGN.md §9.2). Per-row forward
+/// values are partition-invariant, but backward weight partials
+/// (`dW = Σ_w x_wᵀ g_w`) and the loss reduction are float sums whose
+/// association follows the partition — evaluating them over a *canonical*
+/// partition is what makes losses bit-identical across worker counts, and
+/// therefore across mid-training N→M re-shards. The constant matches the
+/// default `workers = 4`, so default-cluster numerics are unchanged.
+/// Timing still attributes each worker's real share of the measured
+/// device seconds, so the sim plane keeps its N-worker shape.
+pub const CANON_DATA_PARTS: usize = 4;
+
 /// Memory plan of the decoupled TP aggregation phase: the chunk geometry
 /// plus, when the resident working set overflows the budget and `[mem]
 /// swap` is on, the host-staging spec the engine drives transfers with.
@@ -566,8 +578,8 @@ pub fn allreduce_and_step(
     per_worker: Vec<Vec<(Matrix, Vec<f32>)>>,
     report: &mut EpochReport,
 ) {
-    let n = per_worker.len();
-    // data plane: sum
+    // data plane: sum (the vec may be canonical-partition-sized, not
+    // cluster-sized — see `CANON_DATA_PARTS`)
     let mut grads = per_worker[0].clone();
     for w in &per_worker[1..] {
         for (i, (gw, gb)) in w.iter().enumerate() {
@@ -577,8 +589,10 @@ pub fn allreduce_and_step(
             }
         }
     }
-    // sim plane: allreduce of the flat gradient (ring or flat tree per
-    // the run's CommTuning; byte accounting lands in the Comm's stats)
+    // sim plane: allreduce of the flat gradient over the *actual* cluster
+    // (ring or flat tree per the run's CommTuning; byte accounting lands
+    // in the Comm's stats)
+    let n = comm.workers();
     let bytes = params.grad_bytes();
     if n > 1 {
         let flat: Vec<Matrix> = (0..n).map(|_| Matrix::zeros(1, bytes / 4)).collect();

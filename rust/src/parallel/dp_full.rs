@@ -148,7 +148,7 @@ impl DpEngine {
         let v = data.profile.v;
         let rows_per = v / n;
         let row_parts = crate::tensor::row_slices(v, n);
-        let mut comm = Comm::for_run(cfg);
+        let mut comm = Comm::for_run(cfg)?;
         let mut report = EpochReport {
             workers: vec![Default::default(); n],
             ..Default::default()

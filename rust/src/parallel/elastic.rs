@@ -1,0 +1,143 @@
+//! Elastic training driver (DESIGN.md §9): survive a modeled worker
+//! failure mid-epoch and keep training on the survivors, bit-identically.
+//!
+//! The flow mirrors what a real elastic trainer does, with the cluster's
+//! sim plane standing in for real processes:
+//!
+//! 1. Every epoch starts from a [`super::TrainState`] snapshot (cheap:
+//!    parameters + optimizer moments).
+//! 2. The epoch's communicator is armed via `Comm::for_epoch`; when the
+//!    `[fault]` plan's epoch comes up, the modeled loss of
+//!    `fault.kill_worker` is recorded at the epoch's first collective as
+//!    a [`crate::cluster::FaultEvent`]. The engine still finishes the
+//!    epoch numerically — the data plane is host-side — but its result is
+//!    *discarded*, exactly like a real partial epoch would be.
+//! 3. The driver rebuilds the engine for the `N-1` survivors, imports
+//!    the pre-epoch snapshot, and re-replays the epoch. Tensor
+//!    parallelism makes this pure bookkeeping: dim slices, chunk
+//!    geometry and staging plans are re-derived from the survivor
+//!    config; no vertex dependencies move (DESIGN.md §9.2).
+//! 4. With `fault.rejoin_epoch` set, the dead worker comes back: the
+//!    engine is rebuilt at full strength from the survivors' state.
+//!
+//! Because the decoupled data plane is evaluated over the canonical
+//! partition (`common::CANON_DATA_PARTS`), the losses of the disturbed
+//! run are bit-identical to an undisturbed run's — asserted in
+//! `rust/tests/elastic.rs`. The modeled cost of the failure (the partial
+//! epoch's wasted makespan) lands in `EpochReport::recovery_secs`.
+
+use crate::config::RunConfig;
+use crate::metrics::EpochReport;
+
+use super::{Ctx, Engine, TrainState};
+
+/// Everything an elastic run produces: the per-epoch reports, the final
+/// training state (checkpointable), and the cluster size the run ended
+/// on (`N` with a rejoin, `N-1` without).
+pub struct ElasticOutcome {
+    pub reports: Vec<EpochReport>,
+    pub state: TrainState,
+    pub final_workers: usize,
+}
+
+/// The survivor cluster's configuration: one worker fewer, the dead
+/// worker's NIC entry dropped from the straggler topology, and the fault
+/// plan disarmed (a second failure would need its own plan).
+fn survivor_config(cfg: &RunConfig) -> RunConfig {
+    let mut c = cfg.clone();
+    c.workers = cfg.workers.saturating_sub(1).max(1);
+    if let Some(k) = cfg.fault.kill_worker {
+        if k < c.comm.bw_scale.len() {
+            c.comm.bw_scale.remove(k);
+        }
+    }
+    c.comm.bw_scale.truncate(c.workers);
+    c.fault.kill_worker = None;
+    c.fault.kill_epoch = None;
+    c.fault.rejoin_epoch = None;
+    c
+}
+
+/// Run `cfg.epochs` epochs under the `[fault]` plan: detect the modeled
+/// worker loss, fail over to the survivors, optionally re-admit the
+/// worker later. Entered from [`super::run`] when the plan is armed.
+pub fn run_elastic(ctx: &Ctx) -> crate::Result<Vec<EpochReport>> {
+    Ok(run_elastic_full(ctx)?.reports)
+}
+
+/// [`run_elastic`] plus the final state — the CLI checkpoints it with
+/// the worker count the run actually ended on, so a later `--resume` at
+/// a different `--workers` goes through the N→M re-shard path.
+pub fn run_elastic_full(ctx: &Ctx) -> crate::Result<ElasticOutcome> {
+    let cfg = ctx.cfg;
+    anyhow::ensure!(
+        cfg.fault.armed(),
+        "run_elastic needs an armed [fault] plan (kill_worker + kill_epoch)"
+    );
+    // declared before the loop so the rebuilt engine outlives iterations
+    let survivor_cfg = survivor_config(cfg);
+    let survivor_ctx =
+        Ctx { cfg: &survivor_cfg, data: ctx.data, store: ctx.store, pool: ctx.pool };
+
+    let mut engine = Engine::new(ctx)?;
+    let mut on_survivors = false;
+    let mut reports = Vec::with_capacity(cfg.epochs);
+    for epoch in 0..cfg.epochs {
+        if on_survivors && cfg.fault.rejoin_epoch == Some(epoch) {
+            // the worker rejoins: re-shard back to full strength. The
+            // original ctx is safe to reuse — its kill epoch has passed,
+            // so the rebuilt communicators never re-arm.
+            let st = engine.export_state();
+            engine = Engine::new(ctx)?;
+            engine.import_state(st)?;
+            on_survivors = false;
+        }
+        let snapshot = engine.export_state();
+        let active = if on_survivors { &survivor_ctx } else { ctx };
+        let mut report = engine.run_epoch(active)?;
+        if let Some(ev) = report.fault.clone() {
+            // worker lost mid-epoch: discard the partial epoch (its
+            // numerics never happened — restore the boundary snapshot),
+            // re-shard to the survivors, and re-replay. The wasted
+            // makespan is the recovery overhead.
+            let wasted = ev.at_secs;
+            engine = Engine::new(&survivor_ctx)?;
+            engine.import_state(snapshot)?;
+            on_survivors = true;
+            report = engine.run_epoch(&survivor_ctx)?;
+            report.fault = Some(ev);
+            report.recovery_secs = wasted;
+            report.sim_epoch_secs += wasted;
+        }
+        reports.push(report);
+    }
+    let final_workers = if on_survivors { survivor_cfg.workers } else { cfg.workers };
+    Ok(ElasticOutcome { reports, state: engine.export_state(), final_workers })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn survivor_config_drops_the_dead_workers_nic_entry() {
+        let mut cfg = RunConfig::default(); // 4 workers
+        cfg.comm.bw_scale = vec![1.0, 0.25, 1.0, 1.0];
+        cfg.fault.kill_worker = Some(1);
+        cfg.fault.kill_epoch = Some(0);
+        cfg.fault.rejoin_epoch = Some(2);
+        let s = survivor_config(&cfg);
+        assert_eq!(s.workers, 3);
+        assert_eq!(s.comm.bw_scale, vec![1.0, 1.0, 1.0]);
+        assert!(!s.fault.armed());
+        assert_eq!(s.fault.rejoin_epoch, None);
+        // a bw_scale shorter than the dead worker's rank is left alone
+        let mut cfg = RunConfig::default();
+        cfg.comm.bw_scale = vec![0.5];
+        cfg.fault.kill_worker = Some(3);
+        cfg.fault.kill_epoch = Some(1);
+        let s = survivor_config(&cfg);
+        assert_eq!(s.comm.bw_scale, vec![0.5]);
+        assert_eq!(s.workers, 3);
+    }
+}

@@ -130,7 +130,7 @@ impl HistoricalEngine {
         let n = cfg.workers;
         let v = data.profile.v;
         let row_parts = crate::tensor::row_slices(v, n);
-        let mut comm = Comm::for_run(cfg);
+        let mut comm = Comm::for_run(cfg)?;
         let mut report = EpochReport {
             workers: vec![Default::default(); n],
             ..Default::default()

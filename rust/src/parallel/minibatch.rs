@@ -259,7 +259,7 @@ impl MiniBatchEngine {
         let ops = ctx.ops();
         let n = cfg.workers;
         let nlayers = self.params.layers().len();
-        let mut comm = Comm::for_run(cfg);
+        let mut comm = Comm::for_run(cfg)?;
         let mut report = EpochReport {
             workers: vec![Default::default(); n],
             ..Default::default()

@@ -19,6 +19,7 @@
 
 pub mod common;
 pub mod dp_full;
+pub mod elastic;
 pub mod historical;
 pub mod minibatch;
 pub mod tp;
@@ -140,8 +141,13 @@ impl Engine {
     }
 }
 
-/// Run `cfg.epochs` epochs of the configured system.
+/// Run `cfg.epochs` epochs of the configured system. An armed `[fault]`
+/// plan routes through the elastic driver (modeled worker loss, failover
+/// to the survivors, optional rejoin — DESIGN.md §9).
 pub fn run(ctx: &Ctx) -> crate::Result<Vec<EpochReport>> {
+    if ctx.cfg.fault.armed() {
+        return elastic::run_elastic(ctx);
+    }
     let mut engine = Engine::new(ctx)?;
     (0..ctx.cfg.epochs).map(|_| engine.run_epoch(ctx)).collect()
 }

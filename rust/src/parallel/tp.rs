@@ -57,6 +57,11 @@ pub struct TpEngine {
     /// unnormalized (self-loop) graph for GAT attention
     attn_graph: Option<Csr>,
     epoch_idx: usize,
+    /// straggler-aware dim-slice weights (`[fault] rebalance`,
+    /// DESIGN.md §9.3): refit from each epoch's per-worker NIC feedback.
+    /// `None` (or a stale length after a re-shard) means uniform slices.
+    /// Timing-only — slice widths never touch the aggregation numerics.
+    dim_weights: Option<Vec<f64>>,
 }
 
 impl TpEngine {
@@ -105,6 +110,7 @@ impl TpEngine {
             dims,
             attn_graph,
             epoch_idx: 0,
+            dim_weights: None,
         })
     }
 
@@ -164,8 +170,18 @@ impl TpEngine {
         let wf = *self.dims.last().unwrap();
         let l = cfg.layers;
         let row_parts = row_slices(v, n);
-        let dim_parts = dim_slices(wf, n);
-        let mut comm = Comm::for_run(cfg);
+        // dim slices: uniform, or width-weighted by last epoch's NIC
+        // feedback when the re-balancer is on (timing-only either way)
+        let dim_parts = match &self.dim_weights {
+            Some(ws) if ws.len() == n => crate::cluster::weighted_dim_slices(wf, ws),
+            _ => dim_slices(wf, n),
+        };
+        // the *data plane* is evaluated over a canonical fixed partition so
+        // losses are bit-identical across worker counts (elastic N→M
+        // resumes, DESIGN.md §9.2); timing attributes each real worker its
+        // row share of the measured device seconds
+        let canon_parts = row_slices(v, common::CANON_DATA_PARTS);
+        let mut comm = Comm::for_epoch(cfg, self.epoch_idx)?;
         let mut report = EpochReport {
             workers: vec![Default::default(); n],
             ..Default::default()
@@ -177,14 +193,16 @@ impl TpEngine {
             Some(_) => unreachable!("dataset generated with feat override"),
         };
 
-        // ---- Phase 1: NN chain per worker (vertex-sliced, all workers'
-        // layer jobs in flight together) ----
+        // ---- Phase 1: NN chains over the canonical row partition (all
+        // chains' layer jobs in flight together) ----
         let xs: Vec<Matrix> =
-            row_parts.iter().map(|part| features.slice_rows(part.clone())).collect();
+            canon_parts.iter().map(|part| features.slice_rows(part.clone())).collect();
         let (caches, chain_secs) = common::nn_chain_fwd_batch(&ops, self.params.layers(), &xs)?;
+        let chain_total: f64 = chain_secs.iter().sum();
         let mut nn_secs_total = 0.0;
-        for (w, secs) in chain_secs.iter().enumerate() {
-            let m = common::modeled(cfg, *secs);
+        for (w, part) in row_parts.iter().enumerate() {
+            let share = part.len() as f64 / v.max(1) as f64;
+            let m = common::modeled(cfg, chain_total * share);
             comm.compute(w, m, 0.0);
             nn_secs_total += m;
         }
@@ -297,14 +315,17 @@ impl TpEngine {
         let gnn_fwd_secs: f64 =
             comm.sim().comp_totals().iter().sum::<f64>() - nn_secs_total - attn_secs;
 
-        // ---- Phase 5: downstream task ----
+        // ---- Phase 5: downstream task (canonical partition: the loss
+        // reduction's float association must not depend on N) ----
         let (loss, mut grad_full, correct, task_secs) = match cfg.task {
             crate::config::Task::NodeClassification => {
-                let (loss, grad, correct, secs) = common::nc_loss(&ops, data, &h_full, &row_parts)?;
-                for (w, s) in secs.iter().enumerate() {
-                    comm.compute(w, common::modeled(cfg, *s), agg_fwd_done[w]);
-                }
+                let (loss, grad, correct, secs) =
+                    common::nc_loss(&ops, data, &h_full, &canon_parts)?;
                 let t: f64 = secs.iter().sum();
+                for (w, part) in row_parts.iter().enumerate() {
+                    let share = part.len() as f64 / v.max(1) as f64;
+                    comm.compute(w, common::modeled(cfg, t * share), agg_fwd_done[w]);
+                }
                 (loss, grad, correct, common::modeled(cfg, t))
             }
             crate::config::Task::LinkPrediction => {
@@ -319,14 +340,18 @@ impl TpEngine {
             ctx, &mut comm, &mut report, bwd_plans, &mut grad_full, wf, l, &row_parts, &dim_parts,
         )?;
 
-        // ---- NN backward per worker (submit-all, wait-in-order) ----
+        // ---- NN backward over the canonical partition (weight partials
+        // `dW = Σ x_pᵀ g_p` are float sums whose association follows the
+        // partition — canonical slicing keeps them N-invariant) ----
         let grad_slices: Vec<Matrix> =
-            row_parts.iter().map(|part| grad_full.slice_rows(part.clone())).collect();
+            canon_parts.iter().map(|part| grad_full.slice_rows(part.clone())).collect();
         let (per_worker_grads, _gx, bwd_secs) =
             common::nn_chain_bwd_batch(&ops, self.params.layers(), &caches, &grad_slices)?;
-        for (w, secs) in bwd_secs.iter().enumerate() {
+        let bwd_total: f64 = bwd_secs.iter().sum();
+        for (w, part) in row_parts.iter().enumerate() {
+            let share = part.len() as f64 / v.max(1) as f64;
             let now = comm.now(w);
-            comm.compute(w, common::modeled(cfg, *secs), now);
+            comm.compute(w, common::modeled(cfg, bwd_total * share), now);
         }
         comm.barrier();
 
@@ -362,6 +387,16 @@ impl TpEngine {
             ("task".into(), task_secs),
         ]);
         report.absorb_comm(&comm);
+
+        // straggler-aware re-balancing (DESIGN.md §9.3): refit next
+        // epoch's slice widths from this epoch's NIC-busy feedback. The
+        // widths only steer the modeled byte plan — losses are untouched.
+        if cfg.fault.rebalance {
+            let widths: Vec<usize> = dim_parts.iter().map(|p| p.len()).collect();
+            if let Some(ws) = crate::cluster::refit_weights(&widths, comm.sim().comm_totals()) {
+                self.dim_weights = Some(ws);
+            }
+        }
         Ok(report)
     }
 
@@ -536,8 +571,12 @@ impl TpEngine {
     }
 
     /// Link-prediction loss phase (paper §5.9): sample positive edges +
-    /// negatives, score with the lp artifact (all workers' jobs in flight
-    /// together), return grad wrt embeddings.
+    /// negatives, score with the lp artifact (all batches' jobs in flight
+    /// together), return grad wrt embeddings. Batching follows the
+    /// canonical partition count — the sample stream and the loss
+    /// reduction must not depend on the live worker count (elastic
+    /// bit-identity, DESIGN.md §9.2); only timing is split across the
+    /// actual cluster.
     fn lp_loss(
         &self,
         ctx: &Ctx,
@@ -550,7 +589,8 @@ impl TpEngine {
         let ops = ctx.ops();
         let n = cfg.workers;
         let v = data.profile.v;
-        let pairs_per_worker = (cfg.batch_size / n).max(8);
+        let parts = common::CANON_DATA_PARTS;
+        let pairs_per_part = (cfg.batch_size / parts).max(8);
 
         // negative sampling (host; timed and reported as its own phase).
         // Rejection sampling of an edge endpoint is bounded: on a graph
@@ -560,14 +600,14 @@ impl TpEngine {
         let t0 = std::time::Instant::now();
         let mut rng = Rng::seed_from_u64(cfg.seed ^ (self.epoch_idx as u64) << 8);
         let g = &data.graph;
-        let mut batches = Vec::with_capacity(n);
-        for _ in 0..n {
+        let mut batches = Vec::with_capacity(parts);
+        for _ in 0..parts {
             let mut src = Vec::new();
             let mut dst = Vec::new();
             let mut neg = Vec::new();
             let mut misses = 0usize;
-            let miss_budget = 8 * pairs_per_worker + 64;
-            while src.len() < pairs_per_worker {
+            let miss_budget = 8 * pairs_per_part + 64;
+            while src.len() < pairs_per_part {
                 let d = rng.gen_range(v);
                 let (cols, _) = g.in_edges(d);
                 let s = if !cols.is_empty() {
@@ -586,26 +626,34 @@ impl TpEngine {
         }
         let sampling_secs = t0.elapsed().as_secs_f64();
 
-        // submit every worker's lp job, then wait in worker order
-        let mut pending = Vec::with_capacity(n);
-        for (w, (src, dst, neg)) in batches.iter().enumerate() {
-            // fetching pair endpoints from remote owners
-            let fetch_bytes = src.len() * h.cols() * 4 * 2;
-            comm.p2p(w, fetch_bytes);
+        // submit every batch's lp job, then wait in submission order
+        let mut pending = Vec::with_capacity(parts);
+        let mut fetch_total = 0usize;
+        for (src, dst, neg) in &batches {
+            fetch_total += src.len() * h.cols() * 4 * 2;
             pending.push(ops.submit_lp_loss(h, src, dst, neg)?);
+        }
+        // fetching pair endpoints from remote owners: the live cluster
+        // splits the modeled traffic
+        for w in 0..n {
+            comm.p2p(w, fetch_total / n.max(1));
         }
         let mut grad = Matrix::zeros(v, h.cols());
         let mut loss = 0.0f32;
-        let mut task_secs = 0.0;
-        for (w, p) in pending.into_iter().enumerate() {
+        let mut secs_total = 0.0;
+        for p in pending {
             let ((l, mut gh), secs) = p.wait()?;
-            let m = common::modeled(cfg, secs);
+            secs_total += secs;
+            loss += l / parts as f32;
+            gh.scale(1.0 / parts as f32);
+            grad.add_assign(&gh);
+        }
+        let mut task_secs = 0.0;
+        for w in 0..n {
+            let m = common::modeled(cfg, secs_total / n.max(1) as f64);
             let now = comm.now(w);
             comm.compute(w, m, now);
             task_secs += m;
-            loss += l / n as f32;
-            gh.scale(1.0 / n as f32);
-            grad.add_assign(&gh);
         }
         report.phase_secs.push(("negative_sampling".into(), sampling_secs));
         Ok((loss, grad, task_secs))
@@ -620,7 +668,7 @@ impl TpEngine {
         let n = cfg.workers;
         let v = data.profile.v;
         let row_parts = row_slices(v, n);
-        let mut comm = Comm::for_run(cfg);
+        let mut comm = Comm::for_run(cfg)?;
         let mut report = EpochReport {
             workers: vec![Default::default(); n],
             ..Default::default()

@@ -32,7 +32,7 @@ pub fn record_comm_schedule(
     g: &Csr,
     store: &ArtifactStore,
 ) -> crate::Result<(Vec<TraceEvent>, Comm)> {
-    let mut comm = Comm::for_run(cfg);
+    let mut comm = Comm::for_run(cfg)?;
     let trace = comm.record();
     let lp = cfg.task == Task::LinkPrediction;
     let dims = layer_dims(p, cfg.layers, cfg.feat_dim, lp);

@@ -101,18 +101,17 @@ impl CheckpointMeta {
         }
     }
 
-    /// Check that resuming under `cfg` reproduces the checkpointed run.
-    /// Every field here changes either the parameter shapes or the
-    /// numerical trajectory, so a mismatch is an error, not a warning.
-    pub fn matches(&self, cfg: &RunConfig) -> crate::Result<()> {
+    /// Classify resuming under `cfg`: bit-identical as-is ([`ResumeMode::Exact`]),
+    /// bit-identical after an elastic N→M re-shard ([`ResumeMode::Reshard`],
+    /// decoupled TP only — DESIGN.md §9.2), or impossible. Every
+    /// incompatible field is collected into ONE error so a misconfigured
+    /// resume surfaces the whole drift at once, not one field per retry.
+    pub fn compatible(&self, cfg: &RunConfig) -> crate::Result<ResumeMode> {
         let want = CheckpointMeta::of(cfg);
-        anyhow::ensure!(
-            self.lr.to_bits() == want.lr.to_bits(),
-            "checkpoint lr {} != configured lr {}",
-            self.lr,
-            want.lr
-        );
         let mut mismatches = Vec::new();
+        if self.lr.to_bits() != want.lr.to_bits() {
+            mismatches.push(format!("lr {} != {}", self.lr, want.lr));
+        }
         if self.system != want.system {
             mismatches.push(format!("system {} != {}", self.system.name(), want.system.name()));
         }
@@ -124,9 +123,6 @@ impl CheckpointMeta {
         }
         if self.task != want.task {
             mismatches.push(format!("task {} != {}", self.task.name(), want.task.name()));
-        }
-        if self.workers != want.workers {
-            mismatches.push(format!("workers {} != {}", self.workers, want.workers));
         }
         if self.layers != want.layers {
             mismatches.push(format!("layers {} != {}", self.layers, want.layers));
@@ -157,12 +153,38 @@ impl CheckpointMeta {
             mismatches
                 .push(format!("agg_impl {} != {}", self.agg_impl.name(), want.agg_impl.name()));
         }
+        // worker count last: alone it is not drift but an elastic
+        // re-shard request — legal exactly when the system's numerics
+        // are partition-invariant (decoupled TP's canonical data plane)
+        if self.workers != want.workers {
+            if mismatches.is_empty() && self.system == System::NeutronTp {
+                return Ok(ResumeMode::Reshard { from: self.workers, to: want.workers });
+            }
+            mismatches.push(format!(
+                "workers {} != {} (N->M re-sharding needs system = neutron_tp and an \
+                 otherwise identical configuration)",
+                self.workers, want.workers
+            ));
+        }
         anyhow::ensure!(
             mismatches.is_empty(),
             "checkpoint header does not match the run configuration: {}",
             mismatches.join(", ")
         );
-        Ok(())
+        Ok(ResumeMode::Exact)
+    }
+
+    /// Strict variant of [`CheckpointMeta::compatible`]: every field must
+    /// match exactly; a worker-count change is an error even where an
+    /// elastic re-shard would be legal.
+    pub fn matches(&self, cfg: &RunConfig) -> crate::Result<()> {
+        match self.compatible(cfg)? {
+            ResumeMode::Exact => Ok(()),
+            ResumeMode::Reshard { from, to } => anyhow::bail!(
+                "checkpoint was written by {from} workers but the run configures {to} \
+                 (an elastic re-shard; this caller requires an exact match)"
+            ),
+        }
     }
 
     /// Overwrite `cfg`'s model-identity fields from the header (`serve`
@@ -185,6 +207,25 @@ impl CheckpointMeta {
         cfg.device_mem_mb = self.device_mem_mb;
         cfg.agg_impl = self.agg_impl;
     }
+}
+
+/// How a checkpoint may legally be resumed under a configuration
+/// (classified by [`CheckpointMeta::compatible`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResumeMode {
+    /// Identical fingerprint: resume is bit-identical as-is.
+    Exact,
+    /// Only the worker count differs and the system is decoupled TP:
+    /// dim slices, chunk geometry and staging plans are re-derived for
+    /// the new cluster on engine construction, and the canonical data
+    /// partition keeps the numeric trajectory bit-identical
+    /// (DESIGN.md §9.2).
+    Reshard {
+        /// workers that wrote the checkpoint
+        from: usize,
+        /// workers the resumed run configures
+        to: usize,
+    },
 }
 
 /// A loaded (or about-to-be-saved) checkpoint.
@@ -617,6 +658,37 @@ mod tests {
         let mut applied = RunConfig { layers: 7, ..RunConfig::default() };
         meta.apply_to(&mut applied);
         assert_eq!(applied.layers, cfg.layers);
+    }
+
+    #[test]
+    fn compatible_classifies_worker_changes_as_reshard() {
+        let cfg = RunConfig::default(); // neutron_tp, 4 workers
+        let meta = CheckpointMeta::of(&cfg);
+        assert_eq!(meta.compatible(&cfg).unwrap(), ResumeMode::Exact);
+        // worker-count-only drift on decoupled TP: a legal re-shard
+        let halved = RunConfig { workers: 2, ..cfg.clone() };
+        assert_eq!(meta.compatible(&halved).unwrap(), ResumeMode::Reshard { from: 4, to: 2 });
+        let doubled = RunConfig { workers: 8, ..cfg.clone() };
+        assert_eq!(meta.compatible(&doubled).unwrap(), ResumeMode::Reshard { from: 4, to: 8 });
+        // ...but the strict check still refuses it
+        let err = meta.matches(&halved).unwrap_err().to_string();
+        assert!(err.contains("re-shard"), "{err}");
+        // a second drifting field demotes the re-shard to an error that
+        // names BOTH offenders
+        let worse = RunConfig { workers: 2, layers: 3, ..cfg.clone() };
+        let err = meta.compatible(&worse).unwrap_err().to_string();
+        assert!(err.contains("workers"), "{err}");
+        assert!(err.contains("layers"), "{err}");
+        // non-TP systems never re-shard
+        let dp_cfg = RunConfig { system: System::DpFull, ..cfg.clone() };
+        let dp_meta = CheckpointMeta::of(&dp_cfg);
+        let err =
+            dp_meta.compatible(&RunConfig { workers: 2, ..dp_cfg }).unwrap_err().to_string();
+        assert!(err.contains("neutron_tp"), "{err}");
+        // lr drift reports through the same collected list
+        let relearned = RunConfig { lr: cfg.lr * 2.0, ..cfg.clone() };
+        let err = meta.compatible(&relearned).unwrap_err().to_string();
+        assert!(err.contains("lr"), "{err}");
     }
 
     #[test]

@@ -117,7 +117,7 @@ impl InferenceEngine {
         // breakdown alongside its measured device seconds.
         let ops = ctx.ops();
         let v = p.v;
-        let mut comm = Comm::for_run(cfg);
+        let mut comm = Comm::for_run(cfg)?;
         let row_parts = row_slices(v, cfg.workers);
         let xs: Vec<Matrix> =
             row_parts.iter().map(|part| data.features.slice_rows(part.clone())).collect();

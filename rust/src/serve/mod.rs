@@ -36,7 +36,7 @@
 pub mod checkpoint;
 pub mod infer;
 
-pub use checkpoint::{Checkpoint, CheckpointMeta};
+pub use checkpoint::{Checkpoint, CheckpointMeta, ResumeMode};
 pub use infer::InferenceEngine;
 
 use crate::metrics::ServeReport;

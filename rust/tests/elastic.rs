@@ -1,0 +1,279 @@
+//! Elastic-training properties (DESIGN.md §9): a modeled worker loss
+//! mid-epoch — detected, discarded, replayed on the survivors, with an
+//! optional rejoin — must leave the per-epoch loss/accuracy trajectory
+//! bit-identical to an undisturbed run; an N→M checkpoint re-shard must
+//! resume bit-identically; and straggler-aware dim re-balancing must
+//! shrink the modeled makespan without touching a single loss bit. All
+//! of it rests on the decoupled engine's canonical data partition
+//! (`parallel::common::CANON_DATA_PARTS`), so these tests run the
+//! NeutronTP system.
+
+use neutron_tp::analysis;
+use neutron_tp::cluster::weighted_dim_slices;
+use neutron_tp::config::{RunConfig, System};
+use neutron_tp::graph::datasets::{profile, Dataset};
+use neutron_tp::metrics::EpochReport;
+use neutron_tp::parallel::{self, Ctx, Engine};
+use neutron_tp::runtime::{ArtifactStore, ExecutorPool};
+use neutron_tp::serve::checkpoint::{self, Checkpoint, CheckpointMeta, ResumeMode};
+use neutron_tp::tensor::dim_slices;
+use neutron_tp::util::propcheck;
+
+fn store() -> ArtifactStore {
+    ArtifactStore::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .expect("artifact store must load")
+}
+
+fn dataset(cfg: &RunConfig) -> Dataset {
+    Dataset::generate(profile(&cfg.profile).unwrap(), cfg.seed)
+}
+
+fn tp_cfg(workers: usize, epochs: usize) -> RunConfig {
+    RunConfig { system: System::NeutronTp, workers, epochs, ..Default::default() }
+}
+
+fn run(s: &ArtifactStore, cfg: &RunConfig) -> Vec<EpochReport> {
+    cfg.validate().unwrap();
+    let data = dataset(cfg);
+    let pool = ExecutorPool::new(s, 2).unwrap();
+    let ctx = Ctx { cfg, data: &data, store: s, pool: &pool };
+    parallel::run(&ctx).unwrap()
+}
+
+fn assert_same_trajectory(a: &[EpochReport], b: &[EpochReport], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: epoch counts differ");
+    for (e, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.loss.to_bits(),
+            y.loss.to_bits(),
+            "{what}: epoch {e} loss diverged: {} vs {}",
+            x.loss,
+            y.loss
+        );
+        assert_eq!(
+            x.train_acc.to_bits(),
+            y.train_acc.to_bits(),
+            "{what}: epoch {e} train_acc diverged"
+        );
+        assert_eq!(
+            x.test_acc.to_bits(),
+            y.test_acc.to_bits(),
+            "{what}: epoch {e} test_acc diverged"
+        );
+    }
+}
+
+// -------------------------------------------------------------------------
+// kill matrix: survivors-only and kill-then-rejoin, bit-identical losses
+// -------------------------------------------------------------------------
+
+#[test]
+fn killed_run_matches_undisturbed_run_bitwise() {
+    let s = store();
+    let undisturbed = run(&s, &tp_cfg(4, 4));
+    for (kill_worker, kill_epoch, rejoin) in
+        [(1usize, 1usize, None), (0, 2, None), (3, 1, Some(3usize))]
+    {
+        let mut cfg = tp_cfg(4, 4);
+        cfg.fault.kill_worker = Some(kill_worker);
+        cfg.fault.kill_epoch = Some(kill_epoch);
+        cfg.fault.rejoin_epoch = rejoin;
+        let disturbed = run(&s, &cfg);
+        assert_same_trajectory(
+            &undisturbed,
+            &disturbed,
+            &format!("kill w{kill_worker}@e{kill_epoch} rejoin {rejoin:?}"),
+        );
+        // the killed epoch carries the fault record + recovery overhead
+        let r = &disturbed[kill_epoch];
+        let ev = r.fault.as_ref().expect("killed epoch must record the fault");
+        assert_eq!(ev.worker, kill_worker);
+        assert!(ev.at_collective >= 1);
+        assert!(
+            r.recovery_secs > 0.0,
+            "discarded partial epoch must cost modeled time"
+        );
+        // undisturbed epochs carry neither
+        for (e, r) in disturbed.iter().enumerate() {
+            if e != kill_epoch {
+                assert!(r.fault.is_none(), "epoch {e} should not record a fault");
+                assert_eq!(r.recovery_secs, 0.0);
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------------------------
+// worker-count invariance: the canonical data partition at work
+// -------------------------------------------------------------------------
+
+#[test]
+fn decoupled_tp_losses_are_bitwise_invariant_to_worker_count() {
+    let s = store();
+    // (non-power-of-two clusters fail validate, but the kill tests above
+    // still exercise 3 survivors through the elastic driver)
+    let reference = run(&s, &tp_cfg(4, 2));
+    for workers in [1usize, 2, 8] {
+        let got = run(&s, &tp_cfg(workers, 2));
+        assert_same_trajectory(&reference, &got, &format!("workers {workers} vs 4"));
+    }
+}
+
+// -------------------------------------------------------------------------
+// N→M checkpoint re-shard, both directions
+// -------------------------------------------------------------------------
+
+#[test]
+fn reshard_resume_is_bit_identical_in_both_directions() {
+    const EPOCHS: usize = 5;
+    const SAVE_AT: usize = 2;
+    let s = store();
+    let tmp = std::env::temp_dir().join(format!("ntp-elastic-{}", std::process::id()));
+    // worker count is numerics-free, so one undisturbed trajectory
+    // references both directions
+    let reference = run(&s, &tp_cfg(4, EPOCHS));
+
+    for (from, to) in [(4usize, 2usize), (2, 4)] {
+        let cfg_from = tp_cfg(from, EPOCHS);
+        let data = dataset(&cfg_from);
+        let pool = ExecutorPool::new(&s, 2).unwrap();
+        let ctx = Ctx { cfg: &cfg_from, data: &data, store: &s, pool: &pool };
+        let mut engine = Engine::new(&ctx).unwrap();
+        for _ in 0..SAVE_AT {
+            engine.run_epoch(&ctx).unwrap();
+        }
+        let path = tmp.join(format!("reshard-{from}-{to}.ntpc"));
+        checkpoint::save(
+            &path,
+            &Checkpoint { meta: CheckpointMeta::of(&cfg_from), state: engine.export_state() },
+        )
+        .unwrap();
+        drop(engine);
+
+        // fresh world at the new cluster size
+        let cfg_to = tp_cfg(to, EPOCHS);
+        let ckpt = checkpoint::load(&path).unwrap();
+        match ckpt.meta.compatible(&cfg_to).unwrap() {
+            ResumeMode::Reshard { from: f, to: t } => assert_eq!((f, t), (from, to)),
+            m => panic!("expected a re-shard classification, got {m:?}"),
+        }
+        // the strict check refuses exactly what compatible() allows
+        assert!(ckpt.meta.matches(&cfg_to).is_err());
+
+        let data_b = dataset(&cfg_to);
+        let pool_b = ExecutorPool::new(&s, 2).unwrap();
+        let ctx_b = Ctx { cfg: &cfg_to, data: &data_b, store: &s, pool: &pool_b };
+        let mut resumed_engine = Engine::new(&ctx_b).unwrap();
+        resumed_engine.import_state(ckpt.state).unwrap();
+        assert_eq!(resumed_engine.epochs_done(), SAVE_AT);
+        let resumed: Vec<EpochReport> =
+            (SAVE_AT..EPOCHS).map(|_| resumed_engine.run_epoch(&ctx_b).unwrap()).collect();
+        assert_same_trajectory(
+            &reference[SAVE_AT..],
+            &resumed,
+            &format!("reshard {from}->{to}"),
+        );
+    }
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+// -------------------------------------------------------------------------
+// straggler-aware dim re-balancing: makespan down, numerics untouched
+// -------------------------------------------------------------------------
+
+#[test]
+fn rebalance_shrinks_makespan_without_moving_losses() {
+    let s = store();
+    let mk = |rebalance: bool| {
+        let mut cfg = tp_cfg(4, 4);
+        cfg.pipeline = false;
+        // comm-bound regime with one quarter-bandwidth NIC: dim-slice
+        // widths dominate the modeled epoch, so the refit has room to win
+        cfg.net.bandwidth_gbps = 0.1;
+        cfg.net.gpu_speedup = 100.0;
+        cfg.comm.bw_scale = vec![0.25];
+        cfg.fault.rebalance = rebalance;
+        cfg
+    };
+    let uniform = run(&s, &mk(false));
+    let rebalanced = run(&s, &mk(true));
+    assert_same_trajectory(&uniform, &rebalanced, "rebalance on vs off");
+    // epoch 0 runs uniform widths in both runs (the refit needs one
+    // epoch of measured comm rates); later epochs must be strictly
+    // faster with the refit active
+    let t_uniform = uniform.last().unwrap().sim_epoch_secs;
+    let t_rebalanced = rebalanced.last().unwrap().sim_epoch_secs;
+    assert!(
+        t_rebalanced < t_uniform,
+        "rebalanced makespan {t_rebalanced:.4}s not below uniform {t_uniform:.4}s"
+    );
+}
+
+// -------------------------------------------------------------------------
+// weighted_dim_slices cover property
+// -------------------------------------------------------------------------
+
+#[test]
+fn prop_weighted_dim_slices_cover_exactly() {
+    propcheck::check("weighted-dim-slices-cover", 0xE1A57, 60, |rng| {
+        let n = 1 + rng.gen_range(8);
+        let d = n + rng.gen_range(512);
+        let weights: Vec<f64> =
+            (0..n).map(|_| 0.05 + rng.gen_f32_range(0.0, 1.0) as f64).collect();
+        let parts = weighted_dim_slices(d, &weights);
+        assert_eq!(parts.len(), n, "one slice per worker");
+        let mut next = 0usize;
+        for p in &parts {
+            assert_eq!(p.start, next, "slices must be contiguous");
+            next = p.end;
+        }
+        assert_eq!(next, d, "slices must cover every column exactly once");
+        // degenerate weights fall back to the uniform slicing
+        assert_eq!(weighted_dim_slices(d, &vec![0.0; n]), dim_slices(d, n));
+    });
+}
+
+// -------------------------------------------------------------------------
+// pre-flight checkpoint-compatibility findings
+// -------------------------------------------------------------------------
+
+#[test]
+fn preflight_classifies_resume_compatibility() {
+    let s = store();
+    let tmp = std::env::temp_dir().join(format!("ntp-preflight-{}", std::process::id()));
+    let cfg4 = tp_cfg(4, 1);
+    let data = dataset(&cfg4);
+    let pool = ExecutorPool::new(&s, 1).unwrap();
+    let ctx = Ctx { cfg: &cfg4, data: &data, store: &s, pool: &pool };
+    let engine = Engine::new(&ctx).unwrap();
+    checkpoint::save(
+        &checkpoint::latest_path(tmp.to_str().unwrap()),
+        &Checkpoint { meta: CheckpointMeta::of(&cfg4), state: engine.export_state() },
+    )
+    .unwrap();
+
+    let mut resume = tp_cfg(2, 1);
+    resume.resume = true;
+    resume.checkpoint_dir = Some(tmp.to_str().unwrap().to_string());
+    // worker-only drift: a warning (legal elastic re-shard), not an error
+    let findings = analysis::check_resume(&resume);
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].severity, analysis::Severity::Warning);
+    assert!(findings[0].message.contains("re-shard"), "{}", findings[0].message);
+
+    // a second drifting field is an error naming every offender at once
+    let mut bad = resume.clone();
+    bad.layers += 1;
+    let findings = analysis::check_resume(&bad);
+    assert!(analysis::has_errors(&findings), "{findings:?}");
+    assert!(findings[0].message.contains("workers"), "{}", findings[0].message);
+    assert!(findings[0].message.contains("layers"), "{}", findings[0].message);
+
+    // resume without a readable checkpoint is an error finding, not a panic
+    let mut missing = resume.clone();
+    missing.checkpoint_dir = Some(tmp.join("nope").to_str().unwrap().to_string());
+    assert!(analysis::has_errors(&analysis::check_resume(&missing)));
+    // no resume requested: the pass stays silent
+    assert!(analysis::check_resume(&tp_cfg(4, 1)).is_empty());
+    let _ = std::fs::remove_dir_all(&tmp);
+}

@@ -291,7 +291,7 @@ fn prop_split_gather_roundtrip_random_shapes() {
         let rp = row_slices(v, n);
         let dp = dim_slices(d, n);
         let rows: Vec<Matrix> = rp.iter().map(|r| full.slice_rows(r.clone())).collect();
-        let mut comm = Comm::new(n, NetModel::default(), &CommTuning::default());
+        let mut comm = Comm::new(n, NetModel::default(), &CommTuning::default()).unwrap();
         let (slices, _t1) = comm.split(&rows, &rp, &dp);
         let (back, _) = comm.gather(&slices, &rp, &dp);
         for (i, b) in back.iter().enumerate() {
@@ -322,7 +322,7 @@ fn prop_comm_api_conserves_bytes_across_algorithms() {
         for a2a in [AllToAllAlgo::Naive, AllToAllAlgo::Pairwise] {
             for ar in [AllReduceAlgo::Ring, AllReduceAlgo::FlatTree] {
                 let tuning = CommTuning { all_to_all: a2a, allreduce: ar, bw_scale: vec![] };
-                let mut comm = Comm::new(n, net, &tuning);
+                let mut comm = Comm::new(n, net, &tuning).unwrap();
                 let (slices, _) = comm.split(&rows, &rp, &dp);
                 let (back, _) = comm.gather(&slices, &rp, &dp);
                 let (sum, _) = comm.allreduce_sum(&grads);
@@ -348,8 +348,8 @@ fn prop_comm_api_conserves_bytes_across_algorithms() {
                     }
                 }
                 // i*-then-wait ≡ blocking, data and done-times
-                let mut blocking = Comm::new(n, net, &tuning);
-                let mut posted = Comm::new(n, net, &tuning);
+                let mut blocking = Comm::new(n, net, &tuning).unwrap();
+                let mut posted = Comm::new(n, net, &tuning).unwrap();
                 let (bd, bt) = blocking.split(&rows, &rp, &dp);
                 let (pd, pt) = posted.isplit(&rows, &rp, &dp).wait();
                 assert_eq!(bd, pd);
