@@ -133,6 +133,21 @@ pub fn check_run(cfg: &RunConfig, store: &ArtifactStore) -> Vec<Finding> {
     out
 }
 
+/// Planner emission gate (DESIGN.md §10.6): parse a `neutron-tp plan`
+/// TOML and run the full static pre-flight pass on it. Returns the
+/// parsed config when the plan is clean; `Err` carries every finding
+/// otherwise. `plan` refuses to leave a TOML on disk that this function
+/// rejects, and the CI smoke re-runs it on the emitted file.
+pub fn check_plan_toml(toml: &str, store: &ArtifactStore) -> crate::Result<RunConfig> {
+    let cfg = RunConfig::from_toml(toml)?;
+    let findings = check_run(&cfg, store);
+    if has_errors(&findings) {
+        let lines: Vec<String> = findings.iter().map(|f| f.to_string()).collect();
+        anyhow::bail!("emitted plan failed pre-flight:\n{}", lines.join("\n"));
+    }
+    Ok(cfg)
+}
+
 /// Checkpoint-compatibility pass: when `cfg` asks to resume
 /// (`resume = true` + `checkpoint_dir`), load the saved header and
 /// classify the resume before any epoch runs. An exact fingerprint match

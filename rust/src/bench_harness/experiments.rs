@@ -34,8 +34,9 @@ pub fn run_experiment(name: &str, store: &ArtifactStore, fast: bool) -> crate::R
         "comm_scale" => comm_scale(store, fast)?,
         "mem_scale" => mem_scale(store, fast)?,
         "fault_scale" => fault_scale(store, fast)?,
+        "plan_scale" => plan_scale(store, fast)?,
         _ => anyhow::bail!(
-            "unknown experiment '{name}' (try fig3/fig4/fig5/fig8/fig10..fig16/table2/table3/table4/exec_scale/kernel_scale/serve_scale/comm_scale/mem_scale/fault_scale/all)"
+            "unknown experiment '{name}' (try fig3/fig4/fig5/fig8/fig10..fig16/table2/table3/table4/exec_scale/kernel_scale/serve_scale/comm_scale/mem_scale/fault_scale/plan_scale/all)"
         ),
     };
     Ok(out)
@@ -44,7 +45,7 @@ pub fn run_experiment(name: &str, store: &ArtifactStore, fast: bool) -> crate::R
 pub const ALL: &[&str] = &[
     "fig3", "fig4", "fig5", "fig8", "fig10", "fig11", "fig12", "fig13", "fig14", "fig15",
     "fig16", "table2", "table3", "table4", "exec_scale", "kernel_scale", "serve_scale",
-    "comm_scale", "mem_scale", "fault_scale",
+    "comm_scale", "mem_scale", "fault_scale", "plan_scale",
 ];
 
 fn run_cfg(store: &ArtifactStore, cfg: &RunConfig) -> crate::Result<Vec<EpochReport>> {
@@ -1005,6 +1006,142 @@ fn fault_scale(store: &ArtifactStore, fast: bool) -> crate::Result<String> {
             .unwrap(),
         }
     }
+    Ok(s)
+}
+
+// ---------------------------------------------------------------------------
+// Auto-planner validation (DESIGN.md §10.7): across heterogeneous
+// scenarios — a straggler topology, a tight device-memory budget, and a
+// deep model — `neutron-tp plan`'s winner must (a) beat every fixed
+// per-system default on modeled makespan and (b) predict the real run's
+// measured makespan within plan::PREDICTION_TOLERANCE. Scenarios are
+// comm-bound (slow wire, fast modeled compute) so the analytic compute
+// model's error stays a small fraction of the epoch — the same regime
+// the tolerance is documented for. Output is JSON: the committed
+// snapshot is BENCH_plan_scale.json.
+// ---------------------------------------------------------------------------
+fn plan_scale(store: &ArtifactStore, fast: bool) -> crate::Result<String> {
+    use crate::graph::datasets::Profile;
+    use crate::plan::{self, Skipped};
+
+    // comm-bound workload shell: slow interconnect, T4×4-class compute
+    let shell = |profile: &str| {
+        let mut cfg = RunConfig {
+            profile: profile.to_string(),
+            workers: 4,
+            epochs: 1,
+            ..Default::default()
+        };
+        cfg.net.bandwidth_gbps = 0.05;
+        cfg.net.gpu_speedup = 100.0;
+        cfg
+    };
+    let straggler = {
+        let mut cfg = shell("tiny");
+        cfg.comm.bw_scale = vec![0.25]; // worker 0's NIC at quarter bandwidth
+        cfg
+    };
+    let tight_memory = {
+        let mut cfg = shell("rdt");
+        cfg.device_mem_mb = 4; // below the resident working set: staging territory
+        cfg
+    };
+    let deep = {
+        let mut cfg = shell("tiny");
+        cfg.layers = 6;
+        cfg.fanouts = vec![25, 15, 10, 10, 10, 10];
+        cfg
+    };
+    let scenarios: [(&str, RunConfig); 3] =
+        [("straggler", straggler), ("tight_memory", tight_memory), ("deep", deep)];
+
+    let mut s = String::from("{\n  \"experiment\": \"plan_scale\",\n");
+    writeln!(s, "  \"fast\": {fast},").unwrap();
+    writeln!(s, "  \"tolerance\": {},", plan::PREDICTION_TOLERANCE).unwrap();
+    writeln!(s, "  \"scenarios\": [").unwrap();
+    let mut all_beat = true;
+    let mut all_within = true;
+    for (si, (name, base)) in scenarios.iter().enumerate() {
+        let p: Profile = profile(&base.profile).unwrap();
+        let g = Dataset::generate_graph(p, base.seed);
+        let outcome = plan::plan_with_graph(base, store, p, &g, fast)?;
+        let (mut pruned, mut infeasible) = (0usize, 0usize);
+        for sk in &outcome.result.skipped {
+            match sk {
+                Skipped::Dominated { .. } => pruned += 1,
+                Skipped::Infeasible { .. } => infeasible += 1,
+            }
+        }
+        let w = outcome.winner();
+        let beats = outcome
+            .defaults
+            .iter()
+            .filter_map(|(_, sc)| sc.as_ref())
+            .all(|sc| w.score.makespan_secs <= sc.makespan_secs);
+        all_beat &= beats;
+
+        // ground truth: one real training epoch of the winner's config
+        let measured = run_cfg(store, &w.cfg)?.last().unwrap().sim_epoch_secs;
+        let rel_err = (w.score.makespan_secs - measured).abs() / measured.max(1e-12);
+        let within = rel_err <= plan::PREDICTION_TOLERANCE;
+        all_within &= within;
+
+        writeln!(s, "    {{").unwrap();
+        writeln!(s, "      \"name\": \"{name}\",").unwrap();
+        writeln!(s, "      \"profile\": \"{}\",", base.profile).unwrap();
+        writeln!(s, "      \"candidates\": {},", outcome.result.candidates).unwrap();
+        writeln!(s, "      \"scored\": {},", outcome.result.scored.len()).unwrap();
+        writeln!(s, "      \"pruned_dominated\": {pruned},").unwrap();
+        writeln!(s, "      \"infeasible\": {infeasible},").unwrap();
+        writeln!(
+            s,
+            "      \"winner\": {{\"system\": \"{}\", \"all_to_all\": \"{}\", \
+             \"allreduce\": \"{}\", \"chunks\": {}, \"pipeline\": {}, \
+             \"prefetch_depth\": {}, \"intra_threads\": {}, \"modeled_secs\": {:.6}, \
+             \"peak_mem_mb\": {:.2}}},",
+            w.cfg.system.name(),
+            w.cfg.comm.all_to_all.name(),
+            w.cfg.comm.allreduce.name(),
+            w.cfg.chunks,
+            w.cfg.pipeline,
+            w.cfg.mem.prefetch_depth,
+            w.cfg.intra_threads,
+            w.score.makespan_secs,
+            w.score.peak_mem_bytes as f64 / (1024.0 * 1024.0),
+        )
+        .unwrap();
+        writeln!(s, "      \"defaults\": [").unwrap();
+        for (di, (system, score)) in outcome.defaults.iter().enumerate() {
+            let comma = if di + 1 == outcome.defaults.len() { "" } else { "," };
+            match score {
+                Some(sc) => writeln!(
+                    s,
+                    "        {{\"system\": \"{}\", \"feasible\": true, \
+                     \"modeled_secs\": {:.6}}}{comma}",
+                    system.name(),
+                    sc.makespan_secs
+                )
+                .unwrap(),
+                None => writeln!(
+                    s,
+                    "        {{\"system\": \"{}\", \"feasible\": false}}{comma}",
+                    system.name()
+                )
+                .unwrap(),
+            }
+        }
+        writeln!(s, "      ],").unwrap();
+        writeln!(s, "      \"beats_every_default\": {beats},").unwrap();
+        writeln!(s, "      \"measured_secs\": {measured:.6},").unwrap();
+        writeln!(s, "      \"prediction_rel_err\": {rel_err:.4},").unwrap();
+        writeln!(s, "      \"within_tolerance\": {within}").unwrap();
+        writeln!(s, "    }}{}", if si + 1 == scenarios.len() { "" } else { "," }).unwrap();
+    }
+    writeln!(s, "  ],").unwrap();
+    writeln!(s, "  \"all_beat_defaults\": {all_beat},").unwrap();
+    writeln!(s, "  \"all_within_tolerance\": {all_within}").unwrap();
+    s.push('}');
+    s.push('\n');
     Ok(s)
 }
 

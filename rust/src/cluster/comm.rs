@@ -1008,6 +1008,61 @@ impl Comm {
         self.wrap(full, vec![frontier; n])
     }
 
+    /// Schedule-only [`Comm::isequential_broadcast`]: worker `s`
+    /// broadcasts a block of `block_bytes[s]` to every peer, senders
+    /// serialized — identical algorithm dispatch and byte accounting as
+    /// the data-plane entry without moving any matrix. The static
+    /// verifier's and the planner's cost probe for the Sancus-style
+    /// refresh (DESIGN.md §8, §10).
+    pub fn isequential_broadcast_bytes(&mut self, block_bytes: &[usize]) -> CommHandle<()> {
+        let n = block_bytes.len();
+        let peers = n.saturating_sub(1);
+        if self.trace.is_some() {
+            let sent: Vec<usize> = block_bytes.iter().map(|b| b * peers).collect();
+            let total_in: usize = block_bytes.iter().sum();
+            let recv: Vec<usize> = block_bytes.iter().map(|b| total_in - b).collect();
+            let sent_total: usize = sent.iter().sum();
+            for (w, b) in sent.iter().enumerate() {
+                self.bytes_per_worker[w] += b;
+            }
+            self.push_post(
+                CommKind::SequentialBroadcast,
+                "sequential",
+                sent,
+                recv,
+                Rounds::Sequential { senders: n },
+            );
+            self.stats.record(CommKind::SequentialBroadcast, sent_total, sent_total, 0.0);
+            return self.wrap((), vec![0.0; n]);
+        }
+        let lat = self.net.latency_us * 1e-6;
+        let mut frontier = (0..n).map(|w| self.sim.now(w)).fold(0.0, f64::max);
+        let mut secs = 0.0;
+        let mut sent_total = 0usize;
+        for (s, &bytes) in block_bytes.iter().enumerate() {
+            let send_dur =
+                self.topo.wire_secs(&self.net, s, bytes * peers) + lat * peers as f64;
+            let mut next = frontier;
+            for w in 0..n {
+                let dur = if w == s {
+                    send_dur
+                } else {
+                    self.topo.msg_secs(&self.net, w, bytes)
+                };
+                let d = self.sim.comm(w, dur, frontier);
+                secs += dur;
+                next = next.max(d);
+            }
+            self.bytes_per_worker[s] += bytes * peers;
+            sent_total += bytes * peers;
+            frontier = next;
+        }
+        self.stats
+            .record(CommKind::SequentialBroadcast, sent_total, sent_total, secs);
+        self.note_collective();
+        self.wrap((), vec![frontier; n])
+    }
+
     // ---- all-to-all timing core -----------------------------------------
 
     /// Time a symmetric block exchange from the per-pair byte matrix
@@ -1300,6 +1355,24 @@ mod tests {
         let mut c2 = comm(n);
         let (_, d2) = c2.allgather_rows(&inputs, &rp);
         assert!(d1[0] > d2[0] * 1.5, "seq {} vs allgather {}", d1[0], d2[0]);
+    }
+
+    /// The byte-only probe must model the exact schedule of the
+    /// data-plane sequential broadcast (the planner scores with it).
+    #[test]
+    fn sequential_broadcast_bytes_matches_data_plane() {
+        let n = 4;
+        let inputs: Vec<Matrix> = (0..n).map(|_| Matrix::zeros(128, 32)).collect();
+        let bytes: Vec<usize> = inputs.iter().map(Matrix::bytes).collect();
+        let mut c1 = comm(n);
+        let (_, d1) = c1.sequential_broadcast(&inputs);
+        let mut c2 = comm(n);
+        let ((), d2) = c2.isequential_broadcast_bytes(&bytes).wait();
+        assert_eq!(d1, d2);
+        assert_eq!(
+            c1.stats().kind(CommKind::SequentialBroadcast),
+            c2.stats().kind(CommKind::SequentialBroadcast)
+        );
     }
 
     #[test]

@@ -304,7 +304,7 @@ impl Default for MemModel {
 
 /// Network cost model for the simulated cluster (DESIGN.md §4). Defaults
 /// mirror the paper's testbed: 15 Gbps, ~25 us per message.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct NetModel {
     pub bandwidth_gbps: f64,
     pub latency_us: f64,
@@ -332,7 +332,7 @@ impl NetModel {
 }
 
 /// Complete run configuration.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RunConfig {
     pub profile: String,
     pub system: System,
@@ -516,6 +516,114 @@ impl RunConfig {
         Ok(())
     }
 
+    /// Serialize to the TOML subset `from_toml` parses, such that
+    /// `RunConfig::from_toml(&cfg.to_toml()).unwrap() == cfg` for every
+    /// field (the round-trip identity the planner's emitted configs rely
+    /// on). The exhaustive destructuring below is deliberate: adding a
+    /// `RunConfig` field without wiring it here is a compile error, and
+    /// the `to_toml_roundtrip_is_identity` test then forces the matching
+    /// `apply()` key.
+    pub fn to_toml(&self) -> String {
+        // Destructure every field — no `..` — so new knobs can't be
+        // silently dropped from the emitted file.
+        let RunConfig {
+            profile,
+            system,
+            model,
+            task,
+            workers,
+            layers,
+            epochs,
+            lr,
+            seed,
+            agg_impl,
+            chunks,
+            chunk_sched,
+            pipeline,
+            device_mem_mb,
+            mem: MemModel { pcie_gbps, pcie_latency_us, prefetch_depth, swap },
+            net: NetModel { bandwidth_gbps, latency_us, gpu_speedup },
+            comm: CommTuning { all_to_all, allreduce, bw_scale },
+            executor_threads,
+            intra_threads,
+            fused_nn,
+            feat_dim,
+            fanouts,
+            batch_size,
+            checkpoint_dir,
+            resume,
+            fault: FaultCfg { kill_worker, kill_epoch, rejoin_epoch, rebalance },
+        } = self;
+        let mut s = String::new();
+        use std::fmt::Write;
+        let w = &mut s;
+        // top-level keys first: toml_lite scopes keys after a `[section]`
+        // header to that section
+        let _ = writeln!(w, "profile = \"{profile}\"");
+        let _ = writeln!(w, "system = \"{}\"", system.name());
+        let _ = writeln!(w, "model = \"{}\"", model.name());
+        let _ = writeln!(w, "task = \"{}\"", task.name());
+        let _ = writeln!(w, "agg_impl = \"{}\"", agg_impl.name());
+        let _ = writeln!(w, "workers = {workers}");
+        let _ = writeln!(w, "layers = {layers}");
+        let _ = writeln!(w, "epochs = {epochs}");
+        let _ = writeln!(w, "lr = {:?}", *lr as f64);
+        let _ = writeln!(w, "seed = {seed}");
+        let _ = writeln!(w, "chunks = {chunks}");
+        let _ = writeln!(w, "chunk_sched = {chunk_sched}");
+        let _ = writeln!(w, "pipeline = {pipeline}");
+        let _ = writeln!(w, "device_mem_mb = {device_mem_mb}");
+        let _ = writeln!(w, "executor_threads = {executor_threads}");
+        let _ = writeln!(w, "intra_threads = {intra_threads}");
+        let _ = writeln!(w, "fused_nn = {fused_nn}");
+        if let Some(d) = feat_dim {
+            let _ = writeln!(w, "feat_dim = {d}");
+        }
+        let list =
+            fanouts.iter().map(|f| f.to_string()).collect::<Vec<_>>().join(", ");
+        let _ = writeln!(w, "fanouts = [{list}]");
+        let _ = writeln!(w, "batch_size = {batch_size}");
+        if let Some(d) = checkpoint_dir {
+            let _ = writeln!(w, "checkpoint_dir = \"{d}\"");
+        }
+        let _ = writeln!(w, "resume = {resume}");
+        let _ = writeln!(w, "\n[mem]");
+        let _ = writeln!(w, "pcie_gbps = {pcie_gbps:?}");
+        let _ = writeln!(w, "pcie_latency_us = {pcie_latency_us:?}");
+        let _ = writeln!(w, "prefetch_depth = {prefetch_depth}");
+        let _ = writeln!(w, "swap = {swap}");
+        let _ = writeln!(w, "\n[net]");
+        let _ = writeln!(w, "bandwidth_gbps = {bandwidth_gbps:?}");
+        let _ = writeln!(w, "latency_us = {latency_us:?}");
+        let _ = writeln!(w, "gpu_speedup = {gpu_speedup:?}");
+        let _ = writeln!(w, "\n[comm]");
+        let _ = writeln!(w, "all_to_all = \"{}\"", all_to_all.name());
+        let _ = writeln!(w, "allreduce = \"{}\"", allreduce.name());
+        if !bw_scale.is_empty() {
+            let list =
+                bw_scale.iter().map(|f| format!("{f:?}")).collect::<Vec<_>>().join(", ");
+            let _ = writeln!(w, "bw_scale = [{list}]");
+        }
+        if kill_worker.is_some()
+            || kill_epoch.is_some()
+            || rejoin_epoch.is_some()
+            || *rebalance
+        {
+            let _ = writeln!(w, "\n[fault]");
+            if let Some(x) = kill_worker {
+                let _ = writeln!(w, "kill_worker = {x}");
+            }
+            if let Some(x) = kill_epoch {
+                let _ = writeln!(w, "kill_epoch = {x}");
+            }
+            if let Some(x) = rejoin_epoch {
+                let _ = writeln!(w, "rejoin_epoch = {x}");
+            }
+            let _ = writeln!(w, "rebalance = {rebalance}");
+        }
+        s
+    }
+
     pub fn validate(&self) -> crate::Result<()> {
         if self.workers == 0 || !self.workers.is_power_of_two() {
             anyhow::bail!("workers must be a power of two (got {})", self.workers);
@@ -634,6 +742,64 @@ mod tests {
         assert_eq!(c.fanouts, vec![25, 15, 10]);
         assert!((c.net.bandwidth_gbps - 10.0).abs() < 1e-9);
         assert!((c.net.gpu_speedup - 20.0).abs() < 1e-9);
+    }
+
+    /// Every `RunConfig` field set away from its default, then emit →
+    /// parse → compare. Paired with `to_toml`'s exhaustive destructuring
+    /// this fails the moment a new config field isn't wired through the
+    /// serializer or `apply()` (PRs 4–7 each added knobs; the planner
+    /// emits configs and must not drop any of them).
+    #[test]
+    fn to_toml_roundtrip_is_identity() {
+        let cfg = RunConfig {
+            profile: "rdt".into(),
+            system: System::Historical,
+            model: ModelKind::Gat,
+            task: Task::LinkPrediction,
+            workers: 8,
+            layers: 3,
+            epochs: 7,
+            lr: 0.005,
+            seed: 1234,
+            agg_impl: AggImpl::Scatter,
+            chunks: 6,
+            chunk_sched: false,
+            pipeline: false,
+            device_mem_mb: 3,
+            mem: MemModel {
+                pcie_gbps: 12.5,
+                pcie_latency_us: 3.25,
+                prefetch_depth: 5,
+                swap: false,
+            },
+            net: NetModel { bandwidth_gbps: 0.75, latency_us: 12.0, gpu_speedup: 25.0 },
+            comm: CommTuning {
+                all_to_all: AllToAllAlgo::Pairwise,
+                allreduce: AllReduceAlgo::FlatTree,
+                bw_scale: vec![1.0, 0.25, 0.5],
+            },
+            executor_threads: 3,
+            intra_threads: 4,
+            fused_nn: false,
+            feat_dim: Some(96),
+            fanouts: vec![5, 4, 3],
+            batch_size: 512,
+            checkpoint_dir: Some("ckpts/run1".into()),
+            resume: true,
+            fault: FaultCfg {
+                kill_worker: Some(2),
+                kill_epoch: Some(1),
+                rejoin_epoch: Some(4),
+                rebalance: true,
+            },
+        };
+        let text = cfg.to_toml();
+        let back = RunConfig::from_toml(&text).unwrap();
+        assert_eq!(back, cfg, "emitted TOML:\n{text}");
+        // the all-defaults config must round-trip too (Option fields stay
+        // None, empty bw_scale stays empty)
+        let d = RunConfig::default();
+        assert_eq!(RunConfig::from_toml(&d.to_toml()).unwrap(), d);
     }
 
     #[test]

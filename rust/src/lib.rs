@@ -36,6 +36,7 @@ pub mod graph;
 pub mod metrics;
 pub mod model;
 pub mod parallel;
+pub mod plan;
 pub mod runtime;
 pub mod sched;
 pub mod serve;

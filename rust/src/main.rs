@@ -6,6 +6,7 @@
 //! neutron-tp serve  [--checkpoint F | --profile P [--warm-epochs K]]
 //!                   [--requests N] [--batch-size B]
 //! neutron-tp check  [--all-profiles | same flags as train]
+//! neutron-tp plan   [workload flags as train] [--emit plan.toml] [--fast]
 //! neutron-tp bench  <fig3|fig4|...|serve_scale|all> [--out results/] [--fast]
 //! neutron-tp inspect [--artifacts artifacts/]
 //! ```
@@ -47,6 +48,7 @@ fn run() -> anyhow::Result<()> {
         "train" => train(&flags),
         "serve" => serve_cmd(&flags),
         "check" => check_cmd(&flags),
+        "plan" => plan_cmd(&flags),
         "bench" => bench(&args[1..], &flags),
         "inspect" => inspect(&flags),
         "help" | "--help" | "-h" => {
@@ -54,7 +56,9 @@ fn run() -> anyhow::Result<()> {
             Ok(())
         }
         other => {
-            anyhow::bail!("unknown command '{other}' (try: train, serve, check, bench, inspect)")
+            anyhow::bail!(
+                "unknown command '{other}' (try: train, serve, check, plan, bench, inspect)"
+            )
         }
     }
 }
@@ -74,6 +78,7 @@ fn print_usage() {
          \x20 neutron-tp serve [--checkpoint F | --profile P [--warm-epochs K]]\n\
          \x20                  [--requests N] [--batch-size B] [--executor-threads N]\n\
          \x20 neutron-tp check [--all-profiles | same flags as train]\n\
+         \x20 neutron-tp plan  [workload flags as train] [--emit F] [--fast]\n\
          \x20 neutron-tp bench <{}|all> [--out DIR] [--fast]\n\
          \x20 neutron-tp inspect [--artifacts DIR]\n\n\
          systems: neutron_tp naive_tp dp_full dp_cache minibatch historical\n\n\
@@ -97,6 +102,16 @@ fn print_usage() {
          knob that fixes it. `check --all-profiles` sweeps all builtin\n\
          profile x system combinations; `train`/`serve --pre-flight` run the\n\
          same pass and abort on errors before any epoch executes.\n\n\
+         auto-planner (plan, DESIGN.md §10): `plan` searches system x\n\
+         comm algorithms x chunk geometry x prefetch depth x intra threads\n\
+         for the workload the other flags describe (profile, model, layers,\n\
+         workers, --device-mem-mb, --bw-scale), scoring candidates on the\n\
+         deterministic event sim without running any epoch, and writes the\n\
+         winner to --emit (default plan.toml) — a ready-to-run TOML that\n\
+         passes the pre-flight check (`train --config plan.toml`). Dominated\n\
+         candidates (beaten on both modeled makespan and peak memory) are\n\
+         pruned via a sound lower bound; --fast searches the per-axis seed\n\
+         set only. The user's own settings are always candidates.\n\n\
          elastic training ([fault], DESIGN.md §9): --kill-worker W --kill-epoch E\n\
          models losing worker W mid-epoch E — the loss is detected at the next\n\
          collective, the partial epoch is discarded and replayed on the N-1\n\
@@ -446,7 +461,9 @@ fn bench(args: &[String], flags: &Flags) -> anyhow::Result<()> {
         println!("{text}");
         eprintln!("== {name} done in {:.1}s ==", t0.elapsed().as_secs_f64());
         if let Some(d) = &out_dir {
-            std::fs::write(format!("{d}/{name}.csv"), &text)?;
+            // JSON-shaped experiments (plan_scale) keep their extension honest
+            let ext = if text.trim_start().starts_with('{') { "json" } else { "csv" };
+            std::fs::write(format!("{d}/{name}.{ext}"), &text)?;
         }
     }
     Ok(())
@@ -487,6 +504,90 @@ fn check_cmd(flags: &Flags) -> anyhow::Result<()> {
         cfg.profile,
         findings.len()
     );
+    Ok(())
+}
+
+/// `neutron-tp plan`: search the configuration space for this workload
+/// and emit the winner as a ready-to-run TOML (DESIGN.md §10). The
+/// workload flags describe the scenario; the searched axes (system,
+/// collective algorithms, chunk geometry, prefetch depth, kernel team
+/// width) are re-chosen by the planner, with the user's own values kept
+/// in the running as candidates.
+fn plan_cmd(flags: &Flags) -> anyhow::Result<()> {
+    let mut cfg = match flags.get("config") {
+        Some(path) => RunConfig::from_toml(&std::fs::read_to_string(path)?)?,
+        None => RunConfig::default(),
+    };
+    apply_flag_overrides(&mut cfg, flags)?;
+    let store = ArtifactStore::load(artifacts_dir(flags))?;
+    let fast = flags.has("fast");
+    let t0 = std::time::Instant::now();
+    let outcome = neutron_tp::plan::plan(&cfg, &store, fast)?;
+
+    let (mut pruned, mut infeasible) = (0usize, 0usize);
+    for s in &outcome.result.skipped {
+        match s {
+            neutron_tp::plan::Skipped::Dominated { .. } => pruned += 1,
+            neutron_tp::plan::Skipped::Infeasible { .. } => infeasible += 1,
+        }
+    }
+    eprintln!(
+        "plan: {} candidate(s){}; {} fully scored, {} pruned as dominated, {} infeasible ({:.2}s)",
+        outcome.result.candidates,
+        if fast { " (--fast: seed set only)" } else { "" },
+        outcome.result.scored.len(),
+        pruned,
+        infeasible,
+        t0.elapsed().as_secs_f64(),
+    );
+    println!("fixed defaults (the yardsticks):");
+    for (system, score) in &outcome.defaults {
+        match score {
+            Some(s) => println!(
+                "  {:<12} modeled epoch {:>10.3} ms  peak mem {:>8.1} MiB",
+                system.name(),
+                s.makespan_secs * 1e3,
+                s.peak_mem_bytes as f64 / (1024.0 * 1024.0)
+            ),
+            None => println!("  {:<12} infeasible for this scenario", system.name()),
+        }
+    }
+    let w = outcome.winner();
+    let c = &w.cfg;
+    println!(
+        "winner: {} (all_to_all {}, allreduce {}, chunks {}, pipeline {}, \
+         prefetch_depth {}, intra_threads {})",
+        c.system.name(),
+        c.comm.all_to_all.name(),
+        c.comm.allreduce.name(),
+        c.chunks,
+        if c.pipeline { "on" } else { "off" },
+        c.mem.prefetch_depth,
+        c.intra_threads
+    );
+    let best_default = outcome
+        .defaults
+        .iter()
+        .filter_map(|(_, s)| s.as_ref())
+        .map(|s| s.makespan_secs)
+        .fold(f64::INFINITY, f64::min);
+    println!(
+        "  modeled epoch {:.3} ms  peak mem {:.1} MiB  ({:.2}x vs best fixed default)",
+        w.score.makespan_secs * 1e3,
+        w.score.peak_mem_bytes as f64 / (1024.0 * 1024.0),
+        best_default / w.score.makespan_secs.max(1e-12)
+    );
+
+    // self-verify before writing: the emitted TOML must parse back to the
+    // winner bit-for-bit and pass the same static pass `--pre-flight` runs
+    let verified = analysis::check_plan_toml(&outcome.winner_toml, &store)?;
+    anyhow::ensure!(
+        verified == w.cfg,
+        "plan TOML round-trip drifted from the winner (config serializer bug)"
+    );
+    let out = flags.get("emit").cloned().unwrap_or_else(|| "plan.toml".to_string());
+    std::fs::write(&out, &outcome.winner_toml)?;
+    println!("wrote {out} (pre-flight clean; run it: neutron-tp train --config {out})");
     Ok(())
 }
 

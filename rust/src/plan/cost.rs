@@ -1,0 +1,893 @@
+//! Cost model seams of the auto-planner (DESIGN.md §10.3): score one
+//! candidate configuration **without running a training epoch** by
+//! replaying its epoch schedule against a timing-mode [`Comm`] — the
+//! collectives are posted exactly as the engines post them (the same
+//! byte formulas `parallel::trace` mirrors), while the device compute
+//! that a real epoch would *measure* is substituted with an analytic
+//! estimate (edges·cols for aggregation, FLOPs for dense chains), fed
+//! through the same `gpu_speedup` scaling the engines apply.
+//!
+//! Two entry points per candidate:
+//!
+//! * [`CostModel::score`] — the full replay: event-sim makespan with
+//!   pipelined split pieces, host-staging stalls
+//!   ([`StagingRun::ready_for_step`] on the real staging plan), per-layer
+//!   DepComm, sequential broadcasts, and the gradient allreduce.
+//! * [`CostModel::quick_bound`] — a *sound lower bound* on the full
+//!   score's makespan (every per-worker stream in the event sim is
+//!   serial, so the makespan is at least any worker's summed wire time
+//!   and at least any worker's summed compute time), used by the search
+//!   to discard dominated candidates before paying for a full replay.
+//!   Soundness is lattice-tested in `rust/tests/plan.rs`.
+//!
+//! [`Defect`] seeds deliberate cost-model bugs for the mutation tests
+//! (the `analysis.rs` style): each variant must be caught by a dedicated
+//! assertion in `rust/tests/plan.rs`.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::cluster::{Comm, CommHandle};
+use crate::config::{AllReduceAlgo, ModelKind, RunConfig, System, Task};
+use crate::graph::chunk::ChunkPlan;
+use crate::graph::datasets::Profile;
+use crate::graph::partition::{chunk_partition, greedy_min_cut};
+use crate::graph::Csr;
+use crate::model::layer_dims;
+use crate::parallel::common;
+use crate::runtime::memory::fullgraph_resident_bytes;
+use crate::runtime::{ArtifactStore, DeviceMemory};
+use crate::sched::chunks::ChunkGeometry;
+use crate::sched::{PipelinePlan, StagingPlan, StagingRun, StagingSpec};
+use crate::tensor::{dim_slices, pad_tile, row_slices};
+
+// ---- analytic compute constants (measured-scale seconds, i.e. before
+// the `gpu_speedup` division `common::modeled` applies) ----------------
+
+/// Seconds per (edge × column) of CSR aggregation at one kernel thread.
+const AGG_SECS_PER_EDGE_COL: f64 = 1.0e-9;
+/// Seconds per dense FLOP (matmul counts 2·m·k·n).
+const DENSE_SECS_PER_FLOP: f64 = 5.0e-10;
+/// Fixed dispatch overhead per submitted artifact job.
+const JOB_OVERHEAD_SECS: f64 = 40.0e-6;
+/// Extra spawn cost per additional intra-job kernel thread.
+const TEAM_SPAWN_SECS: f64 = 15.0e-6;
+/// Amdahl parallel fraction of the row-blocked aggregation kernel.
+const AMDAHL_PARALLEL_FRAC: f64 = 0.85;
+
+/// Amdahl speedup factor of an aggregation kernel run with `intra`
+/// team threads (1.0 at one thread; floor of 0.15 serial share).
+fn team_factor(intra: usize) -> f64 {
+    let t = intra.max(1) as f64;
+    (1.0 - AMDAHL_PARALLEL_FRAC) + AMDAHL_PARALLEL_FRAC / t
+}
+
+/// Per-job dispatch cost: fixed overhead plus team spawn.
+fn job_cost(intra: usize) -> f64 {
+    JOB_OVERHEAD_SECS + TEAM_SPAWN_SECS * (intra.max(1) as f64 - 1.0)
+}
+
+/// One candidate's modeled cost: event-sim epoch makespan and the peak
+/// device-memory requirement its memory plan commits to.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Score {
+    pub makespan_secs: f64,
+    pub peak_mem_bytes: usize,
+}
+
+/// Deliberate cost-model mutations for the planner's mutation-test
+/// matrix (`rust/tests/plan.rs`): each variant models a realistic
+/// cost-model bug, and a dedicated test must fail it.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Defect {
+    #[default]
+    None,
+    /// drop the gradient-allreduce collective from the replay (a
+    /// "forgot a comm term" bug) — caught by byte conservation against
+    /// `trace::record_comm_schedule`
+    DropAllreduceTerm,
+    /// ignore `[comm] bw_scale` (plan as if every NIC were equal) —
+    /// caught by straggler topologies scoring no worse than homogeneous
+    IgnoreTopologySkew,
+    /// treat host-staging PCIe traffic as free (skip the staging
+    /// replay) — caught by tight-memory budgets scoring no worse than
+    /// roomy ones
+    FreeStagingStalls,
+    /// inflate the quick bound ×2 (an unsound pruning bound) — caught
+    /// by the lattice invariant `quick_bound ≤ score`
+    InflatedQuickBound,
+}
+
+/// Per-worker derived quantities of the data-parallel contiguous
+/// partition (`chunk_partition`) the DepComm/DepCache engines use.
+struct DpPart {
+    /// remote source vertices each worker must fetch per layer
+    remote: Vec<usize>,
+    /// edges into each worker's own rows (its aggregation work)
+    own_edges: Vec<usize>,
+    /// edges into each worker's *remote* sources (DepCache's redundant
+    /// halo aggregation)
+    halo_edges: Vec<usize>,
+}
+
+/// Per-worker derived quantities of the `greedy_min_cut` partition the
+/// historical-embedding baseline broadcasts over.
+struct HistPart {
+    member_counts: Vec<usize>,
+    member_edges: Vec<usize>,
+}
+
+/// The planner's cost model over one `(profile, graph, artifact store)`
+/// scenario. Graph-derived structures (chunk plans, partitions) are
+/// memoized across the hundreds of candidates one search scores.
+pub struct CostModel<'a> {
+    p: Profile,
+    g: &'a Csr,
+    store: &'a ArtifactStore,
+    defect: Defect,
+    plans: RefCell<HashMap<(usize, usize, usize), Rc<ChunkPlan>>>,
+    dp_parts: RefCell<HashMap<usize, Rc<DpPart>>>,
+    hist_parts: RefCell<HashMap<usize, Rc<HistPart>>>,
+}
+
+impl<'a> CostModel<'a> {
+    pub fn new(store: &'a ArtifactStore, p: Profile, g: &'a Csr) -> Self {
+        CostModel {
+            p,
+            g,
+            store,
+            defect: Defect::None,
+            plans: RefCell::new(HashMap::new()),
+            dp_parts: RefCell::new(HashMap::new()),
+            hist_parts: RefCell::new(HashMap::new()),
+        }
+    }
+
+    /// Seed a deliberate cost-model bug (mutation tests only).
+    pub fn with_defect(mut self, defect: Defect) -> Self {
+        self.defect = defect;
+        self
+    }
+
+    // ---- full replay -------------------------------------------------
+
+    /// Full event-sim score of one candidate. `Err` means the candidate
+    /// is infeasible for this scenario (its message contains "OOM" when
+    /// the memory plan is the reason).
+    pub fn score(&self, cfg: &RunConfig) -> crate::Result<Score> {
+        let peak_mem_bytes = self.peak_mem(&self.effective(cfg))?;
+        let comm = self.replay_comm(cfg)?;
+        Ok(Score { makespan_secs: comm.makespan(), peak_mem_bytes })
+    }
+
+    /// Run the full replay and hand back its communicator — the byte
+    /// conservation tests compare its per-kind [`crate::cluster::CommStats`]
+    /// against `parallel::trace::record_comm_schedule`'s.
+    pub fn replay_comm(&self, cfg: &RunConfig) -> crate::Result<Comm> {
+        let cfg = self.effective(cfg);
+        match cfg.system {
+            System::NeutronTp => self.replay_tp(&cfg, true),
+            System::NaiveTp => self.replay_tp(&cfg, false),
+            System::DpFull => self.replay_dp(&cfg, false),
+            System::DpCache => self.replay_dp(&cfg, true),
+            System::Historical => self.replay_historical(&cfg),
+            System::MiniBatch => anyhow::bail!(
+                "mini_batch is outside the planner's search space \
+                 (sampling changes convergence semantics, DESIGN.md §10.2)"
+            ),
+        }
+    }
+
+    /// Replay a TP epoch's schedule (decoupled = NeutronTP, else naive
+    /// TP) against a timing-mode communicator — the mirror of
+    /// `TpEngine::epoch_decoupled` / `epoch_naive` with analytic compute.
+    fn replay_tp(&self, cfg: &RunConfig, decoupled: bool) -> crate::Result<Comm> {
+        anyhow::ensure!(
+            decoupled || cfg.model == ModelKind::Gcn,
+            "naive TP supports GCN only"
+        );
+        let n = cfg.workers;
+        let v = self.p.v;
+        let lp = cfg.task == Task::LinkPrediction;
+        let dims = layer_dims(&self.p, cfg.layers, cfg.feat_dim, lp);
+        let l = cfg.layers;
+        let row_parts = row_slices(v, n);
+        let memplan = common::memplan_for(cfg, &self.p, self.g, self.store, &dims, decoupled)?;
+        let plan = self.chunk_plan(&memplan.geometry);
+        let mut comm = Comm::for_run(cfg)?;
+
+        if decoupled {
+            let wf = *dims.last().unwrap();
+            let dim_parts = dim_slices(wf, n);
+
+            // phase 1: NN chains on vertex slices, from t=0
+            let nn_fwd = self.nn_secs(cfg, &dims, v, 1.0);
+            for (w, part) in row_parts.iter().enumerate() {
+                let share = part.len() as f64 / v.max(1) as f64;
+                comm.compute(w, common::modeled(cfg, nn_fwd * share), 0.0);
+            }
+
+            if cfg.model == ModelKind::Gat {
+                // attention prologue (TpEngine + trace.rs byte formulas)
+                let attn = self.dense_secs(4 * v * wf, common::CANON_DATA_PARTS);
+                for (w, part) in row_parts.iter().enumerate() {
+                    let share = part.len() as f64 / v.max(1) as f64;
+                    comm.compute(w, common::modeled(cfg, attn * share), 0.0);
+                }
+                let block_bytes: Vec<usize> =
+                    row_parts.iter().map(|r| r.len() * 4).collect();
+                let _ = comm.iallgather_bytes(&block_bytes).wait();
+                for (ci, c) in plan.chunks.iter().enumerate() {
+                    let secs = self.agg_secs(cfg, c.live_edges, 1) + job_cost(cfg.intra_threads);
+                    comm.compute(ci % n, common::modeled(cfg, secs), 0.0);
+                }
+                let alpha_bytes = self.g.num_edges() * 4;
+                for w in 0..n {
+                    comm.p2p_wire(w, alpha_bytes * (n - 1) / n.max(1));
+                }
+            }
+            comm.barrier();
+
+            // phases 2..4: split -> L aggregation rounds -> gather
+            self.agg_phase_cost(
+                cfg, &mut comm, &plan, memplan.staging.as_ref(), wf, l, &row_parts, &dim_parts,
+            )?;
+            let agg_fwd_done: Vec<f64> = (0..n).map(|w| comm.now(w)).collect();
+
+            // phase 5: downstream task
+            match cfg.task {
+                Task::NodeClassification => {
+                    let t = self.loss_secs(v, wf);
+                    for (w, part) in row_parts.iter().enumerate() {
+                        let share = part.len() as f64 / v.max(1) as f64;
+                        comm.compute(w, common::modeled(cfg, t * share), agg_fwd_done[w]);
+                    }
+                }
+                Task::LinkPrediction => {
+                    let parts = common::CANON_DATA_PARTS;
+                    let pairs = (cfg.batch_size / parts).max(8);
+                    let fetch_total = parts * pairs * wf * 4 * 2;
+                    for w in 0..n {
+                        comm.p2p(w, fetch_total / n.max(1));
+                    }
+                    let t = self.dense_secs(2 * parts * pairs * wf * 4, parts);
+                    for w in 0..n {
+                        let now = comm.now(w);
+                        comm.compute(w, common::modeled(cfg, t / n.max(1) as f64), now);
+                    }
+                }
+            }
+            comm.barrier();
+
+            // backward: split -> L transposed rounds -> gather (the
+            // transpose shares chunk-row geometry and edge totals, so the
+            // forward plan stands in for it — exactly as trace.rs does)
+            self.agg_phase_cost(
+                cfg, &mut comm, &plan, memplan.staging.as_ref(), wf, l, &row_parts, &dim_parts,
+            )?;
+
+            // NN backward
+            let nn_bwd = self.nn_secs(cfg, &dims, v, 2.0);
+            for (w, part) in row_parts.iter().enumerate() {
+                let share = part.len() as f64 / v.max(1) as f64;
+                let now = comm.now(w);
+                comm.compute(w, common::modeled(cfg, nn_bwd * share), now);
+            }
+            comm.barrier();
+        } else {
+            // naive TP: coupled aggregate-then-update per layer
+            for li in 0..l {
+                let dp = dim_slices(dims[li], n);
+                self.agg_phase_cost(
+                    cfg, &mut comm, &plan, None, dims[li], 1, &row_parts, &dp,
+                )?;
+                for (w, part) in row_parts.iter().enumerate() {
+                    let secs = self.dense_secs(2 * part.len() * dims[li] * dims[li + 1], 1);
+                    let now = comm.now(w);
+                    comm.compute(w, common::modeled(cfg, secs), now);
+                }
+                comm.barrier();
+            }
+            let t = self.loss_secs(v, dims[l]);
+            for (w, part) in row_parts.iter().enumerate() {
+                let share = part.len() as f64 / v.max(1) as f64;
+                let now = comm.now(w);
+                comm.compute(w, common::modeled(cfg, t * share), now);
+            }
+            comm.barrier();
+            for li in (0..l).rev() {
+                for (w, part) in row_parts.iter().enumerate() {
+                    let secs =
+                        self.dense_secs(4 * part.len() * dims[li] * dims[li + 1], 1);
+                    let now = comm.now(w);
+                    comm.compute(w, common::modeled(cfg, secs), now);
+                }
+                comm.barrier();
+                let dp = dim_slices(dims[li], n);
+                self.agg_phase_cost(
+                    cfg, &mut comm, &plan, None, dims[li], 1, &row_parts, &dp,
+                )?;
+            }
+        }
+
+        self.allreduce_cost(cfg, &mut comm, &dims);
+        comm.barrier();
+        Ok(comm)
+    }
+
+    /// The TP aggregation phase's schedule: one split, `rounds` compute
+    /// rounds, one gather — pipelined chunk pieces and host-staging
+    /// ready-times included, mirroring `TpEngine::agg_phase`.
+    #[allow(clippy::too_many_arguments)]
+    fn agg_phase_cost(
+        &self,
+        cfg: &RunConfig,
+        comm: &mut Comm,
+        plan: &ChunkPlan,
+        staging_spec: Option<&StagingSpec>,
+        wf: usize,
+        rounds: usize,
+        row_parts: &[std::ops::Range<usize>],
+        dim_parts: &[std::ops::Range<usize>],
+    ) -> crate::Result<()> {
+        let n = row_parts.len();
+        let v = plan.num_vertices;
+        let slice_w = dim_parts[0].len().max(1);
+        let num_chunks = plan.num_chunks();
+        let pipelined = cfg.pipeline && num_chunks > 1;
+        // under FreeStagingStalls the run is never constructed: its
+        // replay contract (every step visited, then finish) would
+        // otherwise debug-assert
+        let mut staging = match staging_spec {
+            Some(spec) if self.defect != Defect::FreeStagingStalls => Some(
+                StagingRun::new(spec, &plan.chunks, slice_w, rounds, pipelined)?,
+            ),
+            _ => None,
+        };
+
+        if pipelined {
+            let pplan = PipelinePlan::build(&plan.chunks, slice_w, n, v);
+            let mut split_handles: Vec<Option<CommHandle<()>>> =
+                comm.isplit_pieces(&pplan.split_bytes).into_iter().map(Some).collect();
+            let mut gather_handles: Vec<CommHandle<()>> = Vec::with_capacity(num_chunks);
+            for r in 0..rounds {
+                for ci in 0..num_chunks {
+                    let secs = self.agg_secs(cfg, plan.chunks[ci].live_edges, wf)
+                        + job_cost(cfg.intra_threads);
+                    let total = common::modeled(cfg, secs);
+                    let mut ready = match split_handles.get_mut(ci).and_then(Option::take) {
+                        Some(handle) if r == 0 => handle.wait_barrier().1,
+                        _ => 0.0,
+                    };
+                    if let Some(st) = staging.as_mut() {
+                        let t = (0..n).map(|w| comm.now(w)).fold(ready, f64::max);
+                        ready = ready.max(st.ready_for_step(r * num_chunks + ci, t)?);
+                    }
+                    for w in 0..n {
+                        let frac = dim_parts[w].len() as f64 / wf.max(1) as f64;
+                        comm.compute(w, total * frac, ready);
+                    }
+                    if r + 1 == rounds {
+                        let bytes = pplan.gather_bytes.get(ci).copied().unwrap_or(0);
+                        gather_handles.push(comm.igather_piece(bytes));
+                    }
+                }
+            }
+            for handle in gather_handles {
+                let _ = handle.wait();
+            }
+        } else {
+            let _ = comm.isplit_bytes(row_parts, dim_parts).wait();
+            comm.barrier();
+            let phase_secs: f64 = plan
+                .chunks
+                .iter()
+                .map(|c| self.agg_secs(cfg, c.live_edges, wf) + job_cost(cfg.intra_threads))
+                .sum();
+            for r in 0..rounds {
+                let total = common::modeled(cfg, phase_secs);
+                let mut swap_ready = 0.0;
+                if let Some(st) = staging.as_mut() {
+                    let t = (0..n).map(|w| comm.now(w)).fold(0.0, f64::max);
+                    swap_ready = st.ready_for_round(r, num_chunks, t)?;
+                }
+                for w in 0..n {
+                    let frac = dim_parts[w].len() as f64 / wf.max(1) as f64;
+                    let now = comm.now(w).max(swap_ready);
+                    comm.compute(w, total * frac, now);
+                }
+            }
+            let _ = comm.igather_bytes(row_parts, dim_parts).wait();
+            comm.barrier();
+        }
+        if let Some(st) = staging {
+            let _ = st.finish();
+        }
+        Ok(())
+    }
+
+    /// Replay a data-parallel epoch (DepComm when `cache` is false,
+    /// DepCache when true) — the mirror of `DpEngine`'s schedule.
+    fn replay_dp(&self, cfg: &RunConfig, cache: bool) -> crate::Result<Comm> {
+        anyhow::ensure!(cfg.model == ModelKind::Gcn, "DP baselines support GCN only");
+        let n = cfg.workers;
+        let v = self.p.v;
+        let dims = layer_dims(&self.p, cfg.layers, cfg.feat_dim, false);
+        let l = cfg.layers;
+        let row_parts = row_slices(v, n);
+        let pi = self.dp_part(n);
+        let mut comm = Comm::for_run(cfg)?;
+
+        if cache {
+            // one-time halo feature replication
+            for w in 0..n {
+                comm.p2p(w, pi.remote[w] * dims[0] * 4);
+            }
+        }
+        for li in 0..l {
+            if !cache {
+                for w in 0..n {
+                    comm.p2p(w, pi.remote[w] * dims[li] * 4);
+                }
+                comm.barrier();
+            }
+            for w in 0..n {
+                let secs =
+                    self.agg_secs(cfg, pi.own_edges[w], dims[li]) + job_cost(cfg.intra_threads);
+                let m = common::modeled(cfg, secs);
+                let now = comm.now(w);
+                comm.compute(w, m, now);
+                if cache {
+                    let ratio = pi.halo_edges[w] as f64 / pi.own_edges[w].max(1) as f64;
+                    let now = comm.now(w);
+                    comm.compute(w, m * ratio, now);
+                }
+            }
+            comm.barrier();
+            for (w, part) in row_parts.iter().enumerate() {
+                let secs = self.dense_secs(2 * part.len() * dims[li] * dims[li + 1], 1);
+                let now = comm.now(w);
+                comm.compute(w, common::modeled(cfg, secs), now);
+            }
+            comm.barrier();
+        }
+
+        let t = self.loss_secs(v, dims[l]);
+        for (w, part) in row_parts.iter().enumerate() {
+            let share = part.len() as f64 / v.max(1) as f64;
+            let now = comm.now(w);
+            comm.compute(w, common::modeled(cfg, t * share), now);
+        }
+        comm.barrier();
+
+        for li in (0..l).rev() {
+            for (w, part) in row_parts.iter().enumerate() {
+                let secs = self.dense_secs(4 * part.len() * dims[li] * dims[li + 1], 1);
+                let now = comm.now(w);
+                comm.compute(w, common::modeled(cfg, secs), now);
+            }
+            comm.barrier();
+            if !cache {
+                for w in 0..n {
+                    comm.p2p(w, pi.remote[w] * dims[li] * 4);
+                }
+                comm.barrier();
+            }
+            for w in 0..n {
+                let secs =
+                    self.agg_secs(cfg, pi.own_edges[w], dims[li]) + job_cost(cfg.intra_threads);
+                let now = comm.now(w);
+                comm.compute(w, common::modeled(cfg, secs), now);
+            }
+            comm.barrier();
+        }
+
+        self.allreduce_cost(cfg, &mut comm, &dims);
+        comm.barrier();
+        Ok(comm)
+    }
+
+    /// Replay the historical-embedding baseline at its refresh epoch
+    /// (epoch 0 always refreshes — the planner scores the expensive
+    /// epoch, not the stale-cache one).
+    fn replay_historical(&self, cfg: &RunConfig) -> crate::Result<Comm> {
+        anyhow::ensure!(
+            cfg.model == ModelKind::Gcn,
+            "the historical baseline supports GCN only"
+        );
+        let n = cfg.workers;
+        let v = self.p.v;
+        let dims = layer_dims(&self.p, cfg.layers, cfg.feat_dim, false);
+        let l = cfg.layers;
+        let row_parts = row_slices(v, n);
+        let pi = self.hist_part(n);
+        let mut comm = Comm::for_run(cfg)?;
+
+        for li in 0..l {
+            let bw: Vec<usize> =
+                pi.member_counts.iter().map(|c| c * dims[li] * 4).collect();
+            let _ = comm.isequential_broadcast_bytes(&bw).wait();
+            comm.barrier();
+            for w in 0..n {
+                let secs =
+                    self.agg_secs(cfg, pi.member_edges[w], dims[li]) + job_cost(cfg.intra_threads);
+                let now = comm.now(w);
+                comm.compute(w, common::modeled(cfg, secs), now);
+            }
+            comm.barrier();
+            for (w, part) in row_parts.iter().enumerate() {
+                let secs = self.dense_secs(2 * part.len() * dims[li] * dims[li + 1], 1);
+                let now = comm.now(w);
+                comm.compute(w, common::modeled(cfg, secs), now);
+            }
+            comm.barrier();
+        }
+
+        let t = self.loss_secs(v, dims[l]);
+        for (w, part) in row_parts.iter().enumerate() {
+            let share = part.len() as f64 / v.max(1) as f64;
+            let now = comm.now(w);
+            comm.compute(w, common::modeled(cfg, t * share), now);
+        }
+        comm.barrier();
+
+        for li in (0..l).rev() {
+            for (w, part) in row_parts.iter().enumerate() {
+                let secs = self.dense_secs(4 * part.len() * dims[li] * dims[li + 1], 1);
+                let now = comm.now(w);
+                comm.compute(w, common::modeled(cfg, secs), now);
+            }
+            comm.barrier();
+            let bw: Vec<usize> =
+                pi.member_counts.iter().map(|c| c * dims[li] * 4).collect();
+            let _ = comm.isequential_broadcast_bytes(&bw).wait();
+            for w in 0..n {
+                let secs =
+                    self.agg_secs(cfg, pi.member_edges[w], dims[li]) + job_cost(cfg.intra_threads);
+                let now = comm.now(w);
+                comm.compute(w, common::modeled(cfg, secs), now);
+            }
+            comm.barrier();
+        }
+
+        self.allreduce_cost(cfg, &mut comm, &dims);
+        comm.barrier();
+        Ok(comm)
+    }
+
+    /// The per-epoch gradient allreduce (volume per `trace.rs`), unless
+    /// the `DropAllreduceTerm` mutation is seeded.
+    fn allreduce_cost(&self, cfg: &RunConfig, comm: &mut Comm, dims: &[usize]) {
+        if cfg.workers <= 1 || self.defect == Defect::DropAllreduceTerm {
+            return;
+        }
+        let param_bytes: usize = dims.windows(2).map(|w| (w[0] * w[1] + w[1]) * 4).sum();
+        let _ = comm.iallreduce_bytes(param_bytes).wait();
+    }
+
+    // ---- quick (pruning) bound ---------------------------------------
+
+    /// Sound lower bound on [`CostModel::score`]'s makespan, sharing its
+    /// peak-memory derivation. Every term below is ≤ the duration the
+    /// full replay charges the same worker's (serial) comm or compute
+    /// stream, and terms the replay adds on top (latency, barriers,
+    /// dispatch overhead, staging stalls, GAT/LP extras) are simply
+    /// omitted — omission only loosens a lower bound.
+    pub fn quick_bound(&self, cfg: &RunConfig) -> crate::Result<Score> {
+        let cfg = self.effective(cfg);
+        let peak_mem_bytes = self.peak_mem(&cfg)?;
+        let n = cfg.workers;
+        let v = self.p.v;
+        let lp = cfg.task == Task::LinkPrediction;
+        let dims = layer_dims(&self.p, cfg.layers, cfg.feat_dim, lp);
+        let l = cfg.layers;
+
+        // wire-only seconds for worker `w` to move `bytes`, with the
+        // topology's per-NIC scale applied exactly as `cluster::Comm`
+        // applies it (≤ every msg_secs the sim would charge)
+        let wire = |w: usize, bytes: usize| -> f64 {
+            let scale = cfg.comm.bw_scale.get(w).copied().unwrap_or(1.0).max(1e-9);
+            cfg.net.wire_secs(bytes) / scale
+        };
+
+        let mut comp = vec![0.0f64; n];
+        let mut wire_lb = vec![0.0f64; n];
+
+        match cfg.system {
+            System::NeutronTp | System::NaiveTp => {
+                let decoupled = cfg.system == System::NeutronTp;
+                let memplan =
+                    common::memplan_for(&cfg, &self.p, self.g, self.store, &dims, decoupled)?;
+                let pipelined = cfg.pipeline && memplan.geometry.num_chunks > 1;
+                // (phase width, rounds) pairs: decoupled runs two phases
+                // at the final width; naive one per layer per direction
+                let phases: Vec<(usize, usize)> = if decoupled {
+                    let wf = *dims.last().unwrap();
+                    vec![(wf, l), (wf, l)]
+                } else {
+                    let mut ps: Vec<(usize, usize)> =
+                        (0..l).map(|li| (dims[li], 1)).collect();
+                    ps.extend((0..l).rev().map(|li| (dims[li], 1)));
+                    ps
+                };
+                let e = self.g.num_edges();
+                for &(width, rounds) in &phases {
+                    let dim_parts = dim_slices(width, n);
+                    let slice_w = dim_parts[0].len().max(1);
+                    for w in 0..n {
+                        let frac = dim_parts[w].len() as f64 / width.max(1) as f64;
+                        comp[w] += common::modeled(
+                            &cfg,
+                            self.agg_secs(&cfg, e, width) * rounds as f64 * frac,
+                        );
+                    }
+                    if pipelined {
+                        // every worker's NIC carries every chunk piece
+                        let plan = self.chunk_plan(&memplan.geometry);
+                        let pplan = PipelinePlan::build(&plan.chunks, slice_w, n, v);
+                        let bytes: usize = pplan.split_bytes.iter().sum::<usize>()
+                            + pplan.gather_bytes.iter().sum::<usize>();
+                        for (w, t) in wire_lb.iter_mut().enumerate() {
+                            *t += wire(w, bytes);
+                        }
+                    } else {
+                        let row_parts = row_slices(v, n);
+                        for (w, t) in wire_lb.iter_mut().enumerate() {
+                            let dw = dim_parts[w].len();
+                            let rw = row_parts[w].len();
+                            let split_recv = (v - rw) * dw * 4;
+                            let gather_recv = rw * (width - dw) * 4;
+                            *t += wire(w, split_recv + gather_recv);
+                        }
+                    }
+                }
+            }
+            System::DpFull | System::DpCache => {
+                let cache = cfg.system == System::DpCache;
+                let pi = self.dp_part(n);
+                if cache {
+                    for (w, t) in wire_lb.iter_mut().enumerate() {
+                        *t += wire(w, pi.remote[w] * dims[0] * 4);
+                    }
+                }
+                for li in 0..l {
+                    for w in 0..n {
+                        let mut secs = 2.0 * self.agg_secs(&cfg, pi.own_edges[w], dims[li]);
+                        if cache {
+                            secs += 2.0
+                                * self.agg_secs(&cfg, pi.own_edges[w], dims[li])
+                                * (pi.halo_edges[w] as f64 / pi.own_edges[w].max(1) as f64);
+                        } else {
+                            wire_lb[w] += 2.0 * wire(w, pi.remote[w] * dims[li] * 4);
+                        }
+                        comp[w] += common::modeled(&cfg, secs);
+                    }
+                }
+            }
+            System::Historical => {
+                let pi = self.hist_part(n);
+                for li in 0..l {
+                    for w in 0..n {
+                        comp[w] += common::modeled(
+                            &cfg,
+                            2.0 * self.agg_secs(&cfg, pi.member_edges[w], dims[li]),
+                        );
+                        // receive every other worker's block + wire own
+                        // block to the n-1 peers, twice (fwd + bwd)
+                        let recv: usize = pi
+                            .member_counts
+                            .iter()
+                            .enumerate()
+                            .filter(|(s, _)| *s != w)
+                            .map(|(_, c)| c * dims[li] * 4)
+                            .sum();
+                        let sent = pi.member_counts[w] * dims[li] * 4 * (n - 1);
+                        wire_lb[w] += 2.0 * wire(w, recv + sent);
+                    }
+                }
+            }
+            System::MiniBatch => {
+                anyhow::bail!("mini_batch is outside the planner's search space")
+            }
+        }
+
+        // gradient allreduce (skipped consistently with the full replay
+        // when the DropAllreduceTerm mutation is seeded)
+        if n > 1 && self.defect != Defect::DropAllreduceTerm {
+            let pb: usize = dims.windows(2).map(|w| (w[0] * w[1] + w[1]) * 4).sum();
+            match cfg.comm.allreduce {
+                AllReduceAlgo::Ring => {
+                    let share = 2.0 * (n - 1) as f64 / n as f64;
+                    for (w, t) in wire_lb.iter_mut().enumerate() {
+                        *t += share * wire(w, pb);
+                    }
+                }
+                AllReduceAlgo::FlatTree => {
+                    for (w, t) in wire_lb.iter_mut().enumerate() {
+                        *t += if w == 0 {
+                            2.0 * (n - 1) as f64 * wire(0, pb)
+                        } else {
+                            wire(w, pb)
+                        };
+                    }
+                }
+            }
+        }
+
+        let mut lb = 0.0f64;
+        for w in 0..n {
+            lb = lb.max(comp[w]).max(wire_lb[w]);
+        }
+        if self.defect == Defect::InflatedQuickBound {
+            lb *= 2.0;
+        }
+        Ok(Score { makespan_secs: lb, peak_mem_bytes })
+    }
+
+    // ---- shared derivations ------------------------------------------
+
+    /// Apply model-level mutations that act on the candidate itself.
+    fn effective(&self, cfg: &RunConfig) -> RunConfig {
+        let mut c = cfg.clone();
+        if self.defect == Defect::IgnoreTopologySkew {
+            c.comm.bw_scale.clear();
+        }
+        c
+    }
+
+    /// Peak device-memory requirement of the candidate's memory plan —
+    /// the second dominance axis. `Err` (containing "OOM") marks the
+    /// candidate infeasible, mirroring each engine's own gate.
+    fn peak_mem(&self, cfg: &RunConfig) -> crate::Result<usize> {
+        let lp = cfg.task == Task::LinkPrediction;
+        let dims = layer_dims(&self.p, cfg.layers, cfg.feat_dim, lp);
+        let mem = DeviceMemory::from_mb(cfg.device_mem_mb);
+        match cfg.system {
+            System::NeutronTp | System::NaiveTp => {
+                let decoupled = cfg.system == System::NeutronTp;
+                let memplan =
+                    common::memplan_for(cfg, &self.p, self.g, self.store, &dims, decoupled)?;
+                match &memplan.staging {
+                    Some(spec) => {
+                        let plan = self.chunk_plan(&memplan.geometry);
+                        let wf = *dims.last().unwrap();
+                        let slice_w = dim_slices(wf, cfg.workers)[0].len().max(1);
+                        let sp = StagingPlan::build(spec, &plan.chunks, slice_w, cfg.layers)?;
+                        Ok(sp.planned_peak)
+                    }
+                    None => {
+                        let widest = *dims.iter().max().unwrap();
+                        Ok((self.p.v / cfg.workers) * dims.iter().sum::<usize>() * 4
+                            + self.p.v * pad_tile(widest.div_ceil(cfg.workers)) * 4)
+                    }
+                }
+            }
+            System::DpFull | System::DpCache => {
+                let hidden = dims[1..].iter().copied().max().unwrap_or(1);
+                let need = fullgraph_resident_bytes(
+                    self.p.v / cfg.workers,
+                    self.p.e / cfg.workers,
+                    dims[0],
+                    hidden,
+                    cfg.layers,
+                    1.0,
+                );
+                anyhow::ensure!(
+                    mem.fits(need),
+                    "modeled device OOM: {} needs {} MiB resident, budget {} MiB",
+                    cfg.system.name(),
+                    need >> 20,
+                    cfg.device_mem_mb
+                );
+                Ok(need)
+            }
+            System::Historical => {
+                let hidden = dims[1..].iter().copied().max().unwrap_or(1);
+                let need = fullgraph_resident_bytes(
+                    self.p.v,
+                    self.p.e / cfg.workers,
+                    dims[0],
+                    hidden,
+                    cfg.layers,
+                    1.0,
+                );
+                anyhow::ensure!(
+                    mem.fits(need),
+                    "modeled device OOM: historical needs {} MiB resident, budget {} MiB",
+                    need >> 20,
+                    cfg.device_mem_mb
+                );
+                Ok(need)
+            }
+            System::MiniBatch => {
+                anyhow::bail!("mini_batch is outside the planner's search space")
+            }
+        }
+    }
+
+    /// Analytic aggregation seconds (measured scale): edges × columns at
+    /// the candidate's kernel team width. The team only engages on the
+    /// block-parallel pallas lowering; the scatter baseline is serial.
+    fn agg_secs(&self, cfg: &RunConfig, edges: usize, cols: usize) -> f64 {
+        let team = match cfg.agg_impl {
+            crate::config::AggImpl::Pallas => team_factor(cfg.intra_threads),
+            crate::config::AggImpl::Scatter => 1.0,
+        };
+        edges as f64 * cols.max(1) as f64 * AGG_SECS_PER_EDGE_COL * team
+    }
+
+    /// Analytic dense seconds (measured scale) for `flops` FLOPs across
+    /// `jobs` dispatches.
+    fn dense_secs(&self, flops: usize, jobs: usize) -> f64 {
+        flops as f64 * DENSE_SECS_PER_FLOP + jobs as f64 * JOB_OVERHEAD_SECS
+    }
+
+    /// Full NN chain over all `v` rows (`scale` = 1 forward, 2 backward).
+    fn nn_secs(&self, cfg: &RunConfig, dims: &[usize], v: usize, scale: f64) -> f64 {
+        let flops: usize = dims.windows(2).map(|w| 2 * v * w[0] * w[1]).sum();
+        let jobs = if cfg.fused_nn {
+            common::CANON_DATA_PARTS
+        } else {
+            common::CANON_DATA_PARTS * (dims.len() - 1)
+        };
+        flops as f64 * scale * DENSE_SECS_PER_FLOP + jobs as f64 * job_cost(1)
+    }
+
+    /// Loss + gradient over `[v, k]` logits (softmax/xent-scale work).
+    fn loss_secs(&self, v: usize, k: usize) -> f64 {
+        self.dense_secs(4 * v * k, common::CANON_DATA_PARTS)
+    }
+
+    fn chunk_plan(&self, geo: &ChunkGeometry) -> Rc<ChunkPlan> {
+        let key = (geo.rows_per_chunk, geo.c_bucket, geo.e_bucket);
+        if let Some(p) = self.plans.borrow().get(&key) {
+            return p.clone();
+        }
+        let plan = Rc::new(ChunkPlan::build(
+            self.g,
+            geo.rows_per_chunk,
+            geo.c_bucket,
+            geo.e_bucket,
+        ));
+        self.plans.borrow_mut().insert(key, plan.clone());
+        plan
+    }
+
+    fn dp_part(&self, n: usize) -> Rc<DpPart> {
+        if let Some(p) = self.dp_parts.borrow().get(&n) {
+            return p.clone();
+        }
+        let part = chunk_partition(self.p.v, n);
+        let mut remote = Vec::with_capacity(n);
+        let mut own_edges = Vec::with_capacity(n);
+        let mut halo_edges = Vec::with_capacity(n);
+        for w in 0..n {
+            let rs = part.remote_srcs(self.g, w);
+            halo_edges.push(rs.iter().map(|&s| self.g.in_deg(s as usize)).sum());
+            remote.push(rs.len());
+            own_edges
+                .push(part.members(w).iter().map(|&m| self.g.in_deg(m as usize)).sum());
+        }
+        let pi = Rc::new(DpPart { remote, own_edges, halo_edges });
+        self.dp_parts.borrow_mut().insert(n, pi.clone());
+        pi
+    }
+
+    fn hist_part(&self, n: usize) -> Rc<HistPart> {
+        if let Some(p) = self.hist_parts.borrow().get(&n) {
+            return p.clone();
+        }
+        let part = greedy_min_cut(self.g, n);
+        let mut member_counts = Vec::with_capacity(n);
+        let mut member_edges = Vec::with_capacity(n);
+        for w in 0..n {
+            let ms = part.members(w);
+            member_edges.push(ms.iter().map(|&m| self.g.in_deg(m as usize)).sum());
+            member_counts.push(ms.len());
+        }
+        let pi = Rc::new(HistPart { member_counts, member_edges });
+        self.hist_parts.borrow_mut().insert(n, pi.clone());
+        pi
+    }
+}

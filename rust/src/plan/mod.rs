@@ -1,0 +1,73 @@
+//! Auto-planner (DESIGN.md §10): `neutron-tp plan` searches the
+//! configuration space — system × collective algorithms × chunk
+//! geometry × prefetch depth × kernel team width — for one workload
+//! (graph profile, cluster topology, device-memory budget) and emits
+//! the winner as a ready-to-run TOML. Scoring never runs a training
+//! epoch: [`cost::CostModel`] replays each candidate's epoch schedule
+//! against the deterministic event sim.
+
+pub mod cost;
+pub mod search;
+pub mod space;
+
+pub use cost::{CostModel, Defect, Score};
+pub use search::{Scored, SearchResult, Skipped};
+
+use crate::config::{RunConfig, System};
+use crate::graph::{Csr, Dataset};
+use crate::runtime::ArtifactStore;
+
+/// Documented agreement bound between a plan's modeled makespan and a
+/// real run's measured `sim_epoch_secs`, in comm-bound regimes (high
+/// `gpu_speedup`, modest bandwidth — where the analytic compute model's
+/// error is a small fraction of the epoch). Asserted by the oracle
+/// tests in `rust/tests/plan.rs` and quoted in README/DESIGN.md §10.5.
+pub const PREDICTION_TOLERANCE: f64 = 0.25;
+
+/// A finished planning run: the search account, the per-system fixed
+/// defaults the winner was measured against, and the emitted TOML.
+pub struct PlanOutcome {
+    pub result: SearchResult,
+    /// `(system, score)` for each fixed default; `Err`-as-`None` marks
+    /// a default that is itself infeasible for the scenario
+    pub defaults: Vec<(System, Option<Score>)>,
+    pub winner_toml: String,
+}
+
+impl PlanOutcome {
+    pub fn winner(&self) -> &Scored {
+        self.result.winner()
+    }
+}
+
+/// Plan `base`'s workload: validate, build the scenario graph, search
+/// the lattice, and render the winner. `base`'s own system choice is
+/// just another candidate — the planner may keep or override it.
+pub fn plan(base: &RunConfig, store: &ArtifactStore, fast: bool) -> crate::Result<PlanOutcome> {
+    let sane = space::sanitize(base);
+    sane.validate()?;
+    let p = crate::graph::datasets::profile(&sane.profile)
+        .ok_or_else(|| anyhow::anyhow!("unknown profile '{}'", sane.profile))?;
+    let g = Dataset::generate_graph(p, sane.seed);
+    plan_with_graph(&sane, store, p, &g, fast)
+}
+
+/// [`plan`] with the scenario graph supplied by the caller (tests reuse
+/// one generated graph across many planner invocations).
+pub fn plan_with_graph(
+    base: &RunConfig,
+    store: &ArtifactStore,
+    p: crate::graph::Profile,
+    g: &Csr,
+    fast: bool,
+) -> crate::Result<PlanOutcome> {
+    let sane = space::sanitize(base);
+    let model = CostModel::new(store, p, g);
+    let result = search::search(&model, &sane, fast)?;
+    let defaults = space::fixed_defaults(&sane)
+        .iter()
+        .map(|cfg| (cfg.system, model.score(cfg).ok()))
+        .collect();
+    let winner_toml = result.winner().cfg.to_toml();
+    Ok(PlanOutcome { result, defaults, winner_toml })
+}

@@ -1,0 +1,142 @@
+//! Enumerate-then-prune search (DESIGN.md §10.4), the shape of ruler's
+//! `enumo` ruleset growth: seed the scored set with the configurations
+//! most likely to be strong (every system's fixed default and every
+//! single-axis deviation from it), then walk the rest of the lattice
+//! discarding any candidate whose *quick lower bound* is already
+//! dominated — beaten or matched on both modeled makespan and peak
+//! memory by something fully scored.
+//!
+//! Pruning is sound for winner selection because the bound is a lower
+//! bound: for a pruned candidate `A` with dominator `B`,
+//! `score(A) ≥ quick(A) ≥ B.makespan ≥ winner.makespan`, so `A` can
+//! never beat the returned winner on makespan (the primary objective).
+//! The lattice test in `rust/tests/plan.rs` checks exactly this claim
+//! by fully scoring everything the search pruned.
+
+use crate::config::RunConfig;
+
+use super::cost::{CostModel, Score};
+use super::space;
+
+/// One fully scored candidate.
+#[derive(Clone, Debug)]
+pub struct Scored {
+    pub cfg: RunConfig,
+    pub score: Score,
+    /// position in the deterministic enumeration — the final tie-break,
+    /// which prefers base-valued axes (they enumerate first)
+    pub index: usize,
+}
+
+/// Why a candidate never reached a full replay.
+#[derive(Clone, Debug)]
+pub enum Skipped {
+    /// quick bound dominated by `by` (an index into `scored`)
+    Dominated { index: usize, bound: Score, by: usize },
+    /// memory plan (or engine gate) rejected it
+    Infeasible { index: usize, reason: String },
+}
+
+/// The search's full account: every fully scored candidate, every
+/// pruned/infeasible one, and the winner. `scored[0..]` keeps scoring
+/// order (seeds first), `winner` indexes into `scored`.
+#[derive(Debug)]
+pub struct SearchResult {
+    pub scored: Vec<Scored>,
+    pub skipped: Vec<Skipped>,
+    pub winner: usize,
+    pub candidates: usize,
+}
+
+impl SearchResult {
+    pub fn winner(&self) -> &Scored {
+        &self.scored[self.winner]
+    }
+}
+
+/// `(makespan, peak, index)` lexicographic order: makespan is the
+/// objective, peak memory breaks ties toward the leaner plan, and the
+/// enumeration index keeps the result deterministic and base-leaning.
+fn better(a: &Scored, b: &Scored) -> bool {
+    let am = a.score.makespan_secs;
+    let bm = b.score.makespan_secs;
+    if am != bm {
+        return am < bm;
+    }
+    if a.score.peak_mem_bytes != b.score.peak_mem_bytes {
+        return a.score.peak_mem_bytes < b.score.peak_mem_bytes;
+    }
+    a.index < b.index
+}
+
+/// Search `base`'s candidate lattice with `model`. `fast` restricts
+/// the walk to the seed set (every fixed default and every single-axis
+/// deviation) — the CI smoke mode; the winner-beats-defaults property
+/// survives because all yardsticks are seeds. Returns `Err` only when
+/// every candidate is infeasible for the scenario.
+pub fn search(model: &CostModel, base: &RunConfig, fast: bool) -> crate::Result<SearchResult> {
+    let base = space::sanitize(base);
+    let all = space::candidates(&base);
+    let fixed = space::fixed_defaults(&base);
+    let candidates = all.len();
+
+    // partition the enumeration into seeds (axis distance ≤ 1 from the
+    // candidate's own system default — the fixed defaults themselves and
+    // every per-axis deviation) and the remainder
+    let mut seeds: Vec<(usize, &RunConfig)> = Vec::new();
+    let mut rest: Vec<(usize, &RunConfig)> = Vec::new();
+    for (i, cfg) in all.iter().enumerate() {
+        let fx = fixed.iter().find(|f| f.system == cfg.system);
+        match fx {
+            Some(fx) if space::axis_distance(cfg, fx) <= 1 => seeds.push((i, cfg)),
+            _ => rest.push((i, cfg)),
+        }
+    }
+    if fast {
+        rest.clear();
+    }
+
+    let mut scored: Vec<Scored> = Vec::new();
+    let mut skipped: Vec<Skipped> = Vec::new();
+
+    for (index, cfg) in seeds {
+        match model.score(cfg) {
+            Ok(score) => scored.push(Scored { cfg: cfg.clone(), score, index }),
+            Err(e) => skipped.push(Skipped::Infeasible { index, reason: e.to_string() }),
+        }
+    }
+
+    for (index, cfg) in rest {
+        let bound = match model.quick_bound(cfg) {
+            Ok(b) => b,
+            Err(e) => {
+                skipped.push(Skipped::Infeasible { index, reason: e.to_string() });
+                continue;
+            }
+        };
+        let dominator = scored.iter().position(|s| {
+            s.score.makespan_secs <= bound.makespan_secs
+                && s.score.peak_mem_bytes <= bound.peak_mem_bytes
+        });
+        if let Some(by) = dominator {
+            skipped.push(Skipped::Dominated { index, bound, by });
+            continue;
+        }
+        match model.score(cfg) {
+            Ok(score) => scored.push(Scored { cfg: cfg.clone(), score, index }),
+            Err(e) => skipped.push(Skipped::Infeasible { index, reason: e.to_string() }),
+        }
+    }
+
+    anyhow::ensure!(
+        !scored.is_empty(),
+        "no feasible candidate for this scenario — raise device_mem_mb or shrink the model"
+    );
+    let mut winner = 0;
+    for i in 1..scored.len() {
+        if better(&scored[i], &scored[winner]) {
+            winner = i;
+        }
+    }
+    Ok(SearchResult { scored, skipped, winner, candidates })
+}

@@ -1,0 +1,138 @@
+//! The planner's candidate space (DESIGN.md §10.2): every candidate is
+//! the user's base configuration with a subset of six *searched axes*
+//! re-assigned — system, all-to-all algorithm, allreduce algorithm,
+//! chunk-geometry override, pipeline toggle, prefetch depth, and kernel
+//! team width. Everything else (profile, model, layers, budget,
+//! topology) is workload, not plan, and passes through untouched.
+//!
+//! Enumeration order is deterministic and base-first on every axis, so
+//! the search's index tie-break prefers the user's own settings when
+//! the model scores two candidates identically.
+
+use crate::config::{AllReduceAlgo, AllToAllAlgo, FaultCfg, ModelKind, RunConfig, System, Task};
+
+/// Clamp the workload to what every candidate can run: planning ignores
+/// fault injection (`validate` rejects fault plans on non-NeutronTP
+/// systems, and a planned epoch is fault-free by definition) and never
+/// resumes.
+pub fn sanitize(base: &RunConfig) -> RunConfig {
+    let mut cfg = base.clone();
+    cfg.fault = FaultCfg::default();
+    cfg.resume = false;
+    cfg
+}
+
+/// Systems the planner may re-assign for this workload. The baselines
+/// are GCN / node-classification engines; anything else narrows the
+/// space to the two TP variants or NeutronTP alone.
+pub fn searched_systems(base: &RunConfig) -> Vec<System> {
+    if base.model != ModelKind::Gcn || base.task == Task::LinkPrediction {
+        // GAT/RGCN and link prediction run on the decoupled TP path only
+        vec![System::NeutronTp]
+    } else {
+        vec![
+            System::NeutronTp,
+            System::NaiveTp,
+            System::DpFull,
+            System::DpCache,
+            System::Historical,
+        ]
+    }
+}
+
+/// Per-axis option list: the base's own value first, then the
+/// alternatives, deduplicated keeping first occurrence.
+fn axis<T: PartialEq + Copy>(base: T, alts: &[T]) -> Vec<T> {
+    let mut out = vec![base];
+    for &a in alts {
+        if !out.contains(&a) {
+            out.push(a);
+        }
+    }
+    out
+}
+
+fn is_tp(s: System) -> bool {
+    matches!(s, System::NeutronTp | System::NaiveTp)
+}
+
+/// Enumerate the full candidate lattice for `base`'s workload. The
+/// cross product only spans axes a system actually reads: chunk
+/// geometry, the all-to-all algorithm, and the pipeline toggle are TP
+/// concerns; prefetch depth reaches the host-staging scheduler behind
+/// the decoupled path only.
+pub fn candidates(base: &RunConfig) -> Vec<RunConfig> {
+    let base = sanitize(base);
+    let mut out = Vec::new();
+    for system in searched_systems(&base) {
+        let a2a: Vec<AllToAllAlgo> = if is_tp(system) {
+            axis(base.comm.all_to_all, &[AllToAllAlgo::Naive, AllToAllAlgo::Pairwise])
+        } else {
+            vec![base.comm.all_to_all]
+        };
+        let allreduce = axis(base.comm.allreduce, &[AllReduceAlgo::Ring, AllReduceAlgo::FlatTree]);
+        let chunks: Vec<usize> =
+            if is_tp(system) { axis(base.chunks, &[0, 2, 8]) } else { vec![base.chunks] };
+        let pipeline: Vec<bool> =
+            if is_tp(system) { axis(base.pipeline, &[true, false]) } else { vec![base.pipeline] };
+        let prefetch: Vec<usize> = if system == System::NeutronTp {
+            axis(base.mem.prefetch_depth, &[1, 4])
+        } else {
+            vec![base.mem.prefetch_depth]
+        };
+        let intra = axis(base.intra_threads.max(1), &[1, 2, 4]);
+        for &aa in &a2a {
+            for &ar in &allreduce {
+                for &ch in &chunks {
+                    for &pl in &pipeline {
+                        for &pf in &prefetch {
+                            for &it in &intra {
+                                let mut c = base.clone();
+                                c.system = system;
+                                c.comm.all_to_all = aa;
+                                c.comm.allreduce = ar;
+                                c.chunks = ch;
+                                c.pipeline = pl;
+                                c.mem.prefetch_depth = pf;
+                                c.intra_threads = it;
+                                out.push(c);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// One fixed-default configuration per searched system: the workload as
+/// the user wrote it, with only `system` re-assigned. These are the
+/// yardsticks the winner must beat (ISSUE 8 acceptance) and the seeds
+/// of the dominance prune.
+pub fn fixed_defaults(base: &RunConfig) -> Vec<RunConfig> {
+    let base = sanitize(base);
+    searched_systems(&base)
+        .into_iter()
+        .map(|system| {
+            let mut c = base.clone();
+            c.system = system;
+            c.intra_threads = c.intra_threads.max(1);
+            c
+        })
+        .collect()
+}
+
+/// Number of searched axes on which `cfg` differs from its system's
+/// fixed default. The search fully scores every candidate at distance
+/// ≤ 1 (the "per-axis winners" seed set) before pruning kicks in.
+pub fn axis_distance(cfg: &RunConfig, fixed: &RunConfig) -> usize {
+    let mut d = 0;
+    d += usize::from(cfg.comm.all_to_all != fixed.comm.all_to_all);
+    d += usize::from(cfg.comm.allreduce != fixed.comm.allreduce);
+    d += usize::from(cfg.chunks != fixed.chunks);
+    d += usize::from(cfg.pipeline != fixed.pipeline);
+    d += usize::from(cfg.mem.prefetch_depth != fixed.mem.prefetch_depth);
+    d += usize::from(cfg.intra_threads != fixed.intra_threads);
+    d
+}

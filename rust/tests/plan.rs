@@ -1,0 +1,460 @@
+//! Oracle and mutation tests for the auto-planner (`plan`, DESIGN.md
+//! §10). Three directions, all required before trusting `neutron-tp
+//! plan` output:
+//!
+//! * **dominance oracle** — the emitted winner beats every fixed
+//!   per-system default on modeled makespan, across a property-random
+//!   scenario space, and the winner TOML survives the full static
+//!   pre-flight pass byte-for-byte;
+//! * **pruning soundness** — on a fully enumerable scenario, no
+//!   candidate the search pruned (or scored) beats the returned winner,
+//!   and the quick bound really is a lower bound on the full replay
+//!   everywhere in the lattice;
+//! * **prediction agreement** — the modeled makespan of a planned
+//!   configuration agrees with a *real* training epoch's measured
+//!   `sim_epoch_secs` within [`plan::PREDICTION_TOLERANCE`] in the
+//!   comm-bound regimes the planner targets.
+//!
+//! The cost model carries seeded [`Defect`] mutations (the `analysis.rs`
+//! convention): each deliberate bug class — dropped comm term, ignored
+//! NIC skew, free staging stalls, inflated pruning bound — must be
+//! caught by a dedicated assertion below.
+
+use neutron_tp::analysis;
+use neutron_tp::cluster::{CommKind, CommStats};
+use neutron_tp::config::{RunConfig, System};
+use neutron_tp::graph::datasets::{profile, Dataset, Profile};
+use neutron_tp::graph::Csr;
+use neutron_tp::parallel::{self, trace, Ctx};
+use neutron_tp::plan::{self, space, CostModel, Defect, Skipped};
+use neutron_tp::runtime::{ArtifactStore, ExecutorPool};
+use neutron_tp::util::propcheck;
+
+fn store() -> ArtifactStore {
+    ArtifactStore::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .expect("builtin plan loads without AOT output")
+}
+
+/// The comm-bound workload shell the planner targets (and `plan_scale`
+/// benchmarks): slow interconnect, fast modeled devices — where the
+/// analytic-compute substitution's error is a small fraction of the
+/// epoch.
+fn comm_bound(profile_name: &str) -> RunConfig {
+    let mut cfg = RunConfig {
+        profile: profile_name.to_string(),
+        workers: 4,
+        epochs: 1,
+        ..Default::default()
+    };
+    cfg.net.bandwidth_gbps = 0.05;
+    cfg.net.gpu_speedup = 100.0;
+    cfg
+}
+
+fn graph_for(cfg: &RunConfig) -> (Profile, Csr) {
+    let p = profile(&cfg.profile).expect("builtin profile");
+    let g = Dataset::generate_graph(p, cfg.seed);
+    (p, g)
+}
+
+/// Ground truth: run one real training epoch of `cfg` (actual engines,
+/// actual kernels, the same event sim) and return its measured
+/// per-epoch makespan.
+fn real_epoch_secs(store: &ArtifactStore, cfg: &RunConfig) -> f64 {
+    cfg.validate().expect("planned config validates");
+    let p = profile(&cfg.profile).unwrap();
+    let data = match cfg.feat_dim {
+        Some(d) => Dataset::generate_with_dim(p, d, cfg.seed),
+        None => Dataset::generate(p, cfg.seed),
+    };
+    let pool = ExecutorPool::with_intra(store, cfg.executor_threads, cfg.intra_threads)
+        .expect("executor pool");
+    let ctx = Ctx { cfg, data: &data, store, pool: &pool };
+    let reports = parallel::run(&ctx).expect("planned config trains");
+    reports.last().expect("at least one epoch").sim_epoch_secs
+}
+
+/// Per-kind (ops, bytes sent, bytes received) — the mode-independent
+/// slice of [`CommStats`]. Record-mode communicators charge zero NIC
+/// seconds, so `secs` is deliberately excluded from conservation checks.
+fn kind_volumes(stats: &CommStats) -> Vec<(CommKind, usize, usize, usize)> {
+    CommKind::ALL
+        .iter()
+        .map(|&k| {
+            let s = stats.kind(k);
+            (k, s.ops, s.bytes_sent, s.bytes_recv)
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Dominance oracle: the winner beats every fixed default
+// ---------------------------------------------------------------------------
+
+#[test]
+fn winner_beats_every_fixed_default() {
+    let store = store();
+    let p = profile("tiny").unwrap();
+    let g = Dataset::generate_graph(p, 42);
+    propcheck::check("plan-winner-dominates-defaults", 0x504C_414E, 4, |rng| {
+        let mut base = comm_bound("tiny");
+        base.workers = if rng.gen_bool(0.5) { 2 } else { 4 };
+        base.layers = 2 + rng.gen_range(2); // 2..=3
+        base.chunks = if rng.gen_bool(0.5) { 0 } else { 2 };
+        base.pipeline = rng.gen_bool(0.5);
+        if rng.gen_bool(0.5) {
+            // one straggler NIC at a random fraction of line rate
+            base.comm.bw_scale = vec![rng.gen_f32_range(0.2, 0.8) as f64];
+        }
+        let outcome =
+            plan::plan_with_graph(&base, &store, p, &g, false).expect("search finds a winner");
+        let w = outcome.winner();
+        for (system, score) in &outcome.defaults {
+            let Some(score) = score else { continue };
+            assert!(
+                w.score.makespan_secs <= score.makespan_secs + 1e-12,
+                "winner ({}, {:.6}s) loses to the fixed {} default ({:.6}s)",
+                w.cfg.system.name(),
+                w.score.makespan_secs,
+                system.name(),
+                score.makespan_secs,
+            );
+        }
+        // emission gate: the winner TOML passes the full static
+        // pre-flight pass and round-trips to the winner's exact config
+        let parsed = analysis::check_plan_toml(&outcome.winner_toml, &store)
+            .expect("winner TOML passes pre-flight");
+        assert_eq!(parsed, w.cfg, "emitted TOML drifted from the scored winner");
+    });
+}
+
+#[test]
+fn planner_sanitizes_fault_and_resume_out_of_the_workload() {
+    let store = store();
+    let mut base = comm_bound("tiny");
+    base.resume = true; // no checkpoint_dir — unrunnable as written
+    let outcome = plan::plan(&base, &store, true).expect("plan ignores resume state");
+    let w = outcome.winner();
+    assert!(!w.cfg.resume, "planned config must not inherit resume");
+    assert_eq!(w.cfg.fault, Default::default(), "planned config must be fault-free");
+}
+
+// ---------------------------------------------------------------------------
+// Pruning soundness on the exhaustive lattice
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pruning_is_sound_on_the_exhaustive_lattice() {
+    let store = store();
+    let mut base = comm_bound("tiny");
+    base.comm.bw_scale = vec![0.25];
+    let (p, g) = graph_for(&base);
+    let model = CostModel::new(&store, p, &g);
+
+    let result = neutron_tp::plan::search::search(&model, &base, false).expect("search");
+    let winner = result.winner();
+    let all = space::candidates(&base);
+    assert_eq!(result.candidates, all.len());
+
+    // exhaustively score everything the search enumerated — including
+    // every candidate it pruned — and assert none beats the winner
+    let mut feasible = 0usize;
+    for (i, cfg) in all.iter().enumerate() {
+        let Ok(score) = model.score(cfg) else { continue };
+        feasible += 1;
+        assert!(
+            winner.score.makespan_secs <= score.makespan_secs + 1e-12,
+            "candidate #{i} ({}, makespan {:.6}s) beats the winner ({:.6}s)",
+            cfg.system.name(),
+            score.makespan_secs,
+            winner.score.makespan_secs,
+        );
+    }
+    assert!(feasible > 0, "lattice has no feasible candidate");
+
+    // the search must actually have pruned something on this lattice,
+    // or the dominance test is vacuous
+    let pruned = result
+        .skipped
+        .iter()
+        .filter(|s| matches!(s, Skipped::Dominated { .. }))
+        .count();
+    assert!(pruned > 0, "expected the dominance prune to fire on the full lattice");
+    // and every pruned candidate's recorded bound must be consistent
+    // with its dominator's score
+    for sk in &result.skipped {
+        if let Skipped::Dominated { index, bound, by } = sk {
+            let dom = &result.scored[*by];
+            assert!(
+                dom.score.makespan_secs <= bound.makespan_secs + 1e-12
+                    && dom.score.peak_mem_bytes <= bound.peak_mem_bytes,
+                "candidate #{index} recorded a non-dominating dominator"
+            );
+        }
+    }
+}
+
+#[test]
+fn quick_bound_is_a_lower_bound_across_the_lattice() {
+    let store = store();
+    let homogeneous = comm_bound("tiny");
+    let straggler = {
+        let mut cfg = comm_bound("tiny");
+        cfg.comm.bw_scale = vec![0.25];
+        cfg
+    };
+    for base in [homogeneous, straggler] {
+        let (p, g) = graph_for(&base);
+        let model = CostModel::new(&store, p, &g);
+        let mut checked = 0usize;
+        for cfg in space::candidates(&base) {
+            let (Ok(quick), Ok(full)) = (model.quick_bound(&cfg), model.score(&cfg)) else {
+                continue;
+            };
+            checked += 1;
+            assert!(
+                quick.makespan_secs <= full.makespan_secs * (1.0 + 1e-9),
+                "quick bound {:.9}s exceeds full score {:.9}s for {} \
+                 (a2a {}, allreduce {}, chunks {}, pipeline {}, prefetch {}, intra {})",
+                quick.makespan_secs,
+                full.makespan_secs,
+                cfg.system.name(),
+                cfg.comm.all_to_all.name(),
+                cfg.comm.allreduce.name(),
+                cfg.chunks,
+                cfg.pipeline,
+                cfg.mem.prefetch_depth,
+                cfg.intra_threads,
+            );
+            assert_eq!(
+                quick.peak_mem_bytes, full.peak_mem_bytes,
+                "quick bound and full score disagree on the memory axis"
+            );
+        }
+        assert!(checked > 0, "no candidate was double-scored");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Byte conservation: the replay posts the engines' exact collectives
+// ---------------------------------------------------------------------------
+
+/// The TP configurations whose recorded schedule mirrors the engines
+/// collective-for-collective (GCN / node classification — the paths
+/// where `parallel::trace` posts the full schedule, not only the
+/// allreduce).
+fn conservation_cfgs() -> Vec<RunConfig> {
+    let mut out = Vec::new();
+    for (system, pipeline) in [
+        (System::NeutronTp, true),
+        (System::NeutronTp, false),
+        (System::NaiveTp, true),
+    ] {
+        let mut cfg = RunConfig { workers: 4, ..Default::default() };
+        cfg.system = system;
+        cfg.pipeline = pipeline;
+        out.push(cfg);
+    }
+    out
+}
+
+#[test]
+fn replay_conserves_bytes_against_the_recorded_schedule() {
+    let store = store();
+    for cfg in conservation_cfgs() {
+        let (p, g) = graph_for(&cfg);
+        let model = CostModel::new(&store, p, &g);
+        let replayed = model.replay_comm(&cfg).expect("replay");
+        let (_events, recorded) =
+            trace::record_comm_schedule(&cfg, &p, &g, &store).expect("record");
+        assert_eq!(
+            kind_volumes(replayed.stats()),
+            kind_volumes(recorded.stats()),
+            "replayed collective volumes diverge from the recorded schedule \
+             for {} (pipeline {})",
+            cfg.system.name(),
+            cfg.pipeline,
+        );
+    }
+}
+
+#[test]
+fn defect_drop_allreduce_term_is_caught_by_byte_conservation() {
+    let store = store();
+    let mut caught = 0usize;
+    for cfg in conservation_cfgs() {
+        let (p, g) = graph_for(&cfg);
+        let model = CostModel::new(&store, p, &g).with_defect(Defect::DropAllreduceTerm);
+        let replayed = model.replay_comm(&cfg).expect("replay");
+        let (_events, recorded) =
+            trace::record_comm_schedule(&cfg, &p, &g, &store).expect("record");
+        let rep = replayed.stats().kind(CommKind::AllreduceSum);
+        let rec = recorded.stats().kind(CommKind::AllreduceSum);
+        assert_eq!(rep.ops, 0, "the seeded defect must drop the allreduce");
+        assert!(rec.ops > 0 && rec.bytes_sent > 0, "the real schedule allreduces");
+        if kind_volumes(replayed.stats()) != kind_volumes(recorded.stats()) {
+            caught += 1;
+        }
+    }
+    assert_eq!(
+        caught,
+        conservation_cfgs().len(),
+        "byte conservation must catch the dropped allreduce on every TP shape"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Remaining mutation matrix: each seeded cost-model bug has a test
+// ---------------------------------------------------------------------------
+
+#[test]
+fn defect_ignore_topology_skew_is_caught() {
+    let store = store();
+    let homogeneous = comm_bound("tiny");
+    let straggler = {
+        let mut cfg = comm_bound("tiny");
+        cfg.comm.bw_scale = vec![0.25];
+        cfg
+    };
+    let (p, g) = graph_for(&homogeneous);
+
+    let clean = CostModel::new(&store, p, &g);
+    let h = clean.score(&homogeneous).expect("homogeneous scores");
+    let s = clean.score(&straggler).expect("straggler scores");
+    assert!(
+        s.makespan_secs > h.makespan_secs,
+        "a quarter-rate NIC must cost epoch time: straggler {:.6}s vs homogeneous {:.6}s",
+        s.makespan_secs,
+        h.makespan_secs,
+    );
+
+    // the mutated model plans as if every NIC were equal — the skew
+    // premium vanishes, which is exactly what the assertion above trips
+    let mutated = CostModel::new(&store, p, &g).with_defect(Defect::IgnoreTopologySkew);
+    let hm = mutated.score(&homogeneous).expect("scores");
+    let sm = mutated.score(&straggler).expect("scores");
+    assert_eq!(
+        sm.makespan_secs, hm.makespan_secs,
+        "the seeded defect must erase the straggler premium"
+    );
+}
+
+#[test]
+fn defect_free_staging_stalls_is_caught() {
+    let store = store();
+    // rdt at a 4 MiB budget: well under the resident working set, so
+    // the decoupled engine's memory plan must engage host staging
+    let mut base = comm_bound("rdt");
+    base.device_mem_mb = 4;
+    let slow_pcie = {
+        let mut cfg = base.clone();
+        cfg.mem.pcie_gbps = 0.1;
+        cfg
+    };
+    let fast_pcie = {
+        let mut cfg = base.clone();
+        cfg.mem.pcie_gbps = 64.0;
+        cfg
+    };
+    let (p, g) = graph_for(&base);
+
+    // chunk geometry depends only on the budget, so the two configs
+    // replay the identical schedule except for PCIe stall times — the
+    // clean model must charge the slow link, the mutated one can't
+    let clean = CostModel::new(&store, p, &g);
+    let slow = clean.score(&slow_pcie).expect("staged config scores");
+    let fast = clean.score(&fast_pcie).expect("staged config scores");
+    assert!(
+        slow.makespan_secs > fast.makespan_secs,
+        "a 640x slower PCIe link must cost epoch time under staging: \
+         {:.6}s vs {:.6}s",
+        slow.makespan_secs,
+        fast.makespan_secs,
+    );
+    assert_eq!(slow.peak_mem_bytes, fast.peak_mem_bytes, "same budget, same plan");
+
+    let mutated = CostModel::new(&store, p, &g).with_defect(Defect::FreeStagingStalls);
+    let slow_m = mutated.score(&slow_pcie).expect("scores");
+    let fast_m = mutated.score(&fast_pcie).expect("scores");
+    assert_eq!(
+        slow_m.makespan_secs, fast_m.makespan_secs,
+        "the seeded defect must make PCIe speed free"
+    );
+}
+
+#[test]
+fn defect_inflated_quick_bound_is_caught_by_the_lattice_invariant() {
+    let store = store();
+    let base = comm_bound("tiny");
+    let (p, g) = graph_for(&base);
+    let mutated = CostModel::new(&store, p, &g).with_defect(Defect::InflatedQuickBound);
+    let mut violations = 0usize;
+    let mut checked = 0usize;
+    for cfg in space::candidates(&base) {
+        let (Ok(quick), Ok(full)) = (mutated.quick_bound(&cfg), mutated.score(&cfg)) else {
+            continue;
+        };
+        checked += 1;
+        if quick.makespan_secs > full.makespan_secs * (1.0 + 1e-9) {
+            violations += 1;
+        }
+    }
+    assert!(checked > 0, "no candidate was double-scored");
+    assert!(
+        violations > 0,
+        "an unsound (inflated) quick bound must violate quick <= full \
+         somewhere on the lattice ({checked} candidates checked)"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Prediction oracle: modeled makespan vs a real measured epoch
+// ---------------------------------------------------------------------------
+
+#[test]
+fn predicted_makespan_matches_a_real_epoch_within_tolerance() {
+    let store = store();
+    let straggler = {
+        let mut cfg = comm_bound("tiny");
+        cfg.comm.bw_scale = vec![0.25];
+        cfg
+    };
+    let deep = {
+        let mut cfg = comm_bound("tiny");
+        cfg.layers = 6;
+        cfg.fanouts = vec![25, 15, 10, 10, 10, 10];
+        cfg
+    };
+    for (name, base) in [("straggler", straggler), ("deep", deep)] {
+        let (p, g) = graph_for(&base);
+        let outcome =
+            plan::plan_with_graph(&base, &store, p, &g, true).expect("plan succeeds");
+        let w = outcome.winner();
+        let modeled = w.score.makespan_secs;
+        let measured = real_epoch_secs(&store, &w.cfg);
+        let rel_err = (modeled - measured).abs() / measured.max(1e-12);
+        assert!(
+            rel_err <= plan::PREDICTION_TOLERANCE,
+            "{name}: modeled {modeled:.6}s vs measured {measured:.6}s \
+             (rel err {rel_err:.3} > tolerance {})",
+            plan::PREDICTION_TOLERANCE,
+        );
+    }
+}
+
+#[test]
+fn emitted_plan_passes_preflight_and_trains_end_to_end() {
+    let store = store();
+    let mut base = comm_bound("tiny");
+    base.comm.bw_scale = vec![0.5, 1.0];
+    let (p, g) = graph_for(&base);
+    let outcome = plan::plan_with_graph(&base, &store, p, &g, true).expect("plan succeeds");
+
+    // the exact artifact `neutron-tp plan --emit` writes: parse it back,
+    // pre-flight it, then actually train it for one epoch
+    let cfg = analysis::check_plan_toml(&outcome.winner_toml, &store)
+        .expect("emitted TOML passes pre-flight");
+    assert_eq!(cfg, outcome.winner().cfg);
+    let secs = real_epoch_secs(&store, &cfg);
+    assert!(secs.is_finite() && secs > 0.0, "trained epoch reports a real makespan");
+}
