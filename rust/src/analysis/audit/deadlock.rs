@@ -1,0 +1,288 @@
+//! Staged-memory deadlock freedom (DESIGN.md §11.3): replay the recorded
+//! staging schedule (`StagePhase`/`Stage` events) against the planner's
+//! own invariants, then exhaustively explore adversarial completion
+//! orders of the prefetch window to prove the admission guard can never
+//! wedge a mandatory fetch.
+//!
+//! The deadlock scenario the admission guard exists to prevent: prefetch
+//! pins unconsumed panels (they may not be evicted before their step
+//! runs), so if prefetched footprint could grow past
+//! `budget - pinned - max_step_footprint`, some step's mandatory fetch
+//! would find no evictable victim — `make_room` bails and the epoch
+//! dies. The replay checks the recorded schedule took no such state; the
+//! exploration proves no admissible state *could* reach one, whatever
+//! order transfers complete in.
+
+use std::collections::HashMap;
+
+use crate::analysis::Finding;
+use crate::cluster::{TraceEvent, STAGE_NO_DEP};
+
+const REMEDY_PLAN: &str =
+    "fix the staging planner's admission guard (sched::staging::StagingPlan::build)";
+
+/// Bound on adversarial subsets explored per step (2^12): beyond it the
+/// exploration keeps the largest-footprint panels, which dominate any
+/// admissible adversarial sum.
+const MAX_SUBSET_PANELS: usize = 12;
+
+struct Phase {
+    budget: usize,
+    pinned: usize,
+    prefetch_cap: usize,
+    steps: usize,
+    used: usize,
+    /// panel -> (footprint, was_prefetched)
+    resident: HashMap<usize, (usize, bool)>,
+    consumed: Vec<bool>,
+    next_consume: usize,
+    last_post: usize,
+    unconsumed_future: usize,
+    /// per-panel footprint learned from its (unique) fetch
+    panel_fp: Vec<Option<usize>>,
+    max_depth: usize,
+    header_idx: usize,
+}
+
+/// Replay every staged phase in the trace and run the adversarial
+/// admission exploration on each.
+pub fn check_staging(events: &[TraceEvent]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let mut phase: Option<Phase> = None;
+    for (i, ev) in events.iter().enumerate() {
+        match ev {
+            TraceEvent::StagePhase { budget, pinned, prefetch_cap, steps } => {
+                if let Some(ph) = phase.take() {
+                    finish_phase(ph, &mut out);
+                }
+                if pinned >= budget {
+                    out.push(Finding::error(
+                        format!("trace[{i}] stage_phase"),
+                        format!("pinned base {pinned} B leaves no device budget (budget {budget} B)"),
+                        "raise device_mem_mb or add workers (narrower dim slices)",
+                    ));
+                }
+                phase = Some(Phase {
+                    budget: *budget,
+                    pinned: *pinned,
+                    prefetch_cap: *prefetch_cap,
+                    steps: *steps,
+                    used: *pinned,
+                    resident: HashMap::new(),
+                    consumed: vec![false; 2 * steps],
+                    next_consume: 0,
+                    last_post: 0,
+                    unconsumed_future: 0,
+                    panel_fp: vec![None; 2 * steps],
+                    max_depth: 1,
+                    header_idx: i,
+                });
+            }
+            TraceEvent::Stage { post_step, dep_step, panel, bytes, footprint, h2d } => {
+                let Some(ph) = phase.as_mut() else {
+                    out.push(Finding::error(
+                        format!("trace[{i}] stage"),
+                        "staged transfer outside any StagePhase",
+                        "emit the StagePhase header before the phase's link ops",
+                    ));
+                    continue;
+                };
+                let site = format!("trace[{i}] stage panel {panel}");
+                if *panel >= 2 * ph.steps {
+                    out.push(Finding::error(
+                        &site,
+                        format!("panel outside the phase's {} steps", ph.steps),
+                        REMEDY_PLAN,
+                    ));
+                    continue;
+                }
+                if *post_step < ph.last_post {
+                    out.push(Finding::error(
+                        &site,
+                        format!(
+                            "transfer posted at step {post_step} after one posted at step {}",
+                            ph.last_post
+                        ),
+                        "post link transfers in step order (the plan walk is monotone)",
+                    ));
+                }
+                ph.last_post = (*post_step).max(ph.last_post);
+                // a prefetch posted at step s happens-after step s's
+                // consumption; mandatory fetches and evictions at step s
+                // happen-before it
+                let is_prefetch = *h2d && *dep_step != STAGE_NO_DEP && dep_step > post_step;
+                let consume_through =
+                    if is_prefetch { post_step + 1 } else { *post_step };
+                consume_steps(ph, consume_through, &mut out);
+                if *h2d {
+                    if *dep_step == STAGE_NO_DEP {
+                        out.push(Finding::error(
+                            &site,
+                            "fetch carries no dependent step",
+                            REMEDY_PLAN,
+                        ));
+                    } else if *dep_step < *post_step {
+                        out.push(Finding::error(
+                            &site,
+                            format!("fetch for step {dep_step} posted after that step ({post_step}): its compute already ran"),
+                            REMEDY_PLAN,
+                        ));
+                    }
+                    if bytes > footprint {
+                        out.push(Finding::error(
+                            &site,
+                            format!("{bytes} link bytes exceed the {footprint} B panel footprint"),
+                            REMEDY_PLAN,
+                        ));
+                    }
+                    if ph.resident.insert(*panel, (*footprint, is_prefetch)).is_some() {
+                        out.push(Finding::error(
+                            &site,
+                            "panel fetched while already resident (double fetch)",
+                            REMEDY_PLAN,
+                        ));
+                        continue;
+                    }
+                    ph.panel_fp[*panel] = Some(*footprint);
+                    ph.used += footprint;
+                    if ph.used > ph.budget {
+                        out.push(Finding::error(
+                            &site,
+                            format!("residency {} B exceeds the {} B device budget", ph.used, ph.budget),
+                            REMEDY_PLAN,
+                        ));
+                    }
+                    if is_prefetch {
+                        ph.max_depth = ph.max_depth.max(dep_step - post_step);
+                        ph.unconsumed_future += footprint;
+                        if ph.unconsumed_future > ph.prefetch_cap {
+                            out.push(Finding::error(
+                                &site,
+                                format!(
+                                    "prefetch pins {} B unconsumed footprint past the {} B admission cap — a later mandatory fetch can deadlock",
+                                    ph.unconsumed_future, ph.prefetch_cap
+                                ),
+                                REMEDY_PLAN,
+                            ));
+                        }
+                    }
+                } else {
+                    match ph.resident.remove(panel) {
+                        None => out.push(Finding::error(
+                            &site,
+                            "eviction of a panel that is not resident",
+                            REMEDY_PLAN,
+                        )),
+                        Some((fp, _)) => {
+                            ph.used -= fp;
+                            if !ph.consumed[*panel] {
+                                out.push(Finding::error(
+                                    &site,
+                                    format!("panel of step {} evicted before its compute consumed it", panel / 2),
+                                    "evict only consumed panels (prefetched panels are pinned until their step runs)",
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    if let Some(ph) = phase.take() {
+        finish_phase(ph, &mut out);
+    }
+    out
+}
+
+/// Run every step `< through`: its panels must be resident, become
+/// consumed (evictable), and release their prefetch admission pin.
+fn consume_steps(ph: &mut Phase, through: usize, out: &mut Vec<Finding>) {
+    while ph.next_consume < through.min(ph.steps) {
+        let s = ph.next_consume;
+        for panel in [2 * s, 2 * s + 1] {
+            match ph.resident.get_mut(&panel) {
+                None => out.push(Finding::error(
+                    format!("stage step {s}"),
+                    format!("panel {panel} is not resident when step {s} runs: its fetch was never posted (mandatory-fetch deadlock)"),
+                    REMEDY_PLAN,
+                )),
+                Some((fp, prefetched)) => {
+                    if *prefetched {
+                        ph.unconsumed_future -= *fp;
+                        *prefetched = false;
+                    }
+                }
+            }
+            ph.consumed[panel] = true;
+        }
+        ph.next_consume += 1;
+    }
+}
+
+fn finish_phase(mut ph: Phase, out: &mut Vec<Finding>) {
+    let steps = ph.steps;
+    consume_steps(&mut ph, steps, out);
+
+    // panels never fetched at all were already reported per step; for the
+    // exploration we need every footprint, so stop here if any is missing
+    let fps: Vec<usize> = ph.panel_fp.iter().map(|f| f.unwrap_or(0)).collect();
+    if ph.panel_fp.iter().any(|f| f.is_none()) {
+        return;
+    }
+    let step_fp = |s: usize| fps[2 * s] + fps[2 * s + 1];
+    let max_step_fp = (0..steps).map(step_fp).max().unwrap_or(0);
+
+    // the admission cap must itself be sound: an oversized cap admits
+    // prefetch states the replay above would individually accept but that
+    // starve a mandatory fetch
+    let sound_cap = (ph.budget - ph.pinned.min(ph.budget)).saturating_sub(max_step_fp);
+    if ph.prefetch_cap > sound_cap {
+        out.push(Finding::error(
+            format!("trace[{}] stage_phase", ph.header_idx),
+            format!(
+                "admission cap {} B exceeds the sound bound {} B (budget - pinned - max step footprint {max_step_fp} B)",
+                ph.prefetch_cap, sound_cap
+            ),
+            REMEDY_PLAN,
+        ));
+    }
+
+    // bounded exhaustive adversarial exploration: at every step, any
+    // admissible set of unconsumed prefetched panels from the lookahead
+    // window may be resident (the adversary picks which transfers
+    // completed); the mandatory fetch must still fit after evicting every
+    // consumed panel
+    for s in 0..steps {
+        // panels an admitted prefetch could have pinned while step s runs:
+        // targets in (s, s + depth], clipped to the phase
+        let mut window: Vec<usize> = ((s + 1)..(s + 1 + ph.max_depth).min(steps))
+            .flat_map(|t| [fps[2 * t], fps[2 * t + 1]])
+            .collect();
+        if window.len() > MAX_SUBSET_PANELS {
+            window.sort_unstable_by(|a, b| b.cmp(a));
+            window.truncate(MAX_SUBSET_PANELS);
+        }
+        let n = window.len();
+        for mask in 0u32..(1u32 << n) {
+            let pinned_future: usize = (0..n)
+                .filter(|k| mask & (1 << k) != 0)
+                .map(|k| window[k])
+                .sum();
+            if pinned_future > ph.prefetch_cap {
+                continue; // the guard rejects this state at admission time
+            }
+            if ph.pinned + pinned_future + step_fp(s) > ph.budget {
+                out.push(Finding::error(
+                    format!("stage step {s}"),
+                    format!(
+                        "adversarial completion order deadlocks the mandatory fetch: {} B of admitted unconsumed prefetch + {} B pinned leave no room for the step's {} B panels in a {} B budget",
+                        pinned_future, ph.pinned, step_fp(s), ph.budget
+                    ),
+                    REMEDY_PLAN,
+                ));
+                break; // one witness per step is enough
+            }
+        }
+    }
+}

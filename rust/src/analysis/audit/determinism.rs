@@ -1,0 +1,172 @@
+//! Determinism prover (DESIGN.md §11.5): every float reduction the data
+//! plane performs is recorded as a [`TraceEvent::Reduce`] carrying its
+//! terms in exact fold order. Within one trace the fold must be canonical
+//! (ascending, contiguous from zero, no duplicate site); across the
+//! config lattice the canonical orders must agree — the static form of
+//! the `thread_counts_do_not_change_numerics` bit-identity contract.
+//!
+//! Grouping across the lattice follows the repo's numeric contracts: the
+//! TP gradient sum folds the canonical data partition
+//! (`parallel::common::CANON_DATA_PARTS`), so it must be identical at
+//! **every** lattice point regardless of worker count; the allreduce
+//! input chain and the chunked-aggregation drains are per-worker-count
+//! geometry, so they must agree across every point sharing a worker
+//! count (threads, pipelining, prefetch depth and swap may never move
+//! them).
+
+use std::collections::BTreeMap;
+
+use crate::analysis::Finding;
+use crate::cluster::{ReduceSite, TraceEvent};
+use crate::config::{RunConfig, System};
+use crate::parallel::common::CANON_DATA_PARTS;
+
+const REMEDY_CANON: &str =
+    "fold reductions in canonical order (CANON_DATA_PARTS parts; PlanAgg drain order)";
+
+/// Within-trace pass: canonical fold order at every site, unique sites,
+/// and the TP gradient sum spanning exactly the canonical partition.
+pub fn check_reduces(events: &[TraceEvent], cfg: &RunConfig) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let tp = matches!(cfg.system, System::NeutronTp | System::NaiveTp);
+    let mut seen: Vec<ReduceSite> = Vec::new();
+    let mut grad_sites = 0usize;
+    for (i, ev) in events.iter().enumerate() {
+        let TraceEvent::Reduce { site, terms } = ev else { continue };
+        let name = format!("trace[{i}] reduce {}", site.name());
+        if terms.is_empty() {
+            out.push(Finding::error(&name, "reduction with no terms", REMEDY_CANON));
+            continue;
+        }
+        let canonical: Vec<usize> = (0..terms.len()).collect();
+        if *terms != canonical {
+            out.push(Finding::error(
+                &name,
+                format!("non-canonical fold order {terms:?} (want ascending from 0)"),
+                REMEDY_CANON,
+            ));
+        }
+        if seen.contains(site) {
+            out.push(Finding::error(
+                &name,
+                "duplicate reduction site: the same tree folds twice",
+                "give every reduction a unique site (epoch-global step ids)",
+            ));
+        }
+        seen.push(*site);
+        if *site == ReduceSite::GradSum {
+            grad_sites += 1;
+            if tp && terms.len() != CANON_DATA_PARTS {
+                out.push(Finding::error(
+                    &name,
+                    format!(
+                        "TP gradient sum folds {} parts, not the canonical {CANON_DATA_PARTS}: losses drift across worker counts",
+                        terms.len()
+                    ),
+                    REMEDY_CANON,
+                ));
+            }
+        }
+    }
+    if grad_sites == 0 && !events.is_empty() {
+        out.push(Finding::error(
+            "reduce grad_sum",
+            "no gradient-sum reduction recorded: the epoch's training step is missing",
+            "record the allreduce_and_step fold (parallel::trace::trace_allreduce)",
+        ));
+    }
+    out
+}
+
+/// One lattice point's reduction profile, keyed for cross-point
+/// comparison.
+#[derive(Clone, Debug)]
+pub struct LatticeTrace {
+    /// human-readable point, e.g. `workers=2 intra=4 pipeline=true depth=1 swap=false`
+    pub label: String,
+    pub workers: usize,
+    /// site -> fold order
+    pub reduces: BTreeMap<ReduceSite, Vec<usize>>,
+}
+
+impl LatticeTrace {
+    pub fn from_events(label: String, workers: usize, events: &[TraceEvent]) -> LatticeTrace {
+        let mut reduces = BTreeMap::new();
+        for ev in events {
+            if let TraceEvent::Reduce { site, terms } = ev {
+                reduces.insert(*site, terms.clone());
+            }
+        }
+        LatticeTrace { label, workers, reduces }
+    }
+}
+
+/// Cross-lattice pass: prove the reduction orders canonical-isomorphic.
+/// `cross_worker` asserts the gradient sum identical at **every** point —
+/// the TP family's canonical-partition contract. The DP baselines fold a
+/// cluster-sized gradient (no such contract), so they only prove the
+/// per-worker-count groups.
+pub fn check_lattice(traces: &[LatticeTrace], cross_worker: bool) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if traces.is_empty() {
+        return out;
+    }
+    // the gradient sum must be identical at every point (the canonical
+    // partition is what makes worker counts interchangeable)
+    let grad_ref = traces
+        .iter()
+        .find_map(|t| t.reduces.get(&ReduceSite::GradSum).map(|v| (&t.label, v)));
+    if let Some((ref_label, ref_terms)) = grad_ref.filter(|_| cross_worker) {
+        for t in traces {
+            match t.reduces.get(&ReduceSite::GradSum) {
+                None => out.push(Finding::error(
+                    format!("lattice {} grad_sum", t.label),
+                    "gradient-sum reduction missing at this lattice point",
+                    "record the allreduce_and_step fold at every point",
+                )),
+                Some(terms) if terms != ref_terms => out.push(Finding::error(
+                    format!("lattice {} grad_sum", t.label),
+                    format!(
+                        "gradient fold {terms:?} diverges from {ref_terms:?} at {ref_label}: losses are not bit-identical across the lattice"
+                    ),
+                    REMEDY_CANON,
+                )),
+                _ => {}
+            }
+        }
+    }
+    // per worker count, the whole reduction profile must agree across
+    // threads x pipeline x prefetch_depth x swap
+    let mut groups: BTreeMap<usize, &LatticeTrace> = BTreeMap::new();
+    for t in traces {
+        let Some(r) = groups.get(&t.workers) else {
+            groups.insert(t.workers, t);
+            continue;
+        };
+        if t.reduces == r.reduces {
+            continue;
+        }
+        // name the first diverging site for the finding
+        let site = r
+            .reduces
+            .iter()
+            .find(|&(k, v)| t.reduces.get(k) != Some(v))
+            .map(|(k, _)| k.name())
+            .or_else(|| {
+                t.reduces
+                    .keys()
+                    .find(|&k| !r.reduces.contains_key(k))
+                    .map(|k| k.name())
+            })
+            .unwrap_or("reduce");
+        out.push(Finding::error(
+            format!("lattice {} {site}", t.label),
+            format!(
+                "reduction profile diverges from {} at the same worker count: schedule knobs changed a float fold order",
+                r.label
+            ),
+            REMEDY_CANON,
+        ));
+    }
+    out
+}

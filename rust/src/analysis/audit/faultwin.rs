@@ -1,0 +1,50 @@
+//! Fault-window coverage (DESIGN.md §11.4): elastic training detects a
+//! modeled worker failure at the next *collective* the cluster joins
+//! (`CommKind::is_detection_point`), so every schedule window between an
+//! armed `FaultEvent` and epoch end must contain one. A schedule whose
+//! tail posts traffic after its last detection point has a blind window:
+//! a fault armed there is silently dropped and the epoch commits results
+//! from a dead worker.
+
+use crate::analysis::Finding;
+use crate::cluster::TraceEvent;
+
+/// Check one captured schedule's detection-point coverage. Single-worker
+/// runs have no cluster to lose and are exempt.
+pub fn check_fault_windows(events: &[TraceEvent], workers: usize) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if workers <= 1 {
+        return out;
+    }
+    let posts: Vec<(usize, &TraceEvent)> = events
+        .iter()
+        .enumerate()
+        .filter(|(_, e)| matches!(e, TraceEvent::Post { .. }))
+        .collect();
+    if posts.is_empty() {
+        return out;
+    }
+    let last_dp = posts.iter().rposition(|(_, e)| {
+        matches!(e, TraceEvent::Post { kind, .. } if kind.is_detection_point())
+    });
+    let Some(last_dp) = last_dp else {
+        out.push(Finding::error(
+            "fault window",
+            format!(
+                "schedule posts {} collectives but none is an elastic detection point: an armed FaultEvent is never observed",
+                posts.len()
+            ),
+            "end the epoch on a joining collective (the gradient allreduce)",
+        ));
+        return out;
+    };
+    for (i, ev) in &posts[last_dp + 1..] {
+        let TraceEvent::Post { kind, seq, .. } = ev else { continue };
+        out.push(Finding::error(
+            format!("trace[{i}] {}#{seq}", kind.name()),
+            "posted after the schedule's last detection point: a FaultEvent armed in this window is silently dropped",
+            "schedule self-joining traffic before the final joining collective",
+        ));
+    }
+    out
+}

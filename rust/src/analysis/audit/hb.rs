@@ -1,0 +1,125 @@
+//! Handle hygiene over the happens-before graph (DESIGN.md §11.2): every
+//! posted `i*` collective and every submitted executor ticket must be
+//! joined **exactly once**, the join must happen-after the post, and
+//! tickets must drain in submission order (the executor's determinism
+//! contract — `PlanAgg` folds partials in drain order, so an out-of-order
+//! drain silently reorders a float reduction).
+
+use std::collections::HashMap;
+
+use crate::analysis::Finding;
+use crate::cluster::TraceEvent;
+
+const REMEDY_WAIT: &str = "join every posted handle exactly once (wait()/wait_barrier())";
+const REMEDY_TICKET: &str =
+    "join every submitted ticket exactly once (Ticket::wait / ops::Pending::wait)";
+const REMEDY_DRAIN: &str =
+    "drain executor tickets in submission order (PlanAgg::wait_into)";
+
+/// Check post/wait and submit/drain pairing over one captured schedule.
+pub fn check_hb(events: &[TraceEvent]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    // comm plane: seq -> (post index, waited count)
+    let mut posts: HashMap<usize, (usize, usize)> = HashMap::new();
+    // compute plane: seq -> (submit index, drained count)
+    let mut submits: HashMap<usize, (usize, usize)> = HashMap::new();
+    let mut drain_order: Vec<(usize, usize)> = Vec::new(); // (event idx, seq)
+
+    for (i, ev) in events.iter().enumerate() {
+        match ev {
+            TraceEvent::Post { seq, .. } => {
+                posts.entry(*seq).or_insert((i, 0));
+            }
+            TraceEvent::Wait { seq } => match posts.get_mut(seq) {
+                None => out.push(Finding::error(
+                    format!("trace[{i}] wait#{seq}"),
+                    "wait does not happen-after its post (waited before posting, or never posted)",
+                    REMEDY_WAIT,
+                )),
+                Some((_, waited)) => {
+                    *waited += 1;
+                    if *waited > 1 {
+                        out.push(Finding::error(
+                            format!("trace[{i}] wait#{seq}"),
+                            "collective joined more than once",
+                            REMEDY_WAIT,
+                        ));
+                    }
+                }
+            },
+            TraceEvent::Submit { seq, .. } => {
+                if submits.insert(*seq, (i, 0)).is_some() {
+                    out.push(Finding::error(
+                        format!("trace[{i}] submit#{seq}"),
+                        "duplicate executor submission ordinal",
+                        "submission ordinals are trace-global: fix the schedule mirror",
+                    ));
+                }
+            }
+            TraceEvent::TicketWait { seq } => {
+                match submits.get_mut(seq) {
+                    None => out.push(Finding::error(
+                        format!("trace[{i}] ticket_wait#{seq}"),
+                        "ticket join does not happen-after its submit",
+                        REMEDY_TICKET,
+                    )),
+                    Some((_, drained)) => {
+                        *drained += 1;
+                        if *drained > 1 {
+                            out.push(Finding::error(
+                                format!("trace[{i}] ticket_wait#{seq}"),
+                                "executor ticket joined more than once",
+                                REMEDY_TICKET,
+                            ));
+                        }
+                    }
+                }
+                drain_order.push((i, *seq));
+            }
+            _ => {}
+        }
+    }
+
+    // leaked handles: a post/submit whose join never happens is a dropped
+    // CommHandle / Ticket — the runtime drop guard's static twin
+    let mut leaked: Vec<(usize, usize, bool)> = posts
+        .iter()
+        .filter(|(_, (_, w))| *w == 0)
+        .map(|(seq, (idx, _))| (*idx, *seq, true))
+        .chain(
+            submits
+                .iter()
+                .filter(|(_, (_, d))| *d == 0)
+                .map(|(seq, (idx, _))| (*idx, *seq, false)),
+        )
+        .collect();
+    leaked.sort_unstable();
+    for (idx, seq, is_post) in leaked {
+        if is_post {
+            out.push(Finding::error(
+                format!("trace[{idx}] post#{seq}"),
+                "collective posted but never joined before epoch end (dropped CommHandle)",
+                REMEDY_WAIT,
+            ));
+        } else {
+            out.push(Finding::error(
+                format!("trace[{idx}] submit#{seq}"),
+                "executor job submitted but never drained before epoch end (dropped Ticket)",
+                REMEDY_TICKET,
+            ));
+        }
+    }
+
+    // FIFO drain: joins must replay submission order exactly
+    for w in drain_order.windows(2) {
+        let ((_, a), (i, b)) = (w[0], w[1]);
+        if b <= a {
+            out.push(Finding::error(
+                format!("trace[{i}] ticket_wait#{b}"),
+                format!("ticket #{b} drained after #{a}: out of submission order, so the partial fold order silently changes"),
+                REMEDY_DRAIN,
+            ));
+        }
+    }
+    out
+}

@@ -1,0 +1,166 @@
+//! Happens-before model checker and determinism prover over statically
+//! recorded schedules (DESIGN.md §11). `neutron-tp check` (§8) verifies
+//! *plans*; this pass verifies *executions in the abstract*: the
+//! record-mode trace (`parallel::trace`) now spans all three planes —
+//! collectives (`Post`/`Wait`), executor jobs (`Submit`/`TicketWait`),
+//! and staged memory (`StagePhase`/`Stage`) — plus every float-reduction
+//! tree (`Reduce`), and three analyses run over the combined schedule:
+//!
+//! * [`hb`] — handle hygiene and join ordering: every posted collective
+//!   and submitted ticket is waited exactly once, happens-after its
+//!   post, and tickets drain FIFO (§11.2);
+//! * [`deadlock`] — staged-memory replay plus a bounded exhaustive
+//!   exploration of adversarial transfer-completion orders proving the
+//!   prefetch admission guard can never starve a mandatory fetch
+//!   (§11.3);
+//! * [`determinism`] — every reduction folds in canonical order within a
+//!   trace, and the canonical orders agree across the config lattice
+//!   `workers x intra_threads x pipeline x prefetch_depth x swap`
+//!   (§11.5) — the static form of the bit-identity contract the
+//!   `thread_counts_do_not_change_numerics` test samples;
+//! * [`faultwin`] — every schedule window ends at an elastic detection
+//!   point, so no armed `FaultEvent` is silently dropped (§11.4).
+//!
+//! Violations surface as the same structured
+//! [`Finding`]`{severity, site, remedy}` the plan verifier emits, and the
+//! auditor is mutation-tested the same way (`rust/tests/audit.rs`,
+//! §11.6): seeded schedule defects must each be rejected, every clean
+//! profile x system trace accepted. `neutron-tp audit` runs it from the
+//! CLI; `train`/`serve --pre-flight` refuse to start on an audit error.
+
+pub mod deadlock;
+pub mod determinism;
+pub mod faultwin;
+pub mod hb;
+
+pub use determinism::LatticeTrace;
+
+use crate::analysis::Finding;
+use crate::cluster::TraceEvent;
+use crate::config::{RunConfig, System};
+use crate::graph::datasets::{self, Dataset, Profile};
+use crate::graph::Csr;
+use crate::parallel::trace;
+use crate::runtime::ArtifactStore;
+
+/// The config lattice the determinism proof covers — the same axes
+/// `thread_counts_do_not_change_numerics` samples, plus the memory-plane
+/// knobs. `intra_threads` is listed for contract completeness: the
+/// schedule mirror provably does not read it (it is not an input to
+/// `record_comm_schedule`), so both values share one captured trace.
+pub const LATTICE_WORKERS: &[usize] = &[1, 2, 4];
+pub const LATTICE_INTRA: &[usize] = &[1, 4];
+pub const LATTICE_DEPTH: &[usize] = &[1, 3];
+
+/// Audit one captured schedule: all within-trace passes.
+pub fn audit_events(events: &[TraceEvent], cfg: &RunConfig) -> Vec<Finding> {
+    let mut out = Vec::new();
+    out.extend(hb::check_hb(events));
+    out.extend(deadlock::check_staging(events));
+    out.extend(determinism::check_reduces(events, cfg));
+    out.extend(faultwin::check_fault_windows(events, cfg.workers));
+    out
+}
+
+/// Capture and audit one run configuration's schedule against an already
+/// materialized training graph.
+pub fn audit_with_graph(
+    cfg: &RunConfig,
+    p: &Profile,
+    g: &Csr,
+    store: &ArtifactStore,
+) -> Vec<Finding> {
+    match trace::record_comm_schedule(cfg, p, g, store) {
+        Ok((events, _comm)) => audit_events(&events, cfg),
+        Err(e) => vec![Finding::error(
+            "audit capture",
+            format!("cannot capture schedule: {e:#}"),
+            "fix the memory plan findings first (neutron-tp check)",
+        )],
+    }
+}
+
+/// The cross-lattice determinism proof: capture `cfg`'s schedule at every
+/// lattice point and prove the reduction orders canonical-isomorphic
+/// (DESIGN.md §11.5). Points whose memory plan is infeasible (e.g. swap
+/// disabled on an overflowing working set) cannot run and are skipped;
+/// at least one point must survive.
+pub fn audit_lattice(
+    cfg: &RunConfig,
+    p: &Profile,
+    g: &Csr,
+    store: &ArtifactStore,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let mut traces = Vec::new();
+    let mut skipped = 0usize;
+    for &workers in LATTICE_WORKERS {
+        for pipeline in [false, true] {
+            for &depth in LATTICE_DEPTH {
+                for swap in [false, true] {
+                    let mut c = cfg.clone();
+                    c.workers = workers;
+                    c.pipeline = pipeline;
+                    c.mem.prefetch_depth = depth;
+                    c.mem.swap = swap;
+                    let events = match trace::record_comm_schedule(&c, p, g, store) {
+                        Ok((ev, _)) => ev,
+                        Err(_) => {
+                            skipped += 1;
+                            continue;
+                        }
+                    };
+                    out.extend(determinism::check_reduces(&events, &c));
+                    for &intra in LATTICE_INTRA {
+                        let label = format!(
+                            "workers={workers} intra={intra} pipeline={pipeline} depth={depth} swap={swap}"
+                        );
+                        traces.push(LatticeTrace::from_events(label, workers, &events));
+                    }
+                }
+            }
+        }
+    }
+    if traces.is_empty() {
+        out.push(Finding::error(
+            "lattice",
+            format!("all {skipped} lattice points are infeasible: nothing to prove"),
+            "fix the memory plan findings first (neutron-tp check)",
+        ));
+    }
+    // cross-worker gradient identity is the TP canonical-partition
+    // contract; DP folds a cluster-sized gradient and only proves the
+    // per-worker-count groups
+    let tp = matches!(cfg.system, System::NeutronTp | System::NaiveTp);
+    out.extend(determinism::check_lattice(&traces, tp));
+    out
+}
+
+/// Audit one run configuration end to end: the within-trace passes on
+/// its own schedule, plus the cross-lattice determinism proof. This is
+/// the pass `neutron-tp audit` and `--pre-flight` run.
+pub fn audit_run(cfg: &RunConfig, store: &ArtifactStore) -> Vec<Finding> {
+    if let Err(e) = cfg.validate() {
+        return vec![Finding::error(
+            "config",
+            format!("{e:#}"),
+            "fix the run configuration before auditing",
+        )];
+    }
+    let Some(p) = datasets::profile(&cfg.profile) else {
+        return vec![Finding::error(
+            format!("config profile '{}'", cfg.profile),
+            "unknown dataset profile",
+            "pick a builtin profile (see graph::datasets::PROFILES)",
+        )];
+    };
+    let g = Dataset::generate_graph(p, cfg.seed);
+    let mut out = audit_with_graph(cfg, &p, &g, store);
+    // one lattice sweep per audit: the decoupled engine's schedule is the
+    // contract under proof; the DP baselines' lattice is the allreduce
+    // chain, cheap enough to prove alongside
+    if matches!(cfg.system, System::NeutronTp | System::DpFull) {
+        out.extend(audit_lattice(cfg, &p, &g, store));
+    }
+    out
+}

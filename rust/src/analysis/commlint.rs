@@ -91,6 +91,9 @@ pub fn check_trace(events: &[TraceEvent], workers: usize) -> Vec<Finding> {
                     }
                 }
             }
+            // compute/memory/reduction planes are the happens-before
+            // auditor's domain (analysis::audit, DESIGN.md §11)
+            _ => {}
         }
     }
 

@@ -16,6 +16,12 @@
 //! * [`geometry`] — chunk geometry covers every row exactly once with
 //!   row-aligned, e_bucket-multiple pass cuts.
 //!
+//! A fifth pass, the happens-before auditor ([`audit`], DESIGN.md §11),
+//! verifies the *recorded execution schedule* rather than the plans:
+//! handle hygiene, staged-memory deadlock freedom, reduction-order
+//! determinism across the config lattice, and fault-window coverage.
+//! `neutron-tp audit` runs it; `--pre-flight` runs both passes.
+//!
 //! Every violation is a structured [`Finding`] carrying severity, the
 //! site, and a remedy — the same spirit as the scheduler's OOM messages
 //! that name the knob to turn. `neutron-tp check` runs the whole pass
@@ -23,6 +29,7 @@
 //! to a run. The pass is mutation-tested (`rust/tests/analysis.rs`):
 //! seeded defects in each family must each surface as a Finding.
 
+pub mod audit;
 pub mod commlint;
 pub mod geometry;
 pub mod shape;

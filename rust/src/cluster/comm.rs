@@ -72,10 +72,52 @@ pub enum Rounds {
     P2p,
 }
 
+/// Sentinel `dep_step` in [`TraceEvent::Stage`] for transfers no compute
+/// waits on (evictions) — mirrors `sched::staging::NO_DEP`.
+pub const STAGE_NO_DEP: usize = usize::MAX;
+
+/// A float reduction site the data plane performs. The fold order of its
+/// terms is what the determinism prover (`analysis::audit`, DESIGN.md
+/// §11.5) checks: every site must fold in canonical (ascending,
+/// contiguous-from-zero) order, and the canonical sites must agree
+/// across the config lattice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ReduceSite {
+    /// Per-part gradient shares folded in part order
+    /// (`parallel::common::allreduce_and_step`). For the TP family the
+    /// parts are the canonical data partition (`CANON_DATA_PARTS`), which
+    /// is what makes losses bit-identical across worker counts.
+    GradSum,
+    /// `iallreduce_sum`'s left fold over the per-worker input blocks, in
+    /// worker index order.
+    AllreduceChain,
+    /// The chunked-aggregation partial drain of one `(round, chunk)`
+    /// step (`parallel::common::PlanAgg::wait_into` drains passes in
+    /// submission order). `step` numbers steps across the whole epoch.
+    AggDrain { step: usize },
+}
+
+impl ReduceSite {
+    pub fn name(self) -> &'static str {
+        match self {
+            ReduceSite::GradSum => "grad_sum",
+            ReduceSite::AllreduceChain => "allreduce_chain",
+            ReduceSite::AggDrain { .. } => "agg_drain",
+        }
+    }
+}
+
 /// One captured schedule event. `Post` carries the per-worker sent/recv
 /// byte vectors — derived independently (row sums vs column sums of the
 /// pair matrix) so Σ sent == Σ recv checks the schedule, not one
 /// accumulator against itself. `Wait` marks the handle join point.
+///
+/// The remaining variants extend the trace past the comm plane so one
+/// schedule covers all three planes the auditor checks (DESIGN.md §11.1):
+/// `Submit`/`TicketWait` mirror the executor seam (`ExecutorPool::submit`
+/// → `Ticket`/`ops::Pending` → `wait`), `StagePhase`/`Stage` mirror the
+/// host-staging link ops of a `sched::StagingPlan`, and `Reduce` records
+/// every float-reduction tree in its exact fold order.
 #[derive(Clone, Debug, PartialEq)]
 pub enum TraceEvent {
     Post {
@@ -89,6 +131,47 @@ pub enum TraceEvent {
     },
     Wait {
         seq: usize,
+    },
+    /// Compute plane: one executor job enqueued for aggregation step
+    /// `step`. `seq` is a trace-global submission ordinal.
+    Submit {
+        seq: usize,
+        step: usize,
+    },
+    /// Compute plane: the `Ticket`/`Pending` join of submission `seq`.
+    /// Joins must drain in submission order (the executor's determinism
+    /// contract) — the auditor rejects out-of-order drains.
+    TicketWait {
+        seq: usize,
+    },
+    /// Memory plane: opens one staged aggregation phase. `prefetch_cap`
+    /// is the admission bound on unconsumed prefetched footprint
+    /// (`budget - pinned - max_step_footprint`); the replay below resets
+    /// at each phase header. Step ids in the following `Stage` events are
+    /// phase-local (`0..steps`).
+    StagePhase {
+        budget: usize,
+        pinned: usize,
+        prefetch_cap: usize,
+        steps: usize,
+    },
+    /// Memory plane: one staged link transfer (`sched::staging::LinkOp`).
+    /// Fetches (`h2d`) carry the step whose compute waits on them
+    /// (`dep_step > post_step` ⇒ prefetch); evictions carry
+    /// [`STAGE_NO_DEP`].
+    Stage {
+        post_step: usize,
+        dep_step: usize,
+        panel: usize,
+        bytes: usize,
+        footprint: usize,
+        h2d: bool,
+    },
+    /// A float reduction: `terms` in the exact order the engine folds
+    /// them (DESIGN.md §11.5).
+    Reduce {
+        site: ReduceSite,
+        terms: Vec<usize>,
     },
 }
 
@@ -106,7 +189,11 @@ impl CommTrace {
         self.events.lock().map(|e| e.clone()).unwrap_or_default()
     }
 
-    fn push(&self, ev: TraceEvent) {
+    /// Append one event. Public so the schedule mirror
+    /// (`parallel::trace`) can record the compute and memory planes into
+    /// the same buffer the communicator's collectives land in
+    /// (DESIGN.md §11.1).
+    pub fn push(&self, ev: TraceEvent) {
         if let Ok(mut e) = self.events.lock() {
             e.push(ev);
         }
@@ -150,6 +237,18 @@ impl CommKind {
 
     fn index(self) -> usize {
         CommKind::ALL.iter().position(|k| *k == self).unwrap()
+    }
+
+    /// True when the timed implementation of this kind counts toward the
+    /// elastic fault-detection ordinal ([`Comm::arm_fault`] fires at the
+    /// k-th counted collective). Every cluster-wide timing core calls
+    /// `note_collective`; the blocking point-to-point paths
+    /// (`p2p`/`p2p_wire`/`fetch_rows`) self-join without a cluster round
+    /// and do not count. The fault-window audit (DESIGN.md §11.4) uses
+    /// this to prove no schedule window can silently drop an armed
+    /// `FaultEvent`.
+    pub fn is_detection_point(self) -> bool {
+        !matches!(self, CommKind::FetchRows | CommKind::PointToPoint)
     }
 }
 
@@ -251,12 +350,16 @@ impl Topology {
 }
 
 /// A posted (in-flight) collective: the moved data plus the per-worker
-/// completion times, resolved on [`CommHandle::wait`]. Dropping a handle
-/// without waiting forfeits the done-times but never the NIC accounting
-/// (the events are posted at call time).
+/// completion times, resolved on [`CommHandle::wait`]. Every posted
+/// handle must be joined exactly once: besides the `#[must_use]` lint,
+/// debug builds carry a runtime tripwire (DESIGN.md §11.1) — dropping a
+/// handle without waiting panics, so a schedule that forfeits done-times
+/// cannot survive the test suite. (The NIC accounting is never at risk:
+/// the events are posted at call time.)
 #[must_use = "a posted collective's done-times are only reachable through wait()"]
 pub struct CommHandle<T> {
-    data: T,
+    /// `Some` until `wait` takes it; the drop guard keys off this.
+    data: Option<T>,
     done: DoneTimes,
     /// record mode only: the trace to append the `Wait` event to, and the
     /// sequence number of this handle's `Post`.
@@ -265,11 +368,14 @@ pub struct CommHandle<T> {
 
 impl<T> CommHandle<T> {
     /// Resolve the collective: data plus per-worker done-times.
-    pub fn wait(self) -> (T, DoneTimes) {
+    pub fn wait(mut self) -> (T, DoneTimes) {
         if let Some((trace, seq)) = &self.rec {
             trace.push(TraceEvent::Wait { seq: *seq });
         }
-        (self.data, self.done)
+        let Some(data) = self.data.take() else {
+            unreachable!("wait() consumes the handle and is the only taker")
+        };
+        (data, std::mem::take(&mut self.done))
     }
 
     /// Resolve and reduce the done-times to the slowest participant
@@ -283,6 +389,21 @@ impl<T> CommHandle<T> {
     /// Peek at the per-worker done-times without consuming the handle.
     pub fn done(&self) -> &DoneTimes {
         &self.done
+    }
+}
+
+impl<T> Drop for CommHandle<T> {
+    /// Debug-build drop guard (DESIGN.md §11.1): a posted collective
+    /// dropped unwaited is a schedule defect — its done-times never join
+    /// the timeline. Upgrade the `#[must_use]` lint to a runtime panic in
+    /// tests; release builds and unwinding threads stay silent.
+    fn drop(&mut self) {
+        if cfg!(debug_assertions) && self.data.is_some() && !std::thread::panicking() {
+            panic!(
+                "CommHandle dropped without wait(): a posted collective must be \
+                 joined exactly once (join it with wait()/wait_barrier())"
+            );
+        }
     }
 }
 
@@ -452,7 +573,7 @@ impl Comm {
             (Some(trace), Some(seq)) => Some((trace.clone(), seq)),
             _ => None,
         };
-        CommHandle { data, done, rec }
+        CommHandle { data: Some(data), done, rec }
     }
 
     // ---- compute-stream passthrough ------------------------------------

@@ -10,8 +10,8 @@ pub mod event;
 pub mod fault;
 
 pub use comm::{
-    Comm, CommHandle, CommKind, CommStats, CommTrace, DoneTimes, KindStats, Rounds, Topology,
-    TraceEvent,
+    Comm, CommHandle, CommKind, CommStats, CommTrace, DoneTimes, KindStats, ReduceSite, Rounds,
+    Topology, TraceEvent, STAGE_NO_DEP,
 };
 pub use event::{EventSim, StreamKind};
 pub use fault::{refit_weights, weighted_dim_slices, FaultEvent};

@@ -6,6 +6,7 @@
 //! neutron-tp serve  [--checkpoint F | --profile P [--warm-epochs K]]
 //!                   [--requests N] [--batch-size B]
 //! neutron-tp check  [--all-profiles | same flags as train]
+//! neutron-tp audit  [--all-profiles | same flags as train]
 //! neutron-tp plan   [workload flags as train] [--emit plan.toml] [--fast]
 //! neutron-tp bench  <fig3|fig4|...|serve_scale|all> [--out results/] [--fast]
 //! neutron-tp inspect [--artifacts artifacts/]
@@ -48,6 +49,7 @@ fn run() -> anyhow::Result<()> {
         "train" => train(&flags),
         "serve" => serve_cmd(&flags),
         "check" => check_cmd(&flags),
+        "audit" => audit_cmd(&flags),
         "plan" => plan_cmd(&flags),
         "bench" => bench(&args[1..], &flags),
         "inspect" => inspect(&flags),
@@ -57,7 +59,7 @@ fn run() -> anyhow::Result<()> {
         }
         other => {
             anyhow::bail!(
-                "unknown command '{other}' (try: train, serve, check, plan, bench, inspect)"
+                "unknown command '{other}' (try: train, serve, check, audit, plan, bench, inspect)"
             )
         }
     }
@@ -78,6 +80,7 @@ fn print_usage() {
          \x20 neutron-tp serve [--checkpoint F | --profile P [--warm-epochs K]]\n\
          \x20                  [--requests N] [--batch-size B] [--executor-threads N]\n\
          \x20 neutron-tp check [--all-profiles | same flags as train]\n\
+         \x20 neutron-tp audit [--all-profiles | same flags as train]\n\
          \x20 neutron-tp plan  [workload flags as train] [--emit F] [--fast]\n\
          \x20 neutron-tp bench <{}|all> [--out DIR] [--fast]\n\
          \x20 neutron-tp inspect [--artifacts DIR]\n\n\
@@ -102,6 +105,16 @@ fn print_usage() {
          knob that fixes it. `check --all-profiles` sweeps all builtin\n\
          profile x system combinations; `train`/`serve --pre-flight` run the\n\
          same pass and abort on errors before any epoch executes.\n\n\
+         schedule auditor (analysis::audit, DESIGN.md §11): `audit` model-checks\n\
+         the recorded execution schedule itself — every posted collective and\n\
+         executor ticket joined exactly once in submission order, the staged-\n\
+         memory prefetch admission proven deadlock-free under adversarial\n\
+         transfer completion orders, every float reduction folding in canonical\n\
+         order across the workers x intra_threads x pipeline x prefetch_depth\n\
+         x swap lattice (the bit-identity contract, statically), and no\n\
+         schedule window that silently drops an armed fault. `audit\n\
+         --all-profiles` sweeps the builtin matrix; `--pre-flight` runs the\n\
+         auditor together with `check`.\n\n\
          auto-planner (plan, DESIGN.md §10): `plan` searches system x\n\
          comm algorithms x chunk geometry x prefetch depth x intra threads\n\
          for the workload the other flags describe (profile, model, layers,\n\
@@ -507,6 +520,93 @@ fn check_cmd(flags: &Flags) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `neutron-tp audit`: happens-before model check of the recorded
+/// execution schedule (DESIGN.md §11). Default mode audits the one
+/// config `train` would run (including the cross-lattice determinism
+/// proof); `--all-profiles` sweeps every builtin profile x system
+/// combination.
+fn audit_cmd(flags: &Flags) -> anyhow::Result<()> {
+    let store = ArtifactStore::load(artifacts_dir(flags))?;
+    if flags.has("all-profiles") {
+        return audit_all_profiles(&store);
+    }
+    let mut cfg = match flags.get("config") {
+        Some(path) => RunConfig::from_toml(&std::fs::read_to_string(path)?)?,
+        None => RunConfig::default(),
+    };
+    apply_flag_overrides(&mut cfg, flags)?;
+    let findings = analysis::audit::audit_run(&cfg, &store);
+    for f in &findings {
+        println!("{f}");
+    }
+    let errors = findings
+        .iter()
+        .filter(|f| f.severity == analysis::Severity::Error)
+        .count();
+    if errors > 0 {
+        anyhow::bail!(
+            "audit failed: {errors} error(s), {} warning(s) for {} on {}",
+            findings.len() - errors,
+            cfg.system.label(),
+            cfg.profile
+        );
+    }
+    println!(
+        "audit clean: {} on {} ({} warning(s))",
+        cfg.system.label(),
+        cfg.profile,
+        findings.len()
+    );
+    Ok(())
+}
+
+fn audit_all_profiles(store: &ArtifactStore) -> anyhow::Result<()> {
+    let mut failed = 0usize;
+    for p in datasets::PROFILES {
+        // one graph per profile, shared across all six systems
+        let g = Dataset::generate_graph(*p, RunConfig::default().seed);
+        for &system in neutron_tp::config::System::ALL {
+            let mut cfg = RunConfig::default();
+            cfg.profile = p.name.to_string();
+            cfg.system = system;
+            let mut findings = analysis::audit::audit_with_graph(&cfg, p, &g, store);
+            // the lattice proof once per profile for the engine under
+            // contract (decoupled TP) and the DP yardstick — naive TP
+            // shares the decoupled schedule machinery
+            if matches!(
+                system,
+                neutron_tp::config::System::NeutronTp | neutron_tp::config::System::DpFull
+            ) {
+                findings.extend(analysis::audit::audit_lattice(&cfg, p, &g, store));
+            }
+            let errors = findings
+                .iter()
+                .filter(|f| f.severity == analysis::Severity::Error)
+                .count();
+            println!(
+                "{:<6} x {:<12} {}",
+                p.name,
+                system.name(),
+                if findings.is_empty() {
+                    "audit clean".to_string()
+                } else {
+                    format!("{errors} error(s), {} warning(s)", findings.len() - errors)
+                }
+            );
+            for f in &findings {
+                println!("  {f}");
+            }
+            if errors > 0 {
+                failed += 1;
+            }
+        }
+    }
+    if failed > 0 {
+        anyhow::bail!("audit --all-profiles: {failed} combination(s) with errors");
+    }
+    Ok(())
+}
+
 /// `neutron-tp plan`: search the configuration space for this workload
 /// and emit the winner as a ready-to-run TOML (DESIGN.md §10). The
 /// workload flags describe the scenario; the searched axes (system,
@@ -629,15 +729,20 @@ fn check_all_profiles(store: &ArtifactStore) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `--pre-flight`: run the static verifier before committing to a
-/// train/serve run; errors abort before any epoch executes.
+/// `--pre-flight`: run the static verifier AND the schedule auditor
+/// before committing to a train/serve run; errors abort before any
+/// epoch executes.
 fn pre_flight(cfg: &RunConfig, store: &ArtifactStore) -> anyhow::Result<()> {
-    let findings = analysis::check_run(cfg, store);
+    let mut findings = analysis::check_run(cfg, store);
+    findings.extend(analysis::audit::audit_run(cfg, store));
     for f in &findings {
         eprintln!("pre-flight: {f}");
     }
     if analysis::has_errors(&findings) {
-        anyhow::bail!("pre-flight check failed ({} finding(s)); see `neutron-tp check`", findings.len());
+        anyhow::bail!(
+            "pre-flight check failed ({} finding(s)); see `neutron-tp check` / `neutron-tp audit`",
+            findings.len()
+        );
     }
     eprintln!("pre-flight check clean ({} warning(s))", findings.len());
     Ok(())

@@ -1,7 +1,9 @@
-//! Record-mode comm-schedule capture (DESIGN.md §8): replay one epoch's
-//! collective order for a run configuration against a recording [`Comm`]
-//! — no artifacts executed, no `EventSim` advance — producing the trace
-//! the static comm-schedule linter (`analysis::commlint`) checks.
+//! Record-mode comm-schedule capture (DESIGN.md §8, extended by §11.1):
+//! replay one epoch's schedule for a run configuration against a
+//! recording [`Comm`] — no artifacts executed, no `EventSim` advance —
+//! producing the trace the static comm-schedule linter
+//! (`analysis::commlint`) and the happens-before auditor
+//! (`analysis::audit`) check.
 //!
 //! The mirrors below follow each engine's posting order exactly where the
 //! schedule is the point (the TP family: split/gather, pipelined pieces,
@@ -9,15 +11,22 @@
 //! baselines' only *scheduled* collective is the gradient allreduce —
 //! their halo / broadcast traffic is blocking and self-joining — so their
 //! mirror is deliberately that one collective.
+//!
+//! Beyond the comm plane, the mirror records the other two planes the
+//! auditor needs (DESIGN.md §11.1): executor submissions and drains
+//! (`Submit`/`TicketWait`, mirroring `PlanAgg`'s submit-all-then-wait
+//! pattern), the host-staging link schedule (`StagePhase`/`Stage`, via
+//! [`StagingPlan::emit_trace`]), and every float-reduction tree in its
+//! exact fold order (`Reduce`).
 
-use crate::cluster::{Comm, TraceEvent};
+use crate::cluster::{Comm, CommTrace, ReduceSite, TraceEvent};
 use crate::config::{ModelKind, RunConfig, System, Task};
 use crate::graph::chunk::ChunkPlan;
 use crate::graph::datasets::Profile;
 use crate::graph::Csr;
 use crate::model::layer_dims;
 use crate::runtime::ArtifactStore;
-use crate::sched::PipelinePlan;
+use crate::sched::{PipelinePlan, StagingPlan};
 use crate::tensor::{dim_slices, row_slices};
 
 use super::common;
@@ -37,10 +46,10 @@ pub fn record_comm_schedule(
     let lp = cfg.task == Task::LinkPrediction;
     let dims = layer_dims(p, cfg.layers, cfg.feat_dim, lp);
     match cfg.system {
-        System::NeutronTp => trace_tp(cfg, p, g, store, &dims, &mut comm, true)?,
-        System::NaiveTp => trace_tp(cfg, p, g, store, &dims, &mut comm, false)?,
+        System::NeutronTp => trace_tp(cfg, p, g, store, &dims, &mut comm, &trace, true)?,
+        System::NaiveTp => trace_tp(cfg, p, g, store, &dims, &mut comm, &trace, false)?,
         System::DpFull | System::DpCache | System::MiniBatch | System::Historical => {
-            trace_allreduce(cfg, &dims, &mut comm);
+            trace_allreduce(cfg, &dims, &mut comm, &trace);
         }
     }
     Ok((trace.events(), comm))
@@ -49,6 +58,7 @@ pub fn record_comm_schedule(
 /// The TP engines' epoch (`parallel::tp`): decoupled posts ONE
 /// split + gather pair around `layers` aggregation rounds per direction,
 /// naive TP posts one pair per layer per direction.
+#[allow(clippy::too_many_arguments)]
 fn trace_tp(
     cfg: &RunConfig,
     p: &Profile,
@@ -56,6 +66,7 @@ fn trace_tp(
     store: &ArtifactStore,
     dims: &[usize],
     comm: &mut Comm,
+    trace: &CommTrace,
     decoupled: bool,
 ) -> crate::Result<()> {
     let n = cfg.workers;
@@ -66,10 +77,26 @@ fn trace_tp(
     let plan = ChunkPlan::build(g, geo.rows_per_chunk, geo.c_bucket, geo.e_bucket);
     let row_parts = row_slices(v, n);
     let l = cfg.layers;
+    // trace-global executor submission ordinal and epoch-global
+    // aggregation step base (forward and backward phases get disjoint
+    // step ids, so every `AggDrain` site is unique across the epoch)
+    let mut task_seq = 0usize;
+    let mut step_base = 0usize;
 
     if decoupled {
         let wf = *dims.last().expect("layer_dims is never empty");
         let dim_parts = dim_slices(wf, n);
+        // staged runs plan each aggregation phase's panel transfers; the
+        // mirror emits the plan so the auditor replays the memory plane
+        let staging = match memplan.staging.as_ref() {
+            Some(spec) => Some(StagingPlan::build(
+                spec,
+                &plan.chunks,
+                dim_parts[0].len().max(1),
+                l,
+            )?),
+            None => None,
+        };
         if cfg.model == ModelKind::Gat {
             // attention prologue: allgather of the per-part score columns
             // (one f32 per local row), then each worker wires its alpha
@@ -82,7 +109,10 @@ fn trace_tp(
             }
         }
         // forward: one split, `l` aggregation rounds, one gather
-        agg_phase(cfg, comm, &plan, v, &row_parts, &dim_parts, l);
+        if let Some(sp) = &staging {
+            sp.emit_trace(trace);
+        }
+        agg_phase(cfg, comm, trace, &plan, v, &row_parts, &dim_parts, l, &mut step_base, &mut task_seq);
         if cfg.task == Task::LinkPrediction {
             // negative-edge endpoint fetches (2 embedding rows per
             // sampled pair, mirroring TpEngine::lp_loss's volume)
@@ -91,47 +121,75 @@ fn trace_tp(
             }
         }
         // backward mirrors the forward phase
-        agg_phase(cfg, comm, &plan, v, &row_parts, &dim_parts, l);
+        if let Some(sp) = &staging {
+            sp.emit_trace(trace);
+        }
+        agg_phase(cfg, comm, trace, &plan, v, &row_parts, &dim_parts, l, &mut step_base, &mut task_seq);
     } else {
         // naive TP: coupled aggregate-then-update, split + gather at the
         // layer's input width every layer, forward then reversed backward
         for li in 0..l {
             let dp = dim_slices(dims[li], n);
-            agg_phase(cfg, comm, &plan, v, &row_parts, &dp, 1);
+            agg_phase(cfg, comm, trace, &plan, v, &row_parts, &dp, 1, &mut step_base, &mut task_seq);
         }
         for li in (0..l).rev() {
             let dp = dim_slices(dims[li], n);
-            agg_phase(cfg, comm, &plan, v, &row_parts, &dp, 1);
+            agg_phase(cfg, comm, trace, &plan, v, &row_parts, &dp, 1, &mut step_base, &mut task_seq);
         }
     }
-    trace_allreduce(cfg, dims, comm);
+    trace_allreduce(cfg, dims, comm, trace);
     Ok(())
 }
 
 /// One aggregation phase's collectives: pipelined chunk pieces when the
 /// run pipelines (split piece waited as its chunk starts, gather piece
-/// posted as it finishes), else the blocking split/gather pair.
+/// posted as it finishes), else the blocking split/gather pair. Between
+/// split and gather, each `(round, chunk)` step's executor jobs are
+/// mirrored: `PlanAgg` submits all of a chunk's passes first, drains the
+/// tickets in submission order, and folds the partials in that same
+/// order — the `AggDrain` reduce site (DESIGN.md §11.5).
+#[allow(clippy::too_many_arguments)]
 fn agg_phase(
     cfg: &RunConfig,
     comm: &mut Comm,
+    trace: &CommTrace,
     plan: &ChunkPlan,
     v: usize,
     row_parts: &[std::ops::Range<usize>],
     dim_parts: &[std::ops::Range<usize>],
     rounds: usize,
+    step_base: &mut usize,
+    task_seq: &mut usize,
 ) {
     let n = row_parts.len();
     let num_chunks = plan.num_chunks();
     let slice_w = dim_parts[0].len().max(1);
-    // aggregation rounds themselves carry no collectives; only the
-    // chunk count decides the schedule shape
-    let _ = rounds;
+    // one step = one (round, chunk) pair; its executor jobs are the
+    // chunk's aggregation passes, drained FIFO and folded in order
+    let run_step = |task_seq: &mut usize, step: usize, ci: usize| {
+        let npasses = plan.chunks[ci].passes.len().max(1);
+        let first = *task_seq;
+        for k in 0..npasses {
+            trace.push(TraceEvent::Submit { seq: first + k, step });
+        }
+        for k in 0..npasses {
+            trace.push(TraceEvent::TicketWait { seq: first + k });
+        }
+        *task_seq = first + npasses;
+        trace.push(TraceEvent::Reduce {
+            site: ReduceSite::AggDrain { step },
+            terms: (0..npasses).collect(),
+        });
+    };
     if cfg.pipeline && num_chunks > 1 {
         let pplan = PipelinePlan::build(&plan.chunks, slice_w, n, v);
         let split_handles = comm.isplit_pieces(&pplan.split_bytes);
         let mut gathers = Vec::with_capacity(num_chunks);
         for (ci, h) in split_handles.into_iter().enumerate() {
             let _ = h.wait_barrier();
+            for r in 0..rounds {
+                run_step(task_seq, *step_base + r * num_chunks + ci, ci);
+            }
             gathers.push(comm.igather_piece(pplan.gather_bytes.get(ci).copied().unwrap_or(0)));
         }
         for gh in gathers {
@@ -139,16 +197,36 @@ fn agg_phase(
         }
     } else {
         let _ = comm.isplit_bytes(row_parts, dim_parts).wait();
+        for r in 0..rounds {
+            for ci in 0..num_chunks {
+                run_step(task_seq, *step_base + r * num_chunks + ci, ci);
+            }
+        }
         let _ = comm.igather_bytes(row_parts, dim_parts).wait();
     }
+    *step_base += rounds * num_chunks;
 }
 
 /// The per-epoch gradient allreduce every training engine ends with
 /// (`common::allreduce_and_step`); volume = the GCN parameter stack.
-fn trace_allreduce(cfg: &RunConfig, dims: &[usize], comm: &mut Comm) {
+/// Also records the epoch's gradient reduction trees: the per-part sum
+/// (`GradSum` — canonical-partition-sized for the TP family, which is
+/// what makes losses bit-identical across worker counts) and, when a
+/// cluster exists, the allreduce input chain (`AllreduceChain`).
+fn trace_allreduce(cfg: &RunConfig, dims: &[usize], comm: &mut Comm, trace: &CommTrace) {
+    let tp = matches!(cfg.system, System::NeutronTp | System::NaiveTp);
+    let parts = if tp { common::CANON_DATA_PARTS } else { cfg.workers.max(1) };
+    trace.push(TraceEvent::Reduce {
+        site: ReduceSite::GradSum,
+        terms: (0..parts).collect(),
+    });
     if cfg.workers <= 1 {
         return;
     }
+    trace.push(TraceEvent::Reduce {
+        site: ReduceSite::AllreduceChain,
+        terms: (0..cfg.workers).collect(),
+    });
     let param_bytes: usize = dims.windows(2).map(|w| (w[0] * w[1] + w[1]) * 4).sum();
     let _ = comm.iallreduce_bytes(param_bytes).wait();
 }
@@ -204,6 +282,48 @@ mod tests {
             let posts = ev.iter().filter(|e| matches!(e, TraceEvent::Post { .. })).count();
             let waits = ev.iter().filter(|e| matches!(e, TraceEvent::Wait { .. })).count();
             assert_eq!(posts, waits, "{system:?}");
+        }
+    }
+
+    #[test]
+    fn every_submit_is_drained_in_order() {
+        let ev = capture(System::NeutronTp, ModelKind::Gcn, true);
+        let submits: Vec<usize> = ev
+            .iter()
+            .filter_map(|e| match e {
+                TraceEvent::Submit { seq, .. } => Some(*seq),
+                _ => None,
+            })
+            .collect();
+        let drains: Vec<usize> = ev
+            .iter()
+            .filter_map(|e| match e {
+                TraceEvent::TicketWait { seq } => Some(*seq),
+                _ => None,
+            })
+            .collect();
+        assert!(!submits.is_empty(), "compute plane missing from trace");
+        let mut sorted = submits.clone();
+        sorted.sort_unstable();
+        assert_eq!(drains, sorted, "tickets must drain in submission order");
+    }
+
+    #[test]
+    fn reduce_sites_are_unique_and_canonical() {
+        for system in [System::NeutronTp, System::DpFull] {
+            let ev = capture(system, ModelKind::Gcn, false);
+            let mut sites = Vec::new();
+            for e in &ev {
+                if let TraceEvent::Reduce { site, terms } = e {
+                    sites.push(*site);
+                    let want: Vec<usize> = (0..terms.len()).collect();
+                    assert_eq!(terms, &want, "{system:?} {site:?} non-canonical fold");
+                }
+            }
+            let mut dedup = sites.clone();
+            dedup.sort();
+            dedup.dedup();
+            assert_eq!(dedup.len(), sites.len(), "{system:?} duplicate reduce site");
         }
     }
 }

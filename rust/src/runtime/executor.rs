@@ -125,11 +125,31 @@ pub struct ExecutorPool {
 }
 
 #[must_use = "a dropped Ticket abandons a submitted job; join it with wait()"]
-pub struct Ticket(mpsc::Receiver<Reply>);
+pub struct Ticket(Option<mpsc::Receiver<Reply>>);
 
 impl Ticket {
-    pub fn wait(self) -> Reply {
-        self.0.recv().context("executor thread dropped reply")?
+    pub fn wait(mut self) -> Reply {
+        let Some(rx) = self.0.take() else {
+            unreachable!("wait() consumes the ticket and is the only taker")
+        };
+        rx.recv().context("executor thread dropped reply")?
+    }
+}
+
+impl Drop for Ticket {
+    /// Debug-build drop guard (DESIGN.md §11.1), the runtime twin of the
+    /// `#[must_use]` lint: a submitted job whose reply is never joined
+    /// breaks the submit-all-then-wait determinism contract (its measured
+    /// `device_secs` vanish from the timeline), so tests panic on the
+    /// spot. `ops::Pending` wraps a Ticket and inherits the tripwire.
+    /// Release builds and already-unwinding threads stay silent.
+    fn drop(&mut self) {
+        if cfg!(debug_assertions) && self.0.is_some() && !std::thread::panicking() {
+            panic!(
+                "Ticket dropped without wait(): a submitted executor job must be \
+                 joined exactly once (ops::Pending::wait / Ticket::wait)"
+            );
+        }
     }
 }
 
@@ -193,7 +213,7 @@ impl ExecutorPool {
         self.queue
             .send(Request { job, kind, reply: tx })
             .map_err(|_| anyhow::anyhow!("executor pool shut down"))?;
-        Ok(Ticket(rx))
+        Ok(Ticket(Some(rx)))
     }
 
     pub fn run(&self, job: Job) -> crate::Result<JobResult> {

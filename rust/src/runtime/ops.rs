@@ -22,6 +22,11 @@ use super::executor::{Arg, ExecutorPool, Job, JobResult, Ticket};
 
 /// An in-flight artifact call plus the post-processing (crop / unpack)
 /// that turns its raw outputs into the op's typed result.
+///
+/// Dropping a `Pending` without `wait()` abandons the in-flight job; in
+/// debug builds the inner [`Ticket`]'s drop guard upgrades that from a
+/// `#[must_use]` lint to a runtime panic (DESIGN.md §11.2), so leaked
+/// handles fail tests instead of silently skewing schedules.
 #[must_use = "a dropped Pending abandons an in-flight artifact call; join it with finish()"]
 pub struct Pending<T> {
     ticket: Ticket,

@@ -406,6 +406,54 @@ impl StagingPlan {
     pub fn num_steps(&self) -> usize {
         self.steps.len()
     }
+
+    /// The admission cap `build` enforced on unconsumed prefetched
+    /// footprint: `budget - pinned - max_step_footprint`. Mandatory
+    /// fetches can always make room by evicting every consumed panel as
+    /// long as prefetch never pins more than this (DESIGN.md §11.3).
+    pub fn prefetch_cap(&self) -> usize {
+        let max_step_fp = self
+            .steps
+            .iter()
+            .map(|s| s.in_footprint + s.out_footprint)
+            .max()
+            .unwrap_or(0);
+        (self.budget_bytes - self.pinned_bytes).saturating_sub(max_step_fp)
+    }
+
+    /// Per-step mandatory panel footprints `(input, output)` — what the
+    /// deadlock-freedom sweep (`analysis::audit`, DESIGN.md §11.3) feeds
+    /// its adversarial completion-order exploration.
+    pub fn step_footprints(&self) -> Vec<(usize, usize)> {
+        self.steps.iter().map(|s| (s.in_footprint, s.out_footprint)).collect()
+    }
+
+    /// Mirror this plan into a recording trace: one
+    /// [`TraceEvent::StagePhase`] header, then one [`TraceEvent::Stage`]
+    /// per link op in plan order, so `analysis::audit` replays the memory
+    /// plane next to the comm and compute planes (DESIGN.md §11.1).
+    ///
+    /// [`TraceEvent::StagePhase`]: crate::cluster::TraceEvent::StagePhase
+    /// [`TraceEvent::Stage`]: crate::cluster::TraceEvent::Stage
+    pub fn emit_trace(&self, trace: &crate::cluster::CommTrace) {
+        use crate::cluster::TraceEvent;
+        trace.push(TraceEvent::StagePhase {
+            budget: self.budget_bytes,
+            pinned: self.pinned_bytes,
+            prefetch_cap: self.prefetch_cap(),
+            steps: self.steps.len(),
+        });
+        for op in &self.ops {
+            trace.push(TraceEvent::Stage {
+                post_step: op.post_step,
+                dep_step: op.dep_step,
+                panel: op.panel,
+                bytes: op.bytes,
+                footprint: op.footprint,
+                h2d: op.h2d,
+            });
+        }
+    }
 }
 
 /// Executes a [`StagingPlan`] alongside an engine's chunk loop: posts the

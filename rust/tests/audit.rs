@@ -1,0 +1,581 @@
+//! Mutation tests for the happens-before auditor (`analysis::audit`,
+//! DESIGN.md §11.6) — same contract as the plan verifier's mutation
+//! suite (`analysis.rs`):
+//!
+//! * **zero false positives** — every unmutated builtin schedule audits
+//!   clean across the system matrix, through the staged-memory path, on
+//!   random valid configs, and across the whole determinism lattice;
+//! * **zero false negatives** — a seeded defect in each schedule-defect
+//!   class must surface as an `Error` finding naming the site. The
+//!   classes: dropped/double/unposted collective waits, dropped and
+//!   out-of-order ticket drains, non-canonical/truncated/duplicated
+//!   reduction folds, cross-lattice fold divergence, staged double
+//!   fetch, evict-before-consume, budget overflow, unsound admission
+//!   caps (adversarial completion orders), missing mandatory fetches,
+//!   and fault-blind schedule tails.
+
+use std::collections::BTreeMap;
+
+use neutron_tp::analysis::{self, audit, Finding, Severity};
+use neutron_tp::cluster::{CommKind, ReduceSite, Rounds, TraceEvent, STAGE_NO_DEP};
+use neutron_tp::config::{ModelKind, RunConfig, System, Task};
+use neutron_tp::graph::datasets::{profile, Dataset, Profile};
+use neutron_tp::graph::Csr;
+use neutron_tp::parallel::trace::record_comm_schedule;
+use neutron_tp::runtime::ArtifactStore;
+use neutron_tp::util::propcheck;
+
+fn store() -> ArtifactStore {
+    ArtifactStore::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .expect("builtin plan loads without AOT output")
+}
+
+fn tiny_graph() -> (Profile, Csr) {
+    let p = profile("tiny").expect("tiny profile");
+    let g = Dataset::generate_graph(p, 42);
+    (p, g)
+}
+
+fn error_findings(f: &[Finding]) -> Vec<&Finding> {
+    f.iter().filter(|x| x.severity == Severity::Error).collect()
+}
+
+/// The mutation contract: at least one `Error` finding mentions `what`
+/// (site or message), and every finding names a site and remedy.
+fn assert_catches(f: &[Finding], what: &str) {
+    for x in f {
+        assert!(!x.site.is_empty(), "finding with empty site: {x:?}");
+        assert!(!x.remedy.is_empty(), "finding with empty remedy: {x:?}");
+    }
+    assert!(
+        f.iter().any(|x| {
+            x.severity == Severity::Error
+                && (x.site.contains(what) || x.message.contains(what))
+        }),
+        "expected an Error finding mentioning {what:?}, got: {f:#?}"
+    );
+}
+
+fn capture(cfg: &RunConfig) -> Vec<TraceEvent> {
+    let store = store();
+    let p = profile(&cfg.profile).expect("builtin profile");
+    let g = Dataset::generate_graph(p, cfg.seed);
+    record_comm_schedule(cfg, &p, &g, &store).expect("schedule captures").0
+}
+
+// ---------------------------------------------------------------------------
+// Zero false positives: unmutated schedules audit clean
+// ---------------------------------------------------------------------------
+
+#[test]
+fn builtin_tiny_matrix_audits_clean() {
+    let store = store();
+    let (p, g) = tiny_graph();
+    for &system in System::ALL {
+        let cfg = RunConfig { system, ..Default::default() };
+        let f = audit::audit_with_graph(&cfg, &p, &g, &store);
+        let errs = error_findings(&f);
+        assert!(errs.is_empty(), "{system:?} on tiny: {errs:#?}");
+    }
+}
+
+#[test]
+fn model_task_and_schedule_variants_audit_clean() {
+    let store = store();
+    let (p, g) = tiny_graph();
+    let variants = [
+        RunConfig { model: ModelKind::Gat, ..Default::default() },
+        RunConfig { task: Task::LinkPrediction, ..Default::default() },
+        RunConfig { pipeline: false, ..Default::default() },
+        RunConfig { workers: 8, ..Default::default() },
+        RunConfig { system: System::NaiveTp, workers: 2, ..Default::default() },
+    ];
+    for cfg in variants {
+        let f = audit::audit_with_graph(&cfg, &p, &g, &store);
+        let errs = error_findings(&f);
+        assert!(errs.is_empty(), "{:?} w={}: {errs:#?}", cfg.model, cfg.workers);
+    }
+}
+
+/// A sub-working-set budget forces host staging, so the captured trace
+/// carries the memory plane (`StagePhase`/`Stage`) — the deadlock
+/// replay and the adversarial admission exploration must accept the
+/// planner's own schedule.
+#[test]
+fn staged_schedule_audits_clean() {
+    let cfg = RunConfig {
+        profile: "rdt".into(),
+        feat_dim: Some(128),
+        workers: 4,
+        device_mem_mb: 3,
+        ..Default::default()
+    };
+    let events = capture(&cfg);
+    let phases =
+        events.iter().filter(|e| matches!(e, TraceEvent::StagePhase { .. })).count();
+    assert!(phases > 0, "tight budget did not engage staging; the fixture proves nothing");
+    let f = audit::audit_events(&events, &cfg);
+    let errs = error_findings(&f);
+    assert!(errs.is_empty(), "staged schedule: {errs:#?}");
+}
+
+#[test]
+fn determinism_lattice_proves_clean() {
+    let store = store();
+    let (p, g) = tiny_graph();
+    for system in [System::NeutronTp, System::DpFull] {
+        let cfg = RunConfig { system, ..Default::default() };
+        let f = audit::audit_lattice(&cfg, &p, &g, &store);
+        let errs = error_findings(&f);
+        assert!(errs.is_empty(), "{system:?} lattice: {errs:#?}");
+    }
+}
+
+#[test]
+fn audit_run_accepts_the_default_config() {
+    let f = audit::audit_run(&RunConfig::default(), &store());
+    assert!(error_findings(&f).is_empty(), "{f:#?}");
+}
+
+#[test]
+fn audit_run_reports_invalid_config_as_finding() {
+    let cfg = RunConfig { workers: 3, ..Default::default() };
+    let f = audit::audit_run(&cfg, &store());
+    assert_catches(&f, "config");
+}
+
+// ---------------------------------------------------------------------------
+// Comm plane: handle-hygiene mutations
+// ---------------------------------------------------------------------------
+
+fn base_trace() -> (Vec<TraceEvent>, RunConfig) {
+    let cfg = RunConfig::default();
+    let events = capture(&cfg);
+    assert!(!events.is_empty(), "empty trace");
+    (events, cfg)
+}
+
+#[test]
+fn mutation_dropped_wait_is_a_leaked_handle() {
+    let (mut events, cfg) = base_trace();
+    let last_wait = events
+        .iter()
+        .rposition(|e| matches!(e, TraceEvent::Wait { .. }))
+        .expect("trace has waits");
+    events.remove(last_wait);
+    let f = audit::audit_events(&events, &cfg);
+    assert_catches(&f, "never joined");
+}
+
+#[test]
+fn mutation_double_wait() {
+    let (mut events, cfg) = base_trace();
+    let wait = events
+        .iter()
+        .position(|e| matches!(e, TraceEvent::Wait { .. }))
+        .expect("trace has waits");
+    let dup = events[wait].clone();
+    events.push(dup);
+    let f = audit::audit_events(&events, &cfg);
+    assert_catches(&f, "more than once");
+}
+
+#[test]
+fn mutation_wait_before_post() {
+    let (mut events, cfg) = base_trace();
+    events.insert(0, TraceEvent::Wait { seq: 999_999 });
+    let f = audit::audit_events(&events, &cfg);
+    assert_catches(&f, "happen-after");
+}
+
+// ---------------------------------------------------------------------------
+// Compute plane: executor-ticket mutations
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mutation_dropped_ticket_wait() {
+    let (mut events, cfg) = base_trace();
+    let tw = events
+        .iter()
+        .position(|e| matches!(e, TraceEvent::TicketWait { .. }))
+        .expect("trace has ticket joins");
+    events.remove(tw);
+    let f = audit::audit_events(&events, &cfg);
+    assert_catches(&f, "never drained");
+}
+
+#[test]
+fn mutation_out_of_order_drain() {
+    let (mut events, cfg) = base_trace();
+    let tws: Vec<usize> = events
+        .iter()
+        .enumerate()
+        .filter_map(|(i, e)| matches!(e, TraceEvent::TicketWait { .. }).then_some(i))
+        .collect();
+    assert!(tws.len() >= 2, "need two ticket joins to reorder");
+    events.swap(tws[0], tws[1]);
+    let f = audit::audit_events(&events, &cfg);
+    assert_catches(&f, "submission order");
+}
+
+// ---------------------------------------------------------------------------
+// Reduction plane: determinism mutations
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mutation_reversed_reduce_terms() {
+    let (mut events, cfg) = base_trace();
+    let terms = events
+        .iter_mut()
+        .find_map(|e| match e {
+            TraceEvent::Reduce { terms, .. } if terms.len() >= 2 => Some(terms),
+            _ => None,
+        })
+        .expect("a multi-term reduction");
+    terms.reverse();
+    let f = audit::audit_events(&events, &cfg);
+    assert_catches(&f, "non-canonical fold order");
+}
+
+#[test]
+fn mutation_truncated_gradient_sum() {
+    let (mut events, cfg) = base_trace();
+    let terms = events
+        .iter_mut()
+        .find_map(|e| match e {
+            TraceEvent::Reduce { site: ReduceSite::GradSum, terms } => Some(terms),
+            _ => None,
+        })
+        .expect("the gradient-sum reduction");
+    terms.truncate(1);
+    let f = audit::audit_events(&events, &cfg);
+    assert_catches(&f, "canonical");
+}
+
+#[test]
+fn mutation_duplicated_reduce_site() {
+    let (mut events, cfg) = base_trace();
+    let dup = events
+        .iter()
+        .find(|e| matches!(e, TraceEvent::Reduce { .. }))
+        .expect("a reduction")
+        .clone();
+    events.push(dup);
+    let f = audit::audit_events(&events, &cfg);
+    assert_catches(&f, "folds twice");
+}
+
+#[test]
+fn mutation_cross_lattice_divergence() {
+    let canon: Vec<usize> = (0..4).collect();
+    let mk = |label: &str, workers, grad: Vec<usize>, drain: Vec<usize>| {
+        let mut reduces = BTreeMap::new();
+        reduces.insert(ReduceSite::GradSum, grad);
+        reduces.insert(ReduceSite::AggDrain { step: 0 }, drain);
+        audit::LatticeTrace { label: label.into(), workers, reduces }
+    };
+    // a swapped gradient fold at one point breaks the canonical-partition
+    // identity every point must share
+    let f = audit::determinism::check_lattice(
+        &[
+            mk("workers=2 depth=1", 2, canon.clone(), vec![0, 1]),
+            mk("workers=2 depth=3", 2, vec![0, 1, 3, 2], vec![0, 1]),
+        ],
+        true,
+    );
+    assert_catches(&f, "not bit-identical");
+    // a schedule knob moving a drain fold at the same worker count
+    let f = audit::determinism::check_lattice(
+        &[
+            mk("workers=4 swap=false", 4, canon.clone(), vec![0, 1, 2]),
+            mk("workers=4 swap=true", 4, canon, vec![0, 2, 1]),
+        ],
+        true,
+    );
+    assert_catches(&f, "float fold order");
+}
+
+// ---------------------------------------------------------------------------
+// Memory plane: staged-schedule mutations over a hand-built phase
+// ---------------------------------------------------------------------------
+
+/// A minimal sound staged phase: 2 steps, panels (0,1) and (2,3), one
+/// prefetch, evictions after consumption. budget 100, pinned 10, every
+/// panel 20 B ⇒ max step footprint 40, sound admission cap 50.
+fn sound_phase() -> Vec<TraceEvent> {
+    let fetch = |post_step, dep_step, panel| TraceEvent::Stage {
+        post_step,
+        dep_step,
+        panel,
+        bytes: 20,
+        footprint: 20,
+        h2d: true,
+    };
+    let evict = |post_step, panel| TraceEvent::Stage {
+        post_step,
+        dep_step: STAGE_NO_DEP,
+        panel,
+        bytes: 20,
+        footprint: 20,
+        h2d: false,
+    };
+    vec![
+        TraceEvent::StagePhase { budget: 100, pinned: 10, prefetch_cap: 50, steps: 2 },
+        fetch(0, 0, 0),
+        fetch(0, 0, 1),
+        fetch(0, 1, 2), // prefetch of step 1's input panel
+        evict(1, 0),
+        fetch(1, 1, 3),
+    ]
+}
+
+#[test]
+fn sound_phase_is_accepted() {
+    let f = audit::deadlock::check_staging(&sound_phase());
+    assert!(error_findings(&f).is_empty(), "{f:#?}");
+}
+
+#[test]
+fn mutation_stage_double_fetch() {
+    let mut ev = sound_phase();
+    let dup = ev[1].clone();
+    ev.insert(2, dup);
+    let f = audit::deadlock::check_staging(&ev);
+    assert_catches(&f, "double fetch");
+}
+
+#[test]
+fn mutation_stage_evict_before_consume() {
+    let mut ev = sound_phase();
+    // evict step 1's prefetched input before step 1 ever runs
+    ev.push(TraceEvent::Stage {
+        post_step: 1,
+        dep_step: STAGE_NO_DEP,
+        panel: 3,
+        bytes: 20,
+        footprint: 20,
+        h2d: false,
+    });
+    let f = audit::deadlock::check_staging(&ev);
+    assert_catches(&f, "consumed");
+}
+
+#[test]
+fn mutation_stage_budget_overflow() {
+    let mut ev = sound_phase();
+    ev[0] = TraceEvent::StagePhase { budget: 60, pinned: 10, prefetch_cap: 50, steps: 2 };
+    let f = audit::deadlock::check_staging(&ev);
+    assert_catches(&f, "budget");
+}
+
+#[test]
+fn mutation_stage_missing_mandatory_fetch() {
+    let mut ev = sound_phase();
+    ev.remove(2); // step 0's output panel is never fetched
+    let f = audit::deadlock::check_staging(&ev);
+    assert_catches(&f, "deadlock");
+}
+
+#[test]
+fn mutation_stage_unsound_admission_cap() {
+    let mut ev = sound_phase();
+    // forge a cap past the sound bound (50): the replayed schedule still
+    // fits, but some adversarial completion order now wedges a fetch
+    ev[0] = TraceEvent::StagePhase { budget: 100, pinned: 10, prefetch_cap: 80, steps: 2 };
+    let f = audit::deadlock::check_staging(&ev);
+    assert_catches(&f, "sound bound");
+}
+
+/// An unsound cap where the adversarial exploration itself finds the
+/// witness: steps of footprint 50 and 60 in a 100 B budget leave a sound
+/// cap of 40, but the forged 60 admits a completion order pinning 60 B
+/// of prefetch under step 0's 50 B mandatory fetch.
+#[test]
+fn mutation_stage_adversarial_completion_order() {
+    let fetch = |post_step, dep_step, panel, footprint| TraceEvent::Stage {
+        post_step,
+        dep_step,
+        panel,
+        bytes: footprint,
+        footprint,
+        h2d: true,
+    };
+    let evict = |post_step, panel, footprint| TraceEvent::Stage {
+        post_step,
+        dep_step: STAGE_NO_DEP,
+        panel,
+        bytes: footprint,
+        footprint,
+        h2d: false,
+    };
+    let ev = vec![
+        TraceEvent::StagePhase { budget: 100, pinned: 0, prefetch_cap: 60, steps: 2 },
+        fetch(0, 0, 0, 25),
+        fetch(0, 0, 1, 25),
+        evict(1, 0, 25),
+        evict(1, 1, 25),
+        fetch(1, 1, 2, 30),
+        fetch(1, 1, 3, 30),
+    ];
+    let f = audit::deadlock::check_staging(&ev);
+    assert_catches(&f, "adversarial completion order");
+}
+
+// ---------------------------------------------------------------------------
+// Fault windows
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mutation_fault_blind_schedule_tail() {
+    let (mut events, cfg) = base_trace();
+    assert!(cfg.workers > 1, "fault windows need a cluster");
+    // self-joining p2p traffic appended after the final joining
+    // collective: a FaultEvent armed in that window is never observed
+    events.push(TraceEvent::Post {
+        seq: 999_999,
+        kind: CommKind::FetchRows,
+        algo: "p2p",
+        workers: cfg.workers,
+        sent: vec![0; cfg.workers],
+        recv: vec![0; cfg.workers],
+        rounds: Rounds::P2p,
+    });
+    events.push(TraceEvent::Wait { seq: 999_999 });
+    let f = audit::audit_events(&events, &cfg);
+    assert_catches(&f, "silently dropped");
+}
+
+#[test]
+fn mutation_no_detection_point_at_all() {
+    let cfg = RunConfig::default();
+    let events = vec![
+        TraceEvent::Post {
+            seq: 0,
+            kind: CommKind::PointToPoint,
+            algo: "p2p",
+            workers: cfg.workers,
+            sent: vec![0; cfg.workers],
+            recv: vec![0; cfg.workers],
+            rounds: Rounds::P2p,
+        },
+        TraceEvent::Wait { seq: 0 },
+        TraceEvent::Reduce { site: ReduceSite::GradSum, terms: (0..4).collect() },
+    ];
+    let f = audit::faultwin::check_fault_windows(&events, cfg.workers);
+    assert_catches(&f, "never observed");
+}
+
+// ---------------------------------------------------------------------------
+// Properties: random valid schedules accept, random mutations reject
+// ---------------------------------------------------------------------------
+
+#[test]
+fn propcheck_valid_schedules_are_accepted() {
+    let store = store();
+    let (p, g) = tiny_graph();
+    propcheck::check("audit_valid_accept", 0xAAD_17, 16, |rng| {
+        let system = System::ALL[rng.gen_range(System::ALL.len())];
+        let cfg = RunConfig {
+            system,
+            workers: 1 << (1 + rng.gen_range(3)), // 2/4/8
+            pipeline: rng.gen_bool(0.5),
+            model: if system == System::NeutronTp && rng.gen_bool(0.3) {
+                ModelKind::Gat
+            } else {
+                ModelKind::Gcn
+            },
+            ..Default::default()
+        };
+        let f = audit::audit_with_graph(&cfg, &p, &g, &store);
+        let errs = error_findings(&f);
+        assert!(
+            errs.is_empty(),
+            "{:?} w={} pipeline={}: {errs:#?}",
+            cfg.system,
+            cfg.workers,
+            cfg.pipeline
+        );
+    });
+}
+
+#[test]
+fn propcheck_mutated_schedules_are_rejected() {
+    let (base, cfg) = base_trace();
+    propcheck::check("audit_mutation_reject", 0xBAD_5EED, 24, |rng| {
+        let mut events = base.clone();
+        let class = rng.gen_range(4);
+        match class {
+            0 => {
+                // drop a random collective wait
+                let waits: Vec<usize> = events
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(i, e)| matches!(e, TraceEvent::Wait { .. }).then_some(i))
+                    .collect();
+                events.remove(waits[rng.gen_range(waits.len())]);
+            }
+            1 => {
+                // drop a random ticket join
+                let tws: Vec<usize> = events
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(i, e)| {
+                        matches!(e, TraceEvent::TicketWait { .. }).then_some(i)
+                    })
+                    .collect();
+                events.remove(tws[rng.gen_range(tws.len())]);
+            }
+            2 => {
+                // reverse a random multi-term reduction's fold order
+                let rs: Vec<usize> = events
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(i, e)| {
+                        matches!(e, TraceEvent::Reduce { terms, .. } if terms.len() >= 2)
+                            .then_some(i)
+                    })
+                    .collect();
+                if let TraceEvent::Reduce { terms, .. } =
+                    &mut events[rs[rng.gen_range(rs.len())]]
+                {
+                    terms.reverse();
+                }
+            }
+            _ => {
+                // duplicate a random submission ordinal
+                let subs: Vec<usize> = events
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(i, e)| {
+                        matches!(e, TraceEvent::Submit { .. }).then_some(i)
+                    })
+                    .collect();
+                let dup = events[subs[rng.gen_range(subs.len())]].clone();
+                events.push(dup);
+            }
+        }
+        let f = audit::audit_events(&events, &cfg);
+        assert!(analysis::has_errors(&f), "mutation class {class} not caught");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Scale: the audit pass itself stays interactive
+// ---------------------------------------------------------------------------
+
+#[test]
+fn audit_on_largest_profile_is_fast() {
+    if cfg!(debug_assertions) {
+        return; // the bound is a release-build contract
+    }
+    let store = store();
+    let p = profile("e2e").expect("e2e profile");
+    let g = Dataset::generate_graph(p, 42);
+    let cfg = RunConfig { profile: "e2e".into(), ..Default::default() };
+    let t0 = std::time::Instant::now();
+    let mut f = audit::audit_with_graph(&cfg, &p, &g, &store);
+    f.extend(audit::audit_lattice(&cfg, &p, &g, &store));
+    let secs = t0.elapsed().as_secs_f64();
+    assert!(error_findings(&f).is_empty(), "{f:#?}");
+    assert!(secs < 2.0, "audit (with lattice) took {secs:.3}s on e2e");
+}

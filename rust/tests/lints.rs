@@ -11,6 +11,15 @@
 //! * `EventSim` construction outside `rust/src/cluster/` non-test code
 //!   is banned outright: engines receive the clock through
 //!   `cluster::Comm`; a second clock would fork the timeline.
+//! * raw `f32` iterator sums (`sum::<f32>()` or an `: f32`-typed
+//!   `.sum()`) and float `==`/`!=` comparisons are banned outside the
+//!   allowlisted sites: unordered float folds are exactly what the
+//!   determinism prover (`analysis::audit`, DESIGN.md §11.5) exists to
+//!   keep out of the data plane. Every allowlisted site is either a
+//!   canonical-order fold (the `allreduce_and_step` family), a 0/1 mask
+//!   count, or an exact-zero sentinel test — order-insensitive by
+//!   construction, frozen as a ratchet so new float folds must route
+//!   through a recorded `ReduceSite`.
 //!
 //! "Non-test code" is everything before the first `#[cfg(test)]` line —
 //! every module in this tree keeps its test module last.
@@ -105,6 +114,141 @@ fn unwrap_expect_stays_on_the_allowlist() {
     assert!(failures.is_empty(), "unwrap/expect lint:\n{}", failures.join("\n"));
 }
 
+/// Allowed raw-f32-sum sites in non-test code, per file (relative to
+/// `rust/src`): 0/1 mask counts (`n_train`, softmax masks), the attention
+/// score norm, and degree-noise accumulators — all order-insensitive or
+/// fixed-order by construction. Anything new must fold through a
+/// canonical, trace-recorded reduction instead.
+const FLOAT_SUM_ALLOWLIST: &[(&str, usize)] = &[
+    ("graph/generate.rs", 1),
+    ("parallel/common.rs", 2),
+    ("parallel/dp_full.rs", 1),
+    ("parallel/historical.rs", 1),
+    ("parallel/tp.rs", 2),
+    ("runtime/refexec.rs", 5),
+    ("tensor/matrix.rs", 1),
+];
+
+/// Allowed float `==`/`!=` sites in non-test code: exact-zero sentinel
+/// tests on 0/1 masks and weights (a value either is the stored constant
+/// or it is not — no arithmetic happened in between).
+const FLOAT_EQ_ALLOWLIST: &[(&str, usize)] = &[
+    ("cluster/comm.rs", 1),
+    ("graph/generate.rs", 1),
+    ("graph/partition.rs", 1),
+    ("parallel/common.rs", 1),
+    ("runtime/refexec.rs", 5),
+    ("tensor/matrix.rs", 1),
+];
+
+/// A raw f32 fold: a turbofished `sum::<f32>()`, or a `.sum()` whose
+/// line binds an `: f32`-typed receiver.
+fn count_f32_sums(code: &str) -> usize {
+    count_occurrences(code, "sum::<f32>()")
+        + code.lines().filter(|l| l.contains(": f32") && l.contains(".sum()")).count()
+}
+
+/// True when the line compares against a float literal with `==`/`!=`
+/// (digits-dot adjacent to either side of the operator).
+fn has_float_eq(line: &str) -> bool {
+    let b = line.as_bytes();
+    for i in 0..b.len().saturating_sub(1) {
+        if (b[i] != b'=' && b[i] != b'!') || b[i + 1] != b'=' {
+            continue;
+        }
+        if i > 0 && matches!(b[i - 1], b'=' | b'!' | b'<' | b'>') {
+            continue; // the second char of an operator already visited
+        }
+        // right side: `== 0.0`, `!= -1.5`
+        let mut j = i + 2;
+        while j < b.len() && b[j] == b' ' {
+            j += 1;
+        }
+        if j < b.len() && b[j] == b'-' {
+            j += 1;
+        }
+        let ds = j;
+        while j < b.len() && b[j].is_ascii_digit() {
+            j += 1;
+        }
+        if j > ds && j + 1 < b.len() && b[j] == b'.' && b[j + 1].is_ascii_digit() {
+            return true;
+        }
+        // left side: `0.5 ==`
+        let mut k = i;
+        while k > 0 && b[k - 1] == b' ' {
+            k -= 1;
+        }
+        let de = k;
+        while k > 0 && b[k - 1].is_ascii_digit() {
+            k -= 1;
+        }
+        // a true literal (`0.5 ==`), not a tuple field (`self.0 ==`)
+        if k < de && k >= 2 && b[k - 1] == b'.' && b[k - 2].is_ascii_digit() {
+            return true;
+        }
+    }
+    false
+}
+
+/// Apply one ratchet allowlist to per-file counts, collecting over- and
+/// under-count failures plus stale entries.
+fn ratchet(
+    files: &[PathBuf],
+    src: &Path,
+    allowlist: &[(&str, usize)],
+    what: &str,
+    count: impl Fn(&str) -> usize,
+    failures: &mut Vec<String>,
+) {
+    let mut seen = std::collections::BTreeSet::new();
+    for file in files {
+        let rel = file.strip_prefix(src).unwrap_or(file).to_string_lossy().replace('\\', "/");
+        let text = std::fs::read_to_string(file).unwrap_or_default();
+        let n = count(&non_test_code(&text));
+        let allowed =
+            allowlist.iter().find(|(p, _)| *p == rel).map(|&(_, a)| a).unwrap_or(0);
+        seen.insert(rel.clone());
+        if n > allowed {
+            failures.push(format!(
+                "{rel}: {n} {what} site(s) in non-test code, allowlist permits {allowed} \
+                 — fold through a canonical recorded reduction (ReduceSite) instead"
+            ));
+        } else if n < allowed {
+            failures.push(format!(
+                "{rel}: only {n} {what} site(s) left but the allowlist still permits \
+                 {allowed} — ratchet the allowlist down"
+            ));
+        }
+    }
+    for (path, _) in allowlist {
+        if !seen.contains(*path) {
+            failures.push(format!("{what} allowlist names {path}, which no longer exists"));
+        }
+    }
+}
+
+#[test]
+fn float_folds_stay_on_the_allowlist() {
+    let src = repo_root().join("rust/src");
+    let mut files = Vec::new();
+    rust_files(&src, &mut files);
+    assert!(files.len() >= 10, "lint scanner found only {} files", files.len());
+    files.sort();
+
+    let mut failures = Vec::new();
+    ratchet(&files, &src, FLOAT_SUM_ALLOWLIST, "raw f32 sum", count_f32_sums, &mut failures);
+    ratchet(
+        &files,
+        &src,
+        FLOAT_EQ_ALLOWLIST,
+        "float equality",
+        |code| code.lines().filter(|l| has_float_eq(l)).count(),
+        &mut failures,
+    );
+    assert!(failures.is_empty(), "float-fold lint:\n{}", failures.join("\n"));
+}
+
 #[test]
 fn event_sim_is_constructed_only_inside_cluster() {
     let src = repo_root().join("rust/src");
@@ -138,4 +282,18 @@ fn non_test_truncation_finds_the_test_module() {
     let text = "fn a() {}\n#[cfg(test)]\nmod tests { fn b() { x.unwrap() } }\n";
     assert_eq!(non_test_code(text), "fn a() {}\n");
     assert_eq!(count_occurrences(non_test_code(text).as_str(), ".unwrap()"), 0);
+}
+
+#[test]
+fn float_eq_scanner_matches_literals_only() {
+    assert!(has_float_eq("if av == 0.0 {"));
+    assert!(has_float_eq("if x != -1.5 {"));
+    assert!(has_float_eq("if 0.5 == y {"));
+    assert!(!has_float_eq("if a == b {"));
+    assert!(!has_float_eq("if n == 0 {"));
+    assert!(!has_float_eq("if x <= 1.0 {"));
+    assert!(!has_float_eq("let y = 0.5;"));
+    assert_eq!(count_f32_sums("let n: f32 = mask.iter().sum();"), 1);
+    assert_eq!(count_f32_sums("let n = xs.iter().sum::<f32>();"), 1);
+    assert_eq!(count_f32_sums("let n: usize = xs.iter().sum();"), 0);
 }
