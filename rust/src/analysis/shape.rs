@@ -241,6 +241,20 @@ pub fn check_shape_flow(
     // dense chain: fused when available, else the per-layer fallback the
     // engines take — mirror both lookups
     let fused = cfg.fused_nn && store.find_nn_chain(true, b, &dims).is_some();
+    if cfg.fused_nn && !fused {
+        // the engines degrade this to `l` per-layer tickets per phase and
+        // only a runtime counter (`EpochReport::fused_fallbacks`) records
+        // it; surface the plan miss statically so `neutron-tp check`
+        // fails before a builtin profile ever trains degraded
+        out.push(Finding::error(
+            "nn chain fwd",
+            format!(
+                "fused_nn requested but no fused forward chain for batch {b} dims {dims:?}: \
+                 every NN phase would silently fall back to {l} per-layer tickets"
+            ),
+            REMEDY_REGEN,
+        ));
+    }
     if fused {
         if store.find_nn_chain(false, b, &dims).is_none() {
             out.push(Finding::error(

@@ -55,7 +55,13 @@ fn run_cfg(store: &ArtifactStore, cfg: &RunConfig) -> crate::Result<Vec<EpochRep
         Some(d) => Dataset::generate_with_dim(p, d, cfg.seed),
         None => Dataset::generate(p, cfg.seed),
     };
-    let pool = ExecutorPool::with_intra(store, cfg.executor_threads, cfg.intra_threads)?;
+    let pool = ExecutorPool::with_kernel(
+        store,
+        cfg.executor_threads,
+        cfg.intra_threads,
+        cfg.kernel.block_rows,
+        cfg.kernel.block_edges,
+    )?;
     let ctx = Ctx { cfg, data: &data, store, pool: &pool };
     parallel::run(&ctx)
 }
@@ -382,7 +388,13 @@ pub fn run_cfg_with_sim(
     cfg.validate()?;
     let p = profile(&cfg.profile).unwrap();
     let data = Dataset::generate(p, cfg.seed);
-    let pool = ExecutorPool::with_intra(store, cfg.executor_threads, cfg.intra_threads)?;
+    let pool = ExecutorPool::with_kernel(
+        store,
+        cfg.executor_threads,
+        cfg.intra_threads,
+        cfg.kernel.block_rows,
+        cfg.kernel.block_edges,
+    )?;
     let ctx = Ctx { cfg, data: &data, store, pool: &pool };
     // engines do not expose their sim; approximate the series from comp
     // fraction — we re-run through the TP engine when possible
@@ -645,6 +657,8 @@ fn kernel_scale(store: &ArtifactStore, fast: bool) -> crate::Result<String> {
          # per-layer dense chains (wall ms for a 4-worker 3-layer NN phase).\n\
          section,impl,intra_threads,device_ms,medges_per_s\n",
     );
+    let mut oracle: Option<Matrix> = None;
+    let mut bit_identical = true;
     for &intra in &[1usize, 2, 4] {
         let pool = ExecutorPool::with_intra(store, 1, intra)?;
         for pallas in [false, true] {
@@ -658,7 +672,21 @@ fn kernel_scale(store: &ArtifactStore, fast: bool) -> crate::Result<String> {
             let plan = ChunkPlan::build(&g, c_bucket.min(v), c_bucket, e_bucket);
             let pass = &plan.chunks[0].passes[0];
             let rows = plan.chunks[0].num_rows();
-            let _ = ops.agg_pass(art, pass, rows, &x)?; // warmup (layout cache)
+            let (out, _) = ops.agg_pass(art, pass, rows, &x)?; // warmup (layout cache)
+            // the SIMD CSR path must reproduce the scatter oracle
+            // bit-for-bit at every team width (DESIGN.md §5.3)
+            if pallas {
+                bit_identical &= oracle.as_ref().is_some_and(|o| {
+                    o.rows() == out.rows()
+                        && o.cols() == out.cols()
+                        && o.data()
+                            .iter()
+                            .map(|v| v.to_bits())
+                            .eq(out.data().iter().map(|v| v.to_bits()))
+                });
+            } else {
+                oracle = Some(out);
+            }
             let med = median(
                 (0..samples)
                     .map(|_| ops.agg_pass(art, pass, rows, &x).map(|r| r.1))
@@ -674,6 +702,9 @@ fn kernel_scale(store: &ArtifactStore, fast: bool) -> crate::Result<String> {
             .unwrap();
         }
     }
+    // greppable verdict for CI: true iff every csr_blocked run above
+    // matched the scatter oracle bit-for-bit
+    writeln!(s, "# bit_identical={bit_identical}").unwrap();
 
     writeln!(s, "section,mode,layers,wall_ms,-").unwrap();
     let pool = ExecutorPool::with_intra(store, 2, 1)?;

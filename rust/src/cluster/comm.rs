@@ -433,6 +433,11 @@ pub struct Comm {
     collectives_seen: usize,
     /// the recorded loss, once the armed collective fires
     fault: Option<super::fault::FaultEvent>,
+    /// bytes per f32 element on the wire for *feature-panel* collectives
+    /// (split/gather/allgather/fetch and their byte probes): 4, or 2 with
+    /// `comm.bf16_wire` (DESIGN.md §5.3). Gradient allreduce and p2p
+    /// always ship f32.
+    wire_bpe: usize,
 }
 
 impl Comm {
@@ -451,7 +456,20 @@ impl Comm {
             fault_arm: None,
             collectives_seen: 0,
             fault: None,
+            wire_bpe: if tuning.bf16_wire { 2 } else { 4 },
         })
+    }
+
+    /// Bytes per f32 element the feature-panel collectives charge (4, or
+    /// 2 under `comm.bf16_wire`).
+    pub fn wire_bpe(&self) -> usize {
+        self.wire_bpe
+    }
+
+    /// Wire bytes of an `f32_bytes`-sized f32 panel under the configured
+    /// wire dtype.
+    fn wire(&self, f32_bytes: usize) -> usize {
+        f32_bytes / 4 * self.wire_bpe
     }
 
     /// The communicator a run configuration asks for.
@@ -683,7 +701,7 @@ impl Comm {
     ) -> CommHandle<Matrix> {
         let local: Vec<u32> = rows.iter().map(|&r| r - owner_base as u32).collect();
         let block = owner_data.gather_rows(&local);
-        let bytes = block.bytes();
+        let bytes = self.wire(block.bytes());
         if self.trace.is_some() {
             let n = self.workers();
             let mut sent = vec![0usize; n];
@@ -742,7 +760,7 @@ impl Comm {
             for (j, dp) in dim_parts.iter().enumerate() {
                 let block = inputs[i].slice_cols(dp.clone());
                 if i != j {
-                    pair[i][j] = block.bytes();
+                    pair[i][j] = self.wire(block.bytes());
                 }
                 outs[j].write_rows(row_parts[i].start, &block);
             }
@@ -777,7 +795,7 @@ impl Comm {
             for (i, rp) in row_parts.iter().enumerate() {
                 let block = inputs[j].slice_rows(rp.clone());
                 if i != j {
-                    pair[j][i] = block.bytes();
+                    pair[j][i] = self.wire(block.bytes());
                 }
                 outs[i].write_cols(dp.start, &block);
             }
@@ -800,7 +818,7 @@ impl Comm {
         for (i, rp) in row_parts.iter().enumerate() {
             for (j, dp) in dim_parts.iter().enumerate() {
                 if i != j {
-                    pair[i][j] = rp.len() * dp.len() * 4;
+                    pair[i][j] = rp.len() * dp.len() * self.wire_bpe;
                 }
             }
         }
@@ -820,7 +838,7 @@ impl Comm {
         for (j, dp) in dim_parts.iter().enumerate() {
             for (i, rp) in row_parts.iter().enumerate() {
                 if i != j {
-                    pair[j][i] = rp.len() * dp.len() * 4;
+                    pair[j][i] = rp.len() * dp.len() * self.wire_bpe;
                 }
             }
         }
@@ -829,11 +847,13 @@ impl Comm {
     }
 
     /// Schedule-only [`Comm::iallgather_rows`]: worker `i` broadcasts a
-    /// block of `block_bytes[i]` to every peer.
+    /// block of `block_bytes[i]` *f32* bytes to every peer (wire-dtype
+    /// scaling is applied here, matching the data-plane entry).
     pub fn iallgather_bytes(&mut self, block_bytes: &[usize]) -> CommHandle<()> {
         let n = block_bytes.len();
         let mut pair = vec![vec![0usize; n]; n];
         for (i, &b) in block_bytes.iter().enumerate() {
+            let b = self.wire(b);
             for (j, pij) in pair[i].iter_mut().enumerate() {
                 if i != j {
                     *pij = b;
@@ -847,11 +867,12 @@ impl Comm {
     // ---- pipelined chunk pieces (paper §4.2.2) --------------------------
 
     /// Post the chunk-level pieces of a segmented split: piece `k`
-    /// charges one message of `bytes_per_piece[k]` to every worker's NIC,
-    /// pieces queueing back-to-back on the comm stream. Returns one
-    /// handle per piece so the engine can start chunk `k`'s aggregation
-    /// the moment piece `k` lands while later pieces are still in flight
-    /// — overlap via posted handles instead of hand-merged ready vectors.
+    /// charges one message of `bytes_per_piece[k]` *f32* bytes (wire
+    /// dtype applied here) to every worker's NIC, pieces queueing
+    /// back-to-back on the comm stream. Returns one handle per piece so
+    /// the engine can start chunk `k`'s aggregation the moment piece `k`
+    /// lands while later pieces are still in flight — overlap via posted
+    /// handles instead of hand-merged ready vectors.
     pub fn isplit_pieces(&mut self, bytes_per_piece: &[usize]) -> Vec<CommHandle<()>> {
         bytes_per_piece
             .iter()
@@ -865,7 +886,8 @@ impl Comm {
         self.piece(bytes, CommKind::Gather)
     }
 
-    fn piece(&mut self, bytes: usize, kind: CommKind) -> CommHandle<()> {
+    fn piece(&mut self, f32_bytes: usize, kind: CommKind) -> CommHandle<()> {
+        let bytes = self.wire(f32_bytes);
         let n = self.workers();
         if self.trace.is_some() {
             let vol = vec![bytes; n];
@@ -1054,9 +1076,10 @@ impl Comm {
         for (i, rp) in row_parts.iter().enumerate() {
             debug_assert_eq!(inputs[i].rows(), rp.len());
             full.write_rows(rp.start, &inputs[i]);
+            let b = self.wire(inputs[i].bytes());
             for (j, pij) in pair[i].iter_mut().enumerate() {
                 if i != j {
-                    *pij = inputs[i].bytes();
+                    *pij = b;
                 }
             }
         }
@@ -1575,7 +1598,8 @@ mod tests {
         let mut outs: Vec<(Vec<Matrix>, Matrix)> = Vec::new();
         for a2a in [AllToAllAlgo::Naive, AllToAllAlgo::Pairwise] {
             for ar in [AllReduceAlgo::Ring, AllReduceAlgo::FlatTree] {
-                let tuning = CommTuning { all_to_all: a2a, allreduce: ar, bw_scale: vec![] };
+                let tuning =
+                    CommTuning { all_to_all: a2a, allreduce: ar, ..CommTuning::default() };
                 let mut comm = comm_with(n, &tuning);
                 let (sliced, _) = comm.split(&inputs, &rp, &dp);
                 let (sum, _) = comm.allreduce_sum(&grads);

@@ -246,6 +246,30 @@ pub struct CommTuning {
     /// with 1.0. Lists longer than the worker count are a config error
     /// (they used to truncate silently, dropping straggler entries).
     pub bw_scale: Vec<f64>,
+    /// ship feature panels (split/gather/fetch/allgather rows) as
+    /// bf16-on-the-wire: 2 bytes per element in every byte plan and in
+    /// the staging tickets, with f32 accumulation on both ends
+    /// (DESIGN.md §5.3). Gradient allreduce and p2p stay f32. Losses are
+    /// no longer bit-identical to f32 runs — parity is error-bounded.
+    pub bf16_wire: bool,
+}
+
+/// Kernel blocking geometry (`[kernel]` TOML section; DESIGN.md §5.3):
+/// per-job overrides for the CSR row-block builder in `runtime::refexec`.
+/// `0` = the library defaults (`BLOCK_ROWS`/`BLOCK_EDGES`). Geometry only
+/// moves block boundaries — per-row accumulation order is unchanged, so
+/// losses are bit-identical for any setting; `autotune` lets
+/// `neutron-tp plan` pick the geometry by micro-benchmark per
+/// (degree profile, `intra_threads`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KernelCfg {
+    /// rows per CSR aggregation block; 0 = default (256)
+    pub block_rows: usize,
+    /// edge budget per CSR aggregation block; 0 = default (32768)
+    pub block_edges: usize,
+    /// let `neutron-tp plan` micro-bench the blocking lattice and pin the
+    /// winner into the emitted config
+    pub autotune: bool,
 }
 
 /// Deterministic fault-injection plan (`[fault]` TOML section; DESIGN.md
@@ -360,6 +384,8 @@ pub struct RunConfig {
     pub net: NetModel,
     /// communicator algorithm selection + NIC topology (`cluster::Comm`)
     pub comm: CommTuning,
+    /// CSR kernel blocking geometry + autotune flag (`[kernel]`)
+    pub kernel: KernelCfg,
     /// PJRT executor pool size; 0 = auto
     pub executor_threads: usize,
     /// intra-job kernel team width for the CSR row-blocked aggregation
@@ -409,6 +435,7 @@ impl Default for RunConfig {
             mem: MemModel::default(),
             net: NetModel::default(),
             comm: CommTuning::default(),
+            kernel: KernelCfg::default(),
             executor_threads: 0,
             intra_threads: 1,
             fused_nn: true,
@@ -501,6 +528,16 @@ impl RunConfig {
                     .as_f64_array()
                     .ok_or_else(|| anyhow::anyhow!("{key}: expected number array"))?;
             }
+            "comm.bf16_wire" => {
+                self.comm.bf16_wire =
+                    v.as_bool().ok_or_else(|| anyhow::anyhow!("{key}: expected bool"))?;
+            }
+            "kernel.block_rows" => self.kernel.block_rows = want_int()?,
+            "kernel.block_edges" => self.kernel.block_edges = want_int()?,
+            "kernel.autotune" => {
+                self.kernel.autotune =
+                    v.as_bool().ok_or_else(|| anyhow::anyhow!("{key}: expected bool"))?;
+            }
             "fault.kill_worker" => self.fault.kill_worker = Some(want_int()?),
             "fault.kill_epoch" => self.fault.kill_epoch = Some(want_int()?),
             "fault.rejoin_epoch" => self.fault.rejoin_epoch = Some(want_int()?),
@@ -543,7 +580,8 @@ impl RunConfig {
             device_mem_mb,
             mem: MemModel { pcie_gbps, pcie_latency_us, prefetch_depth, swap },
             net: NetModel { bandwidth_gbps, latency_us, gpu_speedup },
-            comm: CommTuning { all_to_all, allreduce, bw_scale },
+            comm: CommTuning { all_to_all, allreduce, bw_scale, bf16_wire },
+            kernel: KernelCfg { block_rows, block_edges, autotune },
             executor_threads,
             intra_threads,
             fused_nn,
@@ -604,6 +642,11 @@ impl RunConfig {
                 bw_scale.iter().map(|f| format!("{f:?}")).collect::<Vec<_>>().join(", ");
             let _ = writeln!(w, "bw_scale = [{list}]");
         }
+        let _ = writeln!(w, "bf16_wire = {bf16_wire}");
+        let _ = writeln!(w, "\n[kernel]");
+        let _ = writeln!(w, "block_rows = {block_rows}");
+        let _ = writeln!(w, "block_edges = {block_edges}");
+        let _ = writeln!(w, "autotune = {autotune}");
         if kill_worker.is_some()
             || kill_epoch.is_some()
             || rejoin_epoch.is_some()
@@ -643,6 +686,15 @@ impl RunConfig {
             && crate::graph::datasets::profile(&self.profile).unwrap().hetero
         {
             anyhow::bail!("GAT artifacts are not emitted for hetero profiles");
+        }
+        if self.comm.bf16_wire
+            && !matches!(self.system, System::NeutronTp | System::NaiveTp)
+        {
+            anyhow::bail!(
+                "comm.bf16_wire needs a tensor-parallel system (neutron_tp|naive_tp): \
+                 only the TP data plane quantizes its wire panels (got {})",
+                self.system.name()
+            );
         }
         if self.comm.bw_scale.iter().any(|s| !s.is_finite() || *s <= 0.0) {
             anyhow::bail!("comm.bw_scale entries must be finite and > 0");
@@ -777,7 +829,9 @@ mod tests {
                 all_to_all: AllToAllAlgo::Pairwise,
                 allreduce: AllReduceAlgo::FlatTree,
                 bw_scale: vec![1.0, 0.25, 0.5],
+                bf16_wire: true,
             },
+            kernel: KernelCfg { block_rows: 128, block_edges: 65536, autotune: true },
             executor_threads: 3,
             intra_threads: 4,
             fused_nn: false,
@@ -948,6 +1002,36 @@ mod tests {
         let mut bad = RunConfig::default();
         bad.fault.rejoin_epoch = Some(3); // rejoin without a kill
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn kernel_and_bf16_keys_parse() {
+        let text = r#"
+            [comm]
+            bf16_wire = true
+            [kernel]
+            block_rows = 64
+            block_edges = 8192
+            autotune = true
+        "#;
+        let c = RunConfig::from_toml(text).unwrap();
+        assert!(c.comm.bf16_wire);
+        assert_eq!(c.kernel.block_rows, 64);
+        assert_eq!(c.kernel.block_edges, 8192);
+        assert!(c.kernel.autotune);
+        c.validate().unwrap();
+        // defaults: f32 wire, auto (library) blocking, no autotune
+        let d = RunConfig::default();
+        assert!(!d.comm.bf16_wire);
+        assert_eq!(d.kernel, KernelCfg::default());
+        assert_eq!(d.kernel.block_rows, 0, "0 = library default");
+        // only the TP data plane quantizes — bf16 wire is TP-only
+        let mut bad = RunConfig::default();
+        bad.system = System::DpFull;
+        bad.comm.bf16_wire = true;
+        assert!(bad.validate().is_err(), "bf16 wire is TP-only");
+        bad.system = System::NaiveTp;
+        bad.validate().unwrap();
     }
 
     #[test]

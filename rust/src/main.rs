@@ -75,7 +75,8 @@ fn print_usage() {
          \x20                  [--chunks C] [--device-mem-mb MB] [--feat-dim D] [--task nc|lp]\n\
          \x20                  [--pcie-gbps G] [--prefetch-depth K] [--no-swap]\n\
          \x20                  [--comm-all-to-all naive|pairwise] [--comm-allreduce ring|flat_tree]\n\
-         \x20                  [--bw-scale S0,S1,...] [--checkpoint-dir D] [--resume]\n\
+         \x20                  [--bw-scale S0,S1,...] [--bf16-wire] [--checkpoint-dir D] [--resume]\n\
+         \x20                  [--block-rows R] [--block-edges E] [--kernel-autotune]\n\
          \x20                  [--kill-worker W --kill-epoch E [--rejoin-epoch R]] [--rebalance]\n\
          \x20 neutron-tp serve [--checkpoint F | --profile P [--warm-epochs K]]\n\
          \x20                  [--requests N] [--batch-size B] [--executor-threads N]\n\
@@ -90,7 +91,16 @@ fn print_usage() {
          the gradient sync (ring vs flat_tree), --bw-scale gives per-worker NIC\n\
          bandwidth multipliers (e.g. 0.25,1,1,1 = one straggler at quarter\n\
          bandwidth). Numerics are identical for every choice; only modeled\n\
-         times change. TOML: [comm] all_to_all/allreduce/bw_scale.\n\n\
+         times change. TOML: [comm] all_to_all/allreduce/bw_scale.\n\
+         --bf16-wire ships feature panels as bf16 (2 B/elem on the wire and\n\
+         in staging tickets, f32 accumulate; TP systems only) — losses are\n\
+         error-bounded, not bit-identical. TOML: [comm] bf16_wire.\n\n\
+         kernel blocking ([kernel], DESIGN.md §5.3): --block-rows/--block-edges\n\
+         override the CSR aggregation block geometry (0 = library defaults\n\
+         256/32768; scheduling only, losses bit-identical for any setting);\n\
+         --kernel-autotune lets `plan` micro-bench the lattice per (profile,\n\
+         intra_threads) and pin the winner into the emitted TOML.\n\
+         TOML: [kernel] block_rows/block_edges/autotune.\n\n\
          host staging ([mem], DESIGN.md §5.2): when the decoupled engine's\n\
          working set exceeds --device-mem-mb, panels swap over a modeled\n\
          PCIe link (--pcie-gbps bandwidth, prefetched --prefetch-depth steps\n\
@@ -207,6 +217,18 @@ fn apply_flag_overrides(cfg: &mut RunConfig, flags: &Flags) -> anyhow::Result<()
     if flags.has("no-swap") {
         cfg.mem.swap = false;
     }
+    if flags.has("bf16-wire") {
+        cfg.comm.bf16_wire = true;
+    }
+    if let Some(v) = flags.get("block-rows") {
+        cfg.kernel.block_rows = v.parse()?;
+    }
+    if let Some(v) = flags.get("block-edges") {
+        cfg.kernel.block_edges = v.parse()?;
+    }
+    if flags.has("kernel-autotune") {
+        cfg.kernel.autotune = true;
+    }
     if let Some(v) = flags.get("comm-all-to-all") {
         cfg.comm.all_to_all = neutron_tp::config::AllToAllAlgo::from_str(v)?;
     }
@@ -271,7 +293,20 @@ fn train(flags: &Flags) -> anyhow::Result<()> {
         Some(d) => Dataset::generate_with_dim(p, d, cfg.seed),
         None => Dataset::generate(p, cfg.seed),
     };
-    let pool = ExecutorPool::with_intra(&store, cfg.executor_threads, cfg.intra_threads)?;
+    if cfg.comm.bf16_wire {
+        println!(
+            "bf16_wire=on: feature panels ship/store as bf16 (f32 accumulate), \
+             per-round rel err <= {:.1e}",
+            neutron_tp::tensor::bf16::REL_ERR_BOUND
+        );
+    }
+    let pool = ExecutorPool::with_kernel(
+        &store,
+        cfg.executor_threads,
+        cfg.intra_threads,
+        cfg.kernel.block_rows,
+        cfg.kernel.block_edges,
+    )?;
     let ctx = Ctx { cfg: &cfg, data: &data, store: &store, pool: &pool };
 
     if cfg.fault.armed() {
@@ -398,7 +433,13 @@ fn serve_cmd(flags: &Flags) -> anyhow::Result<()> {
         Some(d) => Dataset::generate_with_dim(p, d, cfg.seed),
         None => Dataset::generate(p, cfg.seed),
     };
-    let pool = ExecutorPool::with_intra(&store, cfg.executor_threads, cfg.intra_threads)?;
+    let pool = ExecutorPool::with_kernel(
+        &store,
+        cfg.executor_threads,
+        cfg.intra_threads,
+        cfg.kernel.block_rows,
+        cfg.kernel.block_edges,
+    )?;
     let ctx = Ctx { cfg: &cfg, data: &data, store: &store, pool: &pool };
 
     let params = match loaded {
@@ -665,6 +706,12 @@ fn plan_cmd(flags: &Flags) -> anyhow::Result<()> {
         c.mem.prefetch_depth,
         c.intra_threads
     );
+    if cfg.kernel.autotune {
+        println!(
+            "  kernel blocks autotuned for ({}, intra_threads {}): block_rows {} block_edges {}",
+            c.profile, c.intra_threads, c.kernel.block_rows, c.kernel.block_edges
+        );
+    }
     let best_default = outcome
         .defaults
         .iter()

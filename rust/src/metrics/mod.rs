@@ -54,6 +54,10 @@ pub struct EpochReport {
     /// modeled seconds the fault wasted: the partial epoch's makespan at
     /// detection, folded into the replacement epoch's accounting
     pub recovery_secs: f64,
+    /// fused `nn_chain_*` plan-misses this epoch (`parallel::common`):
+    /// each one silently degraded an L-layer phase to L per-layer tickets
+    /// before this counter existed; builtin profiles must keep it at 0
+    pub fused_fallbacks: usize,
 }
 
 impl EpochReport {

@@ -125,6 +125,7 @@ pub fn memplan_for(
                     pinned_bytes: pinned,
                     pcie: PcieModel::from_cfg(&cfg.mem),
                     prefetch_depth: cfg.mem.prefetch_depth,
+                    wire_bpe: if cfg.comm.bf16_wire { 2 } else { 4 },
                 }),
             })
         }
@@ -213,7 +214,9 @@ pub fn nn_chain_fwd_batch(
 
 /// Fused forward: probe once (worker batches differ by at most one row,
 /// so availability is uniform), then submit every worker's single chain
-/// job before waiting. `Ok(None)` -> caller uses the per-layer path.
+/// job before waiting. `Ok(None)` -> caller uses the per-layer path; a
+/// plan-miss with fusion requested is counted on the pool (it used to be
+/// silent — an L-layer phase degrading to L tickets left no trace).
 #[allow(clippy::type_complexity)]
 fn try_fused_fwd(
     ops: &Ops,
@@ -228,13 +231,18 @@ fn try_fused_fwd(
     if xs.iter().any(|x| x.cols() != dims[0])
         || ops.store.find_nn_chain(true, max_b, &dims).is_none()
     {
+        ops.pool.note_fused_fallback();
         return Ok(None);
     }
     let mut pending = Vec::with_capacity(xs.len());
     for x in xs {
         match ops.submit_nn_chain_fwd(x, layers)? {
             Some(p) => pending.push(p),
-            None => return Ok(None), // unreachable given the probe; play safe
+            None => {
+                // unreachable given the probe; play safe and count it
+                ops.pool.note_fused_fallback();
+                return Ok(None);
+            }
         }
     }
     let mut caches = Vec::with_capacity(xs.len());
@@ -315,6 +323,7 @@ fn try_fused_bwd(
         || caches.iter().any(|c| c.acts.len() != layers.len())
         || ops.store.find_nn_chain(false, max_b, &dims).is_none()
     {
+        ops.pool.note_fused_fallback();
         return Ok(None);
     }
     let mut pending = Vec::with_capacity(grad_outs.len());
@@ -323,7 +332,11 @@ fn try_fused_bwd(
         let pres: Vec<&Matrix> = cache.acts.iter().map(|(_, pre)| pre).collect();
         match ops.submit_nn_chain_bwd(g, layers, x0, &pres)? {
             Some(p) => pending.push(p),
-            None => return Ok(None), // unreachable given the probe; play safe
+            None => {
+                // unreachable given the probe; play safe and count it
+                ops.pool.note_fused_fallback();
+                return Ok(None);
+            }
         }
     }
     let mut grads = Vec::with_capacity(grad_outs.len());

@@ -89,14 +89,19 @@ impl Engine {
         })
     }
 
-    /// Run one epoch (engines track their own epoch counter).
+    /// Run one epoch (engines track their own epoch counter). The pool's
+    /// fused-fallback counter is sampled around the epoch so the report
+    /// carries the per-epoch delta, whichever engine ran.
     pub fn run_epoch(&mut self, ctx: &Ctx) -> crate::Result<EpochReport> {
-        match self {
+        let fb0 = ctx.pool.fused_fallbacks();
+        let mut report = match self {
             Engine::Tp(e) => e.run_epoch(ctx),
             Engine::Dp(e) => e.run_epoch(ctx),
             Engine::MiniBatch(e) => e.run_epoch(ctx),
             Engine::Historical(e) => e.run_epoch(ctx),
-        }
+        }?;
+        report.fused_fallbacks = ctx.pool.fused_fallbacks().saturating_sub(fb0);
+        Ok(report)
     }
 
     /// Epochs completed so far.

@@ -33,7 +33,7 @@ use crate::metrics::EpochReport;
 use crate::model::layer_dims;
 use crate::model::params::{Adam, GnnParams};
 use crate::sched::{chunks as sched_chunks, PipelinePlan, StagingRun, StagingSpec};
-use crate::tensor::{dim_slices, pad_tile, row_slices, Matrix};
+use crate::tensor::{bf16, dim_slices, pad_tile, row_slices, Matrix};
 use crate::util::Rng;
 
 use super::common;
@@ -427,6 +427,15 @@ impl TpEngine {
         let n = cfg.workers;
         let v = h.rows();
 
+        // bf16 wire mode (DESIGN.md §5.3): the phase's panel is exactly
+        // what a worker decodes off the split wire, so snap it to the
+        // bf16 lattice before slicing; the gather wire re-rounds below.
+        // Everything in between — blocks, partials, accumulators — stays
+        // f32 on worker-resident data and is untouched.
+        if cfg.comm.bf16_wire {
+            bf16::quantize(h.data_mut());
+        }
+
         // data plane of split (validates the reshuffle; numerics only)
         let rows_in: Vec<Matrix> = row_parts.iter().map(|p| h.slice_rows(p.clone())).collect();
         let slice_w = dim_parts[0].len().max(1);
@@ -559,6 +568,10 @@ impl TpEngine {
             report.collective_rounds += 1;
             comm.barrier();
             *h = cur;
+        }
+        // the gathered panel crossed the wire once more
+        if cfg.comm.bf16_wire {
+            bf16::quantize(h.data_mut());
         }
         if let Some(st) = staging {
             // planned peak == accounted peak is a debug-asserted contract

@@ -7,6 +7,7 @@
 //! against the deterministic event sim.
 
 pub mod cost;
+pub mod kernel;
 pub mod search;
 pub mod space;
 
@@ -61,7 +62,21 @@ pub fn plan_with_graph(
     g: &Csr,
     fast: bool,
 ) -> crate::Result<PlanOutcome> {
-    let sane = space::sanitize(base);
+    let mut sane = space::sanitize(base);
+    if sane.kernel.autotune {
+        // Pin the tuned block geometry into the search base *before*
+        // candidate enumeration: every candidate (and thus the winner
+        // TOML) inherits concrete numbers, and the emitted config
+        // round-trips through the plan self-verify unchanged. Geometry
+        // never changes numerics (DESIGN.md §5.3), so this does not
+        // interact with the cost model's scoring.
+        let t = kernel::autotune(&sane.profile, g, sane.intra_threads.max(1), fast);
+        sane.kernel = crate::config::KernelCfg {
+            block_rows: t.block_rows,
+            block_edges: t.block_edges,
+            autotune: false,
+        };
+    }
     let model = CostModel::new(store, p, g);
     let result = search::search(&model, &sane, fast)?;
     let defaults = space::fixed_defaults(&sane)

@@ -122,6 +122,11 @@ pub struct ExecutorPool {
     handles: Vec<std::thread::JoinHandle<()>>,
     executed: Arc<AtomicUsize>,
     intra_threads: usize,
+    block_rows: usize,
+    block_edges: usize,
+    /// fused NN-chain phases that silently degraded to per-layer dispatch
+    /// (a plan-miss; see `parallel::common::try_fused_fwd`)
+    fused_fallbacks: AtomicUsize,
 }
 
 #[must_use = "a dropped Ticket abandons a submitted job; join it with wait()"]
@@ -170,11 +175,28 @@ impl ExecutorPool {
         threads: usize,
         intra_threads: usize,
     ) -> crate::Result<Self> {
+        Self::with_kernel(store, threads, intra_threads, refexec::BLOCK_ROWS, refexec::BLOCK_EDGES)
+    }
+
+    /// Like [`ExecutorPool::with_intra`] but with an explicit CSR block
+    /// geometry for the row-blocked aggregation kernel (the `[kernel]`
+    /// config section, DESIGN.md §5.3). Zero block bounds fall back to
+    /// the compiled defaults; blocking is a pure scheduling choice, so
+    /// any geometry produces bit-identical results.
+    pub fn with_kernel(
+        store: &super::ArtifactStore,
+        threads: usize,
+        intra_threads: usize,
+        block_rows: usize,
+        block_edges: usize,
+    ) -> crate::Result<Self> {
         let auto = || {
             std::thread::available_parallelism().map(|c| c.get()).unwrap_or(2).div_ceil(2).min(4)
         };
         let threads = if threads == 0 { auto() } else { threads };
         let intra_threads = if intra_threads == 0 { auto() } else { intra_threads };
+        let block_rows = if block_rows == 0 { refexec::BLOCK_ROWS } else { block_rows };
+        let block_edges = if block_edges == 0 { refexec::BLOCK_EDGES } else { block_edges };
         let mut name_to_kind = HashMap::new();
         for info in store.infos() {
             name_to_kind.insert(info.name.clone(), info.kind.clone());
@@ -191,16 +213,32 @@ impl ExecutorPool {
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("ref-exec-{t}"))
-                    .spawn(move || worker_loop(&rx, &executed, intra_threads, &cache))
+                    .spawn(move || {
+                        worker_loop(&rx, &executed, intra_threads, block_rows, block_edges, &cache)
+                    })
                     .context("spawning executor thread")?,
             );
         }
-        Ok(ExecutorPool { queue: tx, name_to_kind, handles, executed, intra_threads })
+        Ok(ExecutorPool {
+            queue: tx,
+            name_to_kind,
+            handles,
+            executed,
+            intra_threads,
+            block_rows,
+            block_edges,
+            fused_fallbacks: AtomicUsize::new(0),
+        })
     }
 
     /// Effective intra-job thread team width.
     pub fn intra_threads(&self) -> usize {
         self.intra_threads
+    }
+
+    /// Effective CSR block geometry `(block_rows, block_edges)`.
+    pub fn block_geometry(&self) -> (usize, usize) {
+        (self.block_rows, self.block_edges)
     }
 
     pub fn submit(&self, job: Job) -> crate::Result<Ticket> {
@@ -224,6 +262,20 @@ impl ExecutorPool {
     pub fn executed(&self) -> usize {
         self.executed.load(Ordering::Relaxed)
     }
+
+    /// Record one fused NN-chain phase degrading to per-layer dispatch
+    /// because the plan had no matching chain artifact. The degradation
+    /// used to be silent; engines now report per-epoch deltas in
+    /// `EpochReport::fused_fallbacks` and `neutron-tp check` fails a
+    /// builtin profile that would ever take it.
+    pub fn note_fused_fallback(&self) {
+        self.fused_fallbacks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Cumulative fused NN-chain fallbacks (see [`Self::note_fused_fallback`]).
+    pub fn fused_fallbacks(&self) -> usize {
+        self.fused_fallbacks.load(Ordering::Relaxed)
+    }
 }
 
 impl Drop for ExecutorPool {
@@ -241,6 +293,8 @@ fn worker_loop(
     rx: &Mutex<mpsc::Receiver<Request>>,
     executed: &AtomicUsize,
     intra_threads: usize,
+    block_rows: usize,
+    block_edges: usize,
     cache: &refexec::CsrCache,
 ) {
     loop {
@@ -251,7 +305,13 @@ fn worker_loop(
                 Err(_) => return, // pool dropped
             }
         };
-        let ctx = refexec::ExecCtx { artifact: &req.job.artifact, intra_threads, cache };
+        let ctx = refexec::ExecCtx {
+            artifact: &req.job.artifact,
+            intra_threads,
+            block_rows,
+            block_edges,
+            cache,
+        };
         let t0 = Instant::now();
         let reply = refexec::execute_with(&req.kind, &req.job.args, &ctx)
             .map(|outputs| JobResult { outputs, device_secs: t0.elapsed().as_secs_f64() });
@@ -305,9 +365,23 @@ mod tests {
         let store = ArtifactStore::builtin();
         let pool = ExecutorPool::with_intra(&store, 1, 3).unwrap();
         assert_eq!(pool.intra_threads(), 3);
+        assert_eq!(pool.block_geometry(), (refexec::BLOCK_ROWS, refexec::BLOCK_EDGES));
         let (job, b, h) = dense_job(&store);
         let res = pool.run(job).unwrap();
         assert_eq!(res.outputs[0].len(), b * h);
+    }
+
+    /// A tuned block geometry reaches the workers and zero bounds fall
+    /// back to the compiled defaults.
+    #[test]
+    fn with_kernel_plumbs_block_geometry() {
+        let store = ArtifactStore::builtin();
+        let pool = ExecutorPool::with_kernel(&store, 1, 1, 128, 16 * 1024).unwrap();
+        assert_eq!(pool.block_geometry(), (128, 16 * 1024));
+        let (job, b, h) = dense_job(&store);
+        assert_eq!(pool.run(job).unwrap().outputs[0].len(), b * h);
+        let auto = ExecutorPool::with_kernel(&store, 1, 1, 0, 0).unwrap();
+        assert_eq!(auto.block_geometry(), (refexec::BLOCK_ROWS, refexec::BLOCK_EDGES));
     }
 
     /// Acceptance: the pool makes progress while >= 2 tickets are still

@@ -20,25 +20,40 @@
 //!   `config::AggImpl::Scatter`.
 //! * `agg_pallas` — the CSR row-blocked kernel (the default): destination
 //!   rows are split into disjoint cache-sized [`RowBlock`]s (bounded by
-//!   [`BLOCK_ROWS`] rows / [`BLOCK_EDGES`] edges so one block's output
-//!   panel and edge slice stay cache-resident), and the blocks are
+//!   the context's `block_rows` rows / `block_edges` edges — defaults
+//!   [`BLOCK_ROWS`] / [`BLOCK_EDGES`], overridable per job through the
+//!   `[kernel]` config section so one block's output panel and edge slice
+//!   stay cache-resident for the machine at hand), and the blocks are
 //!   executed by a scoped thread team of `intra_threads` threads **inside
 //!   the job** (passes below [`PAR_MIN_EDGES`] run serial — spawn cost
 //!   would dominate). Each block owns its output rows exclusively, so there are
 //!   no atomics and no write contention; per-row accumulation order is
 //!   identical to the scatter path (the edge arrays are CSR-sorted), so
 //!   the two lowerings agree bit-for-bit and the result is independent of
-//!   `intra_threads`.
+//!   `intra_threads` and of the block geometry (DESIGN.md §5.3).
 //!
-//! Block boundaries depend only on the pass's `row_ptr` contents, so they
-//! are memoized in the [`CsrCache`] owned by the `ArtifactStore` and
-//! shared by every executor thread: keyed by *edge-buffer identity* (the
-//! owning artifact is implicit in the buffer), a chunk's edge list is
+//! Block boundaries depend only on the pass's `row_ptr` contents and the
+//! block geometry, so they are memoized in the [`CsrCache`] owned by the
+//! `ArtifactStore` and shared by every executor thread: keyed by
+//! *edge-buffer identity* plus `(block_rows, block_edges)` (the owning
+//! artifact is implicit in the buffer), a chunk's edge list is
 //! segmented once per plan (in practice once per epoch's first pass)
 //! instead of on every execution of every dim-tile pass. Cache entries
 //! hold a clone of the keyed `Arc`, so a key's address can never be
 //! recycled by a different live buffer — pointer-identity lookups stay
 //! sound across engine rebuilds and allocation-free on the hot path.
+//!
+//! # Lane-vectorized inner loops
+//!
+//! The hot accumulate loops (`matmul`'s rank-1 row update, the dense
+//! backward's `gw` update, `agg_block`'s weighted row add) all funnel
+//! through [`axpy_lanes`]: `out[j] += a * src[j]` over explicit
+//! [`LANES`]-wide chunks with the multiply-adds unrolled per lane, plus a
+//! scalar tail. Vectorization is only ever applied along the independent
+//! output-column axis — one output element's reduction (over `k`, or over
+//! a row's edges) is never split across lanes — so per-element accumulation
+//! order is exactly the scalar kernels', and the SIMD paths stay
+//! bit-identical under the determinism suite (DESIGN.md §5.3).
 //!
 //! # Fused NN chains
 //!
@@ -69,18 +84,27 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
+use anyhow::Context as _;
+
 use super::executor::Arg;
 
 const LEAKY_SLOPE: f32 = 0.2;
 
-/// Max destination rows per CSR block: 256 rows x 32-wide tile x 4 B =
-/// 32 KiB of output panel, comfortably L1/L2-resident.
+/// Lane width of the portable SIMD helper [`axpy_lanes`]: 8 f32 lanes
+/// (one AVX2 register / two NEON registers), unrolled explicitly so the
+/// compiler keeps the multiply-adds independent.
+pub const LANES: usize = 8;
+
+/// Default max destination rows per CSR block: 256 rows x 32-wide tile x
+/// 4 B = 32 KiB of output panel, comfortably L1/L2-resident. Overridable
+/// per job via `[kernel] block_rows` (DESIGN.md §5.3).
 pub const BLOCK_ROWS: usize = 256;
 
-/// Max edges per CSR block (col + weight reads); bounds a hub-heavy
-/// block's working set and keeps blocks load-balanced on skewed graphs.
-/// Hard bound except for a single row that alone exceeds it (rows cannot
-/// be split across blocks — a block owns whole output rows).
+/// Default max edges per CSR block (col + weight reads); bounds a
+/// hub-heavy block's working set and keeps blocks load-balanced on skewed
+/// graphs. Hard bound except for a single row that alone exceeds it (rows
+/// cannot be split across blocks — a block owns whole output rows).
+/// Overridable per job via `[kernel] block_edges`.
 pub const BLOCK_EDGES: usize = 32 * 1024;
 
 /// Below this many live edges a pass runs on the serial branch even when
@@ -90,14 +114,31 @@ pub const BLOCK_EDGES: usize = 32 * 1024;
 pub const PAR_MIN_EDGES: usize = 2 * BLOCK_EDGES;
 
 /// Per-call execution context: the artifact identity plus the intra-job
-/// parallelism knobs the kind-level kernels need.
+/// parallelism and block-geometry knobs the kind-level kernels need.
 pub struct ExecCtx<'a> {
     /// artifact name (diagnostics; the cache keys on buffer identity)
     pub artifact: &'a str,
     /// scoped worker threads inside one aggregation job (>= 1)
     pub intra_threads: usize,
+    /// max destination rows per CSR block (`[kernel] block_rows`)
+    pub block_rows: usize,
+    /// max edges per CSR block (`[kernel] block_edges`)
+    pub block_edges: usize,
     /// memoized CSR row-block layouts, shared across executor threads
     pub cache: &'a CsrCache,
+}
+
+impl<'a> ExecCtx<'a> {
+    /// A context with the default block geometry and a serial team.
+    pub fn with_defaults(artifact: &'a str, cache: &'a CsrCache) -> Self {
+        ExecCtx {
+            artifact,
+            intra_threads: 1,
+            block_rows: BLOCK_ROWS,
+            block_edges: BLOCK_EDGES,
+            cache,
+        }
+    }
 }
 
 /// Execute one artifact call with a throwaway context (unit tests, golden
@@ -105,7 +146,7 @@ pub struct ExecCtx<'a> {
 /// cache and `intra_threads` survive across calls.
 pub fn execute(kind: &str, args: &[Arg]) -> crate::Result<Vec<Vec<f32>>> {
     let cache = CsrCache::new();
-    execute_with(kind, args, &ExecCtx { artifact: kind, intra_threads: 1, cache: &cache })
+    execute_with(kind, args, &ExecCtx::with_defaults(kind, &cache))
 }
 
 /// Execute one artifact call. `kind` selects the math; shapes come from
@@ -184,14 +225,14 @@ struct CacheEntry {
 }
 
 /// Memoized `row_ptr` -> row-block segmentations, keyed by edge-buffer
-/// address (segmentation depends only on the buffer contents, and the
-/// pinned `keeper` makes address identity sound, so lookups stay
-/// allocation-free on the hot path — the owning artifact is implicit in
-/// the buffer). Owned by the `ArtifactStore` and cloned (`Arc`) into
-/// every executor thread.
+/// address plus block geometry (segmentation depends only on the buffer
+/// contents and `(block_rows, block_edges)`, and the pinned `keeper`
+/// makes address identity sound, so lookups stay allocation-free on the
+/// hot path — the owning artifact is implicit in the buffer). Owned by
+/// the `ArtifactStore` and cloned (`Arc`) into every executor thread.
 #[derive(Default)]
 pub struct CsrCache {
-    map: Mutex<HashMap<usize, CacheEntry>>,
+    map: Mutex<HashMap<(usize, usize, usize), CacheEntry>>,
     hits: AtomicUsize,
     misses: AtomicUsize,
 }
@@ -209,19 +250,30 @@ impl CsrCache {
         self.misses.load(Ordering::Relaxed)
     }
 
-    /// The memoized layout for this `row_ptr` buffer, segmenting on a
-    /// miss.
-    pub fn layout(&self, row_ptr: &Arc<Vec<i32>>) -> Arc<CsrLayout> {
-        let key = Arc::as_ptr(row_ptr) as usize;
+    /// The memoized layout for this `row_ptr` buffer under this block
+    /// geometry, segmenting on a miss. A malformed (empty) `row_ptr` is a
+    /// shape error naming `artifact` — it must not be mistaken for a
+    /// zero-row aggregation.
+    pub fn layout(
+        &self,
+        row_ptr: &Arc<Vec<i32>>,
+        artifact: &str,
+        block_rows: usize,
+        block_edges: usize,
+    ) -> crate::Result<Arc<CsrLayout>> {
+        let key = (Arc::as_ptr(row_ptr) as usize, block_rows, block_edges);
         let mut map = self.map.lock().expect("csr cache lock");
         if let Some(entry) = map.get(&key) {
             if Arc::ptr_eq(&entry.keeper, row_ptr) {
                 self.hits.fetch_add(1, Ordering::Relaxed);
-                return Arc::clone(&entry.layout);
+                return Ok(Arc::clone(&entry.layout));
             }
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let layout = Arc::new(build_layout(row_ptr));
+        let layout = Arc::new(
+            build_layout(row_ptr, block_rows, block_edges)
+                .with_context(|| format!("artifact '{artifact}': CSR row-block layout"))?,
+        );
         // miss path only (hits stay O(1)): evict entries whose keyed
         // buffer is otherwise dead — the cache holds the only Arc, so the
         // plan that owned it is gone — to avoid pinning stale edge
@@ -232,36 +284,79 @@ impl CsrCache {
             map.clear();
         }
         map.insert(key, CacheEntry { keeper: Arc::clone(row_ptr), layout: Arc::clone(&layout) });
-        layout
+        Ok(layout)
     }
 }
 
 /// Greedy segmentation: blocks tile `0..c` in order; a row is admitted
-/// only while the block stays within `BLOCK_ROWS` rows AND its edge range
-/// (through the row's END) stays within `BLOCK_EDGES` — so the edge bound
+/// only while the block stays within `block_rows` rows AND its edge range
+/// (through the row's END) stays within `block_edges` — so the edge bound
 /// is hard, except for a single row that alone exceeds it (every block
-/// has >= 1 row). The result depends only on `row_ptr`, never on thread
-/// counts — which is what keeps execution bit-deterministic under any
-/// `intra_threads`.
-fn build_layout(row_ptr: &[i32]) -> CsrLayout {
-    let c = row_ptr.len().saturating_sub(1);
+/// has >= 1 row). The result depends only on `row_ptr` and the geometry,
+/// never on thread counts — which is what keeps execution
+/// bit-deterministic under any `intra_threads` and any `[kernel]` tuning.
+///
+/// An empty `row_ptr` is rejected: a CSR over `c` rows stores `c + 1`
+/// offsets, so even a zero-row aggregation carries one entry. Treating
+/// zero entries as zero rows would silently mask a malformed artifact
+/// argument (the caller attaches the artifact name).
+fn build_layout(
+    row_ptr: &[i32],
+    block_rows: usize,
+    block_edges: usize,
+) -> crate::Result<CsrLayout> {
+    anyhow::ensure!(
+        !row_ptr.is_empty(),
+        "malformed empty row_ptr: a CSR over c rows stores c + 1 offsets (>= 1)"
+    );
+    let block_rows = block_rows.max(1);
+    let block_edges = block_edges.max(1);
+    let c = row_ptr.len() - 1;
     let mut blocks = Vec::new();
     let mut r0 = 0usize;
     while r0 < c {
         let e0 = row_ptr[r0] as usize;
         let mut r1 = r0 + 1;
-        while r1 < c && r1 - r0 < BLOCK_ROWS && (row_ptr[r1 + 1] as usize) <= e0 + BLOCK_EDGES {
+        while r1 < c && r1 - r0 < block_rows && (row_ptr[r1 + 1] as usize) <= e0 + block_edges {
             r1 += 1;
         }
         blocks.push(RowBlock { row0: r0, row1: r1, e0, e1: row_ptr[r1] as usize });
         r0 = r1;
     }
-    CsrLayout { blocks, live_edges: if c == 0 { 0 } else { row_ptr[c] as usize } }
+    Ok(CsrLayout { blocks, live_edges: if c == 0 { 0 } else { row_ptr[c] as usize } })
 }
 
 // ---------------------------------------------------------------------------
 // Kernels
 // ---------------------------------------------------------------------------
+
+/// The shared lane-vectorized accumulate: `out[j] += a * src[j]` over
+/// explicit [`LANES`]-wide chunks with unrolled multiply-adds, plus a
+/// scalar tail. Per output element this performs exactly one fused
+/// `+= a * src[j]` in the same position of the caller's reduction as the
+/// scalar loop it replaces — lanes run along the independent output
+/// columns, never across one element's sum — so every kernel built on it
+/// stays bit-identical to its scalar form (module doc; DESIGN.md §5.3).
+#[inline]
+fn axpy_lanes(out: &mut [f32], src: &[f32], a: f32) {
+    let n = out.len().min(src.len());
+    let lanes = n - n % LANES;
+    let (obody, otail) = out[..n].split_at_mut(lanes);
+    let (sbody, stail) = src[..n].split_at(lanes);
+    for (oc, sc) in obody.chunks_exact_mut(LANES).zip(sbody.chunks_exact(LANES)) {
+        oc[0] += a * sc[0];
+        oc[1] += a * sc[1];
+        oc[2] += a * sc[2];
+        oc[3] += a * sc[3];
+        oc[4] += a * sc[4];
+        oc[5] += a * sc[5];
+        oc[6] += a * sc[6];
+        oc[7] += a * sc[7];
+    }
+    for (o, &sv) in otail.iter_mut().zip(stail) {
+        *o += a * sv;
+    }
+}
 
 /// `out[m,n] = a[m,k] @ b[k,n]`, skipping zero `a` entries (zero-padded
 /// rows cost nothing, matching the padding-transparency contract).
@@ -274,10 +369,7 @@ fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
             if av == 0.0 {
                 continue;
             }
-            let brow = &b[kk * n..(kk + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
+            axpy_lanes(orow, &b[kk * n..(kk + 1) * n], av);
         }
     }
     out
@@ -335,14 +427,13 @@ fn dense_bwd_core(
     for i in 0..b {
         let xrow = &x[i * d..(i + 1) * d];
         let grow = &gp[i * h..(i + 1) * h];
+        // no zero-`xv` shortcut here: `0 * g` must stay in the sum so
+        // non-finite gradients propagate as in the jnp oracle
+        // (`0 * inf = NaN`); for finite data the extra `±0.0` terms
+        // cannot move the accumulator (`+0.0` plus `-0.0` rounds to
+        // `+0.0`), so the fix is bit-transparent off the non-finite path
         for (k, &xv) in xrow.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
-            let dst = &mut gw[k * h..(k + 1) * h];
-            for (o, &gv) in dst.iter_mut().zip(grow) {
-                *o += xv * gv;
-            }
+            axpy_lanes(&mut gw[k * h..(k + 1) * h], grow, xv);
         }
     }
     let mut gb = vec![0.0f32; h];
@@ -508,10 +599,7 @@ fn agg_block(
             if wv == 0.0 {
                 continue;
             }
-            let src = &x[col[e] as usize * t..(col[e] as usize + 1) * t];
-            for (o, &xv) in orow.iter_mut().zip(src) {
-                *o += wv * xv;
-            }
+            axpy_lanes(orow, &x[col[e] as usize * t..(col[e] as usize + 1) * t], wv);
         }
     }
 }
@@ -526,10 +614,11 @@ fn agg_csr(args: &[Arg], ctx: &ExecCtx) -> crate::Result<Vec<Vec<f32>>> {
     let (ew, _) = f32_arg(args, 3)?;
     let (x, xs) = f32_arg(args, 4)?;
     let row_ptr: &[i32] = rp_arc.as_slice();
-    anyhow::ensure!(!row_ptr.is_empty(), "agg: empty row_ptr");
+    // the layout cache rejects a malformed empty row_ptr with a shape
+    // error naming the artifact (it must not read as zero rows)
+    let layout = ctx.cache.layout(rp_arc, ctx.artifact, ctx.block_rows, ctx.block_edges)?;
     let c = row_ptr.len() - 1;
     let t = xs[1] as usize;
-    let layout = ctx.cache.layout(rp_arc);
     let mut out = vec![0.0f32; c * t];
     // carve the output into per-block exclusive row slices
     let mut parts: Vec<&mut [f32]> = Vec::with_capacity(layout.blocks.len());
@@ -794,13 +883,20 @@ mod tests {
         let want = execute("agg_scatter", &args).unwrap();
         let cache = CsrCache::new();
         for intra in [1usize, 3] {
-            let ctx = ExecCtx { artifact: "t", intra_threads: intra, cache: &cache };
+            let ctx =
+                ExecCtx { intra_threads: intra, ..ExecCtx::with_defaults("t", &cache) };
             let got = execute_with("agg_pallas", &args, &ctx).unwrap();
             assert_eq!(got[0], want[0], "intra={intra}");
         }
         // second run reused the memoized layout
         assert_eq!(cache.misses(), 1);
         assert!(cache.hits() >= 1);
+        // a different block geometry is a different cache entry producing
+        // the same bits (blocking is scheduling, never numerics)
+        let ctx = ExecCtx { block_rows: 2, block_edges: 3, ..ExecCtx::with_defaults("t", &cache) };
+        let got = execute_with("agg_pallas", &args, &ctx).unwrap();
+        assert_eq!(got[0], want[0], "custom block geometry");
+        assert_eq!(cache.misses(), 2);
     }
 
     #[test]
@@ -833,36 +929,138 @@ mod tests {
         ];
         let want = execute("agg_scatter", &args).unwrap();
         let cache = CsrCache::new();
-        let ctx = ExecCtx { artifact: "par", intra_threads: 4, cache: &cache };
+        let ctx = ExecCtx { intra_threads: 4, ..ExecCtx::with_defaults("par", &cache) };
         let got = execute_with("agg_pallas", &args, &ctx).unwrap();
         assert_eq!(got[0], want[0]);
     }
 
     #[test]
     fn csr_layout_blocks_tile_rows() {
-        // 700 rows (not a multiple of BLOCK_ROWS), one hub row
+        // 700 rows (not a multiple of the row bound), one hub row — swept
+        // across block geometries now that they are per-job parameters
         let mut row_ptr = vec![0i32];
         let mut e = 0i32;
         for r in 0..700 {
             e += if r == 13 { BLOCK_EDGES as i32 + 7 } else { (r % 3) as i32 };
             row_ptr.push(e);
         }
-        let layout = build_layout(&row_ptr);
-        assert_eq!(layout.blocks[0].row0, 0);
-        assert_eq!(layout.blocks.last().unwrap().row1, 700);
-        for w in layout.blocks.windows(2) {
-            assert_eq!(w[0].row1, w[1].row0, "blocks must tile contiguously");
-            assert_eq!(w[0].e1, w[1].e0);
+        for (br, be) in [(BLOCK_ROWS, BLOCK_EDGES), (64, 8 * 1024), (512, 128 * 1024)] {
+            let layout = build_layout(&row_ptr, br, be).unwrap();
+            assert_eq!(layout.blocks[0].row0, 0);
+            assert_eq!(layout.blocks.last().unwrap().row1, 700);
+            for w in layout.blocks.windows(2) {
+                assert_eq!(w[0].row1, w[1].row0, "blocks must tile contiguously");
+                assert_eq!(w[0].e1, w[1].e0);
+            }
+            assert!(layout.blocks.iter().all(|b| b.row1 > b.row0));
+            assert!(layout.blocks.iter().all(|b| b.row1 - b.row0 <= br));
+            // the edge bound is hard except for single oversized rows
+            assert!(layout.blocks.iter().all(|b| b.row1 - b.row0 == 1 || b.e1 - b.e0 <= be));
+            assert!(
+                layout.blocks.iter().any(|b| b.e1 - b.e0 > be),
+                "hub got its own block (br={br} be={be})"
+            );
+            assert_eq!(layout.live_edges, e as usize);
         }
-        assert!(layout.blocks.iter().all(|b| b.row1 > b.row0));
-        assert!(layout.blocks.iter().all(|b| b.row1 - b.row0 <= BLOCK_ROWS));
-        // the edge bound is hard except for single oversized rows
-        assert!(layout
-            .blocks
-            .iter()
-            .all(|b| b.row1 - b.row0 == 1 || b.e1 - b.e0 <= BLOCK_EDGES));
-        assert!(layout.blocks.iter().any(|b| b.e1 - b.e0 > BLOCK_EDGES), "hub got its own block");
-        assert_eq!(layout.live_edges, e as usize);
+    }
+
+    #[test]
+    fn empty_row_ptr_is_a_shape_error_naming_the_artifact() {
+        // a zero-length row_ptr is malformed (c rows store c + 1 offsets)
+        // and must surface as a shape error carrying the artifact name,
+        // not execute as a zero-row aggregation
+        let args = vec![
+            i(vec![], &[0]),
+            i(vec![0], &[1]),
+            i(vec![0], &[1]),
+            f(vec![0.0], &[1]),
+            f(vec![1.0, 2.0], &[1, 2]),
+        ];
+        let cache = CsrCache::new();
+        let ctx = ExecCtx::with_defaults("agg_pallas__c64_e128_s64", &cache);
+        let err = execute_with("agg_pallas", &args, &ctx).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("agg_pallas__c64_e128_s64"), "error must name the artifact: {msg}");
+        assert!(msg.contains("row_ptr"), "error must describe the malformed shape: {msg}");
+        assert_eq!(cache.misses(), 1, "the malformed layout must not be cached");
+        let again = execute_with("agg_pallas", &args, &ctx).unwrap_err();
+        assert!(format!("{again:#}").contains("row_ptr"));
+    }
+
+    #[test]
+    fn dense_bwd_propagates_nonfinite_gradients() {
+        // x = [[0, 1]], upstream grad = [[inf]], linear layer: the jnp
+        // oracle's gw[0] is 0 * inf = NaN — the old zero-`xv` shortcut
+        // silently produced 0.0 instead
+        let out = execute(
+            "dense_linear_bwd",
+            &[
+                f(vec![f32::INFINITY], &[1, 1]),
+                f(vec![0.0, 1.0], &[1, 2]),
+                f(vec![1.0, 1.0], &[2, 1]),
+                f(vec![1.0], &[1, 1]),
+            ],
+        )
+        .unwrap();
+        assert!(out[1][0].is_nan(), "gw[0] = 0 * inf must be NaN, got {}", out[1][0]);
+        assert_eq!(out[1][1], f32::INFINITY, "gw[1] = 1 * inf");
+        // NaN upstream grads poison every touched weight cell
+        let nan = execute(
+            "dense_linear_bwd",
+            &[
+                f(vec![f32::NAN], &[1, 1]),
+                f(vec![0.0, 2.0], &[1, 2]),
+                f(vec![1.0, 1.0], &[2, 1]),
+                f(vec![1.0], &[1, 1]),
+            ],
+        )
+        .unwrap();
+        assert!(nan[1][0].is_nan() && nan[1][1].is_nan());
+        // ...while finite data is bit-untouched by the fix: `0 * g` terms
+        // are ±0.0 and `+0.0 + -0.0 == +0.0`
+        let fin = execute(
+            "dense_linear_bwd",
+            &[
+                f(vec![-3.5], &[1, 1]),
+                f(vec![0.0, 2.0], &[1, 2]),
+                f(vec![1.0, 1.0], &[2, 1]),
+                f(vec![1.0], &[1, 1]),
+            ],
+        )
+        .unwrap();
+        assert_eq!(fin[1][0].to_bits(), 0.0f32.to_bits(), "gw[0] stays +0.0");
+        assert_eq!(fin[1][1], -7.0);
+    }
+
+    #[test]
+    fn lane_kernels_match_scalar_reference_across_widths() {
+        // sweep output widths through the lane body and the scalar tail
+        // (1 = all tail, 8 = one lane chunk, 19 = 2 chunks + 3 tail)
+        for h in [1usize, 7, 8, 9, 16, 19] {
+            let (b, d) = (3usize, 5usize);
+            let x: Vec<f32> = (0..b * d).map(|v| (v % 7) as f32 * 0.35 - 1.0).collect();
+            let w: Vec<f32> = (0..d * h).map(|v| (v % 11) as f32 * 0.15 - 0.7).collect();
+            let bias: Vec<f32> = (0..h).map(|v| v as f32 * 0.01).collect();
+            let out = execute(
+                "dense_linear_fwd",
+                &[f(x.clone(), &[b, d]), f(w.clone(), &[d, h]), f(bias.clone(), &[h])],
+            )
+            .unwrap();
+            // scalar reference with the same per-element accumulation order
+            // (over k, in k order) — equality must be exact, not approximate
+            let mut want = vec![0.0f32; b * h];
+            for i in 0..b {
+                for kk in 0..d {
+                    for j in 0..h {
+                        want[i * h + j] += x[i * d + kk] * w[kk * h + j];
+                    }
+                }
+                for j in 0..h {
+                    want[i * h + j] += bias[j];
+                }
+            }
+            assert_eq!(out[0], want, "h={h}");
+        }
     }
 
     #[test]

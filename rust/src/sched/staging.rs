@@ -145,6 +145,10 @@ pub struct StagingSpec {
     pub pinned_bytes: usize,
     pub pcie: PcieModel,
     pub prefetch_depth: usize,
+    /// bytes per panel element for footprints and H2D/D2H tickets: 4
+    /// (f32), or 2 when the run stores feature panels as bf16
+    /// (`comm.bf16_wire`, DESIGN.md §5.3)
+    pub wire_bpe: usize,
 }
 
 /// One planned link transfer. Fetches (`h2d`) carry the step whose
@@ -282,7 +286,7 @@ impl StagingPlan {
     ) -> crate::Result<StagingPlan> {
         let nc = chunks.len();
         anyhow::ensure!(nc > 0 && rounds > 0, "staging plan needs chunks and rounds");
-        let bpe = slice_width.max(1) * 4;
+        let bpe = slice_width.max(1) * spec.wire_bpe.clamp(1, 4);
         let rows_per = chunks[0].rows.len().max(1);
 
         // per chunk: |src_set| and, per owning chunk, how many of this
@@ -618,6 +622,7 @@ mod tests {
             pinned_bytes: 4096,
             pcie: PcieModel { gbps: 16.0, latency_us: 10.0 },
             prefetch_depth: depth,
+            wire_bpe: 4,
         }
     }
 
@@ -681,6 +686,23 @@ mod tests {
         // exceeds the ample-budget plan's
         let ample = StagingPlan::build(&spec(64 << 20, 2), &chunks, 16, 3).unwrap();
         assert!(plan.h2d_bytes > ample.h2d_bytes, "budget had no effect on traffic");
+    }
+
+    #[test]
+    fn bf16_wire_bpe_halves_footprints_and_ticket_bytes() {
+        // the same schedule at wire_bpe 2 must move and hold exactly
+        // half the bytes of the f32 plan (DESIGN.md §5.3) — panels are
+        // stored on-device in the wire dtype, so both the H2D/D2H
+        // tickets and the residency footprints scale together
+        let f32_spec = spec(64 << 20, 2);
+        let bf16_spec = StagingSpec { wire_bpe: 2, ..f32_spec.clone() };
+        let a = StagingPlan::build(&f32_spec, &chunks4(), 16, 2).unwrap();
+        let b = StagingPlan::build(&bf16_spec, &chunks4(), 16, 2).unwrap();
+        assert_eq!(b.h2d_bytes * 2, a.h2d_bytes);
+        assert_eq!(b.d2h_bytes * 2, a.d2h_bytes);
+        // pinned base is dtype-independent; the panel share of the peak halves
+        assert_eq!((b.planned_peak - b.pinned_bytes) * 2, a.planned_peak - a.pinned_bytes);
+        replay_peak_and_conservation(&b);
     }
 
     #[test]

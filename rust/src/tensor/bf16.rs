@@ -1,0 +1,99 @@
+//! bf16 wire quantization (DESIGN.md §5.3): feature panels are *stored
+//! and shipped* as bfloat16 — an f32 with the bottom 16 mantissa bits
+//! dropped — while every accumulation stays f32. We never hold a packed
+//! u16 buffer: the data plane quantizes in place at the wire boundaries
+//! (what a worker would see after decode), and only the *byte plans*
+//! shrink to 2 bytes per element. That keeps the numerics honest (the
+//! values are exactly the bf16 lattice points) without threading a second
+//! dtype through every kernel.
+//!
+//! Rounding is round-to-nearest-even on the dropped half, the same policy
+//! hardware bf16 converters use. With 8 significant bits (7 stored
+//! mantissa bits + the hidden bit) the relative error of one round is at
+//! most half a ulp, i.e. `2^-8`, approached just above each power of two;
+//! [`REL_ERR_BOUND`] documents that per-round bound for the parity tests.
+
+/// Per-round relative error bound of [`round`] for finite, non-denormal
+/// inputs: one bf16 rounding step moves `x` by at most `|x| * 2^-8` (the
+/// half-ulp unit roundoff at 8 significant bits; tight, attained in the
+/// limit just above each power of two).
+pub const REL_ERR_BOUND: f32 = 1.0 / 256.0;
+
+/// Round one f32 to the nearest bf16 lattice point (round-to-nearest-even
+/// on the dropped 16 bits), returned as f32. NaN passes through (the
+/// increment trick could flip a signaling NaN's payload into an infinity
+/// pattern); ±0 and ±inf are already lattice points and round to
+/// themselves.
+#[inline]
+pub fn round(x: f32) -> f32 {
+    if x.is_nan() {
+        return x;
+    }
+    let bits = x.to_bits();
+    let rounded = bits.wrapping_add(0x7FFF + ((bits >> 16) & 1)) & 0xFFFF_0000;
+    f32::from_bits(rounded)
+}
+
+/// Quantize a panel in place: every element lands on the bf16 lattice.
+pub fn quantize(xs: &mut [f32]) {
+    for x in xs {
+        *x = round(*x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_is_idempotent_on_lattice_points() {
+        for x in [0.0f32, -0.0, 1.0, -2.5, 3.140625, f32::INFINITY, f32::NEG_INFINITY] {
+            let r = round(x);
+            assert_eq!(r.to_bits(), round(r).to_bits(), "x={x}");
+        }
+        assert_eq!(round(1.0), 1.0);
+        assert_eq!(round(-0.0).to_bits(), (-0.0f32).to_bits());
+        assert_eq!(round(f32::INFINITY), f32::INFINITY);
+        assert!(round(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn round_to_nearest_even_ties() {
+        // 1.0 + 2^-8 is exactly halfway between lattice points 1.0 and
+        // 1.0078125; RTNE picks the even mantissa (1.0)
+        let halfway = f32::from_bits(0x3F80_8000);
+        assert_eq!(round(halfway), 1.0);
+        // one ulp above the tie rounds up
+        let above = f32::from_bits(0x3F80_8001);
+        assert_eq!(round(above).to_bits(), 0x3F81_0000);
+    }
+
+    #[test]
+    fn relative_error_is_bounded() {
+        // deterministic LCG sweep over magnitudes from 1e-3 to 1e3
+        let mut state = 0x2545F491_4F6C_DD1Du64;
+        for _ in 0..10_000 {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let mant = ((state >> 40) as f32) / (1u32 << 24) as f32 * 2.0 - 1.0;
+            let exp = ((state >> 20) % 20) as i32 - 10;
+            let x = mant * 2f32.powi(exp);
+            let r = round(x);
+            let err = (r - x).abs();
+            assert!(
+                err <= x.abs() * REL_ERR_BOUND,
+                "x={x} r={r} err={err} bound={}",
+                x.abs() * REL_ERR_BOUND
+            );
+        }
+    }
+
+    #[test]
+    fn quantize_hits_every_element() {
+        let mut v = vec![1.00390625f32; 33]; // not a lattice point
+        quantize(&mut v);
+        for x in &v {
+            assert_eq!(x.to_bits(), round(1.00390625).to_bits());
+            assert_eq!(x.to_bits(), round(*x).to_bits());
+        }
+    }
+}

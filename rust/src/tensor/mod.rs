@@ -2,6 +2,7 @@
 //! lives on: column (dimension) slicing for the split/gather collectives,
 //! row slicing for vertex batches, zero-padding to artifact shape buckets.
 
+pub mod bf16;
 mod matrix;
 
 pub use matrix::Matrix;

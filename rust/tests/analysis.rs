@@ -134,6 +134,7 @@ fn staging_fixture() -> (StagingPlan, usize) {
         pinned_bytes: 4096,
         pcie: PcieModel { gbps: 16.0, latency_us: 5.0 },
         prefetch_depth: 2,
+        wire_bpe: 4,
     };
     let rounds = 2;
     let plan = StagingPlan::build(&spec, &cp.chunks, 8, rounds).expect("fixture plan builds");

@@ -157,7 +157,8 @@ fn agg_fixture_holds_under_intra_threads() {
     let f = fx.iter().find(|f| f.kind == "agg_pallas").expect("agg_pallas fixture");
     let cache = CsrCache::new();
     for intra in [1usize, 2, 4] {
-        let ctx = ExecCtx { artifact: "golden", intra_threads: intra, cache: &cache };
+        let ctx =
+            ExecCtx { intra_threads: intra, ..ExecCtx::with_defaults("golden", &cache) };
         let got = refexec::execute_with(&f.kind, &f.args, &ctx).unwrap();
         assert_close(&f.name, 0, &got[0], &f.outs[0], f.tol);
     }

@@ -135,6 +135,94 @@ fn thread_counts_do_not_change_numerics() {
 }
 
 #[test]
+fn builtin_profiles_never_take_the_fused_fallback() {
+    // `parallel::common::try_fused_*` silently degrades an L-layer NN
+    // phase to L per-layer tickets when the fused chain misses the
+    // store; `EpochReport::fused_fallbacks` counts those misses. On a
+    // builtin profile every system must train with the counter at 0 —
+    // a nonzero count means `make artifacts` stopped covering a bucket.
+    let store = store();
+    let data = Dataset::generate(profile("tiny").unwrap(), 42);
+    for &sys in System::ALL {
+        let cfg = RunConfig {
+            system: sys,
+            profile: "tiny".into(),
+            workers: 2,
+            epochs: 2,
+            ..Default::default()
+        };
+        let pool = ExecutorPool::new(&store, 2).unwrap();
+        let ctx = Ctx { cfg: &cfg, data: &data, store: &store, pool: &pool };
+        for (i, r) in parallel::run(&ctx).unwrap().iter().enumerate() {
+            assert_eq!(
+                r.fused_fallbacks, 0,
+                "{sys:?} epoch {i}: fused nn_chain silently degraded to per-layer tickets"
+            );
+        }
+    }
+}
+
+#[test]
+fn bf16_wire_halves_panel_bytes_within_documented_loss_error() {
+    // `comm.bf16_wire` (DESIGN.md §5.3): feature/grad panels cross the
+    // TP wire as bf16 while every accumulation stays f32. The split and
+    // gather byte plans must halve exactly, the gradient allreduce must
+    // stay f32-sized, and the loss trajectory must track the f32 run
+    // within the documented engine-level bound while still converging.
+    use neutron_tp::tensor::bf16;
+
+    let store = store();
+    let data = Dataset::generate(profile("tiny").unwrap(), 42);
+    let run = |bf16_wire: bool| {
+        let cfg = RunConfig {
+            profile: "tiny".into(),
+            workers: 4,
+            epochs: 3,
+            comm: CommTuning { bf16_wire, ..Default::default() },
+            ..Default::default()
+        };
+        let pool = ExecutorPool::new(&store, 2).unwrap();
+        let ctx = Ctx { cfg: &cfg, data: &data, store: &store, pool: &pool };
+        parallel::run(&ctx).unwrap()
+    };
+    let full = run(false);
+    let half = run(true);
+
+    let (s32, s16) = (&full[0].comm_stats, &half[0].comm_stats);
+    for kind in [CommKind::Split, CommKind::Gather] {
+        assert_eq!(
+            s16.kind(kind).bytes_sent * 2,
+            s32.kind(kind).bytes_sent,
+            "{} bytes must halve exactly under bf16_wire",
+            kind.name()
+        );
+    }
+    assert_eq!(
+        s16.kind(CommKind::AllreduceSum).bytes_sent,
+        s32.kind(CommKind::AllreduceSum).bytes_sent,
+        "gradient allreduce always ships f32"
+    );
+
+    // documented engine-level bound: 16 rounding steps' worth of the
+    // per-quantization relative error (DESIGN.md §5.3)
+    let tol = 16.0 * bf16::REL_ERR_BOUND;
+    for (a, b) in full.iter().zip(&half) {
+        let diff = (a.loss - b.loss).abs();
+        assert!(
+            diff <= tol * a.loss.abs().max(1.0),
+            "bf16 loss {} drifted from f32 loss {} (diff {diff}, tol {tol})",
+            b.loss,
+            a.loss
+        );
+    }
+    assert!(
+        half.last().unwrap().loss < half[0].loss,
+        "bf16 run must still converge: losses {:?}",
+        half.iter().map(|r| r.loss).collect::<Vec<_>>()
+    );
+}
+
+#[test]
 fn worker_count_does_not_change_numerics() {
     // TP is a pure reparallelization: loss trajectories must be identical
     // (up to fp noise) for any worker count
@@ -265,7 +353,8 @@ fn prop_csr_block_agg_matches_coo_scatter() {
         let want = refexec::execute("agg_scatter", &args).unwrap();
         let cache = CsrCache::new();
         for intra in [1usize, 4] {
-            let ctx = ExecCtx { artifact: "prop", intra_threads: intra, cache: &cache };
+            let ctx =
+                ExecCtx { intra_threads: intra, ..ExecCtx::with_defaults("prop", &cache) };
             let got = refexec::execute_with("agg_pallas", &args, &ctx).unwrap();
             assert_eq!(got[0].len(), want[0].len());
             for (i, (a, b)) in got[0].iter().zip(&want[0]).enumerate() {
@@ -321,7 +410,8 @@ fn prop_comm_api_conserves_bytes_across_algorithms() {
         let mut first: Option<(Vec<Matrix>, Vec<Matrix>, Matrix)> = None;
         for a2a in [AllToAllAlgo::Naive, AllToAllAlgo::Pairwise] {
             for ar in [AllReduceAlgo::Ring, AllReduceAlgo::FlatTree] {
-                let tuning = CommTuning { all_to_all: a2a, allreduce: ar, bw_scale: vec![] };
+                let tuning =
+                    CommTuning { all_to_all: a2a, allreduce: ar, ..CommTuning::default() };
                 let mut comm = Comm::new(n, net, &tuning).unwrap();
                 let (slices, _) = comm.split(&rows, &rp, &dp);
                 let (back, _) = comm.gather(&slices, &rp, &dp);

@@ -137,7 +137,7 @@ const FLOAT_EQ_ALLOWLIST: &[(&str, usize)] = &[
     ("graph/generate.rs", 1),
     ("graph/partition.rs", 1),
     ("parallel/common.rs", 1),
-    ("runtime/refexec.rs", 5),
+    ("runtime/refexec.rs", 4),
     ("tensor/matrix.rs", 1),
 ];
 

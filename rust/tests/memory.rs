@@ -287,6 +287,7 @@ fn prop_staging_plan_budget_pinning_and_conservation() {
             pinned_bytes: pinned,
             pcie: PcieModel { gbps: 8.0 + rng.gen_f64() * 56.0, latency_us: 10.0 },
             prefetch_depth: 1 + rng.gen_range(4),
+            wire_bpe: 4,
         };
         let sp = StagingPlan::build(&spec, &plan.chunks, slice_w, rounds).unwrap();
         let n_steps = rounds * plan.num_chunks();
